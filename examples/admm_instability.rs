@@ -1,0 +1,46 @@
+//! §3.3 demo: round-robin ADMM goes chaotic where round-robin EASGD's
+//! symmetric elastic maps stay stable.
+//!
+//!     cargo run --release --example admm_instability -- [p=3] [eta=0.001] [rho=2.5]
+
+use elastic_train::config::Args;
+use elastic_train::sim::admm;
+
+fn main() {
+    let args = Args::from_env();
+    let p = args.get_usize("p", 3);
+    let eta = args.get_f64("eta", 0.001);
+    let rho = args.get_f64("rho", 2.5);
+
+    let sp = admm::admm_spectral_radius(p, eta, rho);
+    println!("ADMM round-robin p={p}, η={eta}, ρ={rho}: sp(𝓕) = {sp:.6}");
+    for i in 0..p {
+        let (f1, f2, f3) = admm::admm_maps(i, p, eta, rho);
+        let m = f3.matmul(&f2).matmul(&f1);
+        println!(
+            "  factor F³F²F¹ for worker {i}: sp = {:.6} (individually stable)",
+            elastic_train::linalg::spectral_radius(&m)
+        );
+    }
+
+    println!("\ntrajectory from x̃₀ = xⁱ₀ = 1000, λⁱ₀ = 0 (thesis Fig 3.3):");
+    let tr = admm::admm_trajectory(p, eta, rho, 1000.0, 50_000);
+    for (i, x) in tr.iter().enumerate().step_by(5000) {
+        println!("  round {i:>6}: x̃ = {x:.4e}");
+    }
+
+    println!("\nEASGD round-robin (η=0.5, α=0.3, same p) for contrast:");
+    let map = admm::easgd_round_robin_map(p, 0.5, 0.3);
+    let mut s = vec![1000.0; p + 1];
+    for i in 0..=40 {
+        if i % 8 == 0 {
+            println!("  round {i:>6}: x̃ = {:.4e}", s[p]);
+        }
+        s = map.matvec(&s);
+    }
+    println!(
+        "\nstability condition for EASGD round robin (§3.3): 0≤η≤2 and α ≤ (4−2η)/(4−η); \
+         (0.5, 0.3) satisfies it: {}",
+        admm::easgd_rr_stable(0.5, 0.3)
+    );
+}

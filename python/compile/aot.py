@@ -1,0 +1,143 @@
+"""AOT export: lower the L2/L1 jax functions ONCE to HLO *text* plus a
+manifest the rust runtime consumes. Python never runs on the train path.
+
+Interchange is HLO text, NOT a serialized HloModuleProto: jax >= 0.5
+emits protos with 64-bit instruction ids which xla_extension 0.5.1 (the
+version the published ``xla`` 0.1.6 crate links) rejects
+(``proto.id() <= INT_MAX``). The text parser reassigns ids and
+round-trips cleanly (see /opt/xla-example/README.md).
+
+Artifacts written to --out-dir (default ../artifacts):
+
+  train_step.hlo.txt    (params..., tokens i32[B,T], targets i32[B,T])
+                        -> (loss f32[], grads...)
+  eval_step.hlo.txt     (params..., tokens, targets) -> (loss, n_correct)
+  sgd_step.hlo.txt      (eta f32[1], delta f32[1], x f32[N], v, g)
+                        -> (x', v')          [L1 pallas kernel]
+  elastic.hlo.txt       (alpha f32[1], x f32[N], c f32[N]) -> (x', c')
+  fused_step.hlo.txt    (eta, alpha, delta, do, x, v, g, c)
+                        -> (x', v', center_delta)
+  init_params.bin       flat little-endian f32[N], the shared random init
+                        (thesis §4.1: same init for master and workers)
+  manifest.json         model config, param (name, shape, offset) table,
+                        artifact signatures
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+from typing import List
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import model as M
+from .kernels import easgd_update as KU
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def export_model(cfg: M.ModelConfig, out_dir: str, seed: int) -> dict:
+    specs = M.param_specs(cfg)
+    param_structs = [jax.ShapeDtypeStruct(s, jnp.float32) for _, s in specs]
+    tok = jax.ShapeDtypeStruct((cfg.batch, cfg.seq_len), jnp.int32)
+
+    lowered = jax.jit(
+        lambda *a: M.train_step(cfg, list(a[:-2]), a[-2], a[-1])
+    ).lower(*param_structs, tok, tok)
+    with open(os.path.join(out_dir, "train_step.hlo.txt"), "w") as f:
+        f.write(to_hlo_text(lowered))
+
+    lowered = jax.jit(
+        lambda *a: M.eval_step(cfg, list(a[:-2]), a[-2], a[-1])
+    ).lower(*param_structs, tok, tok)
+    with open(os.path.join(out_dir, "eval_step.hlo.txt"), "w") as f:
+        f.write(to_hlo_text(lowered))
+
+    # Shared random init (same parameter for master and every worker —
+    # thesis §4.1 notes different seeds trap symmetry breaking).
+    params = M.init_params(cfg, seed)
+    flat = np.concatenate([np.asarray(p, np.float32).ravel() for p in params])
+    flat.tofile(os.path.join(out_dir, "init_params.bin"))
+
+    offsets, off = [], 0
+    table = []
+    for name, shape in specs:
+        size = int(np.prod(shape))
+        table.append({"name": name, "shape": list(shape),
+                      "offset": off, "size": size})
+        off += size
+    return {
+        "preset_params": off,
+        "config": {
+            "vocab": cfg.vocab, "d_model": cfg.d_model,
+            "n_layers": cfg.n_layers, "n_heads": cfg.n_heads,
+            "seq_len": cfg.seq_len, "batch": cfg.batch,
+            "weight_decay": cfg.weight_decay,
+        },
+        "params": table,
+        "seed": seed,
+    }
+
+
+def export_update_kernels(n: int, out_dir: str) -> dict:
+    """Lower the L1 update kernels for flat length n (= total params)."""
+    vec = jax.ShapeDtypeStruct((n,), jnp.float32)
+    sc = jax.ShapeDtypeStruct((1,), jnp.float32)
+
+    lowered = jax.jit(KU.sgd_nesterov_step).lower(vec, vec, vec, sc, sc)
+    with open(os.path.join(out_dir, "sgd_step.hlo.txt"), "w") as f:
+        f.write(to_hlo_text(lowered))
+
+    lowered = jax.jit(KU.elastic_exchange).lower(vec, vec, sc)
+    with open(os.path.join(out_dir, "elastic.hlo.txt"), "w") as f:
+        f.write(to_hlo_text(lowered))
+
+    lowered = jax.jit(KU.easgd_fused_step).lower(
+        vec, vec, vec, vec, sc, sc, sc, sc)
+    with open(os.path.join(out_dir, "fused_step.hlo.txt"), "w") as f:
+        f.write(to_hlo_text(lowered))
+
+    return {"flat_len": n, "block": KU.BLOCK}
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--preset", default=os.environ.get("ET_PRESET", "tiny"),
+                    choices=sorted(M.PRESETS))
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+    os.makedirs(args.out_dir, exist_ok=True)
+
+    cfg = M.PRESETS[args.preset]
+    manifest = {"preset": args.preset}
+    manifest.update(export_model(cfg, args.out_dir, args.seed))
+    manifest["kernels"] = export_update_kernels(
+        manifest["preset_params"], args.out_dir)
+    manifest["artifacts"] = {
+        "train_step": "train_step.hlo.txt",
+        "eval_step": "eval_step.hlo.txt",
+        "sgd_step": "sgd_step.hlo.txt",
+        "elastic": "elastic.hlo.txt",
+        "fused_step": "fused_step.hlo.txt",
+        "init_params": "init_params.bin",
+    }
+    with open(os.path.join(args.out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2)
+    n = manifest["preset_params"]
+    print(f"AOT export done: preset={args.preset} params={n} "
+          f"({n * 4 / 1e6:.1f} MB) -> {args.out_dir}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,85 @@
+"""L1 Pallas kernel: causal attention forward for the L2 transformer.
+
+Tiling (DESIGN.md §3): the grid is (batch*heads, T/BQ). Each grid step
+holds one q-tile of BQ rows plus the full K/V slab for that head in VMEM
+(T is small in this model family; at T=128, Dh=64 the live set is
+2*T*Dh + BQ*Dh + BQ*T ≈ 72 KiB f32 — comfortably inside a TPU core's
+~16 MiB VMEM, leaving room for double-buffering). The q·kᵀ and p·v
+contractions are MXU work on real hardware (bf16-in/f32-acc); here they
+lower through interpret=True to plain HLO dots.
+
+AD: interpret-mode pallas_call has no usable VJP, so the public
+``attention`` wraps the kernel in jax.custom_vjp whose backward is the
+pure-jnp oracle's VJP (kernels/ref.py) — numerically identical, checked
+by pytest.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import ref
+
+BQ = 32  # q-tile rows per grid step
+
+
+def _attn_kernel(scale: float, t: int, q_ref, k_ref, v_ref, o_ref):
+    # q_ref: (1, BQ, Dh); k_ref/v_ref: (1, T, Dh); o_ref: (1, BQ, Dh)
+    j = pl.program_id(1)
+    q = q_ref[0]                       # (BQ, Dh)
+    k = k_ref[0]                       # (T, Dh)
+    v = v_ref[0]                       # (T, Dh)
+    s = jnp.dot(q, k.T) * scale        # (BQ, T) — MXU contraction
+    q_idx = j * BQ + jax.lax.iota(jnp.int32, BQ)
+    k_idx = jax.lax.iota(jnp.int32, t)
+    mask = q_idx[:, None] >= k_idx[None, :]
+    s = jnp.where(mask, s, jnp.asarray(-1e30, s.dtype))
+    # Numerically stable softmax along k.
+    m = jnp.max(s, axis=1, keepdims=True)
+    p = jnp.exp(s - m)
+    p = p / jnp.sum(p, axis=1, keepdims=True)
+    o_ref[0] = jnp.dot(p, v)           # (BQ, Dh) — MXU contraction
+
+
+def _attention_fwd_pallas(q, k, v, scale):
+    b, h, t, dh = q.shape
+    assert t % BQ == 0, f"T={t} must be a multiple of BQ={BQ}"
+    qm = q.reshape(b * h, t, dh)
+    km = k.reshape(b * h, t, dh)
+    vm = v.reshape(b * h, t, dh)
+    grid = (b * h, t // BQ)
+    out = pl.pallas_call(
+        functools.partial(_attn_kernel, scale, t),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, BQ, dh), lambda i, j: (i, j, 0)),
+            pl.BlockSpec((1, t, dh), lambda i, j: (i, 0, 0)),
+            pl.BlockSpec((1, t, dh), lambda i, j: (i, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, BQ, dh), lambda i, j: (i, j, 0)),
+        out_shape=jax.ShapeDtypeStruct((b * h, t, dh), q.dtype),
+        interpret=True,
+    )(qm, km, vm)
+    return out.reshape(b, h, t, dh)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3,))
+def attention(q, k, v, scale):
+    """Causal attention with a Pallas forward and oracle-VJP backward."""
+    return _attention_fwd_pallas(q, k, v, scale)
+
+
+def _fwd(q, k, v, scale):
+    return _attention_fwd_pallas(q, k, v, scale), (q, k, v)
+
+
+def _bwd(scale, res, g):
+    q, k, v = res
+    _, vjp = jax.vjp(lambda q, k, v: ref.attention_ref(q, k, v, scale), q, k, v)
+    return vjp(g)
+
+
+attention.defvjp(_fwd, _bwd)

@@ -1,0 +1,141 @@
+"""L1 Pallas kernels for the EASGD / EAMSGD parameter update hot path.
+
+The thesis' per-step computation (Algorithms 1 and 2) over the flat
+parameter vector, expressed as tiled Pallas kernels:
+
+  * ``sgd_nesterov_step``  — v' = delta*v - eta*g ; x' = x + v'
+  * ``elastic_exchange``   — d = alpha*(x - c) ; x' = x - d ; c' = c + d
+  * ``easgd_fused_step``   — exchange (masked) + Nesterov step in one pass
+
+Hardware adaptation (DESIGN.md §3): the flat parameter vector is tiled
+into BLOCK-element chunks; each grid step streams one tile HBM→VMEM,
+does the element-wise VPU work, and writes back. BLOCK=65536 keeps the
+working set (≤5 tiles live = 1.3 MiB f32) far under VMEM while remaining
+lane-aligned (8x128). On this image kernels lower with interpret=True
+(plain HLO the CPU PJRT plugin runs); the BlockSpec schedule is what a
+real TPU lowering would pipeline.
+
+Scalars (eta/alpha/delta/do_exchange) are passed as f32[1] operands so a
+single AOT artifact serves every hyper-parameter setting — the rust
+coordinator feeds them per call.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Tile size over the flat parameter vector. 8 * 128 lane alignment.
+BLOCK = 65536
+
+
+def _pad_to_block(n: int) -> int:
+    return (n + BLOCK - 1) // BLOCK * BLOCK
+
+
+def _scalar_spec():
+    # Scalars are replicated to every grid step: index_map pins block 0.
+    return pl.BlockSpec((1,), lambda i: (0,))
+
+
+def _vec_spec():
+    return pl.BlockSpec((BLOCK,), lambda i: (i,))
+
+
+def _sgd_nesterov_kernel(eta_ref, delta_ref, x_ref, v_ref, g_ref,
+                         x_out_ref, v_out_ref):
+    eta = eta_ref[0]
+    delta = delta_ref[0]
+    v_new = delta * v_ref[...] - eta * g_ref[...]
+    v_out_ref[...] = v_new
+    x_out_ref[...] = x_ref[...] + v_new
+
+
+def sgd_nesterov_step(x, v, g, eta, delta):
+    """Fused (momentum) SGD step over a flat f32[n] parameter vector.
+
+    ``eta`` and ``delta`` are f32[1] arrays. Returns (x', v').
+    delta == 0 recovers plain SGD (thesis Alg. 1); the gradient ``g`` is
+    assumed evaluated at the Nesterov lookahead point by the caller.
+    """
+    n = x.shape[0]
+    grid = (_pad_to_block(n) // BLOCK,)
+    out_shape = [jax.ShapeDtypeStruct(x.shape, x.dtype)] * 2
+    return tuple(
+        pl.pallas_call(
+            _sgd_nesterov_kernel,
+            grid=grid,
+            in_specs=[_scalar_spec(), _scalar_spec(),
+                      _vec_spec(), _vec_spec(), _vec_spec()],
+            out_specs=[_vec_spec(), _vec_spec()],
+            out_shape=out_shape,
+            interpret=True,
+        )(eta, delta, x, v, g)
+    )
+
+
+def _elastic_kernel(alpha_ref, x_ref, c_ref, x_out_ref, c_out_ref):
+    alpha = alpha_ref[0]
+    d = alpha * (x_ref[...] - c_ref[...])
+    x_out_ref[...] = x_ref[...] - d
+    c_out_ref[...] = c_ref[...] + d
+
+
+def elastic_exchange(x, center, alpha):
+    """Symmetric elastic exchange (thesis Alg. 1 steps a/b) over flat
+    f32[n] vectors. ``alpha`` is f32[1]. Returns (x', center')."""
+    n = x.shape[0]
+    grid = (_pad_to_block(n) // BLOCK,)
+    out_shape = [jax.ShapeDtypeStruct(x.shape, x.dtype)] * 2
+    return tuple(
+        pl.pallas_call(
+            _elastic_kernel,
+            grid=grid,
+            in_specs=[_scalar_spec(), _vec_spec(), _vec_spec()],
+            out_specs=[_vec_spec(), _vec_spec()],
+            out_shape=out_shape,
+            interpret=True,
+        )(alpha, x, center)
+    )
+
+
+def _fused_kernel(eta_ref, alpha_ref, delta_ref, do_ref,
+                  x_ref, v_ref, g_ref, c_ref,
+                  x_out_ref, v_out_ref, d_out_ref):
+    eta = eta_ref[0]
+    alpha = alpha_ref[0]
+    delta = delta_ref[0]
+    do = do_ref[0]
+    d = do * alpha * (x_ref[...] - c_ref[...])
+    x1 = x_ref[...] - d
+    v_new = delta * v_ref[...] - eta * g_ref[...]
+    x_out_ref[...] = x1 + v_new
+    v_out_ref[...] = v_new
+    d_out_ref[...] = d
+
+
+def easgd_fused_step(x, v, g, center, eta, alpha, delta, do_exchange):
+    """One whole asynchronous-EASGD/EAMSGD worker step in a single pass:
+    masked elastic exchange followed by the (momentum) gradient step.
+
+    Returns (x', v', center_delta); the master adds center_delta to the
+    center variable (the symmetric half of the elastic force). All four
+    scalars are f32[1]; ``do_exchange`` is 1.0 on steps where tau divides
+    the local clock, else 0.0 — so one compiled artifact serves every
+    communication period.
+    """
+    n = x.shape[0]
+    grid = (_pad_to_block(n) // BLOCK,)
+    out_shape = [jax.ShapeDtypeStruct(x.shape, x.dtype)] * 3
+    return tuple(
+        pl.pallas_call(
+            _fused_kernel,
+            grid=grid,
+            in_specs=[_scalar_spec()] * 4 + [_vec_spec()] * 4,
+            out_specs=[_vec_spec()] * 3,
+            out_shape=out_shape,
+            interpret=True,
+        )(eta, alpha, delta, do_exchange, x, v, g, center)
+    )

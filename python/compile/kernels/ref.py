@@ -1,0 +1,60 @@
+"""Pure-jnp oracles for the Pallas kernels.
+
+Every kernel in this package has a reference implementation here; pytest
+(+ hypothesis) asserts allclose between kernel and oracle across shapes
+and dtypes. The attention oracle also provides the backward pass for the
+kernel's custom_vjp (interpret-mode Pallas AD limitation, see DESIGN.md).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def sgd_nesterov_step_ref(x, v, g, eta, delta):
+    """One fused local step (thesis Alg. 2 inner update, after the gradient
+    has been evaluated at the lookahead point x + delta*v):
+
+        v' = delta * v - eta * g
+        x' = x + v'
+
+    With delta == 0 this is plain SGD (thesis Alg. 1 inner update).
+    """
+    v_new = delta * v - eta * g
+    return x + v_new, v_new
+
+
+def elastic_exchange_ref(x, center, alpha):
+    """The elastic symmetric exchange (thesis Alg. 1 steps a/b):
+
+        d       = alpha * (x - center)
+        x'      = x - d
+        center' = center + d
+
+    The symmetry (equal and opposite force) is the stability mechanism
+    vs. ADMM (thesis §3.3).
+    """
+    d = alpha * (x - center)
+    return x - d, center + d
+
+
+def easgd_fused_step_ref(x, v, g, center, eta, alpha, delta, do_exchange):
+    """Fully fused worker step: elastic exchange (masked by do_exchange,
+    0.0 or 1.0) followed by the Nesterov SGD step. Returns
+    (x', v', center_delta) where center_delta is what the master must add
+    to the center variable (alpha * (x - center) when exchanging, else 0).
+    """
+    d = do_exchange * alpha * (x - center)
+    x1 = x - d
+    v_new = delta * v - eta * g
+    return x1 + v_new, v_new, d
+
+
+def attention_ref(q, k, v, scale):
+    """Causal softmax attention oracle. q,k,v: [B, H, T, Dh]."""
+    t = q.shape[-2]
+    s = jnp.einsum("bhqd,bhkd->bhqk", q, k) * scale
+    mask = jnp.tril(jnp.ones((t, t), dtype=bool))
+    s = jnp.where(mask[None, None], s, jnp.asarray(-1e30, s.dtype))
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bhqk,bhkd->bhqd", p, v)

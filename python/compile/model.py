@@ -1,0 +1,163 @@
+"""L2: the JAX transformer language model (fwd/bwd), calling the L1
+Pallas kernels.
+
+The thesis trains deep conv nets on CIFAR/ImageNet; this repo's
+end-to-end deep model is a decoder-only transformer LM on a synthetic
+Markov corpus (DESIGN.md §2 substitution table). The distributed
+optimizer dynamics under study are model-agnostic; what matters is a
+real multi-layer non-convex model with a meaningful loss curve.
+
+Parameters live in a flat, deterministically-ordered list (see
+``param_specs``) so the rust coordinator can treat the model as a single
+flat f32 vector (the thesis' "x") while the HLO entry points take the
+individual tensors.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Dict, List, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .kernels.attention import attention
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    vocab: int = 256
+    d_model: int = 128
+    n_layers: int = 2
+    n_heads: int = 4
+    seq_len: int = 64
+    batch: int = 8
+    weight_decay: float = 1e-4  # thesis §4.1 l2 regularization
+
+    @property
+    def d_head(self) -> int:
+        assert self.d_model % self.n_heads == 0
+        return self.d_model // self.n_heads
+
+    @property
+    def d_ff(self) -> int:
+        return 4 * self.d_model
+
+
+PRESETS: Dict[str, ModelConfig] = {
+    "tiny": ModelConfig(),
+    "small": ModelConfig(vocab=512, d_model=256, n_layers=4, n_heads=8,
+                         seq_len=64, batch=8),
+    "base": ModelConfig(vocab=1024, d_model=512, n_layers=8, n_heads=8,
+                        seq_len=128, batch=8),
+}
+
+
+def param_specs(cfg: ModelConfig) -> List[Tuple[str, Tuple[int, ...]]]:
+    """Deterministic (name, shape) list — the contract with the rust side.
+
+    The rust runtime reads the same list from artifacts/manifest.json and
+    slices its flat parameter buffer accordingly. Order is load-bearing.
+    """
+    d, v, t, f = cfg.d_model, cfg.vocab, cfg.seq_len, cfg.d_ff
+    specs: List[Tuple[str, Tuple[int, ...]]] = [
+        ("tok_embed", (v, d)),
+        ("pos_embed", (t, d)),
+    ]
+    for i in range(cfg.n_layers):
+        specs += [
+            (f"l{i}.ln1_scale", (d,)),
+            (f"l{i}.ln1_bias", (d,)),
+            (f"l{i}.w_qkv", (d, 3 * d)),
+            (f"l{i}.w_out", (d, d)),
+            (f"l{i}.ln2_scale", (d,)),
+            (f"l{i}.ln2_bias", (d,)),
+            (f"l{i}.w_ff1", (d, f)),
+            (f"l{i}.w_ff2", (f, d)),
+        ]
+    specs += [("lnf_scale", (d,)), ("lnf_bias", (d,))]
+    return specs
+
+
+def param_count(cfg: ModelConfig) -> int:
+    return sum(int(jnp.prod(jnp.array(s))) for _, s in param_specs(cfg))
+
+
+def init_params(cfg: ModelConfig, seed: int = 0) -> List[jax.Array]:
+    """Scaled-gaussian init; scales/biases to 1/0 (thesis: biases zeroed
+    for CIFAR)."""
+    key = jax.random.PRNGKey(seed)
+    out = []
+    for name, shape in param_specs(cfg):
+        key, sub = jax.random.split(key)
+        if name.endswith("_scale"):
+            out.append(jnp.ones(shape, jnp.float32))
+        elif name.endswith("_bias"):
+            out.append(jnp.zeros(shape, jnp.float32))
+        elif name == "pos_embed":
+            out.append(0.01 * jax.random.normal(sub, shape, jnp.float32))
+        else:
+            fan_in = shape[0]
+            out.append(jax.random.normal(sub, shape, jnp.float32)
+                       / jnp.sqrt(jnp.float32(fan_in)))
+    return out
+
+
+def _layer_norm(x, scale, bias, eps=1e-5):
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.var(x, axis=-1, keepdims=True)
+    return (x - mu) / jnp.sqrt(var + eps) * scale + bias
+
+
+def forward(cfg: ModelConfig, params: List[jax.Array], tokens: jax.Array):
+    """Logits for next-token prediction. tokens: i32[B, T]."""
+    p = dict(zip([n for n, _ in param_specs(cfg)], params))
+    b, t = tokens.shape
+    h = p["tok_embed"][tokens] + p["pos_embed"][None, :t]
+    scale = 1.0 / (cfg.d_head ** 0.5)
+    for i in range(cfg.n_layers):
+        x = _layer_norm(h, p[f"l{i}.ln1_scale"], p[f"l{i}.ln1_bias"])
+        qkv = x @ p[f"l{i}.w_qkv"]                      # (B, T, 3D)
+        q, k, v = jnp.split(qkv, 3, axis=-1)
+
+        def heads(z):
+            return z.reshape(b, t, cfg.n_heads, cfg.d_head).transpose(0, 2, 1, 3)
+
+        o = attention(heads(q), heads(k), heads(v), scale)  # L1 kernel
+        o = o.transpose(0, 2, 1, 3).reshape(b, t, cfg.d_model)
+        h = h + o @ p[f"l{i}.w_out"]
+        x = _layer_norm(h, p[f"l{i}.ln2_scale"], p[f"l{i}.ln2_bias"])
+        h = h + jax.nn.gelu(x @ p[f"l{i}.w_ff1"]) @ p[f"l{i}.w_ff2"]
+    h = _layer_norm(h, p["lnf_scale"], p["lnf_bias"])
+    return h @ p["tok_embed"].T                          # tied head
+
+
+def loss_fn(cfg: ModelConfig, params: List[jax.Array],
+            tokens: jax.Array, targets: jax.Array) -> jax.Array:
+    """Mean next-token cross-entropy + l2 regularization (thesis §4.1)."""
+    logits = forward(cfg, params, tokens)
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    nll = -jnp.take_along_axis(logp, targets[..., None], axis=-1).mean()
+    if cfg.weight_decay > 0.0:
+        l2 = sum(jnp.sum(w * w) for w in params)
+        nll = nll + 0.5 * cfg.weight_decay * l2
+    return nll
+
+
+def train_step(cfg: ModelConfig, params: List[jax.Array],
+               tokens: jax.Array, targets: jax.Array):
+    """(loss, grads...) — the artifact the rust workers execute per step."""
+    loss, grads = jax.value_and_grad(
+        lambda ps: loss_fn(cfg, ps, tokens, targets))(params)
+    return (loss, *grads)
+
+
+def eval_step(cfg: ModelConfig, params: List[jax.Array],
+              tokens: jax.Array, targets: jax.Array):
+    """(loss, n_correct) for test-curve reporting on the center variable."""
+    logits = forward(cfg, params, tokens)
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    nll = -jnp.take_along_axis(logp, targets[..., None], axis=-1).mean()
+    correct = jnp.sum((jnp.argmax(logits, axis=-1) == targets)
+                      .astype(jnp.int32))
+    return (nll, correct)

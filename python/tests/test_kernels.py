@@ -1,0 +1,127 @@
+"""Kernel vs oracle — the core L1 correctness signal (pytest + hypothesis)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import easgd_update as KU
+from compile.kernels import ref
+from compile.kernels.attention import attention, BQ
+
+SETTINGS = dict(max_examples=25, deadline=None)
+
+
+def _vec(rng, n, scale=1.0):
+    return jnp.asarray(rng.standard_normal(n).astype(np.float32) * scale)
+
+
+@settings(**SETTINGS)
+@given(n=st.integers(1, 5000), eta=st.floats(0.0, 1.0),
+       delta=st.floats(-1.0, 1.0), seed=st.integers(0, 2**31 - 1))
+def test_sgd_nesterov_matches_ref(n, eta, delta, seed):
+    rng = np.random.default_rng(seed)
+    x, v, g = _vec(rng, n), _vec(rng, n), _vec(rng, n)
+    xk, vk = KU.sgd_nesterov_step(x, v, g, jnp.float32([eta]),
+                                  jnp.float32([delta]))
+    xr, vr = ref.sgd_nesterov_step_ref(x, v, g, np.float32(eta),
+                                       np.float32(delta))
+    np.testing.assert_allclose(xk, xr, rtol=1e-6, atol=1e-6)
+    np.testing.assert_allclose(vk, vr, rtol=1e-6, atol=1e-6)
+
+
+@settings(**SETTINGS)
+@given(n=st.integers(1, 5000), alpha=st.floats(-1.0, 1.0),
+       seed=st.integers(0, 2**31 - 1))
+def test_elastic_exchange_matches_ref(n, alpha, seed):
+    rng = np.random.default_rng(seed)
+    x, c = _vec(rng, n), _vec(rng, n)
+    xk, ck = KU.elastic_exchange(x, c, jnp.float32([alpha]))
+    xr, cr = ref.elastic_exchange_ref(x, c, np.float32(alpha))
+    np.testing.assert_allclose(xk, xr, rtol=1e-6, atol=1e-6)
+    np.testing.assert_allclose(ck, cr, rtol=1e-6, atol=1e-6)
+
+
+def test_elastic_exchange_is_symmetric():
+    """The elastic force is equal and opposite: x+c is invariant (§3.3)."""
+    rng = np.random.default_rng(0)
+    x, c = _vec(rng, 4096), _vec(rng, 4096)
+    xk, ck = KU.elastic_exchange(x, c, jnp.float32([0.3]))
+    np.testing.assert_allclose(np.asarray(xk) + np.asarray(ck),
+                               np.asarray(x) + np.asarray(c),
+                               rtol=1e-5, atol=1e-5)
+
+
+@settings(**SETTINGS)
+@given(n=st.integers(1, 4096), eta=st.floats(0.0, 0.5),
+       alpha=st.floats(0.0, 1.0), delta=st.floats(0.0, 0.999),
+       do=st.sampled_from([0.0, 1.0]), seed=st.integers(0, 2**31 - 1))
+def test_fused_step_matches_ref(n, eta, alpha, delta, do, seed):
+    rng = np.random.default_rng(seed)
+    x, v, g, c = (_vec(rng, n) for _ in range(4))
+    out_k = KU.easgd_fused_step(x, v, g, c, jnp.float32([eta]),
+                                jnp.float32([alpha]), jnp.float32([delta]),
+                                jnp.float32([do]))
+    out_r = ref.easgd_fused_step_ref(x, v, g, c, np.float32(eta),
+                                     np.float32(alpha), np.float32(delta),
+                                     np.float32(do))
+    for got, want in zip(out_k, out_r):
+        np.testing.assert_allclose(got, want, rtol=1e-6, atol=1e-6)
+
+
+def test_fused_step_no_exchange_is_pure_sgd():
+    rng = np.random.default_rng(7)
+    x, v, g, c = (_vec(rng, 2048) for _ in range(4))
+    x2, v2, d = KU.easgd_fused_step(
+        x, v, g, c, jnp.float32([0.1]), jnp.float32([0.5]),
+        jnp.float32([0.0]), jnp.float32([0.0]))
+    xs, vs = ref.sgd_nesterov_step_ref(x, v, g, np.float32(0.1),
+                                       np.float32(0.0))
+    np.testing.assert_allclose(x2, xs, rtol=1e-6)
+    np.testing.assert_allclose(d, np.zeros(2048, np.float32))
+
+
+@pytest.mark.parametrize("b,h,t,dh", [(1, 1, 32, 8), (2, 2, 64, 16),
+                                      (1, 4, 96, 32), (2, 1, 128, 64)])
+def test_attention_matches_ref(b, h, t, dh):
+    rng = np.random.default_rng(b * 1000 + t)
+    q, k, v = (jnp.asarray(rng.standard_normal((b, h, t, dh)),
+                           dtype=jnp.float32) for _ in range(3))
+    scale = 1.0 / np.sqrt(dh)
+    out = attention(q, k, v, scale)
+    want = ref.attention_ref(q, k, v, scale)
+    np.testing.assert_allclose(out, want, rtol=2e-5, atol=2e-5)
+
+
+def test_attention_is_causal():
+    """Future-token perturbations must not change earlier outputs."""
+    rng = np.random.default_rng(3)
+    t, dh = 64, 16
+    q = jnp.asarray(rng.standard_normal((1, 1, t, dh)), dtype=jnp.float32)
+    k = jnp.asarray(rng.standard_normal((1, 1, t, dh)), dtype=jnp.float32)
+    v = jnp.asarray(rng.standard_normal((1, 1, t, dh)), dtype=jnp.float32)
+    out1 = attention(q, k, v, 0.25)
+    k2 = k.at[0, 0, -1].add(100.0)
+    v2 = v.at[0, 0, -1].add(100.0)
+    out2 = attention(q, k2, v2, 0.25)
+    np.testing.assert_allclose(out1[0, 0, : t - 1], out2[0, 0, : t - 1],
+                               rtol=1e-6, atol=1e-6)
+
+
+def test_attention_grad_matches_ref_grad():
+    """custom_vjp backward must equal the oracle's gradient."""
+    rng = np.random.default_rng(11)
+    shape = (2, 2, BQ, 8)
+    q, k, v = (jnp.asarray(rng.standard_normal(shape), dtype=jnp.float32)
+               for _ in range(3))
+
+    def f_kernel(q, k, v):
+        return jnp.sum(jnp.sin(attention(q, k, v, 0.35)))
+
+    def f_ref(q, k, v):
+        return jnp.sum(jnp.sin(ref.attention_ref(q, k, v, 0.35)))
+
+    gk = jax.grad(f_kernel, argnums=(0, 1, 2))(q, k, v)
+    gr = jax.grad(f_ref, argnums=(0, 1, 2))(q, k, v)
+    for a, b in zip(gk, gr):
+        np.testing.assert_allclose(a, b, rtol=2e-4, atol=2e-4)

@@ -1,0 +1,115 @@
+"""L2 model correctness: shapes, determinism, trainability, spec table."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model as M
+
+CFG = M.ModelConfig(vocab=64, d_model=32, n_layers=2, n_heads=2,
+                    seq_len=32, batch=4, weight_decay=0.0)
+
+
+def _batch(rng, cfg):
+    x = rng.integers(0, cfg.vocab, size=(cfg.batch, cfg.seq_len))
+    y = np.roll(x, -1, axis=1)
+    return jnp.asarray(x, jnp.int32), jnp.asarray(y, jnp.int32)
+
+
+def test_param_specs_deterministic_and_consistent():
+    s1, s2 = M.param_specs(CFG), M.param_specs(CFG)
+    assert s1 == s2
+    assert len(set(n for n, _ in s1)) == len(s1)
+    total = sum(int(np.prod(s)) for _, s in s1)
+    assert total == M.param_count(CFG)
+    flat = np.concatenate([np.asarray(p).ravel()
+                           for p in M.init_params(CFG)])
+    assert flat.size == total
+    assert np.all(np.isfinite(flat))
+
+
+def test_forward_shapes_and_loss_near_uniform_at_init():
+    params = M.init_params(CFG, seed=1)
+    rng = np.random.default_rng(0)
+    x, y = _batch(rng, CFG)
+    logits = M.forward(CFG, params, x)
+    assert logits.shape == (CFG.batch, CFG.seq_len, CFG.vocab)
+    loss = M.loss_fn(CFG, params, x, y)
+    # At init the LM should be within ~1 nat of uniform.
+    assert abs(float(loss) - np.log(CFG.vocab)) < 1.0
+
+
+def test_train_step_returns_loss_and_grads_for_every_param():
+    params = M.init_params(CFG, seed=2)
+    rng = np.random.default_rng(1)
+    x, y = _batch(rng, CFG)
+    out = M.train_step(CFG, params, x, y)
+    assert len(out) == 1 + len(params)
+    assert out[0].shape == ()
+    for g, p in zip(out[1:], params):
+        assert g.shape == p.shape
+        assert bool(jnp.all(jnp.isfinite(g)))
+
+
+def test_gradient_matches_finite_difference():
+    cfg = M.ModelConfig(vocab=16, d_model=16, n_layers=1, n_heads=2,
+                        seq_len=32, batch=2, weight_decay=0.0)
+    params = M.init_params(cfg, seed=3)
+    rng = np.random.default_rng(2)
+    x, y = _batch(rng, cfg)
+    out = M.train_step(cfg, params, x, y)
+    g_lnf = np.asarray(out[1 + [n for n, _ in M.param_specs(cfg)]
+                           .index("lnf_scale")])
+    idx, eps = 3, 1e-3
+    i = [n for n, _ in M.param_specs(cfg)].index("lnf_scale")
+
+    def loss_with(v):
+        ps = list(params)
+        ps[i] = ps[i].at[idx].set(v)
+        return float(M.loss_fn(cfg, ps, x, y))
+
+    v0 = float(params[i][idx])
+    fd = (loss_with(v0 + eps) - loss_with(v0 - eps)) / (2 * eps)
+    assert abs(fd - g_lnf[idx]) < 5e-3 * max(1.0, abs(fd))
+
+
+def test_sgd_training_reduces_loss():
+    """A few full-batch SGD steps on a fixed batch must reduce the loss —
+    the minimal 'this model can learn' signal."""
+    params = M.init_params(CFG, seed=4)
+    rng = np.random.default_rng(3)
+    x, y = _batch(rng, CFG)
+    loss0 = float(M.loss_fn(CFG, params, x, y))
+    step = jax.jit(lambda ps: M.train_step(CFG, ps, x, y))
+    for _ in range(20):
+        out = step(params)
+        params = [p - 0.5 * g for p, g in zip(params, out[1:])]
+    loss1 = float(M.loss_fn(CFG, params, x, y))
+    assert loss1 < loss0 - 0.5, (loss0, loss1)
+
+
+def test_eval_step_counts_correct_tokens():
+    params = M.init_params(CFG, seed=5)
+    rng = np.random.default_rng(4)
+    x, y = _batch(rng, CFG)
+    nll, correct = M.eval_step(CFG, params, x, y)
+    assert 0 <= int(correct) <= CFG.batch * CFG.seq_len
+    assert float(nll) > 0
+
+
+def test_weight_decay_increases_loss():
+    p = M.init_params(CFG, seed=6)
+    rng = np.random.default_rng(5)
+    x, y = _batch(rng, CFG)
+    l0 = float(M.loss_fn(CFG, p, x, y))
+    cfg_wd = M.ModelConfig(**{**CFG.__dict__, "weight_decay": 1e-2})
+    l1 = float(M.loss_fn(cfg_wd, p, x, y))
+    assert l1 > l0
+
+
+@pytest.mark.parametrize("preset", sorted(M.PRESETS))
+def test_presets_are_well_formed(preset):
+    cfg = M.PRESETS[preset]
+    assert cfg.d_model % cfg.n_heads == 0
+    assert cfg.seq_len % 32 == 0  # attention kernel BQ divisibility
+    assert M.param_count(cfg) > 0

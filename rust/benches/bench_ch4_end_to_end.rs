@@ -1,0 +1,59 @@
+//! End-to-end Chapter-4 benchmark: time to regenerate one full
+//! Fig 4.x-style run per method (the unit of the τ/p sweep figures),
+//! and the relative *virtual-time* speedups the figures report —
+//! EXPERIMENTS.md cites these rows against Figs 4.5–4.7/4.14.
+
+use elastic_train::coordinator::{Method, SeqMethod};
+use elastic_train::figures::ch4::Sweep;
+use elastic_train::figures::FigOpts;
+use std::time::Instant;
+
+fn main() {
+    let opts = FigOpts { out_dir: "out".into(), full: false, seed: 0 };
+    let mut sw = Sweep::new(&opts);
+    sw.horizon = 30.0;
+    sw.eval_every = 3.0;
+
+    println!("one sweep-unit run per method (horizon 30 vs, p=8):");
+    let mut results = Vec::new();
+    for (name, method, eta) in [
+        ("EASGD τ=10", Method::easgd_default(8, 10), 0.08f32),
+        ("EAMSGD τ=10", Method::Eamsgd { alpha: 0.9 / 8.0, tau: 10, delta: 0.9 }, 0.016),
+        ("DOWNPOUR τ=1", Method::Downpour { tau: 1 }, 0.05),
+        ("MDOWNPOUR", Method::MDownpour { delta: 0.9 }, 0.002),
+    ] {
+        let t0 = Instant::now();
+        let r = sw.run(8, method, eta, "cifar");
+        let wall = t0.elapsed().as_secs_f64();
+        println!(
+            "bench ch4/{name:<14} {wall:>7.2} s/run   best_err={:.3} steps={}",
+            r.best_test_error(),
+            r.total_steps
+        );
+        results.push((name, r));
+    }
+    let t0 = Instant::now();
+    let r = sw.run_seq(SeqMethod::Msgd { delta: 0.9 }, 0.01, "cifar");
+    println!(
+        "bench ch4/{:<14} {:>7.2} s/run   best_err={:.3} steps={}",
+        "MSGD p=1",
+        t0.elapsed().as_secs_f64(),
+        r.best_test_error(),
+        r.total_steps
+    );
+    results.push(("MSGD p=1", r));
+
+    // The Fig 4.14-style punchline: virtual time to the common threshold.
+    let best = results
+        .iter()
+        .map(|(_, r)| r.best_test_error())
+        .fold(f64::INFINITY, f64::min);
+    let thr = best * 1.15;
+    println!("\nvirtual time to test error ≤ {thr:.3} (Fig 4.14 shape):");
+    for (name, r) in &results {
+        match r.time_to_error(thr) {
+            Some(t) => println!("  {name:<14} {t:>8.1} vs"),
+            None => println!("  {name:<14}   never"),
+        }
+    }
+}

@@ -1,0 +1,52 @@
+//! Coordinator/cluster throughput: virtual-time event-loop overhead per
+//! local step, for the methods the Chapter-4 figures sweep. The metric
+//! that matters is steps/second of *simulated cluster time* — this
+//! bounds how big a sweep `figure all --full` can afford.
+
+use elastic_train::cluster::CostModel;
+use elastic_train::coordinator::{run_parallel, DriverConfig, Method, MlpOracle};
+use elastic_train::data::BlobDataset;
+use elastic_train::figures::benchkit::bench;
+use elastic_train::model::MlpConfig;
+use std::sync::Arc;
+
+fn main() {
+    let data = Arc::new(BlobDataset::generate(32, 10, 2048, 256, 2.2, 1));
+    let mcfg = MlpConfig::new(&[32, 64, 32, 10], 1e-4);
+    let cost = CostModel {
+        t_grad: 1e-3,
+        jitter: 0.08,
+        t_data: 1e-4,
+        latency: 1e-4,
+        bandwidth: 1e9,
+        param_bytes: (mcfg.n_params() * 4) as f64,
+    };
+    for (name, method) in [
+        ("easgd_tau10", Method::easgd_default(8, 10)),
+        ("eamsgd_tau10", Method::eamsgd_default(8, 10)),
+        ("downpour_tau1", Method::Downpour { tau: 1 }),
+        ("admm_tau10", Method::AdmmAsync { rho: 1.0, tau: 10 }),
+    ] {
+        let mut total_steps = 0u64;
+        let s = bench(&format!("driver/{name}/p8"), 150.0, 5, || {
+            let mut oracles = MlpOracle::family(data.clone(), &mcfg, 32, 8);
+            let cfg = DriverConfig {
+                eta: 0.05,
+                method,
+                cost,
+                horizon: 0.5,
+                eval_every: 10.0, // effectively no evals: pure step cost
+                seed: 3,
+                max_steps: u64::MAX / 2,
+                lr_decay_gamma: 0.0,
+            };
+            let r = run_parallel(&mut oracles, &cfg);
+            total_steps = r.total_steps;
+        });
+        println!(
+            "  -> {name}: {:.0} worker-steps/s of host time ({} steps per 0.5 vs run)",
+            total_steps as f64 / (s.median_ns * 1e-9),
+            total_steps
+        );
+    }
+}

@@ -1,0 +1,54 @@
+//! Benchmarks for the analysis substrate that regenerates the Chapter
+//! 3/5 stability figures: eigenvalue solves and full figure-grid sweeps
+//! (one row per thesis figure family).
+
+use elastic_train::figures::benchkit::{bench, fmt_ns};
+use elastic_train::linalg::{spectral_radius, Matrix};
+use elastic_train::rng::Rng;
+use elastic_train::sim::{admm, moments};
+
+fn main() {
+    // Raw eigen-solve cost at the sizes the figures use.
+    let mut rng = Rng::new(7);
+    for n in [3usize, 5, 9, 17] {
+        let mut m = Matrix::zeros(n, n);
+        for i in 0..n {
+            for j in 0..n {
+                m.set(i, j, rng.normal(0.0, 1.0));
+            }
+        }
+        bench(&format!("linalg/spectral_radius/{n}x{n}"), 20.0, 7, || {
+            std::hint::black_box(spectral_radius(&m));
+        });
+    }
+
+    // Fig 5.6-family cell: build + solve the EASGD drift matrix.
+    bench("fig5.6/easgd_drift_cell", 20.0, 7, || {
+        let m = moments::easgd_drift_matrix(0.7, 0.1, 0.9, 2);
+        std::hint::black_box(spectral_radius(&m));
+    });
+
+    // Fig 5.15-family cell: the 4x4 multiplicative moment matrix.
+    bench("fig5.15/easgd_mult_cell", 20.0, 7, || {
+        let m = moments::easgd_mult_moment_matrix(0.4, 0.1, 0.9, 0.5, 0.5, 16);
+        std::hint::black_box(spectral_radius(&m));
+    });
+
+    // Fig 3.2 cell: compose and solve the 2p+1 ADMM round-robin map.
+    for p in [3usize, 8] {
+        let s = bench(&format!("fig3.2/admm_cell/p{p}"), 30.0, 5, || {
+            std::hint::black_box(admm::admm_spectral_radius(p, 0.001, 2.5));
+        });
+        let grid = 64 * 64;
+        println!(
+            "  -> full {grid}-cell Fig 3.2 grid at p={p} ≈ {}",
+            fmt_ns(s.median_ns * grid as f64)
+        );
+    }
+
+    // Fig 3.1 cell: closed-form MSE evaluation.
+    let model = moments::QuadraticModel { h: 1.0, sigma: 10.0, p: 100 };
+    bench("fig3.1/closed_form_mse_cell", 10.0, 7, || {
+        std::hint::black_box(moments::center_mse(&model, 0.1, 0.5, 1.0, 100));
+    });
+}

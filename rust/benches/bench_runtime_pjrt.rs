@@ -1,0 +1,71 @@
+//! PJRT runtime benchmark: the per-step cost of the three-layer stack —
+//! train_step (fwd+bwd through the AOT transformer), eval_step, literal
+//! packing, and the update kernels. These rows bound the end-to-end
+//! example's throughput and feed EXPERIMENTS.md §Perf (L2/L3).
+
+use elastic_train::figures::benchkit::{bench, fmt_ns};
+use elastic_train::model::flat;
+use elastic_train::rng::Rng;
+
+fn main() {
+    let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if !dir.join("manifest.json").exists() {
+        println!("artifacts missing — run `make artifacts` first; skipping");
+        return;
+    }
+    let m = elastic_train::runtime::PjrtModel::load(&dir).unwrap();
+    let n = m.n_params();
+    let d = m.artifacts.dims;
+    println!(
+        "preset={} params={} batch={} seq={}",
+        m.artifacts.preset, n, d.batch, d.seq_len
+    );
+
+    let theta = m.artifacts.init_params().unwrap();
+    let mut corpus = elastic_train::data::MarkovCorpus::new(d.vocab, 0.05, 1);
+    let (x, y) = corpus.batch(d.batch, d.seq_len);
+    let mut g = vec![0.0f32; n];
+
+    let ts = bench("pjrt/train_step(fwd+bwd)", 300.0, 5, || {
+        std::hint::black_box(m.train_step(&theta, &x, &y, &mut g).unwrap());
+    });
+    let tokens = (d.batch * d.seq_len) as f64;
+    // ~6·N FLOPs per token for fwd+bwd of an N-param transformer.
+    let flops = 6.0 * n as f64 * tokens;
+    println!(
+        "  -> {} / step  |  {:.1} ktok/s  |  ~{:.2} GFLOP/s effective",
+        fmt_ns(ts.median_ns),
+        tokens / (ts.median_ns * 1e-9) / 1e3,
+        flops / ts.median_ns
+    );
+
+    let es = bench("pjrt/eval_step(fwd)", 200.0, 5, || {
+        std::hint::black_box(m.eval_step(&theta, &x, &y).unwrap());
+    });
+    println!("  -> fwd:bwd ratio {:.2}", ts.median_ns / es.median_ns);
+
+    let mut rng = Rng::new(2);
+    let mut mk = || {
+        let mut v = vec![0.0f32; n];
+        rng.fill_gaussian_f32(&mut v, 0.5);
+        v
+    };
+    let (mut xv, mut vv, gv, cv) = (mk(), mk(), mk(), mk());
+    let ks = bench("pjrt/fused_update_kernel", 100.0, 5, || {
+        let _ = m
+            .fused_step_kernel(&mut xv, &mut vv, &gv, &cv, 1e-4, 1e-3, 0.9, true)
+            .unwrap();
+    });
+    let (mut xn, mut vn, mut dn) = (mk(), mk(), vec![0.0f32; n]);
+    let ns = bench("native/fused_update", 50.0, 7, || {
+        flat::elastic_pull(&mut xn, &cv, &mut dn, 1e-3);
+        flat::nesterov_step(&mut xn, &mut vn, &gv, 1e-4, 0.9);
+    });
+    println!(
+        "  -> update is {:.3}% of train_step natively ({}), {:.1}% via PJRT ({})",
+        100.0 * ns.median_ns / ts.median_ns,
+        fmt_ns(ns.median_ns),
+        100.0 * ks.median_ns / ts.median_ns,
+        fmt_ns(ks.median_ns),
+    );
+}

@@ -1,0 +1,50 @@
+//! EASGD Tree benchmark (Chapter 6): host-time cost of the fully-async
+//! tree simulation at increasing scale, and the two communication
+//! schemes' relative virtual-time convergence (Figs 6.3–6.10 shape).
+
+use elastic_train::cluster::CostModel;
+use elastic_train::coordinator::{run_tree, MlpOracle, TreeConfig, TreeScheme};
+use elastic_train::data::BlobDataset;
+use elastic_train::model::MlpConfig;
+use std::sync::Arc;
+use std::time::Instant;
+
+fn main() {
+    let data = Arc::new(BlobDataset::generate(32, 10, 2048, 256, 2.2, 1));
+    let mcfg = MlpConfig::new(&[32, 64, 32, 10], 1e-4);
+    let cost = CostModel::cifar_like(mcfg.n_params());
+
+    for (degree, leaves) in [(4usize, 16usize), (8, 64), (16, 256)] {
+        for (name, scheme) in [
+            ("scheme1", TreeScheme::MultiScale { tau1: 1, tau2: 10 }),
+            ("scheme2", TreeScheme::UpDown { tau_up: 1, tau_down: 10 }),
+        ] {
+            let mut oracles = MlpOracle::family(data.clone(), &mcfg, 16, leaves);
+            let cfg = TreeConfig {
+                degree,
+                leaves,
+                scheme,
+                alpha: 0.9 / (degree as f32 + 1.0),
+                eta: 0.15,
+                delta: 0.0,
+                cost,
+                interior_activity: 0.25,
+        intra_discount: 0.2,
+                horizon: 8.0,
+                eval_every: 4.0,
+                seed: 5,
+                max_events: 200_000_000,
+            };
+            let t0 = Instant::now();
+            let r = run_tree(&mut oracles, &cfg);
+            let wall = t0.elapsed().as_secs_f64();
+            println!(
+                "bench tree/{name}/p{leaves}d{degree}  {wall:>7.2} s/run  \
+                 {:.0} leaf-steps/s  final_train={:.3}{}",
+                r.total_steps as f64 / wall,
+                r.final_train_loss(),
+                if r.diverged { " [DIVERGED]" } else { "" }
+            );
+        }
+    }
+}

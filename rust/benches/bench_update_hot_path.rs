@@ -1,0 +1,70 @@
+//! Hot-path benchmark: the fused parameter-update ops (the per-step
+//! cost every worker pays), native rust vs the PJRT-executed L1 Pallas
+//! kernels — quantifying what keeping the update on the native path
+//! buys (EXPERIMENTS.md §Perf).
+
+use elastic_train::figures::benchkit::{bench, fmt_ns};
+use elastic_train::model::flat;
+use elastic_train::rng::Rng;
+
+fn main() {
+    let mut rng = Rng::new(1);
+    for n in [4_096usize, 65_536, 1_048_576] {
+        let mut mk = || {
+            let mut v = vec![0.0f32; n];
+            rng.fill_gaussian_f32(&mut v, 0.5);
+            v
+        };
+        let (mut x, mut v, g, mut c) = (mk(), mk(), mk(), mk());
+
+        let s1 = bench(&format!("native/nesterov_step/{n}"), 40.0, 7, || {
+            flat::nesterov_step(&mut x, &mut v, &g, 1e-4, 0.9);
+        });
+        let s2 = bench(&format!("native/elastic_exchange/{n}"), 40.0, 7, || {
+            flat::elastic_exchange(&mut x, &mut c, 1e-3);
+        });
+        let s3 = bench(&format!("native/sgd_step/{n}"), 40.0, 7, || {
+            flat::sgd_step(&mut x, &g, 1e-4);
+        });
+        println!(
+            "  -> {n} params: nesterov {} | elastic {} | sgd {} ({:.1} GB/s streamed)",
+            fmt_ns(s1.median_ns),
+            fmt_ns(s2.median_ns),
+            fmt_ns(s3.median_ns),
+            (n * 4 * 3) as f64 / s1.median_ns // 3 streams r/w
+        );
+    }
+
+    // PJRT comparison at the artifact's size (skipped without artifacts).
+    let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if dir.join("manifest.json").exists() {
+        let m = elastic_train::runtime::PjrtModel::load(&dir).unwrap();
+        let n = m.n_params();
+        let mut rng = Rng::new(2);
+        let mut mk = || {
+            let mut v = vec![0.0f32; n];
+            rng.fill_gaussian_f32(&mut v, 0.5);
+            v
+        };
+        let (mut x, mut v, g, c) = (mk(), mk(), mk(), mk());
+        let sk = bench(&format!("pjrt/fused_step_kernel/{n}"), 60.0, 5, || {
+            let _ = m
+                .fused_step_kernel(&mut x, &mut v, &g, &c, 1e-4, 1e-3, 0.9, true)
+                .unwrap();
+        });
+        let (mut xn, mut vn, mut dn) = (mk(), mk(), vec![0.0f32; n]);
+        let sn = bench(&format!("native/fused_equivalent/{n}"), 40.0, 7, || {
+            flat::elastic_pull(&mut xn, &c, &mut dn, 1e-3);
+            flat::nesterov_step(&mut xn, &mut vn, &g, 1e-4, 0.9);
+        });
+        println!(
+            "  -> fused update at n={n}: native {} vs PJRT {} ({:.1}x) — why the \
+             coordinator keeps updates native and PJRT for gradients",
+            fmt_ns(sn.median_ns),
+            fmt_ns(sk.median_ns),
+            sk.median_ns / sn.median_ns
+        );
+    } else {
+        println!("(artifacts missing — run `make artifacts` for the PJRT comparison)");
+    }
+}

@@ -1,0 +1,204 @@
+//! The simulated cluster substrate: virtual time, communication cost,
+//! and the compute/data/communication accounting of thesis Table 4.4.
+//!
+//! The thesis ran on a GPU cluster over InfiniBand/MPI; what its
+//! experiments actually measure is how *coordination dynamics* interact
+//! with relative costs (gradient-step time vs. parameter-message time
+//! vs. data-load time). This module makes those costs explicit,
+//! deterministic, and configurable, so the Chapter-4/6 sweeps reproduce
+//! the paper's wall-clock-shaped curves on virtual time (DESIGN.md §2).
+
+use crate::rng::Rng;
+
+/// Per-worker cost model (all times in virtual seconds).
+#[derive(Clone, Copy, Debug)]
+pub struct CostModel {
+    /// Mean time of one local gradient step (mini-batch fwd+bwd).
+    pub t_grad: f64,
+    /// Multiplicative log-normal-ish jitter on each step (fraction,
+    /// e.g. 0.05) — this is what makes the asynchrony *real*: workers
+    /// drift out of phase and staleness emerges.
+    pub jitter: f64,
+    /// Amortized data-loading time per local step (Table 4.4 column 2).
+    pub t_data: f64,
+    /// One-way message latency.
+    pub latency: f64,
+    /// Link bandwidth in bytes / virtual second.
+    pub bandwidth: f64,
+    /// Payload of one parameter (or gradient) message, in bytes.
+    pub param_bytes: f64,
+}
+
+impl CostModel {
+    /// Defaults shaped after Table 4.4's CIFAR column: at τ=1 the
+    /// parameter communication is a large fraction of the total; at
+    /// τ=10 it becomes negligible.
+    pub fn cifar_like(n_params: usize) -> Self {
+        // Table 4.4 left (CIFAR, per 400×128 samples): ≈11s compute,
+        // ≈2s data, ≈9s comm at τ=1 ⇒ per-step 27.5/5/22.5 ms. The
+        // bandwidth is set so one exchange ≈ 20 ms regardless of the
+        // stand-in model's parameter count (it is the *ratio* that
+        // shapes the thesis' curves).
+        let param_bytes = (n_params * 4) as f64;
+        CostModel {
+            t_grad: 27.5e-3,
+            jitter: 0.08,
+            t_data: 5e-3,
+            latency: 1e-3,
+            bandwidth: param_bytes * 100.0, // 2·bytes/bw = 20 ms
+            param_bytes,
+        }
+    }
+
+    /// ImageNet column shape: model (233 MB in the thesis) dwarfs the
+    /// per-batch data; parameter communication is ~66× data cost.
+    pub fn imagenet_like(n_params: usize) -> Self {
+        // Table 4.4 right (ImageNet, per 1024×128 samples): ≈1250s
+        // compute, ≈20–60s data, ≈284s comm at p=8, τ=1 ⇒ per-step
+        // 1.22 s / 0.02 s / 0.28 s.
+        let param_bytes = (n_params * 4) as f64;
+        CostModel {
+            t_grad: 1.22,
+            jitter: 0.05,
+            t_data: 0.02,
+            latency: 2e-3,
+            bandwidth: param_bytes * 7.2, // 2·bytes/bw ≈ 0.28 s
+            param_bytes,
+        }
+    }
+
+    /// Duration of one local gradient step, with jitter.
+    pub fn grad_time(&self, rng: &mut Rng) -> f64 {
+        let j = 1.0 + self.jitter * rng.gaussian();
+        self.t_grad * j.max(0.1)
+    }
+
+    /// Round-trip exchange time: request + payload both ways.
+    pub fn exchange_time(&self) -> f64 {
+        2.0 * self.latency + 2.0 * self.param_bytes / self.bandwidth
+    }
+
+    /// One-way message time (tree protocol, non-blocking sends).
+    pub fn one_way_time(&self) -> f64 {
+        self.latency + self.param_bytes / self.bandwidth
+    }
+}
+
+/// Table 4.4's three columns, accumulated per run.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct TimeBreakdown {
+    pub compute: f64,
+    pub data: f64,
+    pub comm: f64,
+}
+
+impl TimeBreakdown {
+    pub fn total(&self) -> f64 {
+        self.compute + self.data + self.comm
+    }
+}
+
+/// A point on a training curve (the thesis' Figs 4.x/6.x axes).
+#[derive(Clone, Copy, Debug)]
+pub struct CurvePoint {
+    /// Virtual wall-clock time.
+    pub time: f64,
+    /// Train loss of the center variable (on a fixed probe batch).
+    pub train_loss: f64,
+    /// Test loss of the center variable.
+    pub test_loss: f64,
+    /// Test error in [0, 1].
+    pub test_error: f64,
+}
+
+/// Result of one distributed run.
+#[derive(Clone, Debug, Default)]
+pub struct RunResult {
+    pub curve: Vec<CurvePoint>,
+    pub breakdown: TimeBreakdown,
+    /// Total local gradient steps summed over workers.
+    pub total_steps: u64,
+    pub diverged: bool,
+}
+
+impl RunResult {
+    /// Earliest virtual time at which test error ≤ thr (Figs 4.14/4.15);
+    /// None if never reached — a "missing bar".
+    pub fn time_to_error(&self, thr: f64) -> Option<f64> {
+        self.curve
+            .iter()
+            .find(|pt| pt.test_error <= thr)
+            .map(|pt| pt.time)
+    }
+
+    /// Smallest achieved test error (the thesis' model-selection metric).
+    pub fn best_test_error(&self) -> f64 {
+        self.curve
+            .iter()
+            .map(|p| p.test_error)
+            .fold(f64::INFINITY, f64::min)
+    }
+
+    pub fn final_train_loss(&self) -> f64 {
+        self.curve.last().map(|p| p.train_loss).unwrap_or(f64::NAN)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn exchange_time_composes_latency_and_bandwidth() {
+        let cm = CostModel {
+            t_grad: 1.0,
+            jitter: 0.0,
+            t_data: 0.0,
+            latency: 0.5,
+            bandwidth: 100.0,
+            param_bytes: 200.0,
+        };
+        assert!((cm.exchange_time() - (1.0 + 4.0)).abs() < 1e-12);
+        assert!((cm.one_way_time() - 2.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn grad_time_jitter_is_bounded_and_unbiased() {
+        let cm = CostModel::cifar_like(1000);
+        let mut rng = Rng::new(1);
+        let n = 20_000;
+        let mean: f64 = (0..n).map(|_| cm.grad_time(&mut rng)).sum::<f64>() / n as f64;
+        assert!((mean - cm.t_grad).abs() < 0.02 * cm.t_grad, "mean {mean}");
+        for _ in 0..1000 {
+            assert!(cm.grad_time(&mut rng) > 0.0);
+        }
+    }
+
+    #[test]
+    fn table_4_4_shape_comm_dominates_at_tau_1() {
+        // At τ=1 a worker pays one exchange per step; at τ=10, per 10
+        // steps. The CIFAR-like model must make comm a significant
+        // fraction at τ=1 and negligible at τ=10 (Table 4.4's claim).
+        let cm = CostModel::cifar_like(500_000);
+        let per_step = cm.t_grad + cm.t_data;
+        let comm_tau1 = cm.exchange_time();
+        let comm_tau10 = cm.exchange_time() / 10.0;
+        assert!(comm_tau1 > 0.5 * per_step, "τ=1 comm should be large");
+        assert!(comm_tau10 < 0.2 * per_step, "τ=10 comm should be small");
+    }
+
+    #[test]
+    fn time_to_error_finds_first_crossing() {
+        let r = RunResult {
+            curve: vec![
+                CurvePoint { time: 1.0, train_loss: 1.0, test_loss: 1.0, test_error: 0.5 },
+                CurvePoint { time: 2.0, train_loss: 0.5, test_loss: 0.6, test_error: 0.3 },
+                CurvePoint { time: 3.0, train_loss: 0.4, test_loss: 0.55, test_error: 0.2 },
+            ],
+            ..Default::default()
+        };
+        assert_eq!(r.time_to_error(0.35), Some(2.0));
+        assert_eq!(r.time_to_error(0.1), None);
+        assert!((r.best_test_error() - 0.2).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,100 @@
+//! `key=value` CLI argument parsing (the offline crate set has no clap).
+//!
+//! Grammar: positional words first, then any number of `key=value`
+//! pairs; `--key=value` and `--flag` are also accepted.
+
+use std::collections::BTreeMap;
+
+/// Parsed command line.
+#[derive(Clone, Debug, Default)]
+pub struct Args {
+    pub positional: Vec<String>,
+    pub kv: BTreeMap<String, String>,
+}
+
+impl Args {
+    pub fn parse<I: IntoIterator<Item = String>>(it: I) -> Args {
+        let mut a = Args::default();
+        for raw in it {
+            let s = raw.trim_start_matches("--");
+            if let Some(eq) = s.find('=') {
+                a.kv.insert(s[..eq].to_string(), s[eq + 1..].to_string());
+            } else if raw.starts_with("--") {
+                a.kv.insert(s.to_string(), "true".to_string());
+            } else {
+                a.positional.push(raw);
+            }
+        }
+        a
+    }
+
+    pub fn from_env() -> Args {
+        Args::parse(std::env::args().skip(1))
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.kv.get(key).map(|s| s.as_str())
+    }
+
+    pub fn get_f64(&self, key: &str, default: f64) -> f64 {
+        self.get(key).and_then(|s| s.parse().ok()).unwrap_or(default)
+    }
+
+    pub fn get_f32(&self, key: &str, default: f32) -> f32 {
+        self.get(key).and_then(|s| s.parse().ok()).unwrap_or(default)
+    }
+
+    pub fn get_usize(&self, key: &str, default: usize) -> usize {
+        self.get(key).and_then(|s| s.parse().ok()).unwrap_or(default)
+    }
+
+    pub fn get_u64(&self, key: &str, default: u64) -> u64 {
+        self.get(key).and_then(|s| s.parse().ok()).unwrap_or(default)
+    }
+
+    pub fn get_u32(&self, key: &str, default: u32) -> u32 {
+        self.get(key).and_then(|s| s.parse().ok()).unwrap_or(default)
+    }
+
+    pub fn get_bool(&self, key: &str, default: bool) -> bool {
+        self.get(key)
+            .map(|s| matches!(s, "true" | "1" | "yes"))
+            .unwrap_or(default)
+    }
+
+    pub fn get_str<'a>(&'a self, key: &str, default: &'a str) -> &'a str {
+        self.get(key).unwrap_or(default)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(words: &[&str]) -> Args {
+        Args::parse(words.iter().map(|s| s.to_string()))
+    }
+
+    #[test]
+    fn positional_and_kv() {
+        let a = parse(&["figure", "fig3.1", "p=16", "--eta=0.05", "--quick"]);
+        assert_eq!(a.positional, vec!["figure", "fig3.1"]);
+        assert_eq!(a.get_usize("p", 1), 16);
+        assert!((a.get_f64("eta", 0.0) - 0.05).abs() < 1e-12);
+        assert!(a.get_bool("quick", false));
+    }
+
+    #[test]
+    fn defaults_apply() {
+        let a = parse(&[]);
+        assert_eq!(a.get_usize("p", 4), 4);
+        assert_eq!(a.get_str("method", "easgd"), "easgd");
+        assert!(!a.get_bool("quick", false));
+    }
+
+    #[test]
+    fn malformed_values_fall_back() {
+        let a = parse(&["p=abc"]);
+        assert_eq!(a.get_usize("p", 7), 7);
+    }
+}

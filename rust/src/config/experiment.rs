@@ -1,0 +1,194 @@
+//! The shared experiment configuration: what the `repro` binary, the
+//! examples, and the figure harness all consume. Loadable from a
+//! `key = value` file (comments with `#`) with CLI overrides on top.
+
+use super::args::Args;
+use crate::cluster::CostModel;
+use crate::coordinator::{Method, SeqMethod};
+use std::collections::BTreeMap;
+
+/// Top-level experiment configuration.
+#[derive(Clone, Debug)]
+pub struct ExperimentConfig {
+    /// Parallel workers.
+    pub p: usize,
+    pub eta: f32,
+    pub tau: u32,
+    pub beta: f32,
+    pub delta: f32,
+    pub method: String,
+    /// "cifar" | "imagenet" cost-model family.
+    pub cost_family: String,
+    pub horizon: f64,
+    pub eval_every: f64,
+    pub seed: u64,
+    pub batch: usize,
+    /// Extra free-form keys (forwarded to specific figures).
+    pub extra: BTreeMap<String, String>,
+}
+
+impl Default for ExperimentConfig {
+    fn default() -> Self {
+        ExperimentConfig {
+            p: 4,
+            eta: 0.05,
+            tau: 10,
+            beta: 0.9,
+            delta: 0.99,
+            method: "easgd".into(),
+            cost_family: "cifar".into(),
+            horizon: 60.0,
+            eval_every: 2.0,
+            seed: 0,
+            batch: 32,
+            extra: BTreeMap::new(),
+        }
+    }
+}
+
+impl ExperimentConfig {
+    /// Parse a `key = value` file (unknown keys land in `extra`).
+    pub fn from_file(path: &str) -> std::io::Result<Self> {
+        let text = std::fs::read_to_string(path)?;
+        let mut cfg = ExperimentConfig::default();
+        for line in text.lines() {
+            let line = line.split('#').next().unwrap().trim();
+            if line.is_empty() {
+                continue;
+            }
+            if let Some((k, v)) = line.split_once('=') {
+                cfg.set(k.trim(), v.trim());
+            }
+        }
+        Ok(cfg)
+    }
+
+    /// Apply CLI overrides.
+    pub fn apply_args(&mut self, args: &Args) {
+        for (k, v) in &args.kv {
+            self.set(k, v);
+        }
+    }
+
+    fn set(&mut self, k: &str, v: &str) {
+        match k {
+            "p" => self.p = v.parse().unwrap_or(self.p),
+            "eta" => self.eta = v.parse().unwrap_or(self.eta),
+            "tau" => self.tau = v.parse().unwrap_or(self.tau),
+            "beta" => self.beta = v.parse().unwrap_or(self.beta),
+            "delta" => self.delta = v.parse().unwrap_or(self.delta),
+            "method" => self.method = v.to_string(),
+            "cost" => self.cost_family = v.to_string(),
+            "horizon" => self.horizon = v.parse().unwrap_or(self.horizon),
+            "eval_every" => self.eval_every = v.parse().unwrap_or(self.eval_every),
+            "seed" => self.seed = v.parse().unwrap_or(self.seed),
+            "batch" => self.batch = v.parse().unwrap_or(self.batch),
+            _ => {
+                self.extra.insert(k.to_string(), v.to_string());
+            }
+        }
+    }
+
+    /// Resolve the parallel method named in `method`.
+    pub fn parallel_method(&self) -> Option<Method> {
+        let alpha = self.beta / self.p as f32;
+        Some(match self.method.as_str() {
+            "easgd" => Method::Easgd { alpha, tau: self.tau },
+            "eamsgd" => Method::Eamsgd { alpha, tau: self.tau, delta: self.delta },
+            "downpour" => Method::Downpour { tau: self.tau },
+            "mdownpour" => Method::MDownpour { delta: self.delta },
+            "adownpour" => Method::ADownpour { tau: self.tau },
+            "mvadownpour" => Method::MvaDownpour {
+                tau: self.tau,
+                alpha: self
+                    .extra
+                    .get("mva_alpha")
+                    .and_then(|s| s.parse().ok())
+                    .unwrap_or(0.001),
+            },
+            "admm" => Method::AdmmAsync {
+                rho: self
+                    .extra
+                    .get("rho")
+                    .and_then(|s| s.parse().ok())
+                    .unwrap_or(1.0),
+                tau: self.tau,
+            },
+            _ => return None,
+        })
+    }
+
+    /// Resolve a sequential method name.
+    pub fn sequential_method(&self) -> Option<SeqMethod> {
+        Some(match self.method.as_str() {
+            "sgd" => SeqMethod::Sgd,
+            "msgd" => SeqMethod::Msgd { delta: self.delta },
+            "asgd" => SeqMethod::Asgd,
+            "mvasgd" => SeqMethod::Mvasgd {
+                alpha: self
+                    .extra
+                    .get("mva_alpha")
+                    .and_then(|s| s.parse().ok())
+                    .unwrap_or(0.001),
+            },
+            _ => return None,
+        })
+    }
+
+    /// Cost model for the chosen family at a given parameter count.
+    pub fn cost_model(&self, n_params: usize) -> CostModel {
+        match self.cost_family.as_str() {
+            "imagenet" => CostModel::imagenet_like(n_params),
+            _ => CostModel::cifar_like(n_params),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn defaults_then_file_then_cli_priority() {
+        let dir = std::env::temp_dir().join("et_cfg_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("exp.cfg");
+        std::fs::write(&path, "p = 8\neta = 0.1 # comment\nmethod = downpour\n").unwrap();
+        let mut cfg = ExperimentConfig::from_file(path.to_str().unwrap()).unwrap();
+        assert_eq!(cfg.p, 8);
+        assert!((cfg.eta - 0.1).abs() < 1e-7);
+        assert_eq!(cfg.method, "downpour");
+        let args = Args::parse(["p=16".to_string(), "rho=2.5".to_string()]);
+        cfg.apply_args(&args);
+        assert_eq!(cfg.p, 16);
+        assert_eq!(cfg.extra.get("rho").map(|s| s.as_str()), Some("2.5"));
+    }
+
+    #[test]
+    fn method_resolution() {
+        let mut cfg = ExperimentConfig { p: 8, ..Default::default() };
+        cfg.method = "easgd".into();
+        match cfg.parallel_method().unwrap() {
+            Method::Easgd { alpha, tau } => {
+                assert!((alpha - 0.9 / 8.0).abs() < 1e-7);
+                assert_eq!(tau, 10);
+            }
+            _ => unreachable!(),
+        }
+        cfg.method = "msgd".into();
+        assert!(cfg.parallel_method().is_none());
+        assert!(matches!(cfg.sequential_method(), Some(SeqMethod::Msgd { .. })));
+        cfg.method = "bogus".into();
+        assert!(cfg.sequential_method().is_none());
+    }
+
+    #[test]
+    fn cost_family_switch() {
+        let mut cfg = ExperimentConfig::default();
+        let c = cfg.cost_model(1000);
+        assert!(c.t_grad < 0.1);
+        cfg.cost_family = "imagenet".into();
+        let i = cfg.cost_model(1000);
+        assert!(i.t_grad > 1.0);
+    }
+}

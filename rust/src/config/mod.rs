@@ -1,0 +1,19 @@
+//! Configuration system.
+//!
+//! The offline crate set has no serde, so this module carries its own
+//! substrates (DESIGN.md §2):
+//! - [`json`] — a small recursive-descent JSON parser (reads
+//!   `artifacts/manifest.json`).
+//! - [`args`] — `key=value` CLI argument parsing with typed getters.
+//! - [`experiment`] — the experiment config struct the `repro` binary
+//!   and the examples share (model preset, cluster costs, method
+//!   selection, schedule), loadable from a `key = value` file with CLI
+//!   overrides.
+
+pub mod args;
+pub mod experiment;
+pub mod json;
+
+pub use args::Args;
+pub use experiment::ExperimentConfig;
+pub use json::Json;

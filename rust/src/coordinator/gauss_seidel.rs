@@ -1,0 +1,155 @@
+//! §6.2 — unifying EASGD and DOWNPOUR via the Gauss–Seidel form.
+//!
+//! The synchronous Gauss–Seidel update (workers first, center second,
+//! using the *updated* workers):
+//!
+//!   xⁱ_{t+1} = xⁱ_t − η ∇F(xⁱ_t) − a (xⁱ_t − x̃_t)
+//!   x̃_{t+1} = (1 − b) x̃_t + b · mean_i xⁱ_{t+1}
+//!
+//! * (a, b) = (α, β)  → Gauss–Seidel EASGD (the Jacobi form of Ch. 2
+//!   differs only in using xⁱ_t in the center update);
+//! * (a, b) = (1, p)  → exactly synchronous DOWNPOUR with τ = 1:
+//!   workers restart from the center (a = 1) and the center absorbs the
+//!   SUM of their updates (b = p) — a *singular* moving rate that sits
+//!   far outside EASGD's 0 < b ≤ 1 region when p is large, which is the
+//!   thesis' explanation of DOWNPOUR's instability.
+//!
+//! `drift_matrix` gives the 1-d quadratic (∇F(x) = h·x) dynamics;
+//! `stability_map` sweeps (a, b).
+
+use crate::linalg::{spectral_radius, Matrix};
+
+/// Drift matrix of the Gauss–Seidel form on F(x) = h x² / 2 over the
+/// state (x¹, …, xᵖ, x̃).
+pub fn drift_matrix(eta_h: f64, a: f64, b: f64, p: usize) -> Matrix {
+    let n = p + 1;
+    let mut m = Matrix::zeros(n, n);
+    let q = 1.0 - eta_h - a; // worker self-coefficient
+    for i in 0..p {
+        m.set(i, i, q);
+        m.set(i, p, a);
+    }
+    // x̃_{t+1} = (1−b) x̃ + (b/p) Σ_j (q xʲ + a x̃)
+    for j in 0..p {
+        m.set(p, j, b / p as f64 * q);
+    }
+    m.set(p, p, (1.0 - b) + b * a);
+    m
+}
+
+/// sp of the Gauss–Seidel drift — the §6.2 stability map.
+pub fn spectral(eta_h: f64, a: f64, b: f64, p: usize) -> f64 {
+    spectral_radius(&drift_matrix(eta_h, a, b, p))
+}
+
+/// The DOWNPOUR point in the unified (a, b) plane.
+pub fn downpour_rates(p: usize) -> (f64, f64) {
+    (1.0, p as f64)
+}
+
+/// The EASGD point (thesis defaults β = 0.9, α = β/p).
+pub fn easgd_rates(p: usize) -> (f64, f64) {
+    (0.9 / p as f64, 0.9)
+}
+
+/// One synchronous Gauss–Seidel step on concrete state (test support &
+/// the fig6 GS simulation): returns updated (workers, center).
+pub fn gs_step(
+    workers: &mut [Vec<f32>],
+    center: &mut [f32],
+    grads: &[Vec<f32>],
+    eta: f32,
+    a: f32,
+    b: f32,
+) {
+    let p = workers.len();
+    let n = center.len();
+    for (w, g) in workers.iter_mut().zip(grads) {
+        for j in 0..n {
+            w[j] = w[j] - eta * g[j] - a * (w[j] - center[j]);
+        }
+    }
+    for j in 0..n {
+        let mean: f32 = workers.iter().map(|w| w[j]).sum::<f32>() / p as f32;
+        center[j] = (1.0 - b) * center[j] + b * mean;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn easgd_gs_is_stable_at_thesis_defaults() {
+        for p in [4usize, 16, 64] {
+            let (a, b) = easgd_rates(p);
+            let sp = spectral(0.1, a, b, p);
+            assert!(sp < 1.0, "p={p}: sp={sp}");
+        }
+    }
+
+    #[test]
+    fn downpour_rates_grow_singular_with_p() {
+        // In the unified plane DOWNPOUR's b = p leaves the EASGD region
+        // (b ≤ 1); its stability then demands an O(1/p)-small ηh.
+        let p = 16;
+        let (a, b) = downpour_rates(p);
+        // Stable only for tiny ηh:
+        assert!(spectral(0.01, a, b, p) < 1.0 + 1e-9);
+        // ...but already unstable at a moderate ηh where EASGD is fine:
+        let eta_h = 1.5;
+        assert!(spectral(eta_h, a, b, p) > 1.0);
+        let (ae, be) = easgd_rates(p);
+        assert!(spectral(eta_h, ae, be, p) < 1.0);
+    }
+
+    #[test]
+    fn downpour_gs_form_matches_direct_downpour_sync() {
+        // With (a,b) = (1,p) the GS step must equal synchronous
+        // DOWNPOUR τ=1: x̃' = x̃ − η Σ gᵢ and workers restart at x̃'...
+        // (restart happens at the NEXT round's a=1 pull; here we check
+        // the center.)
+        let p = 3;
+        let n = 4;
+        let mut workers: Vec<Vec<f32>> = vec![vec![2.0; n]; p];
+        let mut center = vec![2.0f32; n];
+        let grads: Vec<Vec<f32>> = (0..p)
+            .map(|i| vec![0.1 * (i as f32 + 1.0); n])
+            .collect();
+        let eta = 0.5;
+        gs_step(&mut workers, &mut center, &grads, eta, 1.0, p as f32);
+        let gsum: f32 = (0..p).map(|i| 0.1 * (i as f32 + 1.0)).sum();
+        for j in 0..n {
+            assert!((center[j] - (2.0 - eta * gsum)).abs() < 1e-5,
+                    "center {} vs {}", center[j], 2.0 - eta * gsum);
+        }
+    }
+
+    #[test]
+    fn jacobi_and_gs_easgd_agree_to_first_order() {
+        // For small rates the two forms differ at O(αβ); check the
+        // drift spectra are close.
+        let p = 8;
+        let (a, b) = (0.01, 0.08);
+        let gs = spectral(0.05, a, b, p);
+        let jac = spectral_radius(&crate::sim::moments::easgd_drift_matrix(
+            0.05, a, b, p,
+        ));
+        assert!((gs - jac).abs() < 0.02, "gs {gs} vs jacobi {jac}");
+    }
+
+    #[test]
+    fn gs_consensus_on_quadratic() {
+        // Run the concrete GS dynamics on F = x²/2: everyone → 0.
+        let p = 4;
+        let n = 8;
+        let mut workers: Vec<Vec<f32>> = vec![vec![5.0; n]; p];
+        let mut center = vec![5.0f32; n];
+        let (a, b) = easgd_rates(p);
+        for _ in 0..3000 {
+            let grads: Vec<Vec<f32>> = workers.iter().map(|w| w.clone()).collect();
+            gs_step(&mut workers, &mut center, &grads, 0.1, a as f32, b as f32);
+        }
+        assert!(center.iter().all(|c| c.abs() < 1e-2), "{center:?}");
+    }
+}

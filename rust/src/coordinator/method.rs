@@ -1,0 +1,102 @@
+//! The parallel methods of Chapter 4, as data.
+//!
+//! Hyper-parameter defaults follow §4.2: EASGD family uses β = 0.9 and
+//! α = β/p; momentum methods use δ = 0.99; MVADOWNPOUR's moving rate is
+//! 0.001.
+
+/// A parallel distributed optimization method (p ≥ 1 workers + master).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum Method {
+    /// Asynchronous EASGD (Alg. 1): elastic exchange every τ local steps.
+    Easgd { alpha: f32, tau: u32 },
+    /// Asynchronous EAMSGD (Alg. 2): Nesterov local dynamics + elastic.
+    Eamsgd { alpha: f32, tau: u32, delta: f32 },
+    /// DOWNPOUR (Alg. 3): push accumulated gradients, pull fresh center.
+    Downpour { tau: u32 },
+    /// Momentum DOWNPOUR (Algs 4–5): τ = 1, Nesterov on the master.
+    MDownpour { delta: f32 },
+    /// DOWNPOUR + time-average of the center (α_t = 1/t).
+    ADownpour { tau: u32 },
+    /// DOWNPOUR + constant-rate moving average of the center.
+    MvaDownpour { tau: u32, alpha: f32 },
+    /// Asynchronous ADMM comparator (§4 footnote: performance close to
+    /// EASGD; momentum variant unstable at large τ).
+    AdmmAsync { rho: f32, tau: u32 },
+}
+
+impl Method {
+    /// Thesis-default EASGD at p workers: β = 0.9, α = β/p.
+    pub fn easgd_default(p: usize, tau: u32) -> Method {
+        Method::Easgd { alpha: 0.9 / p as f32, tau }
+    }
+
+    /// Thesis-default EAMSGD: δ = 0.99.
+    pub fn eamsgd_default(p: usize, tau: u32) -> Method {
+        Method::Eamsgd { alpha: 0.9 / p as f32, tau, delta: 0.99 }
+    }
+
+    pub fn tau(&self) -> u32 {
+        match *self {
+            Method::Easgd { tau, .. }
+            | Method::Eamsgd { tau, .. }
+            | Method::Downpour { tau }
+            | Method::ADownpour { tau }
+            | Method::MvaDownpour { tau, .. }
+            | Method::AdmmAsync { tau, .. } => tau,
+            Method::MDownpour { .. } => 1,
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Method::Easgd { .. } => "EASGD",
+            Method::Eamsgd { .. } => "EAMSGD",
+            Method::Downpour { .. } => "DOWNPOUR",
+            Method::MDownpour { .. } => "MDOWNPOUR",
+            Method::ADownpour { .. } => "ADOWNPOUR",
+            Method::MvaDownpour { .. } => "MVADOWNPOUR",
+            Method::AdmmAsync { .. } => "ADMM",
+        }
+    }
+
+    /// Does the local worker keep its own parameter between rounds?
+    /// (EASGD family: yes — exploration; DOWNPOUR family: no — workers
+    /// restart from the fresh center each round.)
+    pub fn keeps_local_state(&self) -> bool {
+        matches!(
+            self,
+            Method::Easgd { .. } | Method::Eamsgd { .. } | Method::AdmmAsync { .. }
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn defaults_follow_the_thesis() {
+        match Method::easgd_default(8, 10) {
+            Method::Easgd { alpha, tau } => {
+                assert!((alpha - 0.9 / 8.0).abs() < 1e-7);
+                assert_eq!(tau, 10);
+            }
+            _ => unreachable!(),
+        }
+        match Method::eamsgd_default(4, 10) {
+            Method::Eamsgd { delta, .. } => assert!((delta - 0.99).abs() < 1e-7),
+            _ => unreachable!(),
+        }
+    }
+
+    #[test]
+    fn mdownpour_always_tau_1() {
+        assert_eq!(Method::MDownpour { delta: 0.99 }.tau(), 1);
+    }
+
+    #[test]
+    fn state_retention_split() {
+        assert!(Method::easgd_default(4, 1).keeps_local_state());
+        assert!(!Method::Downpour { tau: 1 }.keeps_local_state());
+    }
+}

@@ -1,0 +1,28 @@
+//! Layer-3 coordinator: the thesis' distributed optimization methods.
+//!
+//! - [`oracle`] — the `GradOracle` abstraction (native MLP for sweeps;
+//!   the PJRT transformer in `runtime` implements the same trait).
+//! - [`method`] — every parallel method the thesis compares:
+//!   EASGD / EAMSGD (Algorithms 1–2), DOWNPOUR (Alg. 3),
+//!   MDOWNPOUR (Algs 4–5), ADOWNPOUR / MVADOWNPOUR, and async ADMM.
+//! - [`driver`] — the asynchronous event-driven run loop over a
+//!   simulated cluster: per-worker virtual clocks, communication
+//!   period τ, jittered compute, Table-4.4 accounting.
+//! - [`sequential`] — the p = 1 baselines: SGD, MSGD, ASGD, MVASGD.
+//! - [`tree`] — EASGD Tree (Alg. 6): d-ary topology, fully-async
+//!   messaging, the two communication schemes of §6.1.
+//! - [`gauss_seidel`] — §6.2: the Gauss–Seidel reformulation unifying
+//!   EASGD and DOWNPOUR, with its stability map.
+
+pub mod driver;
+pub mod gauss_seidel;
+pub mod method;
+pub mod oracle;
+pub mod sequential;
+pub mod tree;
+
+pub use driver::{run_parallel, DriverConfig};
+pub use method::Method;
+pub use oracle::{EvalStats, GradOracle, MlpOracle};
+pub use sequential::{run_sequential, SeqMethod};
+pub use tree::{run_tree, TreeConfig, TreeScheme};

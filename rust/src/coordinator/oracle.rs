@@ -1,0 +1,188 @@
+//! The gradient oracle abstraction — what a "worker" computes.
+//!
+//! The coordinator is generic over this trait so the same EASGD /
+//! DOWNPOUR / Tree drivers run against (a) the native MLP on synthetic
+//! CIFAR-like data (figure sweeps, p up to 256) and (b) the AOT-lowered
+//! JAX transformer through PJRT (`runtime::PjrtOracle`, the end-to-end
+//! example). Python is never involved in either.
+
+use crate::data::prefetch::{PrefetchPool, Sharding};
+use crate::data::BlobDataset;
+use crate::model::{Mlp, MlpConfig};
+use crate::rng::Rng;
+use std::sync::Arc;
+
+/// Evaluation summary for the center variable.
+#[derive(Clone, Copy, Debug)]
+pub struct EvalStats {
+    pub train_loss: f64,
+    pub test_loss: f64,
+    pub test_error: f64,
+}
+
+/// A per-worker gradient computer. One oracle instance per worker
+/// (holds its own scratch + data stream); implementations must be
+/// deterministic given the worker's RNG stream. (No `Send` bound: the
+/// PJRT oracle wraps raw PJRT pointers; the drivers are event-driven
+/// single-thread by design — asynchrony lives in virtual time.)
+pub trait GradOracle {
+    fn n_params(&self) -> usize;
+    /// Initial parameter vector (the SAME for master and all workers —
+    /// thesis §4.1).
+    fn init_params(&self) -> Vec<f32>;
+    /// One mini-batch gradient at `theta` into `out`; returns the batch
+    /// training loss.
+    fn grad(&mut self, theta: &[f32], rng: &mut Rng, out: &mut [f32]) -> f32;
+    /// Evaluate a parameter vector (test set + train probe).
+    fn eval(&mut self, theta: &[f32]) -> EvalStats;
+}
+
+/// Native-MLP oracle over the blob dataset, fed through the §4.1
+/// prefetch pipeline.
+pub struct MlpOracle {
+    data: Arc<BlobDataset>,
+    mlp: Mlp,
+    pool: PrefetchPool,
+    queue: Vec<Vec<usize>>,
+    batch: usize,
+    init_seed: u64,
+    /// Fixed probe subset for train loss (cheap, low-variance).
+    probe: Vec<usize>,
+}
+
+impl MlpOracle {
+    pub fn new(data: Arc<BlobDataset>, cfg: MlpConfig, batch: usize, seed: u64) -> Self {
+        assert_eq!(cfg.dims[0], data.dim);
+        assert_eq!(*cfg.dims.last().unwrap(), data.classes);
+        let pool = PrefetchPool::new(
+            data.train.len(),
+            4,
+            batch * 2,
+            batch,
+            Sharding::Replicated,
+            seed,
+        );
+        let probe = (0..256.min(data.train.len())).collect();
+        Self {
+            data,
+            mlp: Mlp::new(cfg),
+            pool,
+            queue: Vec::new(),
+            batch,
+            init_seed: 9000,
+            probe,
+        }
+    }
+
+    /// Sweep-default oracle family: every worker shares the dataset,
+    /// distinct RNG streams.
+    pub fn family(data: Arc<BlobDataset>, cfg: &MlpConfig, batch: usize, p: usize) -> Vec<Self> {
+        (0..p)
+            .map(|i| Self::new(data.clone(), cfg.clone(), batch, 40_000 + i as u64))
+            .collect()
+    }
+
+    fn next_batch(&mut self, rng: &mut Rng) -> Vec<usize> {
+        if self.queue.is_empty() {
+            self.queue = self.pool.fetch_minibatches(rng);
+        }
+        self.queue.pop().unwrap_or_else(|| {
+            (0..self.batch).map(|_| rng.below(self.data.train.len())).collect()
+        })
+    }
+}
+
+impl GradOracle for MlpOracle {
+    fn n_params(&self) -> usize {
+        self.mlp.config().n_params()
+    }
+
+    fn init_params(&self) -> Vec<f32> {
+        let mut rng = Rng::new(self.init_seed);
+        self.mlp.init_params(&mut rng)
+    }
+
+    fn grad(&mut self, theta: &[f32], rng: &mut Rng, out: &mut [f32]) -> f32 {
+        let idx = self.next_batch(rng);
+        out.iter_mut().for_each(|g| *g = 0.0);
+        let mut loss = 0.0;
+        for &i in &idx {
+            let (x, y) = &self.data.train[i];
+            loss += self.mlp.grad(theta, x, *y, out);
+        }
+        let inv = 1.0 / idx.len() as f32;
+        out.iter_mut().for_each(|g| *g *= inv);
+        (loss * inv) as f32
+    }
+
+    fn eval(&mut self, theta: &[f32]) -> EvalStats {
+        let mut train_loss = 0.0;
+        for &i in &self.probe {
+            let (x, y) = &self.data.train[i];
+            train_loss += self.mlp.loss(theta, x, *y) as f64;
+        }
+        train_loss /= self.probe.len() as f64;
+        let mut test_loss = 0.0;
+        let mut wrong = 0usize;
+        for (x, y) in &self.data.test {
+            test_loss += self.mlp.loss(theta, x, *y) as f64;
+            if self.mlp.predict(theta, x) != *y {
+                wrong += 1;
+            }
+        }
+        EvalStats {
+            train_loss,
+            test_loss: test_loss / self.data.test.len() as f64,
+            test_error: wrong as f64 / self.data.test.len() as f64,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn small_setup() -> (Arc<BlobDataset>, MlpConfig) {
+        let data = Arc::new(BlobDataset::generate(8, 4, 512, 128, 0.8, 1));
+        let cfg = MlpConfig::new(&[8, 16, 4], 1e-4);
+        (data, cfg)
+    }
+
+    #[test]
+    fn oracle_gradient_descends() {
+        let (data, cfg) = small_setup();
+        let mut o = MlpOracle::new(data, cfg, 32, 7);
+        let mut theta = o.init_params();
+        let mut g = vec![0.0; o.n_params()];
+        let mut rng = Rng::new(1);
+        let e0 = o.eval(&theta);
+        for _ in 0..150 {
+            o.grad(&theta, &mut rng, &mut g);
+            crate::model::flat::sgd_step(&mut theta, &g, 0.2);
+        }
+        let e1 = o.eval(&theta);
+        assert!(e1.train_loss < e0.train_loss - 0.2, "{:?} -> {:?}", e0, e1);
+        assert!(e1.test_error < e0.test_error, "{:?} -> {:?}", e0, e1);
+    }
+
+    #[test]
+    fn init_params_identical_across_family() {
+        let (data, cfg) = small_setup();
+        let fam = MlpOracle::family(data, &cfg, 32, 4);
+        let base = fam[0].init_params();
+        for o in &fam[1..] {
+            assert_eq!(o.init_params(), base, "shared init (§4.1)");
+        }
+    }
+
+    #[test]
+    fn eval_stats_are_deterministic_for_same_theta() {
+        let (data, cfg) = small_setup();
+        let mut o = MlpOracle::new(data, cfg, 32, 7);
+        let theta = o.init_params();
+        let a = o.eval(&theta);
+        let b = o.eval(&theta);
+        assert_eq!(a.train_loss, b.train_loss);
+        assert_eq!(a.test_error, b.test_error);
+    }
+}

@@ -1,0 +1,195 @@
+//! The p = 1 baselines of §4.3.1: SGD, Nesterov momentum SGD (MSGD),
+//! and the Polyak–Ruppert averaging variants ASGD (α_t = 1/t) and
+//! MVASGD (constant moving rate).
+
+use super::oracle::GradOracle;
+use crate::cluster::{CostModel, CurvePoint, RunResult, TimeBreakdown};
+use crate::model::flat;
+use crate::rng::Rng;
+
+/// Sequential method selector.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum SeqMethod {
+    Sgd,
+    /// Nesterov momentum with rate δ.
+    Msgd { delta: f32 },
+    /// Averaged SGD, α_t = 1/(t+1).
+    Asgd,
+    /// Moving-average SGD with constant α.
+    Mvasgd { alpha: f32 },
+}
+
+impl SeqMethod {
+    pub fn name(&self) -> &'static str {
+        match self {
+            SeqMethod::Sgd => "SGD",
+            SeqMethod::Msgd { .. } => "MSGD",
+            SeqMethod::Asgd => "ASGD",
+            SeqMethod::Mvasgd { .. } => "MVASGD",
+        }
+    }
+}
+
+/// Run a sequential baseline under the same cost model / eval protocol
+/// as the parallel driver (comm cost is zero: there is no master).
+pub fn run_sequential<O: GradOracle>(
+    oracle: &mut O,
+    method: SeqMethod,
+    eta: f32,
+    cost: &CostModel,
+    horizon: f64,
+    eval_every: f64,
+    seed: u64,
+) -> RunResult {
+    let n = oracle.n_params();
+    let mut theta = oracle.init_params();
+    let mut v = vec![0.0f32; n];
+    let mut g = vec![0.0f32; n];
+    let mut scratch = vec![0.0f32; n];
+    let mut z = theta.clone(); // averaging variants
+    let mut rng = Rng::new(seed);
+    let mut time_rng = Rng::new(seed ^ 0xFEED);
+
+    let mut now = 0.0f64;
+    let mut next_eval = 0.0f64;
+    let mut t = 0u64;
+    let mut result = RunResult::default();
+    let mut breakdown = TimeBreakdown::default();
+    let mut diverged = false;
+
+    let eval_target = |m: SeqMethod, theta: &Vec<f32>, z: &Vec<f32>| match m {
+        SeqMethod::Asgd | SeqMethod::Mvasgd { .. } => z.clone(),
+        _ => theta.clone(),
+    };
+
+    while now <= horizon && !diverged {
+        while now >= next_eval {
+            let te = eval_target(method, &theta, &z);
+            let st = oracle.eval(&te);
+            result.curve.push(CurvePoint {
+                time: next_eval,
+                train_loss: st.train_loss,
+                test_loss: st.test_loss,
+                test_error: st.test_error,
+            });
+            if !st.train_loss.is_finite() {
+                diverged = true;
+            }
+            next_eval += eval_every;
+        }
+        match method {
+            SeqMethod::Msgd { delta } => {
+                for (s, (ti, vi)) in scratch.iter_mut().zip(theta.iter().zip(&v)) {
+                    *s = ti + delta * vi;
+                }
+                oracle.grad(&scratch, &mut rng, &mut g);
+                flat::nesterov_step(&mut theta, &mut v, &g, eta, delta);
+            }
+            _ => {
+                oracle.grad(&theta, &mut rng, &mut g);
+                flat::sgd_step(&mut theta, &g, eta);
+            }
+        }
+        t += 1;
+        match method {
+            SeqMethod::Asgd => {
+                flat::moving_average(&mut z, &theta, 1.0 / (t as f32 + 1.0));
+            }
+            SeqMethod::Mvasgd { alpha } => {
+                flat::moving_average(&mut z, &theta, alpha);
+            }
+            _ => {}
+        }
+        if flat::norm2(&theta) > 1e8 {
+            diverged = true;
+        }
+        let dt = cost.grad_time(&mut time_rng) + cost.t_data;
+        breakdown.compute += dt - cost.t_data;
+        breakdown.data += cost.t_data;
+        now += dt;
+    }
+
+    let te = eval_target(method, &theta, &z);
+    let st = oracle.eval(&te);
+    result.curve.push(CurvePoint {
+        time: horizon,
+        train_loss: st.train_loss,
+        test_loss: st.test_loss,
+        test_error: st.test_error,
+    });
+    result.breakdown = breakdown;
+    result.total_steps = t;
+    result.diverged = diverged || !st.train_loss.is_finite();
+    result
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::oracle::MlpOracle;
+    use crate::data::BlobDataset;
+    use crate::model::MlpConfig;
+    use std::sync::Arc;
+
+    fn oracle() -> MlpOracle {
+        let data = Arc::new(BlobDataset::generate(8, 4, 1024, 256, 0.8, 1));
+        MlpOracle::new(data, MlpConfig::new(&[8, 16, 4], 1e-4), 32, 3)
+    }
+
+    fn cost() -> CostModel {
+        CostModel {
+            t_grad: 1e-3,
+            jitter: 0.05,
+            t_data: 1e-4,
+            latency: 0.0,
+            bandwidth: 1.0,
+            param_bytes: 0.0,
+        }
+    }
+
+    #[test]
+    fn all_sequential_methods_learn() {
+        for m in [
+            SeqMethod::Sgd,
+            SeqMethod::Msgd { delta: 0.9 },
+            SeqMethod::Asgd,
+            SeqMethod::Mvasgd { alpha: 0.01 },
+        ] {
+            let mut o = oracle();
+            let eta = if matches!(m, SeqMethod::Msgd { .. }) { 0.02 } else { 0.1 };
+            let r = run_sequential(&mut o, m, eta, &cost(), 0.8, 0.2, 5);
+            assert!(!r.diverged, "{}", m.name());
+            let first = r.curve.first().unwrap().train_loss;
+            let last = r.curve.last().unwrap().train_loss;
+            assert!(last < first, "{}: {first} -> {last}", m.name());
+        }
+    }
+
+    #[test]
+    fn asgd_average_lags_raw_iterate_early() {
+        // ASGD's averaged z moves slower than θ from the start — the
+        // thesis starts averaging late on ImageNet for exactly this
+        // reason.
+        let mut o1 = oracle();
+        let r_sgd = run_sequential(&mut o1, SeqMethod::Sgd, 0.1, &cost(), 0.1, 0.05, 5);
+        let mut o2 = oracle();
+        let r_asgd = run_sequential(&mut o2, SeqMethod::Asgd, 0.1, &cost(), 0.1, 0.05, 5);
+        let s = r_sgd.curve.last().unwrap().train_loss;
+        let a = r_asgd.curve.last().unwrap().train_loss;
+        assert!(a >= s - 0.05, "averaged {a} vs raw {s}");
+    }
+
+    #[test]
+    fn msgd_with_large_eta_diverges_smaller_is_fine() {
+        let mut o = oracle();
+        let bad = run_sequential(&mut o, SeqMethod::Msgd { delta: 0.99 }, 1.5,
+                                 &cost(), 0.6, 0.2, 5);
+        let mut o2 = oracle();
+        let good = run_sequential(&mut o2, SeqMethod::Msgd { delta: 0.99 }, 0.005,
+                                  &cost(), 0.6, 0.2, 5);
+        assert!(!good.diverged);
+        let bl = bad.curve.last().unwrap().train_loss;
+        let gl = good.curve.last().unwrap().train_loss;
+        assert!(bad.diverged || bl > gl, "bad {bl} vs good {gl}");
+    }
+}

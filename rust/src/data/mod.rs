@@ -1,0 +1,20 @@
+//! Synthetic datasets + the thesis' §4.1 parallel data-prefetch
+//! pipeline.
+//!
+//! - [`markov`] — a next-token corpus with learnable k-gram structure
+//!   (the transformer's training data in the end-to-end example).
+//! - [`blobs`] — a "CIFAR-like" classification set: class-conditional
+//!   gaussian clusters with controllable spread; the sweep figures'
+//!   workload.
+//! - [`prefetch`] — the §4.1 loader semantics: k data loaders each own
+//!   a chunked "mmap file", serve consecutive chunks to whichever
+//!   worker asks, cycle with a uniformly-random restart offset; workers
+//!   gather k chunks, shuffle, and cut mini-batches.
+
+pub mod blobs;
+pub mod markov;
+pub mod prefetch;
+
+pub use blobs::BlobDataset;
+pub use markov::MarkovCorpus;
+pub use prefetch::{DataLoader, PrefetchPool};

@@ -1,0 +1,171 @@
+//! The §4.1 parallel data-prefetch pipeline, faithfully reimplemented:
+//!
+//! * k data loaders, each owning a chunked "mmap file" (here: an index
+//!   range over a dataset) holding either the whole set (CIFAR mode) or
+//!   a distinct 1/k shard (ImageNet mode);
+//! * each loader serves *consecutive* chunks of c samples to whichever
+//!   worker requests next, cycling through its file;
+//! * on wrap-around the loader restarts from a uniformly random offset
+//!   in [0, s], s = (file size mod mini-batch size);
+//! * a worker gathers one chunk from each of the k loaders, shuffles
+//!   the union, and cuts mini-batches of size 128 (here: `batch`).
+
+use crate::rng::Rng;
+
+/// One data loader cycling through its chunk file.
+pub struct DataLoader {
+    /// The sample indices this loader owns (its "mmap file").
+    file: Vec<usize>,
+    /// Chunk size in samples.
+    chunk: usize,
+    /// Current read position.
+    pos: usize,
+    /// Mini-batch size (for the random wrap offset rule).
+    batch: usize,
+    rng: Rng,
+}
+
+impl DataLoader {
+    pub fn new(file: Vec<usize>, chunk: usize, batch: usize, seed: u64) -> Self {
+        assert!(!file.is_empty() && chunk > 0);
+        Self { file, chunk, pos: 0, batch, rng: Rng::new(seed) }
+    }
+
+    /// Serve the next chunk (consecutive samples, cycling).
+    pub fn next_chunk(&mut self) -> Vec<usize> {
+        let mut out = Vec::with_capacity(self.chunk);
+        for _ in 0..self.chunk {
+            if self.pos >= self.file.len() {
+                // Wrap: restart from a random offset in [0, s],
+                // s = len mod batch (the thesis' rule).
+                let s = self.file.len() % self.batch;
+                self.pos = if s == 0 { 0 } else { self.rng.below(s + 1) };
+            }
+            out.push(self.file[self.pos]);
+            self.pos += 1;
+        }
+        out
+    }
+}
+
+/// The pool of k loaders a worker draws from.
+pub struct PrefetchPool {
+    loaders: Vec<DataLoader>,
+    batch: usize,
+}
+
+/// Sharding mode for constructing the pool (thesis §4.1).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Sharding {
+    /// Every loader's file is the whole dataset (CIFAR mode).
+    Replicated,
+    /// Loader j owns the j-th 1/k fraction (ImageNet mode).
+    Partitioned,
+}
+
+impl PrefetchPool {
+    pub fn new(
+        n_samples: usize,
+        k: usize,
+        chunk: usize,
+        batch: usize,
+        mode: Sharding,
+        seed: u64,
+    ) -> Self {
+        let loaders = (0..k)
+            .map(|j| {
+                let file: Vec<usize> = match mode {
+                    Sharding::Replicated => (0..n_samples).collect(),
+                    Sharding::Partitioned => {
+                        let lo = j * n_samples / k;
+                        let hi = (j + 1) * n_samples / k;
+                        (lo..hi).collect()
+                    }
+                };
+                DataLoader::new(file, chunk, batch, seed.wrapping_add(j as u64))
+            })
+            .collect();
+        Self { loaders, batch }
+    }
+
+    /// One worker fetch: k chunks (one per loader), shuffled, cut into
+    /// mini-batches of `batch` sample indices.
+    pub fn fetch_minibatches(&mut self, rng: &mut Rng) -> Vec<Vec<usize>> {
+        let mut pool: Vec<usize> = Vec::new();
+        for l in &mut self.loaders {
+            pool.extend(l.next_chunk());
+        }
+        rng.shuffle(&mut pool);
+        pool.chunks(self.batch)
+            .filter(|c| c.len() == self.batch)
+            .map(|c| c.to_vec())
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn chunks_are_consecutive_and_cycle() {
+        let mut l = DataLoader::new((0..10).collect(), 4, 4, 1);
+        assert_eq!(l.next_chunk(), vec![0, 1, 2, 3]);
+        assert_eq!(l.next_chunk(), vec![4, 5, 6, 7]);
+        let third = l.next_chunk();
+        assert_eq!(&third[..2], &[8, 9]);
+        // After wrap, restart offset ∈ [0, 10 mod 4] = [0, 2].
+        assert!(third[2] <= 2, "wrap offset {:?}", &third[2..]);
+        assert_eq!(third[3], third[2] + 1);
+    }
+
+    #[test]
+    fn partitioned_loaders_cover_disjoint_shards() {
+        let pool = PrefetchPool::new(100, 4, 8, 8, Sharding::Partitioned, 2);
+        for (j, l) in pool.loaders.iter().enumerate() {
+            assert_eq!(l.file.first(), Some(&(j * 25)));
+            assert_eq!(l.file.len(), 25);
+        }
+    }
+
+    #[test]
+    fn replicated_loaders_each_own_everything() {
+        let pool = PrefetchPool::new(50, 3, 8, 8, Sharding::Replicated, 2);
+        for l in &pool.loaders {
+            assert_eq!(l.file.len(), 50);
+        }
+    }
+
+    #[test]
+    fn fetch_produces_full_minibatches_of_valid_indices() {
+        let mut pool = PrefetchPool::new(512, 8, 64, 128, Sharding::Replicated, 3);
+        let mut rng = Rng::new(4);
+        let mbs = pool.fetch_minibatches(&mut rng);
+        // 8 loaders × 64 = 512 samples = 4 mini-batches of 128.
+        assert_eq!(mbs.len(), 4);
+        for mb in &mbs {
+            assert_eq!(mb.len(), 128);
+            assert!(mb.iter().all(|&i| i < 512));
+        }
+    }
+
+    #[test]
+    fn coverage_is_near_uniform_over_many_fetches() {
+        // Cycling loaders must visit every sample at similar frequency.
+        let n = 256;
+        let mut pool = PrefetchPool::new(n, 4, 32, 32, Sharding::Partitioned, 5);
+        let mut rng = Rng::new(6);
+        let mut counts = vec![0usize; n];
+        for _ in 0..64 {
+            for mb in pool.fetch_minibatches(&mut rng) {
+                for i in mb {
+                    counts[i] += 1;
+                }
+            }
+        }
+        let min = *counts.iter().min().unwrap();
+        let max = *counts.iter().max().unwrap();
+        assert!(min > 0, "every sample visited");
+        assert!(max <= 3 * min.max(1), "near-uniform: min {min} max {max}");
+    }
+}

@@ -1,0 +1,96 @@
+//! Criterion-style micro-benchmark harness (the offline crate set has
+//! no criterion; `cargo bench` runs our `harness = false` binaries,
+//! which use this module). Reports median + MAD over timed batches and
+//! prints rows `cargo bench`-style.
+
+use std::time::Instant;
+
+/// One benchmark measurement.
+#[derive(Clone, Copy, Debug)]
+pub struct Sample {
+    pub median_ns: f64,
+    pub mad_ns: f64,
+    pub iters: u64,
+}
+
+impl Sample {
+    pub fn throughput(&self, items: f64) -> f64 {
+        items / (self.median_ns * 1e-9)
+    }
+}
+
+/// Time `f` adaptively: calibrate iterations to ~`target_ms` per batch,
+/// run `batches` batches, report median/MAD of per-iteration time.
+pub fn bench<F: FnMut()>(name: &str, target_ms: f64, batches: usize, mut f: F) -> Sample {
+    // Calibrate.
+    let mut iters = 1u64;
+    loop {
+        let t0 = Instant::now();
+        for _ in 0..iters {
+            f();
+        }
+        let el = t0.elapsed().as_secs_f64() * 1e3;
+        if el >= target_ms || iters >= 1 << 30 {
+            break;
+        }
+        let scale = (target_ms / el.max(1e-6)).clamp(1.5, 100.0);
+        iters = ((iters as f64) * scale).ceil() as u64;
+    }
+    // Measure.
+    let mut per_iter: Vec<f64> = (0..batches.max(3))
+        .map(|_| {
+            let t0 = Instant::now();
+            for _ in 0..iters {
+                f();
+            }
+            t0.elapsed().as_nanos() as f64 / iters as f64
+        })
+        .collect();
+    per_iter.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let median = per_iter[per_iter.len() / 2];
+    let mut dev: Vec<f64> = per_iter.iter().map(|x| (x - median).abs()).collect();
+    dev.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let mad = dev[dev.len() / 2];
+    let s = Sample { median_ns: median, mad_ns: mad, iters };
+    println!(
+        "bench {name:<44} {:>12.1} ns/iter (± {:.1}) x{}",
+        s.median_ns, s.mad_ns, s.iters
+    );
+    s
+}
+
+/// Pretty time for summaries.
+pub fn fmt_ns(ns: f64) -> String {
+    if ns < 1e3 {
+        format!("{ns:.0} ns")
+    } else if ns < 1e6 {
+        format!("{:.1} µs", ns / 1e3)
+    } else if ns < 1e9 {
+        format!("{:.2} ms", ns / 1e6)
+    } else {
+        format!("{:.2} s", ns / 1e9)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_measures_something_sane() {
+        let mut acc = 0u64;
+        let s = bench("noop-ish", 2.0, 3, || {
+            acc = acc.wrapping_add(std::hint::black_box(1));
+        });
+        assert!(s.median_ns > 0.0 && s.median_ns < 1e6);
+        assert!(s.iters >= 1);
+    }
+
+    #[test]
+    fn fmt_ns_ranges() {
+        assert_eq!(fmt_ns(500.0), "500 ns");
+        assert!(fmt_ns(5_000.0).ends_with("µs"));
+        assert!(fmt_ns(5_000_000.0).ends_with("ms"));
+        assert!(fmt_ns(5e9).ends_with(" s"));
+    }
+}

@@ -1,0 +1,172 @@
+//! Chapter 3 figures: the closed-form MSE map and the ADMM instability.
+
+use super::csv::Csv;
+use super::FigOpts;
+use crate::csv_row;
+use crate::sim::{admm, moments};
+use anyhow::Result;
+
+/// Fig 3.1 — theoretical MSE of the center variable over (η, β) grids
+/// for p ∈ {1, 10, 100, 1000, 10000} and t ∈ {1, 2, 10, 100, ∞}.
+/// Large-noise setting: x̃₀ = x₀ⁱ = 1, h = 1, σ = 10.
+pub fn fig3_1(opts: &FigOpts) -> Result<()> {
+    let grid = if opts.full { 40 } else { 16 };
+    let ps = [1usize, 10, 100, 1000, 10_000];
+    let ts: [Option<u32>; 5] = [Some(1), Some(2), Some(10), Some(100), None];
+    let mut csv = Csv::create(
+        format!("{}/fig3_1.csv", opts.out_dir),
+        &["p", "t", "eta", "beta", "mse"],
+    )?;
+    let mut shrink_ok = true;
+    let mut prev_median = f64::INFINITY;
+    for &p in &ps {
+        let model = moments::QuadraticModel { h: 1.0, sigma: 10.0, p };
+        let mut finals = Vec::new();
+        for ti in &ts {
+            for ei in 0..grid {
+                for bi in 0..grid {
+                    let eta = 10f64.powf(-3.0 + 3.0 * ei as f64 / (grid - 1) as f64);
+                    let beta = 10f64.powf(-3.0 + 3.5 * bi as f64 / (grid - 1) as f64);
+                    let mse = match ti {
+                        Some(t) => moments::center_mse(&model, eta, beta, 1.0, *t),
+                        None => {
+                            let alpha = beta / p as f64;
+                            let (b, _) = (0.0, 0.0);
+                            let _ = b;
+                            if moments::easgd_stable(eta, alpha, 1.0, p) {
+                                moments::center_mse_infinite(&model, eta, beta)
+                            } else {
+                                f64::INFINITY
+                            }
+                        }
+                    };
+                    let t_str = ti.map(|t| t as f64).unwrap_or(f64::INFINITY);
+                    csv.row_f64(&[p as f64, t_str, eta, beta, mse])?;
+                    if ti.is_none() && mse.is_finite() {
+                        finals.push(mse);
+                    }
+                }
+            }
+        }
+        finals.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let median = finals.get(finals.len() / 2).copied().unwrap_or(f64::NAN);
+        println!("fig3.1: p={p:<6} median stationary MSE (stable region) = {median:.4e}");
+        if median >= prev_median {
+            shrink_ok = false;
+        }
+        prev_median = median;
+    }
+    println!(
+        "fig3.1 shape: MSE decreases with p (variance reduction): {}",
+        if shrink_ok { "HOLDS" } else { "VIOLATED" }
+    );
+    Ok(())
+}
+
+/// Fig 3.2 — sp(𝓕) of the round-robin ADMM composition over
+/// (η, ρ) for p = 3 and p = 8; instability pockets at small ρ.
+pub fn fig3_2(opts: &FigOpts) -> Result<()> {
+    let grid = if opts.full { 64 } else { 24 };
+    let mut csv = Csv::create(
+        format!("{}/fig3_2.csv", opts.out_dir),
+        &["p", "eta", "rho", "spectral_radius"],
+    )?;
+    for &p in &[3usize, 8] {
+        let mut n_unstable = 0usize;
+        for ei in 0..grid {
+            for ri in 0..grid {
+                let eta = 1e-2 * (ei as f64 + 0.5) / grid as f64;
+                let rho = 10.0 * (ri as f64 + 0.5) / grid as f64;
+                let sp = admm::admm_spectral_radius(p, eta, rho);
+                csv.row_f64(&[p as f64, eta, rho, sp])?;
+                if sp > 1.0 + 1e-9 {
+                    n_unstable += 1;
+                }
+            }
+        }
+        println!(
+            "fig3.2: p={p} unstable cells {n_unstable}/{} ({:.1}%)",
+            grid * grid,
+            100.0 * n_unstable as f64 / (grid * grid) as f64
+        );
+    }
+    let sp_paper = admm::admm_spectral_radius(3, 0.001, 2.5);
+    println!(
+        "fig3.2 shape: paper's chaotic point (p=3, η=0.001, ρ=2.5) sp={sp_paper:.6} > 1: {}",
+        if sp_paper > 1.0 { "HOLDS" } else { "VIOLATED" }
+    );
+    Ok(())
+}
+
+/// Fig 3.3 — divergent ADMM trajectory at the paper's point, plus the
+/// contrasting stable EASGD round-robin run (§3.3's closed condition).
+pub fn fig3_3(opts: &FigOpts) -> Result<()> {
+    let rounds = if opts.full { 120_000 } else { 30_000 };
+    let tr = admm::admm_trajectory(3, 0.001, 2.5, 1000.0, rounds);
+    let mut csv = Csv::create(
+        format!("{}/fig3_3.csv", opts.out_dir),
+        &["round", "center_admm"],
+    )?;
+    for (i, x) in tr.iter().enumerate().step_by(10) {
+        csv.row_f64(&[i as f64, *x])?;
+    }
+    let early: f64 = tr[..1000].iter().fold(0.0f64, |m, x| m.max(x.abs()));
+    let late: f64 = tr[tr.len().saturating_sub(1000)..]
+        .iter()
+        .fold(0.0f64, |m, x| m.max(x.abs()));
+    println!("fig3.3: ADMM |x̃| envelope early {early:.1} -> late {late:.3e}");
+    println!(
+        "fig3.3 shape: ADMM divergence at (η=0.001, ρ=2.5): {}",
+        if late > 2.0 * early { "HOLDS" } else { "VIOLATED" }
+    );
+
+    // EASGD round-robin at the same spirit of setting stays put.
+    let map = admm::easgd_round_robin_map(3, 0.5, 0.3);
+    let mut s = vec![1000.0f64; 4];
+    let mut csv2 = Csv::create(
+        format!("{}/fig3_3_easgd.csv", opts.out_dir),
+        &["round", "center_easgd"],
+    )?;
+    for i in 0..2000 {
+        if i % 10 == 0 {
+            csv2.row_f64(&[i as f64, s[3]])?;
+        }
+        s = map.matvec(&s);
+    }
+    println!(
+        "fig3.3 shape: EASGD round-robin contracts (x̃ {:.2e}): {}",
+        s[3],
+        if s[3].abs() < 1.0 { "HOLDS" } else { "VIOLATED" }
+    );
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn opts() -> FigOpts {
+        FigOpts {
+            out_dir: std::env::temp_dir()
+                .join("et_fig_ch3")
+                .to_string_lossy()
+                .into_owned(),
+            full: false,
+            seed: 0,
+        }
+    }
+
+    #[test]
+    fn fig3_2_and_3_3_run_quick() {
+        fig3_2(&opts()).unwrap();
+        fig3_3(&opts()).unwrap();
+        let p = std::path::Path::new(&opts().out_dir).join("fig3_2.csv");
+        let text = std::fs::read_to_string(p).unwrap();
+        assert!(text.lines().count() > 24 * 24);
+    }
+
+    #[test]
+    fn fig3_1_runs_quick() {
+        fig3_1(&opts()).unwrap();
+    }
+}

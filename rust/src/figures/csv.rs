@@ -1,0 +1,60 @@
+//! Tiny CSV writer for the figure outputs.
+
+use anyhow::Result;
+use std::io::Write;
+use std::path::Path;
+
+/// A CSV file under construction.
+pub struct Csv {
+    w: std::io::BufWriter<std::fs::File>,
+    cols: usize,
+}
+
+impl Csv {
+    pub fn create<P: AsRef<Path>>(path: P, header: &[&str]) -> Result<Csv> {
+        if let Some(parent) = path.as_ref().parent() {
+            std::fs::create_dir_all(parent)?;
+        }
+        let f = std::fs::File::create(path)?;
+        let mut w = std::io::BufWriter::new(f);
+        writeln!(w, "{}", header.join(","))?;
+        Ok(Csv { w, cols: header.len() })
+    }
+
+    pub fn row(&mut self, fields: &[String]) -> Result<()> {
+        debug_assert_eq!(fields.len(), self.cols, "column count mismatch");
+        writeln!(self.w, "{}", fields.join(","))?;
+        Ok(())
+    }
+
+    pub fn row_f64(&mut self, fields: &[f64]) -> Result<()> {
+        let s: Vec<String> = fields.iter().map(|x| format!("{x}")).collect();
+        self.row(&s)
+    }
+}
+
+/// Format helper: stringify mixed rows tersely.
+#[macro_export]
+macro_rules! csv_row {
+    ($csv:expr, $($v:expr),+ $(,)?) => {
+        $csv.row(&[$(format!("{}", $v)),+])
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn writes_header_and_rows() {
+        let dir = std::env::temp_dir().join("et_csv_test");
+        let path = dir.join("t.csv");
+        {
+            let mut c = Csv::create(&path, &["a", "b"]).unwrap();
+            csv_row!(c, 1, "x").unwrap();
+            c.row_f64(&[2.5, 3.5]).unwrap();
+        }
+        let text = std::fs::read_to_string(&path).unwrap();
+        assert_eq!(text, "a,b\n1,x\n2.5,3.5\n");
+    }
+}

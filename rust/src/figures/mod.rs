@@ -1,0 +1,118 @@
+//! The reproduction harness: one generator per thesis table/figure.
+//!
+//! `repro figure <id>` (or `figure all`) regenerates the figure's data
+//! as CSV under `--out-dir` and prints the paper-shaped summary rows.
+//! Exact numbers differ from the thesis (our substrate is a simulator,
+//! not the authors' GPU cluster — DESIGN.md §2); the *shape* claims are
+//! asserted in each generator and recorded in EXPERIMENTS.md.
+//!
+//! `--full` switches from the quick default grids/horizons to
+//! thesis-scale ones.
+
+pub mod benchkit;
+pub mod ch3;
+pub mod ch4;
+pub mod ch5;
+pub mod ch6;
+pub mod csv;
+
+use crate::config::Args;
+use anyhow::{bail, Result};
+
+/// Global options every figure generator receives.
+#[derive(Clone, Debug)]
+pub struct FigOpts {
+    pub out_dir: String,
+    /// Thesis-scale grids/horizons instead of the quick defaults.
+    pub full: bool,
+    pub seed: u64,
+}
+
+impl FigOpts {
+    pub fn from_args(args: &Args) -> FigOpts {
+        FigOpts {
+            out_dir: args.get_str("out-dir", "out").to_string(),
+            full: args.get_bool("full", false),
+            seed: args.get_u64("seed", 0),
+        }
+    }
+}
+
+/// All known figure ids in thesis order.
+pub const ALL_FIGURES: &[&str] = &[
+    "fig3.1", "fig3.2", "fig3.3", "tab4.1", "fig4.1-4.4", "fig4.5-4.7",
+    "fig4.8-4.9", "fig4.10-4.11", "fig4.12", "fig4.13", "fig4.14-4.15",
+    "tab4.4", "fig5.1", "fig5.2", "fig5.3", "fig5.4-5.5", "fig5.6",
+    "fig5.7", "fig5.8", "fig5.9", "fig5.10-5.12", "fig5.13", "fig5.14",
+    "fig5.15-5.18", "fig5.19", "fig5.20", "fig6.3-6.10", "fig6.11-6.12",
+    "fig6.13gs",
+];
+
+/// Dispatch a figure id.
+pub fn run(id: &str, opts: &FigOpts) -> Result<()> {
+    std::fs::create_dir_all(&opts.out_dir)?;
+    match id {
+        "all" => {
+            for f in ALL_FIGURES {
+                println!("==== {f} ====");
+                run(f, opts)?;
+            }
+            Ok(())
+        }
+        "fig3.1" => ch3::fig3_1(opts),
+        "fig3.2" => ch3::fig3_2(opts),
+        "fig3.3" => ch3::fig3_3(opts),
+        "tab4.1" => ch4::tab4_1(opts),
+        "fig4.1-4.4" => ch4::fig4_tau_sweep(opts),
+        "fig4.5-4.7" => ch4::fig4_p_sweep(opts),
+        "fig4.8-4.9" => ch4::fig4_imagenet(opts),
+        "fig4.10-4.11" => ch4::fig4_sequential(opts),
+        "fig4.12" => ch4::fig4_12_eta(opts),
+        "fig4.13" => ch4::fig4_13_tau_decay(opts),
+        "fig4.14-4.15" => ch4::fig4_speedup(opts),
+        "tab4.4" => ch4::tab4_4(opts),
+        "fig5.1" => ch5::fig5_1(opts),
+        "fig5.2" => ch5::fig5_2(opts),
+        "fig5.3" => ch5::fig5_3_7(opts, 0.1, "fig5.3"),
+        "fig5.7" => ch5::fig5_3_7(opts, 1.5, "fig5.7"),
+        "fig5.4-5.5" => ch5::fig5_4_5(opts),
+        "fig5.6" => ch5::fig5_6(opts),
+        "fig5.8" => ch5::fig5_8(opts),
+        "fig5.9" => ch5::fig5_9(opts),
+        "fig5.10-5.12" => ch5::fig5_10_12(opts),
+        "fig5.13" => ch5::fig5_13(opts),
+        "fig5.14" => ch5::fig5_14(opts),
+        "fig5.15-5.18" => ch5::fig5_15_18(opts),
+        "fig5.19" => ch5::fig5_19(opts),
+        "fig5.20" => ch5::fig5_20(opts),
+        "fig6.3-6.10" => ch6::fig6_tree(opts),
+        "fig6.11-6.12" => ch6::fig6_best(opts),
+        "fig6.13gs" => ch6::fig6_gs(opts),
+        other => bail!("unknown figure id '{other}' (see `repro figure list`)"),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn every_listed_figure_dispatches() {
+        // Cheap figures run outright; expensive ones are covered by the
+        // bench/figure integration — here we at least verify dispatch
+        // does not hit the unknown-id arm.
+        let opts = FigOpts {
+            out_dir: std::env::temp_dir()
+                .join("et_figtest")
+                .to_string_lossy()
+                .into_owned(),
+            full: false,
+            seed: 0,
+        };
+        // A fast, pure-math subset end-to-end:
+        for id in ["fig5.9", "fig5.20", "fig5.13"] {
+            run(id, &opts).unwrap();
+        }
+        assert!(run("nope", &opts).is_err());
+    }
+}

@@ -1,0 +1,38 @@
+//! # elastic-train
+//!
+//! A Rust + JAX + Pallas reproduction of *Distributed stochastic
+//! optimization for deep learning* (Sixin Zhang, NYU thesis, 2016) — the
+//! Elastic Averaging SGD (EASGD) thesis.
+//!
+//! Layer 3 of the three-layer stack: the distributed-training
+//! coordinator. The JAX/Pallas layers (L2 model, L1 kernels) are
+//! AOT-lowered to HLO text at build time (`make artifacts`) and executed
+//! here through the PJRT C API (the `xla` crate); Python is never on the
+//! training path.
+//!
+//! Module map (see DESIGN.md for the full inventory):
+//! - [`rng`], [`linalg`] — numeric substrates (deterministic RNG,
+//!   dense eigenvalues for the stability figures).
+//! - [`sim`] — the thesis' analysis chapters as executable models
+//!   (closed-form MSE, moment matrices, ADMM round-robin maps,
+//!   the non-convex double well).
+//! - [`cluster`] — virtual-time simulated cluster (latency/bandwidth
+//!   links, compute/data/comm accounting, Table 4.4 semantics).
+//! - [`model`], [`data`] — flat parameter buffers + fused native update
+//!   ops; synthetic corpora and the §4.1 prefetch pipeline.
+//! - [`coordinator`] — EASGD/EAMSGD, DOWNPOUR and friends, sequential
+//!   baselines, round-robin ADMM, and the EASGD **Tree**.
+//! - [`runtime`] — PJRT artifact loading and execution.
+//! - [`config`] — the TOML config system; [`figures`] — one generator
+//!   per thesis table/figure.
+
+pub mod cluster;
+pub mod config;
+pub mod coordinator;
+pub mod data;
+pub mod figures;
+pub mod linalg;
+pub mod model;
+pub mod rng;
+pub mod runtime;
+pub mod sim;

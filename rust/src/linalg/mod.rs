@@ -1,0 +1,128 @@
+//! Dense linear-algebra substrate.
+//!
+//! Every stability figure in the thesis (Figs 3.2, 5.1–5.19) is the
+//! spectral radius of a small dense, generally *non-symmetric* matrix:
+//! the drift/moment matrices of the optimization dynamics and the
+//! composed round-robin ADMM maps. We therefore need a general real
+//! eigenvalue solver; this module implements Householder Hessenberg
+//! reduction followed by complex Wilkinson-shifted QR with deflation —
+//! compact, robust for the ≤ 20×20 matrices the figures sweep over
+//! millions of times.
+
+mod complex;
+mod eig;
+mod matrix;
+
+pub use complex::Complex;
+pub use eig::{eigenvalues, spectral_radius};
+pub use matrix::Matrix;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sorted_abs(mut v: Vec<Complex>) -> Vec<f64> {
+        let mut a: Vec<f64> = v.drain(..).map(|z| z.abs()).collect();
+        a.sort_by(|x, y| x.partial_cmp(y).unwrap());
+        a
+    }
+
+    #[test]
+    fn diagonal_matrix_eigenvalues() {
+        let m = Matrix::diag(&[3.0, -1.0, 0.5, 7.0]);
+        let got = sorted_abs(eigenvalues(&m));
+        let want = [0.5, 1.0, 3.0, 7.0];
+        for (g, w) in got.iter().zip(want) {
+            assert!((g - w).abs() < 1e-10, "{g} vs {w}");
+        }
+    }
+
+    #[test]
+    fn rotation_matrix_has_unit_complex_pair() {
+        // [[cos, -sin], [sin, cos]] has eigenvalues e^{±iθ}.
+        let th = 0.7f64;
+        let m = Matrix::from_rows(&[
+            &[th.cos(), -th.sin()],
+            &[th.sin(), th.cos()],
+        ]);
+        let eig = eigenvalues(&m);
+        assert_eq!(eig.len(), 2);
+        for z in &eig {
+            assert!((z.abs() - 1.0).abs() < 1e-10);
+            assert!((z.re - th.cos()).abs() < 1e-10);
+        }
+        assert!((spectral_radius(&m) - 1.0).abs() < 1e-10);
+    }
+
+    #[test]
+    fn companion_matrix_roots() {
+        // p(x) = x^3 - 6x^2 + 11x - 6 = (x-1)(x-2)(x-3).
+        let m = Matrix::from_rows(&[
+            &[6.0, -11.0, 6.0],
+            &[1.0, 0.0, 0.0],
+            &[0.0, 1.0, 0.0],
+        ]);
+        let got = sorted_abs(eigenvalues(&m));
+        for (g, w) in got.iter().zip([1.0, 2.0, 3.0]) {
+            assert!((g - w).abs() < 1e-8, "{g} vs {w}");
+        }
+    }
+
+    #[test]
+    fn trace_and_det_consistency_random() {
+        let mut rng = crate::rng::Rng::new(314);
+        for n in [2usize, 3, 5, 8, 13] {
+            let mut m = Matrix::zeros(n, n);
+            for i in 0..n {
+                for j in 0..n {
+                    m.set(i, j, rng.normal(0.0, 1.0));
+                }
+            }
+            let eig = eigenvalues(&m);
+            assert_eq!(eig.len(), n);
+            let sum: Complex = eig.iter().fold(Complex::ZERO, |a, &b| a + b);
+            let trace: f64 = (0..n).map(|i| m.get(i, i)).sum();
+            assert!((sum.re - trace).abs() < 1e-7 * (1.0 + trace.abs()),
+                    "n={n} trace {} vs {}", sum.re, trace);
+            assert!(sum.im.abs() < 1e-7, "imag parts must cancel");
+        }
+    }
+
+    #[test]
+    fn defective_jordan_block_converges() {
+        // Jordan block: repeated eigenvalue 2 with no full eigenbasis.
+        let m = Matrix::from_rows(&[
+            &[2.0, 1.0, 0.0],
+            &[0.0, 2.0, 1.0],
+            &[0.0, 0.0, 2.0],
+        ]);
+        for z in eigenvalues(&m) {
+            assert!((z.re - 2.0).abs() < 1e-4 && z.im.abs() < 1e-4);
+        }
+    }
+
+    #[test]
+    fn matmul_identity_and_associativity() {
+        let a = Matrix::from_rows(&[&[1.0, 2.0], &[3.0, 4.0]]);
+        let i = Matrix::identity(2);
+        assert_eq!(a.matmul(&i).as_slice(), a.as_slice());
+        let b = Matrix::from_rows(&[&[0.0, 1.0], &[1.0, 0.0]]);
+        let c = Matrix::from_rows(&[&[2.0, 0.0], &[0.0, 2.0]]);
+        let lhs = a.matmul(&b).matmul(&c);
+        let rhs = a.matmul(&b.matmul(&c));
+        for (x, y) in lhs.as_slice().iter().zip(rhs.as_slice()) {
+            assert!((x - y).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn spectral_radius_of_contraction_below_one() {
+        // The EASGD round-robin 2x2 block from §3.3 at a stable setting.
+        let (eta, alpha) = (0.5, 0.3);
+        let m = Matrix::from_rows(&[
+            &[1.0 - eta - alpha, alpha],
+            &[alpha, 1.0 - alpha],
+        ]);
+        assert!(spectral_radius(&m) < 1.0);
+    }
+}

@@ -1,0 +1,200 @@
+//! `repro` — the elastic-train CLI.
+//!
+//! Subcommands:
+//!   repro figure <id|all|list> [out-dir=out] [--full] [seed=N]
+//!       Regenerate a thesis table/figure (DESIGN.md §5 maps ids).
+//!   repro train [method=easgd|eamsgd|downpour|...] [p=4] [tau=10]
+//!               [eta=0.05] [horizon=60] [cost=cifar|imagenet] ...
+//!       One distributed run on the native-MLP sweep workload; prints
+//!       the center-variable curve.
+//!   repro train-pjrt [p=2] [steps=200] [eta=0.3] [tau=4]
+//!       The end-to-end three-layer run: AOT transformer through PJRT.
+//!   repro inspect
+//!       Print the artifacts manifest summary.
+
+use anyhow::{bail, Result};
+use elastic_train::cluster::CostModel;
+use elastic_train::config::{Args, ExperimentConfig};
+use elastic_train::coordinator::{run_parallel, run_sequential, DriverConfig, MlpOracle};
+use elastic_train::figures::{self, FigOpts};
+use elastic_train::runtime::{PjrtModel, PjrtOracle};
+use std::rc::Rc;
+
+fn main() {
+    if let Err(e) = run() {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn run() -> Result<()> {
+    let args = Args::from_env();
+    match args.positional.first().map(|s| s.as_str()) {
+        Some("figure") => cmd_figure(&args),
+        Some("train") => cmd_train(&args),
+        Some("train-pjrt") => cmd_train_pjrt(&args),
+        Some("inspect") => cmd_inspect(&args),
+        _ => {
+            eprintln!(
+                "usage: repro <figure|train|train-pjrt|inspect> [key=value ...]\n\
+                 figures: repro figure list"
+            );
+            Ok(())
+        }
+    }
+}
+
+fn cmd_figure(args: &Args) -> Result<()> {
+    let id = args.positional.get(1).map(|s| s.as_str()).unwrap_or("list");
+    if id == "list" {
+        for f in figures::ALL_FIGURES {
+            println!("{f}");
+        }
+        return Ok(());
+    }
+    let opts = FigOpts::from_args(args);
+    figures::run(id, &opts)
+}
+
+fn cmd_train(args: &Args) -> Result<()> {
+    let mut cfg = ExperimentConfig::default();
+    if let Some(path) = args.get("config") {
+        cfg = ExperimentConfig::from_file(path)?;
+    }
+    cfg.apply_args(args);
+
+    let data = elastic_train::figures::ch4::sweep_data(cfg.seed + 1);
+    let mcfg = elastic_train::figures::ch4::sweep_mlp();
+    let cost = cfg.cost_model(mcfg.n_params());
+
+    if let Some(m) = cfg.parallel_method() {
+        println!(
+            "train: {} p={} τ={} η={} horizon={}s ({} cost model)",
+            m.name(),
+            cfg.p,
+            cfg.tau,
+            cfg.eta,
+            cfg.horizon,
+            cfg.cost_family
+        );
+        let mut oracles = MlpOracle::family(data, &mcfg, cfg.batch, cfg.p);
+        let dc = DriverConfig {
+            eta: cfg.eta,
+            method: m,
+            cost,
+            horizon: cfg.horizon,
+            eval_every: cfg.eval_every,
+            seed: cfg.seed,
+            max_steps: u64::MAX / 2,
+            lr_decay_gamma: cfg
+                .extra
+                .get("gamma")
+                .and_then(|s| s.parse().ok())
+                .unwrap_or(0.0),
+        };
+        let r = run_parallel(&mut oracles, &dc);
+        print_curve(&r);
+    } else if let Some(m) = cfg.sequential_method() {
+        println!(
+            "train: {} (sequential) η={} horizon={}s",
+            m.name(),
+            cfg.eta,
+            cfg.horizon
+        );
+        let mut oracle = MlpOracle::new(data, mcfg, cfg.batch, 40_000);
+        let r = run_sequential(
+            &mut oracle, m, cfg.eta, &cost, cfg.horizon, cfg.eval_every, cfg.seed,
+        );
+        print_curve(&r);
+    } else {
+        bail!("unknown method '{}'", cfg.method);
+    }
+    Ok(())
+}
+
+fn cmd_train_pjrt(args: &Args) -> Result<()> {
+    let p = args.get_usize("p", 2);
+    let steps = args.get_u64("steps", 200);
+    let eta = args.get_f32("eta", 0.3);
+    let tau = args.get_u32("tau", 4);
+    let delta = args.get_f32("delta", 0.0);
+    let dir = std::path::PathBuf::from(args.get_str("artifacts", "artifacts"));
+
+    let model = Rc::new(PjrtModel::load(&dir)?);
+    println!(
+        "train-pjrt: preset={} params={} p={p} τ={tau} η={eta} δ={delta} steps≈{steps}",
+        model.artifacts.preset,
+        model.n_params()
+    );
+    let mut oracles = PjrtOracle::family(model.clone(), 0.05, 4, 42, p);
+    let method = if delta > 0.0 {
+        elastic_train::coordinator::Method::Eamsgd { alpha: 0.9 / p as f32, tau, delta }
+    } else {
+        elastic_train::coordinator::Method::Easgd { alpha: 0.9 / p as f32, tau }
+    };
+    // Virtual time: ~1 ms per step ⇒ horizon sized to the step budget.
+    let cost = CostModel {
+        t_grad: 1e-3,
+        jitter: 0.05,
+        t_data: 1e-4,
+        latency: 1e-4,
+        bandwidth: 1e9,
+        param_bytes: (model.n_params() * 4) as f64,
+    };
+    let dc = DriverConfig {
+        eta,
+        method,
+        cost,
+        horizon: steps as f64 * 2.4e-3 / p as f64,
+        eval_every: steps as f64 * 2.4e-3 / p as f64 / 10.0,
+        seed: args.get_u64("seed", 0),
+        max_steps: steps,
+        lr_decay_gamma: 0.0,
+    };
+    let r = run_parallel(&mut oracles, &dc);
+    print_curve(&r);
+    Ok(())
+}
+
+fn cmd_inspect(args: &Args) -> Result<()> {
+    let dir = std::path::PathBuf::from(args.get_str("artifacts", "artifacts"));
+    let a = elastic_train::runtime::Artifacts::load(&dir)?;
+    println!("preset:   {}", a.preset);
+    println!(
+        "params:   {} ({:.1} MB f32)",
+        a.n_params,
+        a.n_params as f64 * 4e-6
+    );
+    println!(
+        "model:    vocab={} d_model={} layers={} heads={} seq={} batch={}",
+        a.dims.vocab, a.dims.d_model, a.dims.n_layers, a.dims.n_heads,
+        a.dims.seq_len, a.dims.batch
+    );
+    println!("tensors:  {}", a.params.len());
+    for p in a.params.iter().take(6) {
+        println!("  {:<16} {:?} @ {}", p.name, p.shape, p.offset);
+    }
+    if a.params.len() > 6 {
+        println!("  … {} more", a.params.len() - 6);
+    }
+    Ok(())
+}
+
+fn print_curve(r: &elastic_train::cluster::RunResult) {
+    println!("  time        train_loss  test_loss   test_err");
+    for pt in &r.curve {
+        println!(
+            "  {:<10.2}  {:<10.4}  {:<10.4}  {:.4}",
+            pt.time, pt.train_loss, pt.test_loss, pt.test_error
+        );
+    }
+    println!(
+        "steps={} diverged={} best_test_err={:.4} | breakdown compute/data/comm = {:.1}/{:.1}/{:.1}s",
+        r.total_steps,
+        r.diverged,
+        r.best_test_error(),
+        r.breakdown.compute,
+        r.breakdown.data,
+        r.breakdown.comm
+    );
+}

@@ -1,0 +1,191 @@
+//! Flat-parameter update ops — the L3 hot path.
+//!
+//! Semantics are identical to the L1 Pallas kernels in
+//! `python/compile/kernels/easgd_update.py` (which lower to the
+//! `sgd_step` / `elastic` / `fused_step` HLO artifacts); the rust
+//! versions exist so the coordinator can update million-element buffers
+//! without a PJRT round-trip. `runtime::tests` cross-checks the two
+//! paths numerically; `bench_update_hot_path` races them.
+//!
+//! All loops are written to auto-vectorize: slice iterators, no bounds
+//! checks in the hot loop, fused multiply-adds where the compiler finds
+//! them.
+
+/// v' = delta·v − eta·g ; x' = x + v'. With `delta == 0` this is plain
+/// SGD (thesis Alg. 1 inner update). The gradient is assumed evaluated
+/// at the Nesterov lookahead point by the caller (thesis Alg. 2).
+pub fn nesterov_step(x: &mut [f32], v: &mut [f32], g: &[f32], eta: f32, delta: f32) {
+    assert_eq!(x.len(), v.len());
+    assert_eq!(x.len(), g.len());
+    for ((xi, vi), gi) in x.iter_mut().zip(v.iter_mut()).zip(g) {
+        let vn = delta * *vi - eta * *gi;
+        *vi = vn;
+        *xi += vn;
+    }
+}
+
+/// Plain SGD step x' = x − eta·g.
+pub fn sgd_step(x: &mut [f32], g: &[f32], eta: f32) {
+    assert_eq!(x.len(), g.len());
+    for (xi, gi) in x.iter_mut().zip(g) {
+        *xi -= eta * gi;
+    }
+}
+
+/// The symmetric elastic exchange (thesis Alg. 1 steps a/b):
+/// d = alpha·(x − c); x ← x − d; c ← c + d. Returns nothing; both
+/// buffers move toward each other — x + c is exactly conserved.
+pub fn elastic_exchange(x: &mut [f32], c: &mut [f32], alpha: f32) {
+    assert_eq!(x.len(), c.len());
+    for (xi, ci) in x.iter_mut().zip(c.iter_mut()) {
+        let d = alpha * (*xi - *ci);
+        *xi -= d;
+        *ci += d;
+    }
+}
+
+/// One-sided elastic pull: x ← x − alpha·(x − c), with the opposite
+/// force accumulated into `delta_out` for a deferred master update
+/// (the non-blocking Jacobi protocol of §2.2).
+pub fn elastic_pull(x: &mut [f32], c: &[f32], delta_out: &mut [f32], alpha: f32) {
+    assert_eq!(x.len(), c.len());
+    assert_eq!(x.len(), delta_out.len());
+    for ((xi, ci), di) in x.iter_mut().zip(c).zip(delta_out.iter_mut()) {
+        let d = alpha * (*xi - *ci);
+        *xi -= d;
+        *di = d;
+    }
+}
+
+/// Accumulate: c ← c + d (the master's half of the deferred exchange;
+/// also DOWNPOUR's gradient push).
+pub fn accumulate(c: &mut [f32], d: &[f32]) {
+    assert_eq!(c.len(), d.len());
+    for (ci, di) in c.iter_mut().zip(d) {
+        *ci += di;
+    }
+}
+
+/// Moving average c ← (1−a)·c + a·x (ADOWNPOUR / MVADOWNPOUR / ASGD /
+/// MVASGD center updates, and the EASGD-Tree Gauss-Seidel arrival rule).
+pub fn moving_average(c: &mut [f32], x: &[f32], a: f32) {
+    assert_eq!(c.len(), x.len());
+    for (ci, xi) in c.iter_mut().zip(x) {
+        *ci += a * (xi - *ci);
+    }
+}
+
+/// Squared L2 distance between two buffers (consensus diagnostics).
+pub fn dist2(a: &[f32], b: &[f32]) -> f64 {
+    assert_eq!(a.len(), b.len());
+    a.iter()
+        .zip(b)
+        .map(|(x, y)| {
+            let d = (*x - *y) as f64;
+            d * d
+        })
+        .sum()
+}
+
+/// Euclidean norm (divergence detection in sweeps).
+pub fn norm2(a: &[f32]) -> f64 {
+    a.iter().map(|x| (*x as f64) * (*x as f64)).sum::<f64>().sqrt()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Rng;
+
+    fn rand_vec(rng: &mut Rng, n: usize) -> Vec<f32> {
+        let mut v = vec![0.0f32; n];
+        rng.fill_gaussian_f32(&mut v, 1.0);
+        v
+    }
+
+    #[test]
+    fn nesterov_matches_scalar_reference() {
+        let mut rng = Rng::new(1);
+        let n = 1537;
+        let (mut x, mut v, g) = (rand_vec(&mut rng, n), rand_vec(&mut rng, n), rand_vec(&mut rng, n));
+        let (x0, v0) = (x.clone(), v.clone());
+        nesterov_step(&mut x, &mut v, &g, 0.1, 0.9);
+        for i in 0..n {
+            let vn = 0.9 * v0[i] - 0.1 * g[i];
+            assert!((v[i] - vn).abs() < 1e-7);
+            assert!((x[i] - (x0[i] + vn)).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn sgd_is_nesterov_with_zero_momentum() {
+        let mut rng = Rng::new(2);
+        let n = 999;
+        let (mut x1, g) = (rand_vec(&mut rng, n), rand_vec(&mut rng, n));
+        let mut x2 = x1.clone();
+        let mut v = vec![0.0f32; n];
+        sgd_step(&mut x1, &g, 0.05);
+        nesterov_step(&mut x2, &mut v, &g, 0.05, 0.0);
+        assert_eq!(x1, x2);
+    }
+
+    #[test]
+    fn elastic_exchange_conserves_sum_exactly() {
+        let mut rng = Rng::new(3);
+        let n = 2048;
+        let (mut x, mut c) = (rand_vec(&mut rng, n), rand_vec(&mut rng, n));
+        let sums: Vec<f32> = x.iter().zip(&c).map(|(a, b)| a + b).collect();
+        elastic_exchange(&mut x, &mut c, 0.37);
+        for i in 0..n {
+            // The force is computed once and applied with ±; only f32
+            // rounding of the two additions can differ.
+            assert!((x[i] + c[i] - sums[i]).abs() <= 1e-5 * sums[i].abs().max(1.0));
+        }
+    }
+
+    #[test]
+    fn elastic_pull_plus_accumulate_equals_exchange() {
+        let mut rng = Rng::new(4);
+        let n = 512;
+        let (mut x1, mut c1) = (rand_vec(&mut rng, n), rand_vec(&mut rng, n));
+        let (mut x2, mut c2) = (x1.clone(), c1.clone());
+        elastic_exchange(&mut x1, &mut c1, 0.2);
+        let mut d = vec![0.0f32; n];
+        elastic_pull(&mut x2, &c2.clone(), &mut d, 0.2);
+        accumulate(&mut c2, &d);
+        assert_eq!(x1, x2);
+        assert_eq!(c1, c2);
+    }
+
+    #[test]
+    fn moving_average_endpoints() {
+        let mut c = vec![1.0f32, 2.0, 3.0];
+        let x = vec![5.0f32, 5.0, 5.0];
+        let c0 = c.clone();
+        moving_average(&mut c, &x, 0.0);
+        assert_eq!(c, c0);
+        moving_average(&mut c, &x, 1.0);
+        assert_eq!(c, x);
+    }
+
+    #[test]
+    fn repeated_exchange_converges_to_midpoint() {
+        let mut x = vec![0.0f32; 16];
+        let mut c = vec![10.0f32; 16];
+        for _ in 0..200 {
+            elastic_exchange(&mut x, &mut c, 0.2);
+        }
+        for i in 0..16 {
+            assert!((x[i] - 5.0).abs() < 1e-3);
+            assert!((c[i] - 5.0).abs() < 1e-3);
+        }
+    }
+
+    #[test]
+    fn dist2_and_norm2() {
+        let a = vec![3.0f32, 0.0];
+        let b = vec![0.0f32, 4.0];
+        assert!((dist2(&a, &b) - 25.0).abs() < 1e-12);
+        assert!((norm2(&a) - 3.0).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,363 @@
+//! Native MLP classifier with hand-written backprop — the cheap,
+//! allocation-conscious gradient oracle behind the Chapter-4/6 figure
+//! sweeps (a stand-in for the thesis' CIFAR conv nets; see DESIGN.md §2:
+//! the distributed-optimizer dynamics under study are model-agnostic,
+//! and at p = 256 simulated workers the PJRT transformer would be
+//! wall-clock prohibitive).
+//!
+//! Architecture: input → [hidden ReLU]× → linear → softmax + CE, with
+//! optional l2 regularization (thesis §4.1). Parameters live in ONE
+//! flat f32 buffer so the coordinator's elastic/momentum ops
+//! ([`super::flat`]) apply directly.
+
+use crate::rng::Rng;
+
+/// Layer sizes: `dims = [in, h1, ..., out]`.
+#[derive(Clone, Debug)]
+pub struct MlpConfig {
+    pub dims: Vec<usize>,
+    pub l2: f32,
+}
+
+impl MlpConfig {
+    pub fn new(dims: &[usize], l2: f32) -> Self {
+        assert!(dims.len() >= 2);
+        Self { dims: dims.to_vec(), l2 }
+    }
+
+    /// The sweep default: a 3-layer net small enough for 256 workers.
+    pub fn sweep_default() -> Self {
+        Self::new(&[32, 64, 32, 10], 1e-4)
+    }
+
+    pub fn n_params(&self) -> usize {
+        self.dims
+            .windows(2)
+            .map(|w| w[0] * w[1] + w[1]) // W + b per layer
+            .sum()
+    }
+
+    pub fn n_classes(&self) -> usize {
+        *self.dims.last().unwrap()
+    }
+}
+
+/// The model: holds no parameters itself — they are passed as flat
+/// slices — only scratch buffers for fwd/bwd (re-used across calls so
+/// the sweep hot loop is allocation-free).
+pub struct Mlp {
+    cfg: MlpConfig,
+    acts: Vec<Vec<f32>>,  // post-activation per layer (incl. input copy)
+    pre: Vec<Vec<f32>>,   // pre-activation per layer
+    grads_a: Vec<Vec<f32>>, // activation gradients
+}
+
+impl Mlp {
+    pub fn new(cfg: MlpConfig) -> Self {
+        let acts = cfg.dims.iter().map(|&d| vec![0.0; d]).collect();
+        let pre = cfg.dims[1..].iter().map(|&d| vec![0.0; d]).collect();
+        let grads_a = cfg.dims.iter().map(|&d| vec![0.0; d]).collect();
+        Self { cfg, acts, pre, grads_a }
+    }
+
+    pub fn config(&self) -> &MlpConfig {
+        &self.cfg
+    }
+
+    /// He-scaled random init into a fresh flat buffer.
+    pub fn init_params(&self, rng: &mut Rng) -> Vec<f32> {
+        let mut theta = vec![0.0f32; self.cfg.n_params()];
+        let mut off = 0;
+        for w in self.cfg.dims.windows(2) {
+            let (fan_in, fan_out) = (w[0], w[1]);
+            let std = (2.0 / fan_in as f64).sqrt() as f32;
+            rng.fill_gaussian_f32(&mut theta[off..off + fan_in * fan_out], std);
+            off += fan_in * fan_out;
+            // biases zero (thesis §4.1 CIFAR init).
+            off += fan_out;
+        }
+        theta
+    }
+
+    /// Forward pass; returns the loss for (x, label). Logits stay in the
+    /// last activation buffer.
+    fn forward(&mut self, theta: &[f32], x: &[f32]) {
+        assert_eq!(x.len(), self.cfg.dims[0]);
+        self.acts[0].copy_from_slice(x);
+        let mut off = 0;
+        let n_layers = self.cfg.dims.len() - 1;
+        for l in 0..n_layers {
+            let (din, dout) = (self.cfg.dims[l], self.cfg.dims[l + 1]);
+            let w = &theta[off..off + din * dout];
+            let b = &theta[off + din * dout..off + din * dout + dout];
+            off += din * dout + dout;
+            // Split borrows: acts[l] is input, pre[l] is output.
+            let (inp, pre) = {
+                let (a, b2) = (&self.acts[l], &mut self.pre[l]);
+                (a.as_slice(), b2)
+            };
+            for (j, (pj, bj)) in pre.iter_mut().zip(b).enumerate() {
+                // column-major access: w[i * dout + j]
+                let mut s = *bj;
+                for (i, xi) in inp.iter().enumerate() {
+                    s += xi * w[i * dout + j];
+                }
+                *pj = s;
+                let _ = j;
+            }
+            let last = l == n_layers - 1;
+            // acts and pre are distinct fields: disjoint borrows.
+            let (acts, pre) = (&mut self.acts, &self.pre);
+            for (aj, pj) in acts[l + 1].iter_mut().zip(&pre[l]) {
+                *aj = if last { *pj } else { pj.max(0.0) };
+            }
+        }
+    }
+
+    /// Loss only (evaluation path).
+    pub fn loss(&mut self, theta: &[f32], x: &[f32], label: usize) -> f32 {
+        self.forward(theta, x);
+        let logits = self.acts.last().unwrap();
+        let m = logits.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+        let lse = m + logits.iter().map(|z| (z - m).exp()).sum::<f32>().ln();
+        let nll = lse - logits[label];
+        let l2: f32 = if self.cfg.l2 > 0.0 {
+            0.5 * self.cfg.l2 * theta.iter().map(|t| t * t).sum::<f32>()
+        } else {
+            0.0
+        };
+        nll + l2
+    }
+
+    /// Predicted class (evaluation path).
+    pub fn predict(&mut self, theta: &[f32], x: &[f32]) -> usize {
+        self.forward(theta, x);
+        let logits = self.acts.last().unwrap();
+        logits
+            .iter()
+            .enumerate()
+            .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+            .unwrap()
+            .0
+    }
+
+    /// Accumulate ∂loss/∂θ for one sample into `grad` (caller zeroes or
+    /// scales). Returns the sample loss. This is THE inner loop of every
+    /// Chapter-4/6 sweep.
+    pub fn grad(&mut self, theta: &[f32], x: &[f32], label: usize, grad: &mut [f32]) -> f32 {
+        assert_eq!(grad.len(), theta.len());
+        self.forward(theta, x);
+        let n_layers = self.cfg.dims.len() - 1;
+
+        // Softmax CE gradient at the top.
+        let logits = self.acts.last().unwrap();
+        let m = logits.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+        let exps: Vec<f32> = logits.iter().map(|z| (z - m).exp()).collect();
+        let sum: f32 = exps.iter().sum();
+        let loss = sum.ln() + m - logits[label];
+        {
+            let top = self.grads_a.last_mut().unwrap();
+            for (g, e) in top.iter_mut().zip(&exps) {
+                *g = e / sum;
+            }
+            top[label] -= 1.0;
+        }
+
+        // Backward through layers.
+        let mut offsets = Vec::with_capacity(n_layers);
+        let mut off = 0;
+        for w in self.cfg.dims.windows(2) {
+            offsets.push(off);
+            off += w[0] * w[1] + w[1];
+        }
+        for l in (0..n_layers).rev() {
+            let (din, dout) = (self.cfg.dims[l], self.cfg.dims[l + 1]);
+            let woff = offsets[l];
+            // dpre = dact ⊙ relu' (last layer is linear).
+            let last = l == n_layers - 1;
+            let dpre: Vec<f32> = self.grads_a[l + 1]
+                .iter()
+                .zip(&self.pre[l])
+                .map(|(g, p)| if last || *p > 0.0 { *g } else { 0.0 })
+                .collect();
+            // Weight and bias grads.
+            {
+                let inp = &self.acts[l];
+                let gw = &mut grad[woff..woff + din * dout];
+                for (i, xi) in inp.iter().enumerate() {
+                    if *xi == 0.0 {
+                        continue;
+                    }
+                    let row = &mut gw[i * dout..(i + 1) * dout];
+                    for (gj, dj) in row.iter_mut().zip(&dpre) {
+                        *gj += xi * dj;
+                    }
+                }
+                let gb = &mut grad[woff + din * dout..woff + din * dout + dout];
+                for (g, d) in gb.iter_mut().zip(&dpre) {
+                    *g += d;
+                }
+            }
+            // Input gradient for the next level down.
+            if l > 0 {
+                let w = &theta[woff..woff + din * dout];
+                let ga = &mut self.grads_a[l];
+                for (i, gi) in ga.iter_mut().enumerate() {
+                    let row = &w[i * dout..(i + 1) * dout];
+                    *gi = row.iter().zip(&dpre).map(|(wj, dj)| wj * dj).sum();
+                }
+            }
+        }
+
+        // l2 term.
+        if self.cfg.l2 > 0.0 {
+            for (g, t) in grad.iter_mut().zip(theta) {
+                *g += self.cfg.l2 * t;
+            }
+        }
+        loss + if self.cfg.l2 > 0.0 {
+            0.5 * self.cfg.l2 * theta.iter().map(|t| t * t).sum::<f32>()
+        } else {
+            0.0
+        }
+    }
+
+    /// Mini-batch gradient: mean over the batch. Returns mean loss.
+    pub fn batch_grad(
+        &mut self,
+        theta: &[f32],
+        xs: &[(Vec<f32>, usize)],
+        grad: &mut [f32],
+    ) -> f32 {
+        grad.iter_mut().for_each(|g| *g = 0.0);
+        let mut loss = 0.0;
+        for (x, y) in xs {
+            loss += self.grad(theta, x, *y, grad);
+        }
+        let inv = 1.0 / xs.len() as f32;
+        grad.iter_mut().for_each(|g| *g *= inv);
+        // l2 was added per-sample; keep its mean (same value each time).
+        loss * inv
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny() -> (Mlp, Vec<f32>) {
+        let cfg = MlpConfig::new(&[4, 6, 3], 0.0);
+        let mlp = Mlp::new(cfg);
+        let mut rng = Rng::new(5);
+        let theta = mlp.init_params(&mut rng);
+        (mlp, theta)
+    }
+
+    #[test]
+    fn param_count_matches_layout() {
+        let cfg = MlpConfig::new(&[4, 6, 3], 0.0);
+        assert_eq!(cfg.n_params(), 4 * 6 + 6 + 6 * 3 + 3);
+    }
+
+    #[test]
+    fn gradient_matches_finite_differences() {
+        let (mut mlp, mut theta) = tiny();
+        let x = vec![0.3, -0.5, 1.2, 0.1];
+        let label = 2;
+        let mut g = vec![0.0; theta.len()];
+        mlp.grad(&theta, &x, label, &mut g);
+        let eps = 1e-3f32;
+        let mut rng = Rng::new(8);
+        for _ in 0..25 {
+            let i = rng.below(theta.len());
+            let orig = theta[i];
+            theta[i] = orig + eps;
+            let lp = mlp.loss(&theta, &x, label);
+            theta[i] = orig - eps;
+            let lm = mlp.loss(&theta, &x, label);
+            theta[i] = orig;
+            let fd = (lp - lm) / (2.0 * eps);
+            assert!((fd - g[i]).abs() < 2e-3 * (1.0 + fd.abs()),
+                    "param {i}: fd {fd} vs analytic {}", g[i]);
+        }
+    }
+
+    #[test]
+    fn gradient_with_l2_matches_finite_differences() {
+        let cfg = MlpConfig::new(&[3, 5, 2], 1e-2);
+        let mut mlp = Mlp::new(cfg);
+        let mut rng = Rng::new(6);
+        let mut theta = mlp.init_params(&mut rng);
+        let x = vec![1.0, -1.0, 0.5];
+        let mut g = vec![0.0; theta.len()];
+        mlp.grad(&theta, &x, 1, &mut g);
+        let eps = 1e-3f32;
+        for i in [0usize, 7, 14, 20] {
+            let orig = theta[i];
+            theta[i] = orig + eps;
+            let lp = mlp.loss(&theta, &x, 1);
+            theta[i] = orig - eps;
+            let lm = mlp.loss(&theta, &x, 1);
+            theta[i] = orig;
+            let fd = (lp - lm) / (2.0 * eps);
+            assert!((fd - g[i]).abs() < 3e-3 * (1.0 + fd.abs()));
+        }
+    }
+
+    #[test]
+    fn training_reduces_loss_and_fits_separable_data() {
+        let cfg = MlpConfig::new(&[2, 16, 2], 0.0);
+        let mut mlp = Mlp::new(cfg);
+        let mut rng = Rng::new(7);
+        let mut theta = mlp.init_params(&mut rng);
+        // Two gaussian blobs.
+        let mut data = Vec::new();
+        for _ in 0..100 {
+            let y = rng.below(2);
+            let cx = if y == 0 { -1.0 } else { 1.0 };
+            data.push((
+                vec![rng.normal(cx, 0.3) as f32, rng.normal(-cx, 0.3) as f32],
+                y,
+            ));
+        }
+        let mut g = vec![0.0; theta.len()];
+        let l0 = mlp.batch_grad(&theta, &data, &mut g);
+        for _ in 0..200 {
+            mlp.batch_grad(&theta, &data, &mut g);
+            crate::model::flat::sgd_step(&mut theta, &g, 0.5);
+        }
+        let l1 = mlp.batch_grad(&theta, &data, &mut g);
+        assert!(l1 < l0 * 0.2, "loss {l0} -> {l1}");
+        let correct = data
+            .iter()
+            .filter(|(x, y)| mlp.predict(&theta, x) == *y)
+            .count();
+        assert!(correct >= 95, "accuracy {correct}/100");
+    }
+
+    #[test]
+    fn batch_grad_is_mean_of_sample_grads() {
+        let (mut mlp, theta) = tiny();
+        let data = vec![
+            (vec![0.1, 0.2, 0.3, 0.4], 0usize),
+            (vec![-0.5, 0.5, -0.5, 0.5], 1usize),
+        ];
+        let mut gb = vec![0.0; theta.len()];
+        mlp.batch_grad(&theta, &data, &mut gb);
+        let mut g1 = vec![0.0; theta.len()];
+        let mut g2 = vec![0.0; theta.len()];
+        mlp.grad(&theta, &data[0].0, 0, &mut g1);
+        mlp.grad(&theta, &data[1].0, 1, &mut g2);
+        for i in 0..theta.len() {
+            assert!((gb[i] - 0.5 * (g1[i] + g2[i])).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let cfg = MlpConfig::sweep_default();
+        let m1 = Mlp::new(cfg.clone()).init_params(&mut Rng::new(3));
+        let m2 = Mlp::new(cfg).init_params(&mut Rng::new(3));
+        assert_eq!(m1, m2);
+    }
+}

@@ -1,0 +1,17 @@
+//! Model-side substrates for the L3 coordinator.
+//!
+//! - [`flat`] — flat f32 parameter buffers and the *fused native update
+//!   ops* (SGD / Nesterov / elastic exchange). They mirror the L1
+//!   Pallas kernels bit-for-bit in semantics and are the coordinator's
+//!   hot path when gradients come back from PJRT; `bench_update_hot_path`
+//!   compares them against the PJRT-executed kernel variant.
+//! - [`mlp`] — a small native MLP classifier with hand-written backprop:
+//!   the cheap gradient oracle the Chapter-4/6 figure sweeps use at
+//!   p up to 256 workers, where running the PJRT transformer per
+//!   worker-step would be wall-clock prohibitive (DESIGN.md §2).
+
+pub mod flat;
+pub mod mlp;
+
+pub use flat::{elastic_exchange, nesterov_step, sgd_step};
+pub use mlp::{Mlp, MlpConfig};

@@ -1,0 +1,238 @@
+//! Deterministic random-number substrate.
+//!
+//! Every stochastic experiment in the repo (quadratic simulations,
+//! synthetic corpora, cluster jitter, Gamma multiplicative noise) draws
+//! from this module so runs are reproducible from a single `u64` seed.
+//!
+//! Generator: PCG64 (O'Neill's pcg64_xsl_rr_128_64). Gaussians via
+//! Box–Muller with caching; Gamma via Marsaglia–Tsang squeeze (with the
+//! shape-boost trick for `shape < 1`), which the thesis' §5.2
+//! multiplicative-noise model needs for `Γ(λ, ω)` input data.
+
+mod pcg;
+
+pub use pcg::Pcg64;
+
+/// Streamed distributions over a [`Pcg64`].
+#[derive(Clone, Debug)]
+pub struct Rng {
+    pcg: Pcg64,
+    gauss_cache: Option<f64>,
+}
+
+impl Rng {
+    pub fn new(seed: u64) -> Self {
+        Self { pcg: Pcg64::new(seed), gauss_cache: None }
+    }
+
+    /// Derive an independent stream (for per-worker seeding).
+    pub fn split(&mut self, stream: u64) -> Rng {
+        let s = self.next_u64() ^ stream.wrapping_mul(0x9E37_79B9_7F4A_7C15);
+        Rng::new(s)
+    }
+
+    #[inline]
+    pub fn next_u64(&mut self) -> u64 {
+        self.pcg.next_u64()
+    }
+
+    /// Uniform in [0, 1).
+    #[inline]
+    pub fn uniform(&mut self) -> f64 {
+        // 53 random mantissa bits.
+        (self.next_u64() >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+    }
+
+    /// Uniform in [lo, hi).
+    #[inline]
+    pub fn uniform_in(&mut self, lo: f64, hi: f64) -> f64 {
+        lo + (hi - lo) * self.uniform()
+    }
+
+    /// Uniform integer in [0, n).
+    #[inline]
+    pub fn below(&mut self, n: usize) -> usize {
+        debug_assert!(n > 0);
+        // Lemire's multiply-shift; bias is negligible for n << 2^64.
+        ((self.next_u64() as u128 * n as u128) >> 64) as usize
+    }
+
+    /// Standard normal via Box–Muller (cached pair).
+    pub fn gaussian(&mut self) -> f64 {
+        if let Some(z) = self.gauss_cache.take() {
+            return z;
+        }
+        loop {
+            let u1 = self.uniform();
+            if u1 <= f64::MIN_POSITIVE {
+                continue;
+            }
+            let u2 = self.uniform();
+            let r = (-2.0 * u1.ln()).sqrt();
+            let (s, c) = (2.0 * std::f64::consts::PI * u2).sin_cos();
+            self.gauss_cache = Some(r * s);
+            return r * c;
+        }
+    }
+
+    /// Normal with the given mean and standard deviation.
+    #[inline]
+    pub fn normal(&mut self, mean: f64, std: f64) -> f64 {
+        mean + std * self.gaussian()
+    }
+
+    /// Gamma(shape, rate) — thesis parameterization Γ(λ, ω) with mean
+    /// λ/ω and variance λ/ω². Marsaglia–Tsang; `shape < 1` handled by
+    /// the boost `Γ(a) = Γ(a+1) · U^{1/a}`.
+    pub fn gamma(&mut self, shape: f64, rate: f64) -> f64 {
+        assert!(shape > 0.0 && rate > 0.0, "gamma needs positive params");
+        if shape < 1.0 {
+            let boost = self.gamma(shape + 1.0, 1.0);
+            let u: f64 = loop {
+                let u = self.uniform();
+                if u > 0.0 {
+                    break u;
+                }
+            };
+            return boost * u.powf(1.0 / shape) / rate;
+        }
+        let d = shape - 1.0 / 3.0;
+        let c = 1.0 / (9.0 * d).sqrt();
+        loop {
+            let x = self.gaussian();
+            let v = 1.0 + c * x;
+            if v <= 0.0 {
+                continue;
+            }
+            let v3 = v * v * v;
+            let u = self.uniform();
+            let x2 = x * x;
+            if u < 1.0 - 0.0331 * x2 * x2
+                || u.ln() < 0.5 * x2 + d * (1.0 - v3 + v3.ln())
+            {
+                return d * v3 / rate;
+            }
+        }
+    }
+
+    /// Fill a slice with standard normals scaled by `std` (f32).
+    pub fn fill_gaussian_f32(&mut self, out: &mut [f32], std: f32) {
+        for v in out {
+            *v = (self.gaussian() as f32) * std;
+        }
+    }
+
+    /// Fisher–Yates shuffle.
+    pub fn shuffle<T>(&mut self, xs: &mut [T]) {
+        for i in (1..xs.len()).rev() {
+            let j = self.below(i + 1);
+            xs.swap(i, j);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_across_instances() {
+        let mut a = Rng::new(42);
+        let mut b = Rng::new(42);
+        for _ in 0..100 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+    }
+
+    #[test]
+    fn different_seeds_differ() {
+        let mut a = Rng::new(1);
+        let mut b = Rng::new(2);
+        assert_ne!(a.next_u64(), b.next_u64());
+    }
+
+    #[test]
+    fn uniform_in_unit_interval_with_correct_mean() {
+        let mut r = Rng::new(7);
+        let n = 100_000;
+        let mut sum = 0.0;
+        for _ in 0..n {
+            let u = r.uniform();
+            assert!((0.0..1.0).contains(&u));
+            sum += u;
+        }
+        assert!((sum / n as f64 - 0.5).abs() < 5e-3);
+    }
+
+    #[test]
+    fn gaussian_moments() {
+        let mut r = Rng::new(9);
+        let n = 200_000;
+        let (mut m1, mut m2) = (0.0, 0.0);
+        for _ in 0..n {
+            let z = r.gaussian();
+            m1 += z;
+            m2 += z * z;
+        }
+        m1 /= n as f64;
+        m2 /= n as f64;
+        assert!(m1.abs() < 0.01, "mean {m1}");
+        assert!((m2 - 1.0).abs() < 0.02, "var {m2}");
+    }
+
+    #[test]
+    fn gamma_moments_match_shape_rate() {
+        // Γ(λ, ω): mean λ/ω, var λ/ω² — the thesis §5.2 parameterization.
+        for &(shape, rate) in &[(0.5, 0.5), (1.0, 1.0), (2.0, 2.0), (10.0, 10.0)] {
+            let mut r = Rng::new(11);
+            let n = 200_000;
+            let (mut m1, mut m2) = (0.0, 0.0);
+            for _ in 0..n {
+                let g = r.gamma(shape, rate);
+                assert!(g >= 0.0);
+                m1 += g;
+                m2 += g * g;
+            }
+            m1 /= n as f64;
+            m2 = m2 / n as f64 - m1 * m1;
+            let mean = shape / rate;
+            let var = shape / (rate * rate);
+            assert!((m1 - mean).abs() < 0.05 * mean.max(0.2), "mean {m1} vs {mean}");
+            assert!((m2 - var).abs() < 0.08 * var.max(0.2), "var {m2} vs {var}");
+        }
+    }
+
+    #[test]
+    fn below_is_in_range_and_covers() {
+        let mut r = Rng::new(5);
+        let mut seen = [false; 10];
+        for _ in 0..1000 {
+            let k = r.below(10);
+            assert!(k < 10);
+            seen[k] = true;
+        }
+        assert!(seen.iter().all(|&s| s));
+    }
+
+    #[test]
+    fn shuffle_is_a_permutation() {
+        let mut r = Rng::new(13);
+        let mut xs: Vec<usize> = (0..100).collect();
+        r.shuffle(&mut xs);
+        let mut sorted = xs.clone();
+        sorted.sort_unstable();
+        assert_eq!(sorted, (0..100).collect::<Vec<_>>());
+        assert_ne!(xs, (0..100).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn split_streams_are_independent_and_deterministic() {
+        let mut root1 = Rng::new(99);
+        let mut root2 = Rng::new(99);
+        let mut a = root1.split(0);
+        let mut b = root2.split(0);
+        assert_eq!(a.next_u64(), b.next_u64());
+        let mut c = Rng::new(99).split(1);
+        assert_ne!(Rng::new(99).split(0).next_u64(), c.next_u64());
+    }
+}

@@ -1,0 +1,70 @@
+//! PCG64 (pcg_xsl_rr_128_64): 128-bit LCG state, xorshift-low + random
+//! rotate output. Reference: O'Neill, "PCG: A Family of Simple Fast
+//! Space-Efficient Statistically Good Algorithms for Random Number
+//! Generation" (2014).
+
+const MULT: u128 = 0x2360_ED05_1FC6_5DA4_4385_DF64_9FCC_F645;
+const INC: u128 = 0x5851_F42D_4C95_7F2D_1405_7B7E_F767_814F;
+
+/// The raw generator; use [`super::Rng`] for distributions.
+#[derive(Clone, Debug)]
+pub struct Pcg64 {
+    state: u128,
+}
+
+impl Pcg64 {
+    pub fn new(seed: u64) -> Self {
+        // SplitMix-style state expansion so nearby seeds decorrelate.
+        let mut s = Self {
+            state: (seed as u128) ^ 0xCAFE_F00D_D15E_A5E5_u128 << 64,
+        };
+        s.state = s.state.wrapping_mul(MULT).wrapping_add(INC);
+        s.next_u64();
+        s.next_u64();
+        s
+    }
+
+    #[inline]
+    pub fn next_u64(&mut self) -> u64 {
+        self.state = self.state.wrapping_mul(MULT).wrapping_add(INC);
+        let xored = ((self.state >> 64) as u64) ^ (self.state as u64);
+        let rot = (self.state >> 122) as u32;
+        xored.rotate_right(rot)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn no_short_cycles() {
+        let mut g = Pcg64::new(0);
+        let first = g.next_u64();
+        for _ in 0..10_000 {
+            assert_ne!(g.next_u64(), 0);
+        }
+        // Extremely unlikely to revisit the first value in 10k steps.
+        let mut g2 = Pcg64::new(0);
+        g2.next_u64();
+        let mut hits = 0;
+        for _ in 0..10_000 {
+            if g2.next_u64() == first {
+                hits += 1;
+            }
+        }
+        assert_eq!(hits, 0);
+    }
+
+    #[test]
+    fn bit_balance() {
+        let mut g = Pcg64::new(77);
+        let mut ones = 0u64;
+        let n = 10_000;
+        for _ in 0..n {
+            ones += g.next_u64().count_ones() as u64;
+        }
+        let frac = ones as f64 / (64.0 * n as f64);
+        assert!((frac - 0.5).abs() < 0.01, "bit fraction {frac}");
+    }
+}

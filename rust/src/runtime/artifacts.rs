@@ -1,0 +1,188 @@
+//! Artifact loading: manifest.json + HLO text + shared init params.
+//!
+//! HLO *text* is the interchange format — xla_extension 0.5.1 rejects
+//! jax≥0.5 serialized protos (64-bit instruction ids); the text parser
+//! reassigns ids (see /opt/xla-example/README.md and DESIGN.md).
+
+use crate::config::Json;
+use anyhow::{anyhow, bail, Context, Result};
+use std::path::{Path, PathBuf};
+
+/// One entry of the parameter table (the contract with
+/// `python/compile/model.py::param_specs`).
+#[derive(Clone, Debug)]
+pub struct ParamEntry {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub offset: usize,
+    pub size: usize,
+}
+
+/// Model geometry from the manifest.
+#[derive(Clone, Copy, Debug)]
+pub struct ModelDims {
+    pub vocab: usize,
+    pub d_model: usize,
+    pub n_layers: usize,
+    pub n_heads: usize,
+    pub seq_len: usize,
+    pub batch: usize,
+}
+
+/// Parsed artifacts directory.
+pub struct Artifacts {
+    pub dir: PathBuf,
+    pub preset: String,
+    pub n_params: usize,
+    pub params: Vec<ParamEntry>,
+    pub dims: ModelDims,
+}
+
+impl Artifacts {
+    /// The default location relative to the repo root.
+    pub fn default_dir() -> PathBuf {
+        PathBuf::from("artifacts")
+    }
+
+    pub fn load(dir: &Path) -> Result<Artifacts> {
+        let manifest_path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&manifest_path)
+            .with_context(|| format!("reading {manifest_path:?} — run `make artifacts`"))?;
+        let j = Json::parse(&text).map_err(|e| anyhow!("manifest parse: {e}"))?;
+
+        let n_params = j
+            .get("preset_params")
+            .and_then(Json::as_usize)
+            .ok_or_else(|| anyhow!("manifest missing preset_params"))?;
+        let preset = j
+            .get("preset")
+            .and_then(Json::as_str)
+            .unwrap_or("unknown")
+            .to_string();
+
+        let mut params = Vec::new();
+        let mut expect_off = 0usize;
+        for e in j
+            .get("params")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| anyhow!("manifest missing params"))?
+        {
+            let entry = ParamEntry {
+                name: e
+                    .get("name")
+                    .and_then(Json::as_str)
+                    .ok_or_else(|| anyhow!("param missing name"))?
+                    .to_string(),
+                shape: e
+                    .get("shape")
+                    .and_then(Json::as_arr)
+                    .ok_or_else(|| anyhow!("param missing shape"))?
+                    .iter()
+                    .map(|d| d.as_usize().unwrap_or(0))
+                    .collect(),
+                offset: e.get("offset").and_then(Json::as_usize).unwrap_or(0),
+                size: e.get("size").and_then(Json::as_usize).unwrap_or(0),
+            };
+            if entry.offset != expect_off {
+                bail!("param table not contiguous at {}", entry.name);
+            }
+            if entry.shape.iter().product::<usize>() != entry.size {
+                bail!("shape/size mismatch for {}", entry.name);
+            }
+            expect_off += entry.size;
+            params.push(entry);
+        }
+        if expect_off != n_params {
+            bail!("param table sums to {expect_off}, manifest says {n_params}");
+        }
+
+        let cfg = j
+            .get("config")
+            .ok_or_else(|| anyhow!("manifest missing config"))?;
+        let dim = |k: &str| -> Result<usize> {
+            cfg.get(k)
+                .and_then(Json::as_usize)
+                .ok_or_else(|| anyhow!("config missing {k}"))
+        };
+        let dims = ModelDims {
+            vocab: dim("vocab")?,
+            d_model: dim("d_model")?,
+            n_layers: dim("n_layers")?,
+            n_heads: dim("n_heads")?,
+            seq_len: dim("seq_len")?,
+            batch: dim("batch")?,
+        };
+
+        Ok(Artifacts { dir: dir.to_path_buf(), preset, n_params, params, dims })
+    }
+
+    /// The shared random init (thesis §4.1: identical for master and
+    /// every worker).
+    pub fn init_params(&self) -> Result<Vec<f32>> {
+        let path = self.dir.join("init_params.bin");
+        let bytes = std::fs::read(&path)
+            .with_context(|| format!("reading {path:?}"))?;
+        if bytes.len() != self.n_params * 4 {
+            bail!(
+                "init_params.bin is {} bytes, expected {}",
+                bytes.len(),
+                self.n_params * 4
+            );
+        }
+        Ok(bytes
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+            .collect())
+    }
+
+    /// Load + compile one HLO text artifact on the given client.
+    pub fn compile(
+        &self,
+        client: &xla::PjRtClient,
+        name: &str,
+    ) -> Result<xla::PjRtLoadedExecutable> {
+        let path = self.dir.join(format!("{name}.hlo.txt"));
+        let path_str = path
+            .to_str()
+            .ok_or_else(|| anyhow!("non-utf8 path {path:?}"))?;
+        let proto = xla::HloModuleProto::from_text_file(path_str)
+            .map_err(|e| anyhow!("parsing {path_str}: {e:?}"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        client
+            .compile(&comp)
+            .map_err(|e| anyhow!("compiling {name}: {e:?}"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn repo_artifacts() -> Option<Artifacts> {
+        let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        Artifacts::load(&dir).ok()
+    }
+
+    #[test]
+    fn manifest_loads_and_is_consistent() {
+        let Some(a) = repo_artifacts() else {
+            eprintln!("skipping: run `make artifacts` first");
+            return;
+        };
+        assert!(a.n_params > 0);
+        assert_eq!(a.params[0].name, "tok_embed");
+        assert_eq!(a.params[0].shape, vec![a.dims.vocab, a.dims.d_model]);
+        let init = a.init_params().unwrap();
+        assert_eq!(init.len(), a.n_params);
+        assert!(init.iter().all(|x| x.is_finite()));
+    }
+
+    #[test]
+    fn missing_dir_errors_cleanly() {
+        let err = match Artifacts::load(Path::new("/nonexistent/artifacts")) {
+            Err(e) => e,
+            Ok(_) => panic!("expected error"),
+        };
+        assert!(format!("{err:#}").contains("make artifacts"));
+    }
+}

@@ -1,0 +1,19 @@
+//! PJRT runtime: load the AOT artifacts (`make artifacts`) and execute
+//! them from the rust hot path. Python never runs here.
+//!
+//! - [`artifacts`] — manifest parsing, parameter table, HLO loading and
+//!   compilation (`PjRtClient::cpu()` → `HloModuleProto::from_text_file`
+//!   → `compile`), shared initial parameters.
+//! - [`session`] — `PjrtModel`: flat-buffer ⇄ literal packing and the
+//!   `train_step` / `eval_step` / update-kernel execution paths.
+//! - [`pjrt_oracle`] — `PjrtOracle`, the `GradOracle` implementation
+//!   that plugs the AOT transformer into the same EASGD/DOWNPOUR/Tree
+//!   drivers the sweeps use.
+
+pub mod artifacts;
+pub mod pjrt_oracle;
+pub mod session;
+
+pub use artifacts::Artifacts;
+pub use pjrt_oracle::PjrtOracle;
+pub use session::PjrtModel;

@@ -1,0 +1,211 @@
+//! §3.3: stability of round-robin ADMM vs round-robin EASGD on the
+//! one-dimensional quadratic F(x) = x²/2.
+//!
+//! ADMM's round-robin update composes p *non-symmetric* linear maps
+//! F₃ⁱ∘F₂ⁱ∘F₁ⁱ over the state s = (λ¹, x¹, …, λᵖ, xᵖ, x̃) ∈ ℝ^{2p+1};
+//! each factor is individually stable yet the composition can leave the
+//! unit disk — the thesis' Fig 3.2/3.3 chaos. EASGD's maps are symmetric
+//! (the elastic force), so composition stays stable under the simple
+//! closed-form condition reproduced in [`easgd_rr_stable`].
+
+use crate::linalg::{spectral_radius, Matrix};
+
+/// Build the three ADMM linear maps for worker `i` (0-based), state
+/// dimension 2p+1, learning rate η, penalty ρ (Eqs 3.52–3.54).
+pub fn admm_maps(i: usize, p: usize, eta: f64, rho: f64) -> (Matrix, Matrix, Matrix) {
+    let n = 2 * p + 1;
+    let li = 2 * i; // λ^i index
+    let xi = 2 * i + 1; // x^i index
+    let xc = n - 1; // x̃ index
+
+    // F1: λ^i ← λ^i − (x^i − x̃).
+    let mut f1 = Matrix::identity(n);
+    f1.set(li, xi, -1.0);
+    f1.set(li, xc, 1.0);
+
+    // F2: x^i ← (x^i − η∇F(x^i) + ηρ(λ^i + x̃)) / (1 + ηρ), ∇F(x) = x.
+    let mut f2 = Matrix::identity(n);
+    let d = 1.0 + eta * rho;
+    f2.set(xi, xi, (1.0 - eta) / d);
+    f2.set(xi, li, eta * rho / d);
+    f2.set(xi, xc, eta * rho / d);
+
+    // F3: x̃ ← (1/p) Σ_j (x^j − λ^j).
+    let mut f3 = Matrix::identity(n);
+    for j in 0..n {
+        f3.set(xc, j, 0.0);
+    }
+    for j in 0..p {
+        f3.set(xc, 2 * j + 1, 1.0 / p as f64);
+        f3.set(xc, 2 * j, -1.0 / p as f64);
+    }
+    (f1, f2, f3)
+}
+
+/// The full round-robin composition 𝓕 = ∏_{i=p..1} F₃ⁱ F₂ⁱ F₁ⁱ.
+pub fn admm_round_robin_map(p: usize, eta: f64, rho: f64) -> Matrix {
+    let n = 2 * p + 1;
+    let mut acc = Matrix::identity(n);
+    for i in 0..p {
+        let (f1, f2, f3) = admm_maps(i, p, eta, rho);
+        acc = f3.matmul(&f2).matmul(&f1).matmul(&acc);
+    }
+    acc
+}
+
+/// sp(𝓕) — the Fig 3.2 quantity.
+pub fn admm_spectral_radius(p: usize, eta: f64, rho: f64) -> f64 {
+    spectral_radius(&admm_round_robin_map(p, eta, rho))
+}
+
+/// Iterate the ADMM round-robin dynamics from the thesis' Fig 3.3
+/// initial state (λ₀ⁱ = 0, x₀ⁱ = x̃₀ = x0); returns the x̃ trajectory
+/// sampled once per full round.
+pub fn admm_trajectory(p: usize, eta: f64, rho: f64, x0: f64, rounds: usize) -> Vec<f64> {
+    let n = 2 * p + 1;
+    let map = admm_round_robin_map(p, eta, rho);
+    let mut s = vec![0.0; n];
+    for i in 0..p {
+        s[2 * i + 1] = x0;
+    }
+    s[n - 1] = x0;
+    let mut out = Vec::with_capacity(rounds + 1);
+    out.push(s[n - 1]);
+    for _ in 0..rounds {
+        s = map.matvec(&s);
+        out.push(s[n - 1]);
+        if !s[n - 1].is_finite() {
+            break;
+        }
+    }
+    out
+}
+
+/// Round-robin EASGD single-worker map Fⁱ (Eqs 3.55–3.56) over
+/// (x¹, …, xᵖ, x̃), ∇F(x) = x.
+pub fn easgd_rr_map(i: usize, p: usize, eta: f64, alpha: f64) -> Matrix {
+    let n = p + 1;
+    let mut f = Matrix::identity(n);
+    f.set(i, i, 1.0 - eta - alpha);
+    f.set(i, n - 1, alpha);
+    f.set(n - 1, i, alpha);
+    f.set(n - 1, n - 1, 1.0 - alpha);
+    f
+}
+
+/// Composed EASGD round-robin map.
+pub fn easgd_round_robin_map(p: usize, eta: f64, alpha: f64) -> Matrix {
+    let mut acc = Matrix::identity(p + 1);
+    for i in 0..p {
+        acc = easgd_rr_map(i, p, eta, alpha).matmul(&acc);
+    }
+    acc
+}
+
+/// The closed-form §3.3 stability condition for round-robin EASGD:
+/// 0 ≤ η ≤ 2 and 0 ≤ α ≤ (4 − 2η)/(4 − η). p-independent because each
+/// Fⁱ is symmetric.
+pub fn easgd_rr_stable(eta: f64, alpha: f64) -> bool {
+    (0.0..=2.0).contains(&eta) && alpha >= 0.0 && alpha <= (4.0 - 2.0 * eta) / (4.0 - eta)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn admm_unstable_at_the_papers_chaotic_point() {
+        // Fig 3.2/3.3: p=3, η=0.001, ρ=2.5 diverges.
+        let sp = admm_spectral_radius(3, 0.001, 2.5);
+        assert!(sp > 1.0, "sp={sp} should exceed 1");
+        // sp is only slightly above 1, so divergence is slow (the thesis'
+        // Fig 3.3 shows growing oscillations): compare the trajectory
+        // envelope early vs late over a long horizon.
+        let tr = admm_trajectory(3, 0.001, 2.5, 1000.0, 60_000);
+        let early: f64 = tr[..1000].iter().fold(0.0f64, |m, x| m.max(x.abs()));
+        let late: f64 = tr[tr.len() - 1000..]
+            .iter()
+            .fold(0.0f64, |m, x| m.max(x.abs()));
+        assert!(
+            late > 2.0 * early || tr.iter().any(|x| !x.is_finite()),
+            "expected growing envelope, early={early} late={late}"
+        );
+    }
+
+    #[test]
+    fn admm_stable_at_large_rho() {
+        // Larger quadratic penalty stabilizes the dual ascent.
+        let sp = admm_spectral_radius(3, 0.001, 9.0);
+        assert!(sp <= 1.0 + 1e-9, "sp={sp}");
+    }
+
+    #[test]
+    fn admm_factors_individually_stable_composition_not() {
+        let (p, eta, rho) = (3, 0.001, 2.5);
+        for i in 0..p {
+            let (f1, f2, f3) = admm_maps(i, p, eta, rho);
+            let m = f3.matmul(&f2).matmul(&f1);
+            assert!(spectral_radius(&m) <= 1.0 + 1e-9, "factor {i} unstable");
+        }
+        assert!(admm_spectral_radius(p, eta, rho) > 1.0);
+    }
+
+    #[test]
+    fn easgd_rr_stability_condition_is_sufficient_for_all_p() {
+        // §3.3: each Fⁱ is symmetric; when its 2×2 elastic block is a
+        // contraction (the closed-form condition) the composition is
+        // stable for EVERY p. (The condition is sufficient, not
+        // necessary, for the composed map at p > 1 — interleaved idle
+        // coordinates can damp a factor that is itself expansive.)
+        for p in [1usize, 2, 3, 5] {
+            for ei in 0..8 {
+                for ai in 0..8 {
+                    let eta = 0.25 + ei as f64 * 0.22;
+                    let alpha = 0.05 + ai as f64 * 0.12;
+                    if easgd_rr_stable(eta, alpha) {
+                        let sp = spectral_radius(&easgd_round_robin_map(p, eta, alpha));
+                        assert!(sp <= 1.0 + 1e-7,
+                                "p={p} η={eta} α={alpha}: sp={sp} though stable");
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn easgd_rr_condition_is_exact_at_p_equals_1() {
+        // At p = 1 the composite IS the 2×2 block, so the closed-form
+        // condition is necessary too.
+        for ei in 0..10 {
+            for ai in 0..10 {
+                let eta = 0.1 + ei as f64 * 0.2;
+                let alpha = 0.05 + ai as f64 * 0.11;
+                let sp = spectral_radius(&easgd_round_robin_map(1, eta, alpha));
+                if easgd_rr_stable(eta, alpha) {
+                    assert!(sp <= 1.0 + 1e-7, "η={eta} α={alpha}: sp={sp}");
+                } else {
+                    assert!(sp >= 1.0 - 1e-7, "η={eta} α={alpha}: sp={sp}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn easgd_rr_trajectory_contracts_where_admm_diverges() {
+        // Same (η≈paper) regime: EASGD round robin from x0=1000 decays.
+        let p = 3;
+        let map = easgd_round_robin_map(p, 0.5, 0.3);
+        let mut s = vec![1000.0; p + 1];
+        for _ in 0..200 {
+            s = map.matvec(&s);
+        }
+        assert!(s.iter().all(|x| x.abs() < 1.0), "{s:?}");
+    }
+
+    #[test]
+    fn admm_fixed_point_is_origin() {
+        // Where stable, the dynamics solve min x²/2 ⇒ x̃ → 0.
+        let tr = admm_trajectory(3, 0.5, 5.0, 10.0, 4000);
+        assert!(tr.last().unwrap().abs() < 1e-2, "{:?}", tr.last());
+    }
+}

@@ -1,0 +1,19 @@
+//! The thesis' analysis chapters (3 and 5) as executable models.
+//!
+//! - [`moments`] — closed-form MSE of the center variable (Lemma 3.1.1 /
+//!   Corollary 3.1.1) and every moment/drift matrix whose spectral
+//!   radius the thesis plots (Eqs 5.6, 5.12, 5.18, 5.19, 5.20, 5.30,
+//!   5.34), plus the optimal-rate formulas (δ_h = (√η_h−1)²,
+//!   α* = −(√β−√η_h)², η_p = ω/(λ+1/p), α = 1−√λ).
+//! - [`quadratic`] — discrete-time simulators for the additive-noise
+//!   model (SGD / MSGD / EASGD / EAMSGD on the 1-d quadratic).
+//! - [`multiplicative`] — the §5.2 Gamma multiplicative-noise model.
+//! - [`admm`] — the §3.3 round-robin ADMM and EASGD linear maps and
+//!   their (in)stability.
+//! - [`nonconvex`] — the §5.3 double-well saddle analysis.
+
+pub mod admm;
+pub mod moments;
+pub mod multiplicative;
+pub mod nonconvex;
+pub mod quadratic;

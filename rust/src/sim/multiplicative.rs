@@ -1,0 +1,187 @@
+//! The §5.2 multiplicative-noise model: min_x E[(x·u)²] with u² ~ Γ(λ, ω)
+//! — the initial-phase model where the *spread* of the input data
+//! distribution governs attainable speedup.
+
+use crate::rng::Rng;
+
+/// Model parameters: u² ~ Γ(lambda, omega) (rate parameterization).
+#[derive(Clone, Copy, Debug)]
+pub struct Multiplicative {
+    pub lambda: f64,
+    pub omega: f64,
+}
+
+impl Multiplicative {
+    /// One draw of ξ = mini-batch mean of p i.i.d. u² — itself Γ(pλ, pω).
+    #[inline]
+    pub fn xi(&self, p: usize, rng: &mut Rng) -> f64 {
+        rng.gamma(self.lambda * p as f64, self.omega * p as f64)
+    }
+}
+
+/// Mini-batch SGD (Eq 5.24): x' = x − η ξ x. Returns |x_t| trajectory
+/// (geometric decay — log-scale is the meaningful view).
+pub fn minibatch_sgd_trajectory(
+    m: Multiplicative,
+    eta: f64,
+    p: usize,
+    x0: f64,
+    t: usize,
+    rng: &mut Rng,
+) -> Vec<f64> {
+    let mut x = x0;
+    let mut out = Vec::with_capacity(t + 1);
+    out.push(x.abs());
+    for _ in 0..t {
+        x -= eta * m.xi(p, rng) * x;
+        out.push(x.abs());
+    }
+    out
+}
+
+/// Momentum SGD under multiplicative noise (Eq 5.28).
+pub fn msgd_trajectory(
+    m: Multiplicative,
+    eta: f64,
+    delta: f64,
+    x0: f64,
+    t: usize,
+    rng: &mut Rng,
+) -> Vec<f64> {
+    let (mut x, mut v) = (x0, 0.0);
+    let mut out = Vec::with_capacity(t + 1);
+    out.push(x.abs());
+    for _ in 0..t {
+        let xi = m.xi(1, rng);
+        v = delta * v - eta * xi * (x + delta * v);
+        x += v;
+        out.push(x.abs());
+    }
+    out
+}
+
+/// EASGD under multiplicative noise (Eq 5.31): per-worker ξᵗᵢ.
+pub fn easgd_trajectory(
+    m: Multiplicative,
+    eta: f64,
+    alpha: f64,
+    beta: f64,
+    p: usize,
+    x0: f64,
+    t: usize,
+    rng: &mut Rng,
+) -> Vec<f64> {
+    let mut xs = vec![x0; p];
+    let mut center = x0;
+    let mut out = Vec::with_capacity(t + 1);
+    out.push(center.abs());
+    for _ in 0..t {
+        let mean: f64 = xs.iter().sum::<f64>() / p as f64;
+        for x in &mut xs {
+            let xi = m.xi(1, rng);
+            *x = *x - eta * xi * *x - alpha * (*x - center);
+        }
+        center += beta * (mean - center);
+        out.push(center.abs());
+    }
+    out
+}
+
+/// Empirical contraction rate of the second moment over a horizon:
+/// (E x_t² / x_0²)^(1/t) averaged over reps — compares against
+/// [`super::moments::minibatch_sgd_rate`].
+pub fn empirical_rate<F>(mut run: F, reps: usize, t: usize) -> f64
+where
+    F: FnMut(u64) -> Vec<f64>,
+{
+    let mut acc = 0.0;
+    for r in 0..reps {
+        let tr = run(r as u64);
+        let x0 = tr[0].max(1e-300);
+        let xt = tr[t].max(1e-300);
+        acc += (xt * xt / (x0 * x0)).powf(1.0 / t as f64);
+    }
+    acc / reps as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::moments;
+
+    const M: Multiplicative = Multiplicative { lambda: 1.0, omega: 1.0 };
+
+    #[test]
+    fn sgd_contracts_at_the_closed_form_rate() {
+        let eta = 0.3;
+        let want = moments::minibatch_sgd_rate(eta, M.lambda, M.omega, 1);
+        // Second-moment contraction: average x_t²/x_0² over many runs,
+        // then take the per-step ratio.
+        let t = 40;
+        let reps = 8000;
+        let mut acc = 0.0;
+        for r in 0..reps {
+            let tr = minibatch_sgd_trajectory(M, eta, 1, 1.0, t, &mut Rng::new(r));
+            acc += tr[t] * tr[t];
+        }
+        let got = (acc / reps as f64).powf(1.0 / t as f64);
+        assert!((got - want).abs() < 0.05, "{got} vs {want}");
+    }
+
+    #[test]
+    fn minibatch_improves_contraction_at_optimal_eta() {
+        // §5.2.1: for spread-out inputs (λ=0.5) bigger p lets a bigger
+        // optimal η contract faster.
+        let m = Multiplicative { lambda: 0.5, omega: 0.5 };
+        let rate = |p: usize| {
+            let eta = moments::minibatch_optimal_eta(m.lambda, m.omega, p);
+            moments::minibatch_sgd_rate(eta, m.lambda, m.omega, p)
+        };
+        assert!(rate(4) < rate(1));
+        assert!(rate(16) < rate(4));
+    }
+
+    #[test]
+    fn heavy_tail_draws_can_exceed_mean_wildly() {
+        // λ < 1 ⇒ pdf pole at 0 and heavy tail: witness spread.
+        let m = Multiplicative { lambda: 0.5, omega: 0.5 };
+        let mut rng = Rng::new(3);
+        let mut max = 0.0f64;
+        for _ in 0..10_000 {
+            max = max.max(m.xi(1, &mut rng));
+        }
+        assert!(max > 5.0, "max draw {max} should dwarf mean 1.0");
+    }
+
+    #[test]
+    fn easgd_center_tracks_and_contracts() {
+        let mut rng = Rng::new(9);
+        let tr = easgd_trajectory(M, 0.3, 0.9 / 8.0, 0.9, 8, 1.0, 300, &mut rng);
+        assert!(tr.last().unwrap() < &1e-2, "center {:?}", tr.last());
+    }
+
+    #[test]
+    fn easgd_survives_eta_beyond_sgd_edge_when_alpha_tuned() {
+        // §5.2.3 Case II: with α = 1−√λ and large p, EASGD's second
+        // moment is stable up to η < ω/√λ, beyond the single-worker SGD
+        // edge 2ω/(λ+1). (Individual SGD *paths* still converge a.s. —
+        // geometric Brownian motion — so the right check is the moment
+        // matrices, not path divergence.)
+        let (l, w) = (0.5, 0.5);
+        let alpha = moments::easgd_mult_optimal_alpha(l); // ≈ 0.293
+        let edge_sgd = 2.0 * w / (l + 1.0); // ≈ 0.667 (p=1)
+        let eta = 0.68; // beyond the SGD edge, inside ω/√λ ≈ 0.707
+        assert!(eta > edge_sgd);
+        // SGD second moment diverges:
+        assert!(moments::minibatch_sgd_rate(eta, l, w, 1) > 1.0);
+        // EASGD (p large, tuned α) second moment contracts:
+        let m = moments::easgd_mult_moment_matrix(eta, alpha, 0.9, l, w, 400);
+        let sp = moments::sp(&m);
+        assert!(sp < 1.0, "sp={sp}");
+        // And the simulated center indeed contracts.
+        let model = Multiplicative { lambda: l, omega: w };
+        let tr = easgd_trajectory(model, eta, alpha, 0.9, 100, 1.0, 1500,
+                                  &mut Rng::new(4));
+        assert!(*tr.last().unwrap() < 0.5, "center {:?}", tr.last());
+    }
+}

@@ -1,0 +1,151 @@
+//! §5.3: the double-well non-convex case — when does the elastic
+//! coupling break and leave workers straddling a saddle?
+//!
+//! Objective for p = 2 workers (Eq 5.35):
+//!   (1/4)(1−x²)² + (1/4)(1−y²)² + (ρ/2)(x−z)² + (ρ/2)(y−z)²
+//! with the *EASGD-introduced* critical point x = √(1−ρ), y = −√(1−ρ),
+//! z = 0 that is a stable local optimum for ρ ∈ (0, 2/3) (Fig 5.20).
+
+use crate::linalg::{eigenvalues, Matrix};
+use crate::rng::Rng;
+
+/// The coupled objective value (Eq 5.35).
+pub fn objective(x: f64, y: f64, z: f64, rho: f64) -> f64 {
+    0.25 * (1.0 - x * x).powi(2)
+        + 0.25 * (1.0 - y * y).powi(2)
+        + 0.5 * rho * (x - z).powi(2)
+        + 0.5 * rho * (y - z).powi(2)
+}
+
+/// Gradient (Eq 5.36).
+pub fn gradient(x: f64, y: f64, z: f64, rho: f64) -> (f64, f64, f64) {
+    (
+        (x * x - 1.0) * x + rho * (x - z),
+        (y * y - 1.0) * y + rho * (y - z),
+        rho * (z - x) + rho * (z - y),
+    )
+}
+
+/// Hessian at (x, y, z) (Eq 5.38).
+pub fn hessian(x: f64, y: f64, rho: f64) -> Matrix {
+    Matrix::from_rows(&[
+        &[3.0 * x * x - 1.0 + rho, 0.0, -rho],
+        &[0.0, 3.0 * y * y - 1.0 + rho, -rho],
+        &[-rho, -rho, 2.0 * rho],
+    ])
+}
+
+/// The saddle-straddling critical point (±√(1−ρ), 0) for ρ < 1.
+pub fn straddle_point(rho: f64) -> Option<(f64, f64, f64)> {
+    if rho < 1.0 {
+        let s = (1.0 - rho).sqrt();
+        Some((s, -s, 0.0))
+    } else {
+        None
+    }
+}
+
+/// Smallest Hessian eigenvalue at the straddle point — Fig 5.20's curve.
+pub fn straddle_min_eig(rho: f64) -> Option<f64> {
+    let (x, y, _) = straddle_point(rho)?;
+    let h = hessian(x, y, rho);
+    let min = eigenvalues(&h)
+        .iter()
+        .map(|z| z.re)
+        .fold(f64::INFINITY, f64::min);
+    Some(min)
+}
+
+/// All real critical points (thesis: x = y or x = −y families):
+/// (1,1,1), (−1,−1,−1), (0,0,0), and ±(√(1−ρ), −√(1−ρ), 0) for ρ < 1.
+pub fn critical_points(rho: f64) -> Vec<(f64, f64, f64)> {
+    let mut pts = vec![(1.0, 1.0, 1.0), (-1.0, -1.0, -1.0), (0.0, 0.0, 0.0)];
+    if let Some((x, y, z)) = straddle_point(rho) {
+        pts.push((x, y, z));
+        pts.push((-x, -y, z));
+    }
+    pts
+}
+
+/// Simulate noisy gradient descent on the coupled objective from a
+/// straddling initialization; returns final (x, y, z). Demonstrates
+/// trapping for small ρ and escape (consensus) for ρ > 2/3.
+pub fn descend_from_straddle(
+    rho: f64,
+    eta: f64,
+    noise: f64,
+    steps: usize,
+    rng: &mut Rng,
+) -> (f64, f64, f64) {
+    let (mut x, mut y, mut z) = (0.9, -0.9, 0.0);
+    for _ in 0..steps {
+        let (gx, gy, gz) = gradient(x, y, z, rho);
+        x -= eta * (gx + rng.normal(0.0, noise));
+        y -= eta * (gy + rng.normal(0.0, noise));
+        z -= eta * gz;
+    }
+    (x, y, z)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn gradient_vanishes_at_critical_points() {
+        for rho in [0.1, 0.3, 0.6, 0.9] {
+            for (x, y, z) in critical_points(rho) {
+                let (gx, gy, gz) = gradient(x, y, z, rho);
+                assert!(gx.abs() < 1e-12 && gy.abs() < 1e-12 && gz.abs() < 1e-12,
+                        "ρ={rho} pt=({x},{y},{z}) grad=({gx},{gy},{gz})");
+            }
+        }
+    }
+
+    #[test]
+    fn gradient_is_derivative_of_objective() {
+        let (x, y, z, rho) = (0.4, -0.7, 0.2, 0.35);
+        let eps = 1e-6;
+        let (gx, gy, gz) = gradient(x, y, z, rho);
+        let fd_x = (objective(x + eps, y, z, rho) - objective(x - eps, y, z, rho)) / (2.0 * eps);
+        let fd_y = (objective(x, y + eps, z, rho) - objective(x, y - eps, z, rho)) / (2.0 * eps);
+        let fd_z = (objective(x, y, z + eps, rho) - objective(x, y, z - eps, rho)) / (2.0 * eps);
+        assert!((gx - fd_x).abs() < 1e-6);
+        assert!((gy - fd_y).abs() < 1e-6);
+        assert!((gz - fd_z).abs() < 1e-6);
+    }
+
+    #[test]
+    fn straddle_stable_below_two_thirds_unstable_above() {
+        // Fig 5.20: min-eig > 0 on ρ ∈ (0, 2/3); ≤ 0 beyond.
+        for rho in [0.05, 0.2, 0.4, 0.6] {
+            let e = straddle_min_eig(rho).unwrap();
+            assert!(e > 0.0, "ρ={rho}: min eig {e}");
+        }
+        for rho in [0.7, 0.9, 0.99] {
+            let e = straddle_min_eig(rho).unwrap();
+            assert!(e <= 1e-10, "ρ={rho}: min eig {e}");
+        }
+    }
+
+    #[test]
+    fn descent_traps_at_small_rho_escapes_at_large() {
+        let mut rng = crate::rng::Rng::new(42);
+        // Small ρ: workers stay on opposite wells (broken elasticity).
+        let (x, y, _) = descend_from_straddle(0.2, 0.05, 0.05, 20_000, &mut rng);
+        assert!(x > 0.3 && y < -0.3, "expected straddle, got ({x},{y})");
+        // Large ρ: coupling forces consensus in one well.
+        let (x2, y2, _) = descend_from_straddle(0.9, 0.05, 0.05, 20_000, &mut rng);
+        assert!((x2 - y2).abs() < 0.3, "expected consensus, got ({x2},{y2})");
+    }
+
+    #[test]
+    fn global_minima_are_stable_for_all_rho() {
+        for rho in [0.1, 0.5, 1.0, 2.0] {
+            let h = hessian(1.0, 1.0, rho);
+            let min = eigenvalues(&h).iter().map(|z| z.re).fold(f64::INFINITY, f64::min);
+            // (1,1,1) Hessian has a ρ-scaled zero mode only at ρ=0.
+            assert!(min > -1e-10, "ρ={rho} min {min}");
+        }
+    }
+}

@@ -1,0 +1,317 @@
+//! Discrete-time simulators for the additive-noise quadratic model
+//! (§3.1.1 / §5.1): noisy gradient g(x) = h·x − ξ, ξ ~ N(0, σ²).
+//!
+//! These are the empirical counterparts of the closed forms in
+//! [`super::moments`]; Figs 5.3 and 5.7 are direct plots of
+//! [`easgd_trajectory`], and the tests cross-validate simulator moments
+//! against Lemma 3.1.1 / Eq 5.7.
+
+use crate::rng::Rng;
+
+/// Model constants shared by every simulator in this module.
+#[derive(Clone, Copy, Debug)]
+pub struct Quadratic {
+    pub h: f64,
+    pub sigma: f64,
+}
+
+impl Quadratic {
+    #[inline]
+    fn noisy_grad(&self, x: f64, rng: &mut Rng) -> f64 {
+        self.h * x - rng.normal(0.0, self.sigma)
+    }
+}
+
+/// Plain SGD from x0 for t steps; returns the trajectory x_0..x_t.
+pub fn sgd_trajectory(m: Quadratic, eta: f64, x0: f64, t: usize, rng: &mut Rng) -> Vec<f64> {
+    let mut xs = Vec::with_capacity(t + 1);
+    let mut x = x0;
+    xs.push(x);
+    for _ in 0..t {
+        x -= eta * m.noisy_grad(x, rng);
+        xs.push(x);
+    }
+    xs
+}
+
+/// Mini-batch SGD: the batch of size p averages p independent noises.
+pub fn minibatch_sgd_trajectory(
+    m: Quadratic,
+    eta: f64,
+    p: usize,
+    x0: f64,
+    t: usize,
+    rng: &mut Rng,
+) -> Vec<f64> {
+    let eff = Quadratic { h: m.h, sigma: m.sigma / (p as f64).sqrt() };
+    sgd_trajectory(eff, eta, x0, t, rng)
+}
+
+/// Nesterov momentum SGD (Eq 5.4): v' = δv − η(h(x+δv) − ξ); x' = x + v'.
+pub fn msgd_trajectory(
+    m: Quadratic,
+    eta: f64,
+    delta: f64,
+    x0: f64,
+    t: usize,
+    rng: &mut Rng,
+) -> Vec<f64> {
+    let mut xs = Vec::with_capacity(t + 1);
+    let (mut x, mut v) = (x0, 0.0);
+    xs.push(x);
+    for _ in 0..t {
+        v = delta * v - eta * m.noisy_grad(x + delta * v, rng);
+        x += v;
+        xs.push(x);
+    }
+    xs
+}
+
+/// State of a synchronous EASGD run (Eq 5.9).
+#[derive(Clone, Debug)]
+pub struct EasgdState {
+    pub workers: Vec<f64>,
+    pub center: f64,
+}
+
+/// Synchronous EASGD (Eq 5.9): every step each worker does a noisy
+/// gradient step plus the elastic pull; the center moves by
+/// β · (spatial mean − center). Returns the center trajectory x̃_0..x̃_t.
+pub fn easgd_trajectory(
+    m: Quadratic,
+    eta: f64,
+    alpha: f64,
+    beta: f64,
+    p: usize,
+    x0: f64,
+    t: usize,
+    rng: &mut Rng,
+) -> Vec<f64> {
+    let mut st = EasgdState { workers: vec![x0; p], center: x0 };
+    let mut out = Vec::with_capacity(t + 1);
+    out.push(st.center);
+    for _ in 0..t {
+        let mean: f64 = st.workers.iter().sum::<f64>() / p as f64;
+        for w in &mut st.workers {
+            let g = m.noisy_grad(*w, rng);
+            *w = *w - eta * g - alpha * (*w - st.center);
+        }
+        st.center += beta * (mean - st.center);
+        out.push(st.center);
+    }
+    out
+}
+
+/// Synchronous EAMSGD: Nesterov local steps + elastic coupling (§2.3).
+pub fn eamsgd_trajectory(
+    m: Quadratic,
+    eta: f64,
+    alpha: f64,
+    beta: f64,
+    delta: f64,
+    p: usize,
+    x0: f64,
+    t: usize,
+    rng: &mut Rng,
+) -> Vec<f64> {
+    let mut xs = vec![x0; p];
+    let mut vs = vec![0.0; p];
+    let mut center = x0;
+    let mut out = Vec::with_capacity(t + 1);
+    out.push(center);
+    for _ in 0..t {
+        let mean: f64 = xs.iter().sum::<f64>() / p as f64;
+        for i in 0..p {
+            let g = m.noisy_grad(xs[i] + delta * vs[i], rng);
+            vs[i] = delta * vs[i] - eta * g;
+            xs[i] = xs[i] + vs[i] - alpha * (xs[i] - center);
+        }
+        center += beta * (mean - center);
+        out.push(center);
+    }
+    out
+}
+
+/// Time-averaged (Polyak–Ruppert style) double averaging sequence
+/// z_{t+1} = mean of x̃_0..x̃_t (Eq 3.13), whose weak limit is
+/// N(0, σ²/(p h²)) by Lemma 3.1.2.
+pub fn double_average(center_traj: &[f64]) -> Vec<f64> {
+    let mut out = Vec::with_capacity(center_traj.len());
+    let mut acc = 0.0;
+    for (k, &x) in center_traj.iter().enumerate() {
+        acc += x;
+        out.push(acc / (k + 1) as f64);
+    }
+    out
+}
+
+/// Empirical second moment of the trajectory tail (last `tail` points
+/// across `reps` independent runs) — used to validate asymptotics.
+pub fn empirical_second_moment<F>(mut run: F, reps: usize, tail: usize) -> f64
+where
+    F: FnMut(usize) -> Vec<f64>,
+{
+    let mut acc = 0.0;
+    let mut n = 0usize;
+    for r in 0..reps {
+        let tr = run(r);
+        for &x in tr.iter().rev().take(tail) {
+            acc += x * x;
+            n += 1;
+        }
+    }
+    acc / n as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::moments;
+
+    const M: Quadratic = Quadratic { h: 1.0, sigma: 0.1 };
+
+    #[test]
+    fn sgd_converges_to_noise_ball() {
+        let mut rng = Rng::new(1);
+        let tr = sgd_trajectory(M, 0.1, 5.0, 2000, &mut rng);
+        let tail: f64 = tr.iter().rev().take(100).map(|x| x * x).sum::<f64>() / 100.0;
+        // Asymptotic variance η²σ²/(1−(1−ηh)²) ≈ 5.26e-4.
+        assert!(tail < 5e-3, "tail second moment {tail}");
+        assert!(tr[0] == 5.0 && tr.last().unwrap().abs() < 1.0);
+    }
+
+    #[test]
+    fn sgd_asymptotic_variance_matches_closed_form() {
+        let eta = 0.2;
+        let want = eta * eta * M.sigma * M.sigma / (1.0 - (1.0 - eta * M.h).powi(2));
+        let got = empirical_second_moment(
+            |r| sgd_trajectory(M, eta, 0.0, 4000, &mut Rng::new(100 + r as u64)),
+            40,
+            500,
+        );
+        assert!((got - want).abs() / want < 0.15, "{got} vs {want}");
+    }
+
+    #[test]
+    fn minibatch_reduces_variance_by_p() {
+        let eta = 0.2;
+        let v1 = empirical_second_moment(
+            |r| minibatch_sgd_trajectory(M, eta, 1, 0.0, 3000, &mut Rng::new(r as u64)),
+            30,
+            400,
+        );
+        let v8 = empirical_second_moment(
+            |r| minibatch_sgd_trajectory(M, eta, 8, 0.0, 3000, &mut Rng::new(r as u64)),
+            30,
+            400,
+        );
+        let ratio = v1 / v8;
+        assert!((ratio - 8.0).abs() < 2.0, "variance ratio {ratio}");
+    }
+
+    #[test]
+    fn msgd_asymptotic_variance_matches_eq_5_7() {
+        let (eta, delta) = (0.2, 0.5);
+        let (_, _, x2_units) = moments::msgd_asymptotic(eta * M.h, delta);
+        let want = x2_units * eta * eta * M.sigma * M.sigma;
+        let got = empirical_second_moment(
+            |r| msgd_trajectory(M, eta, delta, 0.0, 4000, &mut Rng::new(7 + r as u64)),
+            40,
+            500,
+        );
+        assert!((got - want).abs() / want < 0.2, "{got} vs {want}");
+    }
+
+    #[test]
+    fn easgd_center_variance_matches_lemma_3_1_1() {
+        let (eta, beta, p) = (0.1, 0.5, 4usize);
+        let alpha = beta / p as f64;
+        let model = moments::QuadraticModel { h: M.h, sigma: M.sigma, p };
+        let want = moments::center_mse_infinite(&model, eta, beta);
+        let got = empirical_second_moment(
+            |r| easgd_trajectory(M, eta, alpha, beta, p, 0.0, 4000, &mut Rng::new(31 + r as u64)),
+            40,
+            500,
+        );
+        assert!((got - want).abs() / want < 0.25, "{got} vs {want}");
+    }
+
+    #[test]
+    fn easgd_center_less_noisy_than_single_sgd() {
+        let (eta, beta, p) = (0.1, 0.5, 16usize);
+        let v_center = empirical_second_moment(
+            |r| easgd_trajectory(M, eta, beta / p as f64, beta, p, 0.0, 3000,
+                                 &mut Rng::new(r as u64)),
+            20,
+            400,
+        );
+        let v_sgd = empirical_second_moment(
+            |r| sgd_trajectory(M, eta, 0.0, 3000, &mut Rng::new(r as u64)),
+            20,
+            400,
+        );
+        assert!(v_center < v_sgd / 3.0, "{v_center} vs {v_sgd}");
+    }
+
+    #[test]
+    fn fig_5_3_reduced_optimal_alpha_diverges_at_small_eta() {
+        // The thesis' cautionary tale: the 'optimal' α from the reduced
+        // system (Eq 5.17) ignores the extra eigenvalue 1−α−η_h and the
+        // simulation blows up at η=0.1 while α=β/p stays stable.
+        let (eta, beta, p) = (0.1, 0.9, 4usize);
+        let a_opt = moments::easgd_optimal_alpha_reduced(eta * M.h, beta);
+        let mut rng = Rng::new(5);
+        let tr = easgd_trajectory(M, eta, a_opt, beta, p, 1.0, 400, &mut rng);
+        let last = tr.last().unwrap().abs();
+        assert!(last > 1e3 || last.is_nan(), "expected divergence, got {last}");
+        let tr2 = easgd_trajectory(M, eta, beta / p as f64, beta, p, 1.0, 400,
+                                   &mut Rng::new(5));
+        assert!(tr2.last().unwrap().abs() < 1.0);
+    }
+
+    #[test]
+    fn fig_5_7_optimal_alpha_wins_at_large_eta() {
+        // At η=1.5 (β < η_h) the negative optimal α is genuinely better:
+        // both runs are stable and optimal-α contracts faster.
+        let (eta, beta, p) = (1.5, 0.9, 4usize);
+        let a_opt = moments::easgd_optimal_alpha_original(eta * M.h, beta);
+        assert!(a_opt < 0.0);
+        let m2 = |alpha: f64| {
+            empirical_second_moment(
+                |r| easgd_trajectory(M, eta, alpha, beta, p, 1.0, 60, &mut Rng::new(r as u64)),
+                50,
+                1,
+            )
+        };
+        // Distance to optimum after 60 steps: optimal α should be ahead.
+        let d_opt = m2(a_opt);
+        let d_elastic = m2(beta / p as f64);
+        assert!(d_opt < d_elastic, "{d_opt} vs {d_elastic}");
+    }
+
+    #[test]
+    fn double_average_approaches_fisher_bound() {
+        let (eta, beta, p) = (0.1, 0.5, 4usize);
+        let t = 20_000;
+        let mut acc = 0.0;
+        let reps = 30;
+        for r in 0..reps {
+            let tr = easgd_trajectory(M, eta, beta / p as f64, beta, p, 0.0, t,
+                                      &mut Rng::new(900 + r));
+            let z = double_average(&tr);
+            let zt = *z.last().unwrap();
+            acc += (t as f64) * zt * zt;
+        }
+        let got = acc / reps as f64;
+        let want = M.sigma * M.sigma / (p as f64 * M.h * M.h); // Lemma 3.1.2
+        assert!((got - want).abs() / want < 0.5, "{got} vs {want}");
+    }
+
+    #[test]
+    fn eamsgd_stable_at_paper_settings() {
+        let mut rng = Rng::new(17);
+        let tr = eamsgd_trajectory(M, 0.05, 0.9 / 4.0, 0.9, 0.99, 4, 1.0, 3000, &mut rng);
+        assert!(tr.last().unwrap().abs() < 1.0);
+        assert!(tr.iter().all(|x| x.is_finite()));
+    }
+}

@@ -1,0 +1,268 @@
+//! Property-based tests over coordinator/numeric invariants, driven by
+//! the crate's own deterministic RNG (the offline crate set has no
+//! proptest — DESIGN.md §2). Each property samples many random cases;
+//! failures print the offending case.
+
+use elastic_train::coordinator::gauss_seidel;
+use elastic_train::data::prefetch::{PrefetchPool, Sharding};
+use elastic_train::linalg::{eigenvalues, spectral_radius, Matrix};
+use elastic_train::model::flat;
+use elastic_train::rng::Rng;
+use elastic_train::sim::{admm, moments};
+
+const CASES: usize = 60;
+
+fn rand_vec(rng: &mut Rng, n: usize, scale: f32) -> Vec<f32> {
+    let mut v = vec![0.0f32; n];
+    rng.fill_gaussian_f32(&mut v, scale);
+    v
+}
+
+/// Elastic exchange conserves x + c (up to f32 rounding) and is a
+/// contraction of |x − c| for any α ∈ (0, 1).
+#[test]
+fn prop_elastic_exchange_conserving_contraction() {
+    let mut rng = Rng::new(101);
+    for case in 0..CASES {
+        let n = 1 + rng.below(3000);
+        let alpha = rng.uniform_in(0.01, 0.99) as f32;
+        let mut x = rand_vec(&mut rng, n, 2.0);
+        let mut c = rand_vec(&mut rng, n, 2.0);
+        let sum_before: Vec<f32> = x.iter().zip(&c).map(|(a, b)| a + b).collect();
+        let gap_before = flat::dist2(&x, &c);
+        flat::elastic_exchange(&mut x, &mut c, alpha);
+        let gap_after = flat::dist2(&x, &c);
+        assert!(
+            gap_after <= gap_before * (1.0 + 1e-6),
+            "case {case}: gap grew {gap_before} -> {gap_after} (α={alpha})"
+        );
+        for i in 0..n {
+            let s = x[i] + c[i];
+            assert!(
+                (s - sum_before[i]).abs() <= 2e-5 * sum_before[i].abs().max(1.0),
+                "case {case}: sum drift at {i}"
+            );
+        }
+    }
+}
+
+/// Nesterov with δ = 0 equals plain SGD for arbitrary inputs.
+#[test]
+fn prop_nesterov_zero_momentum_is_sgd() {
+    let mut rng = Rng::new(102);
+    for _ in 0..CASES {
+        let n = 1 + rng.below(2000);
+        let eta = rng.uniform_in(0.0, 1.0) as f32;
+        let mut x1 = rand_vec(&mut rng, n, 1.0);
+        let g = rand_vec(&mut rng, n, 1.0);
+        let mut x2 = x1.clone();
+        let mut v = vec![0.0f32; n];
+        flat::sgd_step(&mut x1, &g, eta);
+        flat::nesterov_step(&mut x2, &mut v, &g, eta, 0.0);
+        assert_eq!(x1, x2);
+    }
+}
+
+/// moving_average keeps every coordinate inside [min(c,x), max(c,x)]
+/// for α ∈ [0, 1].
+#[test]
+fn prop_moving_average_stays_in_hull() {
+    let mut rng = Rng::new(103);
+    for _ in 0..CASES {
+        let n = 1 + rng.below(500);
+        let a = rng.uniform() as f32;
+        let mut c = rand_vec(&mut rng, n, 3.0);
+        let x = rand_vec(&mut rng, n, 3.0);
+        let c0 = c.clone();
+        flat::moving_average(&mut c, &x, a);
+        for i in 0..n {
+            let lo = c0[i].min(x[i]) - 1e-5;
+            let hi = c0[i].max(x[i]) + 1e-5;
+            assert!(c[i] >= lo && c[i] <= hi, "escaped hull at {i}");
+        }
+    }
+}
+
+/// Eigenvalues of random REAL SYMMETRIC matrices are real, and the sum
+/// matches the trace.
+#[test]
+fn prop_symmetric_eigenvalues_are_real() {
+    let mut rng = Rng::new(104);
+    for case in 0..30 {
+        let n = 2 + rng.below(9);
+        let mut m = Matrix::zeros(n, n);
+        for i in 0..n {
+            for j in 0..=i {
+                let v = rng.normal(0.0, 1.0);
+                m.set(i, j, v);
+                m.set(j, i, v);
+            }
+        }
+        let eigs = eigenvalues(&m);
+        assert_eq!(eigs.len(), n);
+        let trace: f64 = (0..n).map(|i| m.get(i, i)).sum();
+        let sum: f64 = eigs.iter().map(|z| z.re).sum();
+        for z in &eigs {
+            assert!(z.im.abs() < 1e-6, "case {case}: complex eig {z:?}");
+        }
+        assert!((sum - trace).abs() < 1e-6 * (1.0 + trace.abs()));
+    }
+}
+
+/// Row-stochastic matrices have spectral radius 1.
+#[test]
+fn prop_stochastic_matrix_spectral_radius_one() {
+    let mut rng = Rng::new(105);
+    for _ in 0..30 {
+        let n = 2 + rng.below(8);
+        let mut m = Matrix::zeros(n, n);
+        for i in 0..n {
+            let mut row: Vec<f64> = (0..n).map(|_| rng.uniform() + 1e-3).collect();
+            let s: f64 = row.iter().sum();
+            for v in &mut row {
+                *v /= s;
+            }
+            for (j, v) in row.iter().enumerate() {
+                m.set(i, j, *v);
+            }
+        }
+        let sp = spectral_radius(&m);
+        assert!((sp - 1.0).abs() < 1e-7, "sp {sp}");
+    }
+}
+
+/// The closed-form stability region of round-robin EASGD matches the
+/// computed spectrum exactly at p = 1 for random (η, α).
+#[test]
+fn prop_easgd_rr_condition_exact_at_p1() {
+    let mut rng = Rng::new(106);
+    for _ in 0..200 {
+        let eta = rng.uniform_in(0.0, 2.5);
+        let alpha = rng.uniform_in(0.0, 1.2);
+        let sp = spectral_radius(&admm::easgd_round_robin_map(1, eta, alpha));
+        if admm::easgd_rr_stable(eta, alpha) {
+            assert!(sp <= 1.0 + 1e-7, "η={eta} α={alpha}: sp={sp}");
+        } else {
+            assert!(sp >= 1.0 - 1e-7, "η={eta} α={alpha}: sp={sp}");
+        }
+    }
+}
+
+/// Lemma 3.1.1's γ, φ always satisfy the defining quadratic and the
+/// ordering φ ≤ γ for random valid hyper-parameters.
+#[test]
+fn prop_gamma_phi_root_identity() {
+    let mut rng = Rng::new(107);
+    for _ in 0..300 {
+        let eta = rng.uniform_in(1e-4, 1.5);
+        let p = 1 + rng.below(64);
+        let alpha = rng.uniform_in(1e-5, 1.0 / p as f64);
+        let h = rng.uniform_in(0.1, 2.0);
+        let (g, f) = moments::gamma_phi(eta, alpha, h, p);
+        let a = eta * h + (p as f64 + 1.0) * alpha;
+        let c2 = eta * h * p as f64 * alpha;
+        for z in [g, f] {
+            let r = z * z - (2.0 - a) * z + (1.0 - a + c2);
+            assert!(r.abs() < 1e-9, "root residual {r}");
+        }
+        assert!(f <= g + 1e-12);
+    }
+}
+
+/// Gauss–Seidel drift at (a, b) = (α, β) and the Jacobi drift agree in
+/// the stable/unstable classification for random small rates.
+#[test]
+fn prop_gs_and_jacobi_agree_on_stability_at_small_rates() {
+    let mut rng = Rng::new(108);
+    for _ in 0..100 {
+        let p = 2 + rng.below(15);
+        let eta_h = rng.uniform_in(0.01, 0.4);
+        let beta = rng.uniform_in(0.05, 0.5);
+        let alpha = beta / p as f64;
+        let gs = gauss_seidel::spectral(eta_h, alpha, beta, p);
+        let jac = spectral_radius(&moments::easgd_drift_matrix(eta_h, alpha, beta, p));
+        assert_eq!(
+            gs < 1.0,
+            jac < 1.0,
+            "classification split at η_h={eta_h} β={beta} p={p}: gs={gs} jac={jac}"
+        );
+    }
+}
+
+/// Prefetch pipeline: for random loader/chunk/batch geometry, fetched
+/// mini-batches contain only valid indices and are full-size.
+#[test]
+fn prop_prefetch_minibatches_well_formed() {
+    let mut rng = Rng::new(109);
+    for _ in 0..40 {
+        let n = 64 + rng.below(2000);
+        let k = 1 + rng.below(8);
+        let batch = 8 + rng.below(64);
+        let chunk = batch * (1 + rng.below(4));
+        let mode = if rng.below(2) == 0 { Sharding::Replicated } else { Sharding::Partitioned };
+        let mut pool = PrefetchPool::new(n, k, chunk, batch, mode, rng.next_u64());
+        let mut prng = Rng::new(rng.next_u64());
+        for _ in 0..3 {
+            for mb in pool.fetch_minibatches(&mut prng) {
+                assert_eq!(mb.len(), batch);
+                assert!(mb.iter().all(|&i| i < n));
+            }
+        }
+    }
+}
+
+/// Gamma sampling: mean/variance track (λ, ω) for random parameters.
+#[test]
+fn prop_gamma_moments_random_params() {
+    let mut rng = Rng::new(110);
+    for _ in 0..10 {
+        let shape = rng.uniform_in(0.2, 20.0);
+        let rate = rng.uniform_in(0.2, 20.0);
+        let n = 60_000;
+        let (mut m1, mut m2) = (0.0, 0.0);
+        for _ in 0..n {
+            let g = rng.gamma(shape, rate);
+            m1 += g;
+            m2 += g * g;
+        }
+        m1 /= n as f64;
+        m2 = m2 / n as f64 - m1 * m1;
+        let mean = shape / rate;
+        let var = shape / (rate * rate);
+        assert!((m1 - mean).abs() < 0.1 * mean.max(0.1), "mean {m1} vs {mean}");
+        assert!((m2 - var).abs() < 0.15 * var.max(0.1), "var {m2} vs {var}");
+    }
+}
+
+/// JSON parser: print → parse roundtrip over random structured values.
+#[test]
+fn prop_json_roundtrip_random_documents() {
+    use elastic_train::config::Json;
+    let mut rng = Rng::new(111);
+
+    fn gen(rng: &mut Rng, depth: usize) -> (String, usize) {
+        if depth == 0 || rng.below(3) == 0 {
+            match rng.below(3) {
+                0 => (format!("{}", rng.below(100000)), 0),
+                1 => (format!("{:.4}", rng.uniform_in(-50.0, 50.0)), 0),
+                _ => (format!("\"s{}\"", rng.below(1000)), 0),
+            }
+        } else if rng.below(2) == 0 {
+            let n = 1 + rng.below(4);
+            let items: Vec<String> = (0..n).map(|_| gen(rng, depth - 1).0).collect();
+            (format!("[{}]", items.join(",")), n)
+        } else {
+            let n = 1 + rng.below(4);
+            let items: Vec<String> = (0..n)
+                .map(|i| format!("\"k{i}\":{}", gen(rng, depth - 1).0))
+                .collect();
+            (format!("{{{}}}", items.join(",")), n)
+        }
+    }
+
+    for _ in 0..100 {
+        let (doc, _) = gen(&mut rng, 3);
+        let parsed = Json::parse(&doc);
+        assert!(parsed.is_ok(), "failed to parse generated doc: {doc}");
+    }
+}
