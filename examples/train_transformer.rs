@@ -18,7 +18,7 @@ use elastic_train::runtime::{PjrtModel, PjrtOracle};
 use std::io::Write;
 use std::rc::Rc;
 
-fn main() -> anyhow::Result<()> {
+fn main() -> elastic_train::error::Result<()> {
     let args = Args::from_env();
     let p = args.get_usize("p", 4);
     let steps = args.get_u64("steps", 300);

@@ -3,13 +3,17 @@
 //! and the relative *virtual-time* speedups the figures report —
 //! EXPERIMENTS.md cites these rows against Figs 4.5–4.7/4.14.
 
+use elastic_train::config::Args;
 use elastic_train::coordinator::{Method, SeqMethod};
 use elastic_train::figures::ch4::Sweep;
 use elastic_train::figures::FigOpts;
 use std::time::Instant;
 
 fn main() {
-    let opts = FigOpts { out_dir: "out".into(), full: false, seed: 0 };
+    // Accepts the same key=value args as `repro figure` (backend=, seed=).
+    let mut opts = FigOpts::from_args(&Args::from_env());
+    opts.out_dir = "out".into();
+    opts.full = false;
     let mut sw = Sweep::new(&opts);
     sw.horizon = 30.0;
     sw.eval_every = 3.0;

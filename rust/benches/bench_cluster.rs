@@ -4,11 +4,14 @@
 //! bounds how big a sweep `figure all --full` can afford.
 
 use elastic_train::cluster::CostModel;
-use elastic_train::coordinator::{run_parallel, DriverConfig, Method, MlpOracle};
+use elastic_train::coordinator::{
+    run_parallel, run_threaded, DriverConfig, Method, MlpOracle,
+};
 use elastic_train::data::BlobDataset;
 use elastic_train::figures::benchkit::bench;
 use elastic_train::model::MlpConfig;
 use std::sync::Arc;
+use std::time::Instant;
 
 fn main() {
     let data = Arc::new(BlobDataset::generate(32, 10, 2048, 256, 2.2, 1));
@@ -47,6 +50,34 @@ fn main() {
             "  -> {name}: {:.0} worker-steps/s of host time ({} steps per 0.5 vs run)",
             total_steps as f64 / (s.median_ns * 1e-9),
             total_steps
+        );
+    }
+
+    // Same workload through the real-thread backend: steps/sec of REAL
+    // time, 8 workers, sharded-lock center (bench_threaded has the full
+    // p × τ scaling grid).
+    for (name, method) in [
+        ("easgd_tau10", Method::easgd_default(8, 10)),
+        ("downpour_tau1", Method::Downpour { tau: 1 }),
+    ] {
+        let mut oracles = MlpOracle::family(data.clone(), &mcfg, 32, 8);
+        let cfg = DriverConfig {
+            eta: 0.05,
+            method,
+            cost,
+            horizon: 60.0, // real-seconds safety net; steps bound first
+            eval_every: 1e6,
+            seed: 3,
+            max_steps: 20_000,
+            lr_decay_gamma: 0.0,
+        };
+        let t0 = Instant::now();
+        let r = run_threaded(&mut oracles, &cfg, 16);
+        let el = t0.elapsed().as_secs_f64();
+        println!(
+            "  -> thread/{name}/p8: {:.0} worker-steps/s real time ({} steps in {el:.2}s)",
+            r.total_steps as f64 / el,
+            r.total_steps
         );
     }
 }

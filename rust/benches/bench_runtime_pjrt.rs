@@ -3,10 +3,19 @@
 //! packing, and the update kernels. These rows bound the end-to-end
 //! example's throughput and feed EXPERIMENTS.md §Perf (L2/L3).
 
+#[cfg(feature = "pjrt")]
 use elastic_train::figures::benchkit::{bench, fmt_ns};
+#[cfg(feature = "pjrt")]
 use elastic_train::model::flat;
+#[cfg(feature = "pjrt")]
 use elastic_train::rng::Rng;
 
+#[cfg(not(feature = "pjrt"))]
+fn main() {
+    println!("built without the pjrt feature — rebuild with --features pjrt; skipping");
+}
+
+#[cfg(feature = "pjrt")]
 fn main() {
     let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
     if !dir.join("manifest.json").exists() {

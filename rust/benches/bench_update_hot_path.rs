@@ -35,7 +35,18 @@ fn main() {
         );
     }
 
-    // PJRT comparison at the artifact's size (skipped without artifacts).
+    pjrt_comparison();
+}
+
+/// PJRT comparison at the artifact's size (requires `--features pjrt`
+/// with the real xla crate, plus `make artifacts`).
+#[cfg(not(feature = "pjrt"))]
+fn pjrt_comparison() {
+    println!("(built without the pjrt feature — native rows only)");
+}
+
+#[cfg(feature = "pjrt")]
+fn pjrt_comparison() {
     let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
     if dir.join("manifest.json").exists() {
         let m = elastic_train::runtime::PjrtModel::load(&dir).unwrap();

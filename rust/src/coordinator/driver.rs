@@ -1,13 +1,15 @@
-//! The asynchronous event-driven run loop — the system half of the
-//! reproduction.
+//! The asynchronous event-driven run loop — the virtual-time backend
+//! ([`super::executor::SimExecutor`]) of the Executor abstraction.
 //!
 //! Each worker owns a virtual clock; a min-heap interleaves workers by
 //! next-event time, so jittered compute produces genuine asynchrony
 //! (staleness between a worker's view of the center and its current
 //! value — exactly the effect the thesis studies). The master state
 //! (center variable, averaging sequences, master momentum, ADMM
-//! contributions) lives in `MasterState` and is touched only at
-//! communication events.
+//! contributions) lives in [`MasterState`] and is touched only at
+//! communication events. Shared state/config/step logic lives in
+//! [`super::executor`]; the real-thread backend is
+//! [`super::threaded`].
 //!
 //! Faithfulness notes:
 //! * EASGD exchange follows Alg. 1 literally: the gradient of the
@@ -17,65 +19,16 @@
 //! * MDOWNPOUR follows Algs 4–5: stateless workers evaluate at the
 //!   master's lookahead x̃ + δv.
 
+use super::executor::{eval_point, local_step_decoupled, MasterState, WorkerState};
 use super::method::Method;
 use super::oracle::GradOracle;
-use crate::cluster::{CostModel, CurvePoint, RunResult, TimeBreakdown};
+use crate::cluster::{RunResult, TimeBreakdown};
 use crate::model::flat;
 use crate::rng::Rng;
 use std::cmp::Ordering;
 use std::collections::BinaryHeap;
 
-/// Driver configuration for one distributed run.
-#[derive(Clone, Debug)]
-pub struct DriverConfig {
-    pub eta: f32,
-    pub method: Method,
-    pub cost: CostModel,
-    /// Virtual-time horizon (seconds).
-    pub horizon: f64,
-    /// Evaluation cadence (virtual seconds).
-    pub eval_every: f64,
-    pub seed: u64,
-    /// Safety cap on total local steps across workers.
-    pub max_steps: u64,
-    /// Learning-rate decay γ: η_t = η / (1 + γ·t_local)^0.5, driven by
-    /// each worker's own clock (thesis Fig 4.13). 0 disables.
-    pub lr_decay_gamma: f64,
-}
-
-impl DriverConfig {
-    #[inline]
-    fn eta_at(&self, t_local: u64) -> f32 {
-        if self.lr_decay_gamma == 0.0 {
-            self.eta
-        } else {
-            (self.eta as f64 / (1.0 + self.lr_decay_gamma * t_local as f64).sqrt()) as f32
-        }
-    }
-}
-
-struct Worker {
-    theta: Vec<f32>,
-    v: Vec<f32>,
-    grad: Vec<f32>,
-    scratch: Vec<f32>,
-    /// DOWNPOUR accumulated update; ADMM λ.
-    aux: Vec<f32>,
-    t_local: u64,
-    rng: Rng,
-}
-
-struct MasterState {
-    center: Vec<f32>,
-    /// Averaged center (ADOWNPOUR / MVADOWNPOUR).
-    z: Option<Vec<f32>>,
-    /// Master momentum (MDOWNPOUR).
-    mv: Option<Vec<f32>>,
-    /// ADMM: last (xⁱ − λⁱ) contribution per worker.
-    contrib: Option<Vec<Vec<f32>>>,
-    /// Master clock (# center updates) for the 1/t averaging rate.
-    clock: u64,
-}
+pub use super::executor::DriverConfig;
 
 #[derive(PartialEq)]
 struct Ev(f64, usize);
@@ -96,8 +49,11 @@ impl Ord for Ev {
     }
 }
 
-/// Run one asynchronous distributed experiment. `oracles[i]` is worker
-/// i's gradient computer; `oracles[0]` doubles as the evaluator.
+/// Run one asynchronous distributed experiment in virtual time.
+/// `oracles[i]` is worker i's gradient computer; `oracles[0]` doubles
+/// as the evaluator. Deliberately has no `Send` bound so the non-`Send`
+/// PJRT oracle runs here; thread-parallel execution goes through
+/// [`super::executor::ThreadExecutor`].
 pub fn run_parallel<O: GradOracle>(oracles: &mut [O], cfg: &DriverConfig) -> RunResult {
     let p = oracles.len();
     assert!(p >= 1);
@@ -106,34 +62,8 @@ pub fn run_parallel<O: GradOracle>(oracles: &mut [O], cfg: &DriverConfig) -> Run
     let tau = cfg.method.tau().max(1) as u64;
 
     let mut root_rng = Rng::new(cfg.seed);
-    let mut workers: Vec<Worker> = (0..p)
-        .map(|i| Worker {
-            theta: init.clone(),
-            v: vec![0.0; n],
-            grad: vec![0.0; n],
-            scratch: vec![0.0; n],
-            aux: vec![0.0; n],
-            t_local: 0,
-            rng: root_rng.split(i as u64),
-        })
-        .collect();
-
-    let mut master = MasterState {
-        center: init.clone(),
-        z: match cfg.method {
-            Method::ADownpour { .. } | Method::MvaDownpour { .. } => Some(init.clone()),
-            _ => None,
-        },
-        mv: match cfg.method {
-            Method::MDownpour { .. } => Some(vec![0.0; n]),
-            _ => None,
-        },
-        contrib: match cfg.method {
-            Method::AdmmAsync { .. } => Some(vec![init.clone(); p]),
-            _ => None,
-        },
-        clock: 0,
-    };
+    let mut workers = WorkerState::family(&init, p, &mut root_rng);
+    let mut master = MasterState::new(cfg.method, &init, p);
 
     let mut heap: BinaryHeap<Ev> = BinaryHeap::new();
     let mut time_rng = root_rng.split(0xC0FFEE);
@@ -154,15 +84,7 @@ pub fn run_parallel<O: GradOracle>(oracles: &mut [O], cfg: &DriverConfig) -> Run
         // Periodic center evaluation (uses the averaged center when the
         // method defines one — that's the variable the thesis tracks).
         while now >= next_eval {
-            let theta_eval = master.z.as_ref().unwrap_or(&master.center);
-            let st = oracles[0].eval(theta_eval);
-            result.curve.push(CurvePoint {
-                time: next_eval,
-                train_loss: st.train_loss,
-                test_loss: st.test_loss,
-                test_error: st.test_error,
-            });
-            if !st.train_loss.is_finite() {
+            if !eval_point(&mut oracles[0], master.eval_target(), next_eval, &mut result.curve) {
                 diverged = true;
             }
             next_eval += cfg.eval_every;
@@ -242,19 +164,10 @@ pub fn run_parallel<O: GradOracle>(oracles: &mut [O], cfg: &DriverConfig) -> Run
         // ---- Local gradient step -----------------------------------
         {
             let w = &mut workers[wi];
-            let eta_t = cfg.eta_at(w.t_local);
             let loss;
             match cfg.method {
-                Method::Eamsgd { delta, .. } => {
-                    // g at lookahead x + δv (Alg. 2), then
-                    // v ← δv − ηg ; x ← x + v.
-                    for (s, (t, v)) in w.scratch.iter_mut().zip(w.theta.iter().zip(&w.v)) {
-                        *s = t + delta * v;
-                    }
-                    loss = oracles[wi].grad(&w.scratch, &mut w.rng, &mut w.grad);
-                    flat::nesterov_step(&mut w.theta, &mut w.v, &w.grad, eta_t, delta);
-                }
                 Method::AdmmAsync { rho, .. } => {
+                    let eta_t = cfg.eta_at(w.t_local);
                     loss = oracles[wi].grad(&w.theta, &mut w.rng, &mut w.grad);
                     // Linearized prox step (Eq 3.53): λ is w.aux.
                     let d = 1.0 + eta_t * rho;
@@ -263,10 +176,12 @@ pub fn run_parallel<O: GradOracle>(oracles: &mut [O], cfg: &DriverConfig) -> Run
                             + eta_t * rho * (w.aux[j] + master.center[j]))
                             / d;
                     }
+                    w.t_local += 1;
                 }
                 Method::MDownpour { delta } => {
                     // Worker: gradient at x̃ + δv; master applies
                     // Nesterov (Alg. 5) immediately (async push).
+                    let eta_t = cfg.eta_at(w.t_local);
                     loss = oracles[wi].grad(&w.theta, &mut w.rng, &mut w.grad);
                     let mv = master.mv.as_mut().unwrap();
                     for j in 0..n {
@@ -274,29 +189,20 @@ pub fn run_parallel<O: GradOracle>(oracles: &mut [O], cfg: &DriverConfig) -> Run
                         master.center[j] += mv[j];
                     }
                     master.clock += 1;
+                    w.t_local += 1;
                     dt += cfg.cost.exchange_time(); // per-step comm
                     breakdown.comm += cfg.cost.exchange_time();
                 }
                 _ => {
-                    loss = oracles[wi].grad(&w.theta, &mut w.rng, &mut w.grad);
-                    flat::sgd_step(&mut w.theta, &w.grad, eta_t);
-                    if matches!(
-                        cfg.method,
-                        Method::Downpour { .. }
-                            | Method::ADownpour { .. }
-                            | Method::MvaDownpour { .. }
-                    ) {
-                        // Accumulate −ηg for the next push.
-                        for (a, g) in w.aux.iter_mut().zip(&w.grad) {
-                            *a -= eta_t * g;
-                        }
-                    }
+                    // EASGD / EAMSGD / DOWNPOUR-family: the shared
+                    // master-decoupled step (also used by the threaded
+                    // backend).
+                    loss = local_step_decoupled(cfg, w, &mut oracles[wi]);
                 }
             }
             if !loss.is_finite() || flat::norm2(&w.theta) > 1e8 {
                 diverged = true;
             }
-            w.t_local += 1;
         }
 
         let step_t = cfg.cost.grad_time(&mut time_rng);
@@ -308,17 +214,15 @@ pub fn run_parallel<O: GradOracle>(oracles: &mut [O], cfg: &DriverConfig) -> Run
     }
 
     // Final evaluation at the horizon.
-    let theta_eval = master.z.as_ref().unwrap_or(&master.center);
-    let st = oracles[0].eval(theta_eval);
-    result.curve.push(CurvePoint {
-        time: cfg.horizon.min(next_eval),
-        train_loss: st.train_loss,
-        test_loss: st.test_loss,
-        test_error: st.test_error,
-    });
+    let finite = eval_point(
+        &mut oracles[0],
+        master.eval_target(),
+        cfg.horizon.min(next_eval),
+        &mut result.curve,
+    );
     result.breakdown = breakdown;
     result.total_steps = total_steps;
-    result.diverged = diverged || !st.train_loss.is_finite();
+    result.diverged = diverged || !finite;
     result
 }
 
@@ -337,7 +241,7 @@ mod tests {
     }
 
     fn base_cfg(method: Method) -> DriverConfig {
-        let cost = CostModel {
+        let cost = crate::cluster::CostModel {
             t_grad: 1e-3,
             jitter: 0.1,
             t_data: 1e-4,

@@ -1,0 +1,366 @@
+//! The `Executor` abstraction: one distributed-run contract, two
+//! backends.
+//!
+//! A backend takes a family of [`GradOracle`]s (one per worker, index 0
+//! doubling as the evaluator), a [`DriverConfig`], and produces a
+//! [`RunResult`] with the center-variable curve:
+//!
+//! * [`SimExecutor`] — the virtual-time event simulator
+//!   ([`super::driver::run_parallel`]): a min-heap interleaves workers
+//!   by next-event time, communication/data costs come from the
+//!   [`crate::cluster::CostModel`], and runs are bitwise deterministic
+//!   given the seed. This is the figure-sweep substrate.
+//! * [`ThreadExecutor`] — real `std::thread` workers
+//!   ([`super::threaded::run_threaded`]): the center variable lives
+//!   behind a sharded lock and exchanges execute concurrently against
+//!   genuinely stale center reads. Time-valued config fields are *real*
+//!   seconds here; runs are not bit-deterministic (the interleaving is
+//!   the OS scheduler's), but the optimization-level outcomes match the
+//!   simulator (see `tests/executor_equivalence.rs`).
+//!
+//! This module also owns the state shared by both backends: the
+//! [`DriverConfig`], the per-worker [`WorkerState`], the virtual-time
+//! master's [`MasterState`], the master-decoupled local gradient step,
+//! and the evaluation-point recorder.
+
+use super::method::Method;
+use super::oracle::GradOracle;
+use crate::cluster::{CostModel, CurvePoint, RunResult};
+use crate::model::flat;
+use crate::rng::Rng;
+
+/// Driver configuration for one distributed run, shared by every
+/// backend. `horizon` / `eval_every` are *virtual* seconds under
+/// [`SimExecutor`] and *real* (wall-clock) seconds under
+/// [`ThreadExecutor`]; `cost` is only consulted by the simulator.
+#[derive(Clone, Debug)]
+pub struct DriverConfig {
+    pub eta: f32,
+    pub method: Method,
+    pub cost: CostModel,
+    /// Time horizon (virtual seconds for Sim, real seconds for Thread).
+    pub horizon: f64,
+    /// Evaluation cadence (same time base as `horizon`).
+    pub eval_every: f64,
+    pub seed: u64,
+    /// Safety cap on total local steps across workers.
+    pub max_steps: u64,
+    /// Learning-rate decay γ: η_t = η / (1 + γ·t_local)^0.5, driven by
+    /// each worker's own clock (thesis Fig 4.13). 0 disables.
+    pub lr_decay_gamma: f64,
+}
+
+impl DriverConfig {
+    #[inline]
+    pub(crate) fn eta_at(&self, t_local: u64) -> f32 {
+        if self.lr_decay_gamma == 0.0 {
+            self.eta
+        } else {
+            (self.eta as f64 / (1.0 + self.lr_decay_gamma * t_local as f64).sqrt()) as f32
+        }
+    }
+}
+
+/// Per-worker mutable state, identical across backends.
+pub(crate) struct WorkerState {
+    pub theta: Vec<f32>,
+    pub v: Vec<f32>,
+    pub grad: Vec<f32>,
+    pub scratch: Vec<f32>,
+    /// DOWNPOUR accumulated update; ADMM λ.
+    pub aux: Vec<f32>,
+    pub t_local: u64,
+    pub rng: Rng,
+}
+
+impl WorkerState {
+    /// Build the p-worker family: shared init (thesis §4.1), RNG
+    /// streams split off `root` in worker order.
+    pub fn family(init: &[f32], p: usize, root: &mut Rng) -> Vec<WorkerState> {
+        let n = init.len();
+        (0..p)
+            .map(|i| WorkerState {
+                theta: init.to_vec(),
+                v: vec![0.0; n],
+                grad: vec![0.0; n],
+                scratch: vec![0.0; n],
+                aux: vec![0.0; n],
+                t_local: 0,
+                rng: root.split(i as u64),
+            })
+            .collect()
+    }
+}
+
+/// Master-side state of the virtual-time driver (center variable,
+/// averaging sequences, master momentum, ADMM contributions). The
+/// threaded backend keeps the equivalent state sharded behind locks
+/// (`super::threaded::ShardedMaster`).
+pub(crate) struct MasterState {
+    pub center: Vec<f32>,
+    /// Averaged center (ADOWNPOUR / MVADOWNPOUR).
+    pub z: Option<Vec<f32>>,
+    /// Master momentum (MDOWNPOUR).
+    pub mv: Option<Vec<f32>>,
+    /// ADMM: last (xⁱ − λⁱ) contribution per worker.
+    pub contrib: Option<Vec<Vec<f32>>>,
+    /// Master clock (# center updates) for the 1/t averaging rate.
+    pub clock: u64,
+}
+
+impl MasterState {
+    pub fn new(method: Method, init: &[f32], p: usize) -> MasterState {
+        let n = init.len();
+        MasterState {
+            center: init.to_vec(),
+            z: match method {
+                Method::ADownpour { .. } | Method::MvaDownpour { .. } => Some(init.to_vec()),
+                _ => None,
+            },
+            mv: match method {
+                Method::MDownpour { .. } => Some(vec![0.0; n]),
+                _ => None,
+            },
+            contrib: match method {
+                Method::AdmmAsync { .. } => Some(vec![init.to_vec(); p]),
+                _ => None,
+            },
+            clock: 0,
+        }
+    }
+
+    /// The variable the thesis tracks: the averaged center when the
+    /// method defines one, otherwise the center itself.
+    pub fn eval_target(&self) -> &Vec<f32> {
+        self.z.as_ref().unwrap_or(&self.center)
+    }
+}
+
+/// One local gradient step for the master-decoupled methods (EASGD /
+/// EAMSGD local dynamics, and the DOWNPOUR pull-push family's local
+/// accumulation). Returns the batch loss and advances `t_local`.
+///
+/// MDOWNPOUR and async ADMM touch master state *inside* the local step
+/// (master momentum push / prox toward the center) and therefore stay
+/// inline in the virtual-time driver; [`thread_supported`] reports
+/// which methods the threaded backend accepts.
+pub(crate) fn local_step_decoupled<O: GradOracle>(
+    cfg: &DriverConfig,
+    w: &mut WorkerState,
+    oracle: &mut O,
+) -> f32 {
+    let eta_t = cfg.eta_at(w.t_local);
+    let loss = match cfg.method {
+        Method::Eamsgd { delta, .. } => {
+            // g at lookahead x + δv (Alg. 2), then v ← δv − ηg ; x ← x + v.
+            for (s, (t, v)) in w.scratch.iter_mut().zip(w.theta.iter().zip(&w.v)) {
+                *s = t + delta * v;
+            }
+            let loss = oracle.grad(&w.scratch, &mut w.rng, &mut w.grad);
+            flat::nesterov_step(&mut w.theta, &mut w.v, &w.grad, eta_t, delta);
+            loss
+        }
+        Method::MDownpour { .. } | Method::AdmmAsync { .. } => {
+            unreachable!("master-coupled methods take the driver's inline step")
+        }
+        _ => {
+            let loss = oracle.grad(&w.theta, &mut w.rng, &mut w.grad);
+            flat::sgd_step(&mut w.theta, &w.grad, eta_t);
+            if matches!(
+                cfg.method,
+                Method::Downpour { .. } | Method::ADownpour { .. } | Method::MvaDownpour { .. }
+            ) {
+                // Accumulate −ηg for the next push.
+                for (a, g) in w.aux.iter_mut().zip(&w.grad) {
+                    *a -= eta_t * g;
+                }
+            }
+            loss
+        }
+    };
+    w.t_local += 1;
+    loss
+}
+
+/// Evaluate `theta` and append a curve point at `time`; returns false
+/// when the train loss is non-finite (divergence).
+pub(crate) fn eval_point<O: GradOracle>(
+    oracle: &mut O,
+    theta: &[f32],
+    time: f64,
+    curve: &mut Vec<CurvePoint>,
+) -> bool {
+    let st = oracle.eval(theta);
+    curve.push(CurvePoint {
+        time,
+        train_loss: st.train_loss,
+        test_loss: st.test_loss,
+        test_error: st.test_error,
+    });
+    st.train_loss.is_finite()
+}
+
+/// Does the threaded backend implement this method? (MDOWNPOUR and
+/// async ADMM interleave master updates into every local step; they are
+/// defined on the virtual-time backend only.)
+pub fn thread_supported(method: Method) -> bool {
+    !matches!(method, Method::MDownpour { .. } | Method::AdmmAsync { .. })
+}
+
+/// A distributed-run backend.
+///
+/// The `Send` bound on the oracle is what real parallelism needs; the
+/// simulator does not require it when called directly
+/// ([`super::driver::run_parallel`] stays bound-free for the non-`Send`
+/// PJRT oracle).
+pub trait Executor {
+    fn name(&self) -> &'static str;
+    fn run<O: GradOracle + Send>(&self, oracles: &mut [O], cfg: &DriverConfig) -> RunResult;
+}
+
+/// Virtual-time event-driven backend (deterministic; the figure-sweep
+/// substrate).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct SimExecutor;
+
+impl Executor for SimExecutor {
+    fn name(&self) -> &'static str {
+        "sim"
+    }
+
+    fn run<O: GradOracle + Send>(&self, oracles: &mut [O], cfg: &DriverConfig) -> RunResult {
+        super::driver::run_parallel(oracles, cfg)
+    }
+}
+
+/// Real-thread backend: one `std::thread` per worker, sharded-lock
+/// center.
+#[derive(Clone, Copy, Debug)]
+pub struct ThreadExecutor {
+    /// Number of center shards (lock granularity). More shards ⇒ finer
+    /// interleaving and less contention at small τ.
+    pub shards: usize,
+}
+
+impl Default for ThreadExecutor {
+    fn default() -> Self {
+        ThreadExecutor { shards: 16 }
+    }
+}
+
+impl Executor for ThreadExecutor {
+    fn name(&self) -> &'static str {
+        "thread"
+    }
+
+    fn run<O: GradOracle + Send>(&self, oracles: &mut [O], cfg: &DriverConfig) -> RunResult {
+        super::threaded::run_threaded(oracles, cfg, self.shards)
+    }
+}
+
+/// Backend selector for CLI / figure plumbing.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Backend {
+    Sim,
+    Thread,
+}
+
+impl Backend {
+    pub fn parse(s: &str) -> Option<Backend> {
+        match s {
+            "sim" | "virtual" => Some(Backend::Sim),
+            "thread" | "threads" | "threaded" => Some(Backend::Thread),
+            _ => None,
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Backend::Sim => "sim",
+            Backend::Thread => "thread",
+        }
+    }
+}
+
+/// Dispatch a run to the selected backend. Methods the threaded
+/// backend does not implement fall back to the simulator (with a note
+/// on stderr) so method sweeps keep working under `backend=thread` —
+/// but beware that the fallback's curve is on VIRTUAL seconds while the
+/// thread backend's is on real seconds; don't plot the two on one axis.
+pub fn run_with_backend<O: GradOracle + Send>(
+    backend: Backend,
+    oracles: &mut [O],
+    cfg: &DriverConfig,
+) -> RunResult {
+    match backend {
+        Backend::Sim => SimExecutor.run(oracles, cfg),
+        Backend::Thread => {
+            if thread_supported(cfg.method) {
+                ThreadExecutor::default().run(oracles, cfg)
+            } else {
+                eprintln!(
+                    "note: {} is master-coupled; falling back to the sim backend \
+                     (curve times are VIRTUAL seconds, not wall-clock)",
+                    cfg.method.name()
+                );
+                SimExecutor.run(oracles, cfg)
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn backend_parse_roundtrip() {
+        assert_eq!(Backend::parse("sim"), Some(Backend::Sim));
+        assert_eq!(Backend::parse("thread"), Some(Backend::Thread));
+        assert_eq!(Backend::parse("threaded"), Some(Backend::Thread));
+        assert_eq!(Backend::parse("gpu"), None);
+        assert_eq!(Backend::Sim.name(), "sim");
+        assert_eq!(Backend::Thread.name(), "thread");
+    }
+
+    #[test]
+    fn thread_support_matrix() {
+        assert!(thread_supported(Method::easgd_default(4, 4)));
+        assert!(thread_supported(Method::eamsgd_default(4, 4)));
+        assert!(thread_supported(Method::Downpour { tau: 1 }));
+        assert!(thread_supported(Method::ADownpour { tau: 1 }));
+        assert!(thread_supported(Method::MvaDownpour { tau: 1, alpha: 0.001 }));
+        assert!(!thread_supported(Method::MDownpour { delta: 0.9 }));
+        assert!(!thread_supported(Method::AdmmAsync { rho: 1.0, tau: 4 }));
+    }
+
+    #[test]
+    fn eta_decay_schedule() {
+        let cfg = DriverConfig {
+            eta: 0.1,
+            method: Method::easgd_default(4, 4),
+            cost: CostModel::cifar_like(100),
+            horizon: 1.0,
+            eval_every: 1.0,
+            seed: 0,
+            max_steps: 100,
+            lr_decay_gamma: 1.0,
+        };
+        assert!((cfg.eta_at(0) - 0.1).abs() < 1e-9);
+        assert!((cfg.eta_at(3) - 0.05).abs() < 1e-9); // 0.1/√4
+    }
+
+    #[test]
+    fn master_state_allocates_per_method() {
+        let init = vec![1.0f32; 8];
+        let m = MasterState::new(Method::easgd_default(4, 4), &init, 4);
+        assert!(m.z.is_none() && m.mv.is_none() && m.contrib.is_none());
+        assert_eq!(m.eval_target(), &init);
+        let m = MasterState::new(Method::ADownpour { tau: 1 }, &init, 4);
+        assert!(m.z.is_some());
+        let m = MasterState::new(Method::MDownpour { delta: 0.9 }, &init, 4);
+        assert!(m.mv.is_some());
+        let m = MasterState::new(Method::AdmmAsync { rho: 1.0, tau: 4 }, &init, 4);
+        assert_eq!(m.contrib.as_ref().unwrap().len(), 4);
+    }
+}

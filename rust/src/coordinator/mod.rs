@@ -1,13 +1,20 @@
 //! Layer-3 coordinator: the thesis' distributed optimization methods.
 //!
-//! - [`oracle`] — the `GradOracle` abstraction (native MLP for sweeps;
-//!   the PJRT transformer in `runtime` implements the same trait).
+//! - [`oracle`] — the `GradOracle` abstraction (native MLP for sweeps,
+//!   the deterministic quadratic for equivalence tests/benches; the
+//!   PJRT transformer in `runtime` implements the same trait).
 //! - [`method`] — every parallel method the thesis compares:
 //!   EASGD / EAMSGD (Algorithms 1–2), DOWNPOUR (Alg. 3),
 //!   MDOWNPOUR (Algs 4–5), ADOWNPOUR / MVADOWNPOUR, and async ADMM.
-//! - [`driver`] — the asynchronous event-driven run loop over a
-//!   simulated cluster: per-worker virtual clocks, communication
-//!   period τ, jittered compute, Table-4.4 accounting.
+//! - [`executor`] — the `Executor` abstraction: one run contract, two
+//!   backends (`SimExecutor` / `ThreadExecutor`), plus the shared
+//!   config/worker/master state and `Backend` selection.
+//! - [`driver`] — the virtual-time event-driven backend: per-worker
+//!   virtual clocks, communication period τ, jittered compute,
+//!   Table-4.4 accounting. Bitwise deterministic given the seed.
+//! - [`threaded`] — the real-thread backend: one `std::thread` per
+//!   worker, center variable behind a sharded lock, genuinely stale
+//!   concurrent exchanges.
 //! - [`sequential`] — the p = 1 baselines: SGD, MSGD, ASGD, MVASGD.
 //! - [`tree`] — EASGD Tree (Alg. 6): d-ary topology, fully-async
 //!   messaging, the two communication schemes of §6.1.
@@ -15,14 +22,20 @@
 //!   EASGD and DOWNPOUR, with its stability map.
 
 pub mod driver;
+pub mod executor;
 pub mod gauss_seidel;
 pub mod method;
 pub mod oracle;
 pub mod sequential;
+pub mod threaded;
 pub mod tree;
 
 pub use driver::{run_parallel, DriverConfig};
+pub use executor::{
+    run_with_backend, thread_supported, Backend, Executor, SimExecutor, ThreadExecutor,
+};
 pub use method::Method;
-pub use oracle::{EvalStats, GradOracle, MlpOracle};
+pub use oracle::{EvalStats, GradOracle, MlpOracle, QuadraticOracle};
 pub use sequential::{run_sequential, SeqMethod};
+pub use threaded::run_threaded;
 pub use tree::{run_tree, TreeConfig, TreeScheme};

@@ -138,6 +138,72 @@ impl GradOracle for MlpOracle {
     }
 }
 
+/// Deterministic quadratic oracle: f(θ) = mean_i ½·h·(θ_i − b)², with
+/// optional per-coordinate gradient noise g_i = h(θ_i − b) − σ·ξ_i
+/// (the §3.1.1 additive-noise model lifted to n dimensions). Used by
+/// the executor-equivalence tests (both backends must reach the same
+/// loss on it) and the thread-scaling bench, where the gradient cost
+/// must be trivial and tunable via n.
+pub struct QuadraticOracle {
+    n: usize,
+    h: f32,
+    x0: f32,
+    target: f32,
+    noise: f32,
+}
+
+impl QuadraticOracle {
+    pub fn new(n: usize, h: f32, x0: f32, target: f32, noise: f32) -> Self {
+        assert!(n > 0 && h > 0.0);
+        Self { n, h, x0, target, noise }
+    }
+
+    /// p identical oracles (workers share the objective; their noise
+    /// streams come from the driver's per-worker RNGs).
+    pub fn family(n: usize, h: f32, x0: f32, target: f32, noise: f32, p: usize) -> Vec<Self> {
+        (0..p).map(|_| Self::new(n, h, x0, target, noise)).collect()
+    }
+
+    fn loss_of(&self, theta: &[f32]) -> f64 {
+        let mut acc = 0.0f64;
+        for &t in theta {
+            let d = (t - self.target) as f64;
+            acc += 0.5 * self.h as f64 * d * d;
+        }
+        acc / self.n as f64
+    }
+}
+
+impl GradOracle for QuadraticOracle {
+    fn n_params(&self) -> usize {
+        self.n
+    }
+
+    fn init_params(&self) -> Vec<f32> {
+        vec![self.x0; self.n]
+    }
+
+    fn grad(&mut self, theta: &[f32], rng: &mut Rng, out: &mut [f32]) -> f32 {
+        for (o, &t) in out.iter_mut().zip(theta) {
+            let mut g = self.h * (t - self.target);
+            if self.noise > 0.0 {
+                g -= self.noise * rng.gaussian() as f32;
+            }
+            *o = g;
+        }
+        self.loss_of(theta) as f32
+    }
+
+    fn eval(&mut self, theta: &[f32]) -> EvalStats {
+        let loss = self.loss_of(theta);
+        EvalStats {
+            train_loss: loss,
+            test_loss: loss,
+            test_error: loss.min(1.0),
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -184,5 +250,35 @@ mod tests {
         let b = o.eval(&theta);
         assert_eq!(a.train_loss, b.train_loss);
         assert_eq!(a.test_error, b.test_error);
+    }
+
+    #[test]
+    fn quadratic_oracle_gradient_descends_to_target() {
+        let mut o = QuadraticOracle::new(32, 2.0, 0.0, 1.0, 0.0);
+        let mut theta = o.init_params();
+        let mut g = vec![0.0; 32];
+        let mut rng = Rng::new(1);
+        let l0 = o.eval(&theta).train_loss;
+        assert!((l0 - 1.0).abs() < 1e-6, "½·2·1² = 1, got {l0}");
+        for _ in 0..200 {
+            o.grad(&theta, &mut rng, &mut g);
+            crate::model::flat::sgd_step(&mut theta, &g, 0.2);
+        }
+        let l1 = o.eval(&theta).train_loss;
+        assert!(l1 < 1e-10, "loss {l1}");
+        assert!(theta.iter().all(|t| (t - 1.0).abs() < 1e-4));
+    }
+
+    #[test]
+    fn quadratic_oracle_noise_uses_worker_stream() {
+        let mut o = QuadraticOracle::new(8, 1.0, 0.0, 0.0, 0.5);
+        let theta = vec![0.0f32; 8];
+        let mut g1 = vec![0.0f32; 8];
+        let mut g2 = vec![0.0f32; 8];
+        o.grad(&theta, &mut Rng::new(3), &mut g1);
+        o.grad(&theta, &mut Rng::new(3), &mut g2);
+        assert_eq!(g1, g2, "same stream ⇒ same noise");
+        o.grad(&theta, &mut Rng::new(4), &mut g2);
+        assert_ne!(g1, g2, "different stream ⇒ different noise");
     }
 }

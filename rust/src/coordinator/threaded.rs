@@ -1,0 +1,343 @@
+//! Real-parallelism backend: one `std::thread` per worker, the center
+//! variable behind a sharded lock ([`super::executor::ThreadExecutor`]).
+//!
+//! Where the virtual-time driver *models* asynchrony (per-worker
+//! clocks, jittered costs), this backend *is* asynchronous: workers
+//! free-run on OS threads and the elastic/DOWNPOUR exchanges of
+//! [`super::method::Method`] execute concurrently against genuinely
+//! stale center reads. The center is split into contiguous shards, each
+//! behind its own `Mutex`; an exchange locks one shard at a time, so
+//! two workers exchanging simultaneously interleave at shard
+//! granularity — the center a worker assembles is a mixture of
+//! before/after states, exactly the staleness regime the thesis argues
+//! EASGD tolerates (and Jin et al. 2016 argue must be validated on real
+//! concurrent workers).
+//!
+//! Semantics and differences from the simulator:
+//! * `DriverConfig::horizon` / `eval_every` are REAL (wall-clock)
+//!   seconds; `cost` is ignored (real compute is the cost).
+//! * `RunResult::curve` times are real seconds; the breakdown's
+//!   compute/comm columns are measured thread-seconds (data = 0).
+//! * Runs are not bit-deterministic — the OS scheduler picks the
+//!   interleaving — but optimization-level outcomes match the simulator
+//!   (`tests/executor_equivalence.rs`).
+//! * MDOWNPOUR / async ADMM interleave master updates into every local
+//!   step; they remain simulator-only
+//!   ([`super::executor::thread_supported`]).
+//!
+//! Evaluation: the main thread snapshots the (averaged) center at the
+//! eval cadence while workers run, and scores the snapshots with
+//! `oracles[0]` after the workers join — the evaluator never contends
+//! with the workers.
+
+use super::executor::{
+    eval_point, local_step_decoupled, thread_supported, DriverConfig, WorkerState,
+};
+use super::method::Method;
+use super::oracle::GradOracle;
+use crate::cluster::{RunResult, TimeBreakdown};
+use crate::model::flat;
+use crate::rng::Rng;
+use std::ops::Range;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::Mutex;
+use std::time::{Duration, Instant};
+
+/// One lock-protected slice of master state.
+struct Shard {
+    center: Vec<f32>,
+    /// Averaged center (ADOWNPOUR / MVADOWNPOUR), this shard's slice.
+    z: Option<Vec<f32>>,
+    /// Center updates applied to this shard (drives the 1/t rate).
+    clock: u64,
+}
+
+/// The center variable behind a sharded lock. Workers lock one shard
+/// at a time in index order; the snapshot path does the same, so there
+/// is a single global lock order and no deadlock.
+struct ShardedMaster {
+    shards: Vec<Mutex<Shard>>,
+    bounds: Vec<Range<usize>>,
+}
+
+impl ShardedMaster {
+    fn new(init: &[f32], n_shards: usize, averaged: bool) -> ShardedMaster {
+        let n = init.len();
+        let s = n_shards.clamp(1, n.max(1));
+        let bounds: Vec<Range<usize>> =
+            (0..s).map(|i| (i * n / s)..((i + 1) * n / s)).collect();
+        let shards = bounds
+            .iter()
+            .map(|r| {
+                Mutex::new(Shard {
+                    center: init[r.clone()].to_vec(),
+                    z: if averaged { Some(init[r.clone()].to_vec()) } else { None },
+                    clock: 0,
+                })
+            })
+            .collect();
+        ShardedMaster { shards, bounds }
+    }
+
+    /// Copy out the evaluation target (averaged center when defined).
+    fn snapshot(&self) -> Vec<f32> {
+        let n = self.bounds.last().map(|r| r.end).unwrap_or(0);
+        let mut out = Vec::with_capacity(n);
+        for sh in &self.shards {
+            let sh = sh.lock().unwrap();
+            out.extend_from_slice(sh.z.as_deref().unwrap_or(&sh.center));
+        }
+        out
+    }
+}
+
+/// Cross-thread run state (borrowed by every worker).
+struct Shared<'a> {
+    master: &'a ShardedMaster,
+    stop: AtomicBool,
+    steps: AtomicU64,
+    diverged: AtomicBool,
+    compute_ns: AtomicU64,
+    comm_ns: AtomicU64,
+}
+
+/// One communication round: walk the shards in order, performing the
+/// method's exchange on each slice under that shard's lock.
+fn exchange(cfg: &DriverConfig, w: &mut WorkerState, master: &ShardedMaster) {
+    match cfg.method {
+        Method::Easgd { alpha, .. } | Method::Eamsgd { alpha, .. } => {
+            for (sh, r) in master.shards.iter().zip(&master.bounds) {
+                let mut sh = sh.lock().unwrap();
+                flat::elastic_exchange(&mut w.theta[r.clone()], &mut sh.center, alpha);
+                sh.clock += 1;
+            }
+        }
+        Method::Downpour { .. } | Method::ADownpour { .. } | Method::MvaDownpour { .. } => {
+            for (sh, r) in master.shards.iter().zip(&master.bounds) {
+                let mut guard = sh.lock().unwrap();
+                let sh = &mut *guard;
+                // Alg. 3 on this slice: push accumulated update, pull.
+                flat::accumulate(&mut sh.center, &w.aux[r.clone()]);
+                w.theta[r.clone()].copy_from_slice(&sh.center);
+                w.aux[r.clone()].iter_mut().for_each(|a| *a = 0.0);
+                sh.clock += 1;
+                match cfg.method {
+                    Method::ADownpour { .. } => {
+                        let a = 1.0 / (sh.clock as f32);
+                        flat::moving_average(sh.z.as_mut().unwrap(), &sh.center, a);
+                    }
+                    Method::MvaDownpour { alpha, .. } => {
+                        flat::moving_average(sh.z.as_mut().unwrap(), &sh.center, alpha);
+                    }
+                    _ => {}
+                }
+            }
+        }
+        Method::MDownpour { .. } | Method::AdmmAsync { .. } => {
+            unreachable!("thread_supported() gates master-coupled methods")
+        }
+    }
+}
+
+fn worker_loop<O: GradOracle>(
+    cfg: &DriverConfig,
+    w: &mut WorkerState,
+    oracle: &mut O,
+    sh: &Shared<'_>,
+) {
+    let tau = cfg.method.tau().max(1) as u64;
+    loop {
+        if sh.stop.load(Ordering::Relaxed) {
+            break;
+        }
+        // Claim one step of the global budget.
+        let k = sh.steps.fetch_add(1, Ordering::Relaxed);
+        if k >= cfg.max_steps {
+            sh.steps.fetch_sub(1, Ordering::Relaxed);
+            sh.stop.store(true, Ordering::Relaxed);
+            break;
+        }
+        if w.t_local % tau == 0 {
+            let t0 = Instant::now();
+            exchange(cfg, w, sh.master);
+            sh.comm_ns
+                .fetch_add(t0.elapsed().as_nanos() as u64, Ordering::Relaxed);
+        }
+        let t0 = Instant::now();
+        let loss = local_step_decoupled(cfg, w, oracle);
+        sh.compute_ns
+            .fetch_add(t0.elapsed().as_nanos() as u64, Ordering::Relaxed);
+        if !loss.is_finite() || flat::norm2(&w.theta) > 1e8 {
+            sh.diverged.store(true, Ordering::Relaxed);
+            sh.stop.store(true, Ordering::Relaxed);
+            break;
+        }
+    }
+}
+
+/// Run one distributed experiment on real threads. `oracles[i]` is
+/// worker i's gradient computer; `oracles[0]` doubles as the (post-run)
+/// evaluator. `n_shards` is the center lock granularity.
+pub fn run_threaded<O: GradOracle + Send>(
+    oracles: &mut [O],
+    cfg: &DriverConfig,
+    n_shards: usize,
+) -> RunResult {
+    let p = oracles.len();
+    assert!(p >= 1);
+    assert!(
+        thread_supported(cfg.method),
+        "{} is master-coupled; use the sim backend",
+        cfg.method.name()
+    );
+    let init = oracles[0].init_params();
+    let averaged = matches!(
+        cfg.method,
+        Method::ADownpour { .. } | Method::MvaDownpour { .. }
+    );
+    let master = ShardedMaster::new(&init, n_shards, averaged);
+    let mut root_rng = Rng::new(cfg.seed);
+    let mut workers = WorkerState::family(&init, p, &mut root_rng);
+
+    let shared = Shared {
+        master: &master,
+        stop: AtomicBool::new(false),
+        steps: AtomicU64::new(0),
+        diverged: AtomicBool::new(false),
+        compute_ns: AtomicU64::new(0),
+        comm_ns: AtomicU64::new(0),
+    };
+
+    // (real seconds, eval-target snapshot) pairs, scored after the join.
+    let mut snaps: Vec<(f64, Vec<f32>)> = Vec::new();
+    let t0 = Instant::now();
+    std::thread::scope(|s| {
+        let handles: Vec<_> = workers
+            .iter_mut()
+            .zip(oracles.iter_mut())
+            .map(|(w, o)| {
+                let shared = &shared;
+                s.spawn(move || worker_loop(cfg, w, o, shared))
+            })
+            .collect();
+        let cadence = cfg.eval_every.max(1e-3);
+        let mut next_eval = 0.0f64;
+        loop {
+            let el = t0.elapsed().as_secs_f64();
+            if el >= next_eval {
+                snaps.push((el, shared.master.snapshot()));
+                next_eval += cadence;
+            }
+            if el > cfg.horizon {
+                shared.stop.store(true, Ordering::Relaxed);
+            }
+            if handles.iter().all(|h| h.is_finished()) {
+                break;
+            }
+            std::thread::sleep(Duration::from_micros(200));
+        }
+        // Scope joins on exit; propagate worker panics eagerly.
+        for h in handles {
+            if let Err(e) = h.join() {
+                std::panic::resume_unwind(e);
+            }
+        }
+    });
+    snaps.push((t0.elapsed().as_secs_f64(), master.snapshot()));
+
+    let mut result = RunResult::default();
+    let mut diverged = shared.diverged.load(Ordering::Relaxed);
+    for (t, theta) in &snaps {
+        if !eval_point(&mut oracles[0], theta, *t, &mut result.curve) {
+            diverged = true;
+        }
+    }
+    result.total_steps = shared.steps.load(Ordering::Relaxed);
+    result.breakdown = TimeBreakdown {
+        compute: shared.compute_ns.load(Ordering::Relaxed) as f64 * 1e-9,
+        data: 0.0,
+        comm: shared.comm_ns.load(Ordering::Relaxed) as f64 * 1e-9,
+    };
+    result.diverged = diverged;
+    result
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::oracle::{MlpOracle, QuadraticOracle};
+    use crate::data::BlobDataset;
+    use crate::model::MlpConfig;
+    use std::sync::Arc;
+
+    fn cfg(method: Method, max_steps: u64) -> DriverConfig {
+        DriverConfig {
+            eta: 0.1,
+            method,
+            cost: crate::cluster::CostModel::cifar_like(100),
+            horizon: 30.0, // real-seconds safety net; steps bound first
+            eval_every: 1e6,
+            seed: 7,
+            max_steps,
+            lr_decay_gamma: 0.0,
+        }
+    }
+
+    #[test]
+    fn threaded_easgd_reduces_mlp_loss() {
+        let data = Arc::new(BlobDataset::generate(8, 4, 1024, 256, 0.8, 1));
+        let mcfg = MlpConfig::new(&[8, 16, 4], 1e-4);
+        let mut oracles = MlpOracle::family(data, &mcfg, 32, 4);
+        let r = run_threaded(&mut oracles, &cfg(Method::easgd_default(4, 4), 2000), 8);
+        assert!(!r.diverged);
+        assert_eq!(r.total_steps, 2000);
+        let first = r.curve.first().unwrap().train_loss;
+        let last = r.curve.last().unwrap().train_loss;
+        assert!(last < first - 0.2, "{first} -> {last}");
+    }
+
+    #[test]
+    fn threaded_respects_step_budget_and_counts() {
+        let mut oracles = QuadraticOracle::family(64, 1.0, 0.0, 1.0, 0.0, 3);
+        let r = run_threaded(&mut oracles, &cfg(Method::easgd_default(3, 2), 500), 4);
+        assert_eq!(r.total_steps, 500);
+        assert!(!r.diverged);
+        assert!(r.curve.len() >= 2); // initial + final snapshot
+        assert!(r.breakdown.compute > 0.0);
+    }
+
+    #[test]
+    fn threaded_downpour_family_runs() {
+        for method in [
+            Method::Downpour { tau: 4 },
+            Method::ADownpour { tau: 4 },
+            Method::MvaDownpour { tau: 4, alpha: 0.01 },
+        ] {
+            let mut oracles = QuadraticOracle::family(64, 1.0, 0.0, 1.0, 0.0, 2);
+            let mut c = cfg(method, 2000);
+            c.eta = 0.05;
+            let r = run_threaded(&mut oracles, &c, 4);
+            assert!(!r.diverged, "{}", method.name());
+            let last = r.curve.last().unwrap().train_loss;
+            assert!(last < 0.1, "{}: final loss {last}", method.name());
+        }
+    }
+
+    #[test]
+    fn single_worker_single_shard_degenerate_cases() {
+        let mut oracles = QuadraticOracle::family(7, 2.0, 0.0, 1.0, 0.0, 1);
+        let mut c = cfg(Method::easgd_default(1, 1), 800);
+        c.eta = 0.1;
+        let r = run_threaded(&mut oracles, &c, 1);
+        assert!(!r.diverged);
+        assert!(r.curve.last().unwrap().train_loss < 1e-3);
+    }
+
+    #[test]
+    #[should_panic(expected = "master-coupled")]
+    fn master_coupled_methods_panic() {
+        let mut oracles = QuadraticOracle::family(8, 1.0, 0.0, 1.0, 0.0, 2);
+        let c = cfg(Method::MDownpour { delta: 0.9 }, 10);
+        let _ = run_threaded(&mut oracles, &c, 4);
+    }
+}

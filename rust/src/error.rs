@@ -1,0 +1,110 @@
+//! Minimal error-handling substrate (the offline crate set has no
+//! `anyhow` — DESIGN.md §2): a string-backed [`Error`], a [`Result`]
+//! alias, the [`Context`] extension trait, and the crate-level `err!` /
+//! `bail!` macros.
+//!
+//! [`Error`] deliberately does NOT implement `std::error::Error`: that
+//! is what lets the blanket `From` below absorb every std error type
+//! through `?` without colliding with the reflexive `From<T> for T`
+//! impl (the same trick `anyhow` uses).
+
+use std::fmt;
+
+/// A string-backed error with the context chain folded into the
+/// message.
+pub struct Error {
+    msg: String,
+}
+
+impl Error {
+    /// Construct from anything stringly.
+    pub fn msg(m: impl Into<String>) -> Error {
+        Error { msg: m.into() }
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+impl<E: std::error::Error> From<E> for Error {
+    fn from(e: E) -> Error {
+        Error::msg(e.to_string())
+    }
+}
+
+/// Crate-wide result alias.
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// `.context(..)` / `.with_context(..)` on any result whose error
+/// displays — prepends the context to the message.
+pub trait Context<T> {
+    fn context(self, msg: &str) -> Result<T>;
+    fn with_context<F: FnOnce() -> String>(self, f: F) -> Result<T>;
+}
+
+impl<T, E: fmt::Display> Context<T> for std::result::Result<T, E> {
+    fn context(self, msg: &str) -> Result<T> {
+        self.map_err(|e| Error::msg(format!("{msg}: {e}")))
+    }
+
+    fn with_context<F: FnOnce() -> String>(self, f: F) -> Result<T> {
+        self.map_err(|e| Error::msg(format!("{}: {e}", f())))
+    }
+}
+
+/// Ad-hoc error constructor with `format!` syntax (anyhow's `anyhow!`).
+#[macro_export]
+macro_rules! err {
+    ($($t:tt)*) => { $crate::error::Error::msg(format!($($t)*)) };
+}
+
+/// Early-return with an ad-hoc error (anyhow's `bail!`).
+#[macro_export]
+macro_rules! bail {
+    ($($t:tt)*) => { return Err($crate::err!($($t)*)) };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn io_fail() -> Result<String> {
+        let s = std::fs::read_to_string("/nonexistent/elastic_train_test")?;
+        Ok(s)
+    }
+
+    #[test]
+    fn question_mark_absorbs_std_errors() {
+        let e = io_fail().unwrap_err();
+        assert!(!format!("{e}").is_empty());
+    }
+
+    #[test]
+    fn context_prepends() {
+        let r: std::result::Result<(), std::fmt::Error> = Err(std::fmt::Error);
+        let e = r.with_context(|| "doing the thing".to_string()).unwrap_err();
+        assert!(format!("{e}").starts_with("doing the thing: "));
+        let r2: std::result::Result<(), std::fmt::Error> = Err(std::fmt::Error);
+        let e2 = r2.context("ctx").unwrap_err();
+        assert!(format!("{e2:#}").starts_with("ctx: "));
+    }
+
+    #[test]
+    fn macros_format() {
+        let e = err!("bad value {}", 42);
+        assert_eq!(format!("{e}"), "bad value 42");
+        fn f() -> Result<()> {
+            bail!("nope: {}", "reason")
+        }
+        assert_eq!(format!("{}", f().unwrap_err()), "nope: reason");
+    }
+}

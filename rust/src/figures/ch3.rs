@@ -4,7 +4,7 @@ use super::csv::Csv;
 use super::FigOpts;
 use crate::csv_row;
 use crate::sim::{admm, moments};
-use anyhow::Result;
+use crate::error::Result;
 
 /// Fig 3.1 — theoretical MSE of the center variable over (η, β) grids
 /// for p ∈ {1, 10, 100, 1000, 10000} and t ∈ {1, 2, 10, 100, ∞}.
@@ -153,6 +153,7 @@ mod tests {
                 .into_owned(),
             full: false,
             seed: 0,
+            backend: crate::coordinator::Backend::Sim,
         }
     }
 

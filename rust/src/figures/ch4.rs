@@ -7,12 +7,12 @@ use super::csv::Csv;
 use super::FigOpts;
 use crate::cluster::{CostModel, RunResult};
 use crate::coordinator::{
-    run_parallel, run_sequential, DriverConfig, Method, MlpOracle, SeqMethod,
+    run_sequential, run_with_backend, Backend, DriverConfig, Method, MlpOracle, SeqMethod,
 };
 use crate::csv_row;
 use crate::data::BlobDataset;
 use crate::model::MlpConfig;
-use anyhow::Result;
+use crate::error::Result;
 use std::sync::Arc;
 
 pub fn sweep_data(seed: u64) -> Arc<BlobDataset> {
@@ -29,6 +29,9 @@ pub struct Sweep {
     pub horizon: f64,
     pub eval_every: f64,
     pub seed: u64,
+    /// Executor backend every parallel run in this sweep goes through
+    /// (sim = virtual time; thread = real workers, real seconds).
+    pub backend: Backend,
 }
 
 impl Sweep {
@@ -39,6 +42,7 @@ impl Sweep {
             horizon: if opts.full { 240.0 } else { 45.0 },
             eval_every: if opts.full { 5.0 } else { 2.5 },
             seed: opts.seed,
+            backend: opts.backend,
         }
     }
 
@@ -72,7 +76,7 @@ impl Sweep {
             max_steps: 40_000_000,
             lr_decay_gamma: gamma,
         };
-        run_parallel(&mut oracles, &cfg)
+        run_with_backend(self.backend, &mut oracles, &cfg)
     }
 
     pub fn run_seq(&self, m: SeqMethod, eta: f32, family: &str) -> RunResult {
@@ -524,6 +528,7 @@ mod tests {
                 .into_owned(),
             full: false,
             seed: 0,
+            backend: Backend::Sim,
         };
         tab4_1(&opts).unwrap();
     }

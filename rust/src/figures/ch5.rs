@@ -6,7 +6,7 @@ use super::FigOpts;
 use crate::csv_row;
 use crate::rng::Rng;
 use crate::sim::{moments, multiplicative, quadratic};
-use anyhow::Result;
+use crate::error::Result;
 
 fn grid(opts: &FigOpts) -> usize {
     if opts.full { 120 } else { 48 }
@@ -467,6 +467,7 @@ mod tests {
                 .into_owned(),
             full: false,
             seed: 0,
+            backend: crate::coordinator::Backend::Sim,
         }
     }
 

@@ -8,7 +8,7 @@ use crate::coordinator::{
     gauss_seidel, run_tree, Method, MlpOracle, TreeConfig, TreeScheme,
 };
 use crate::csv_row;
-use anyhow::Result;
+use crate::error::Result;
 
 fn tree_dims(opts: &FigOpts) -> (usize, usize) {
     if opts.full {
@@ -206,6 +206,7 @@ mod tests {
                 .into_owned(),
             full: false,
             seed: 0,
+            backend: crate::coordinator::Backend::Sim,
         };
         fig6_gs(&opts).unwrap();
     }

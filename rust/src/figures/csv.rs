@@ -1,6 +1,6 @@
 //! Tiny CSV writer for the figure outputs.
 
-use anyhow::Result;
+use crate::error::Result;
 use std::io::Write;
 use std::path::Path;
 

@@ -16,8 +16,10 @@ pub mod ch5;
 pub mod ch6;
 pub mod csv;
 
+use crate::bail;
 use crate::config::Args;
-use anyhow::{bail, Result};
+use crate::coordinator::Backend;
+use crate::error::Result;
 
 /// Global options every figure generator receives.
 #[derive(Clone, Debug)]
@@ -26,14 +28,23 @@ pub struct FigOpts {
     /// Thesis-scale grids/horizons instead of the quick defaults.
     pub full: bool,
     pub seed: u64,
+    /// Executor backend for the parallel-run figures (`backend=sim`
+    /// keeps virtual time; `backend=thread` runs real workers, with
+    /// horizons read as wall-clock seconds).
+    pub backend: Backend,
 }
 
 impl FigOpts {
+    /// Panics on an unknown `backend=` value — a figure silently run on
+    /// the wrong executor is worse than a refused invocation.
     pub fn from_args(args: &Args) -> FigOpts {
+        let backend_str = args.get_str("backend", "sim");
         FigOpts {
             out_dir: args.get_str("out-dir", "out").to_string(),
             full: args.get_bool("full", false),
             seed: args.get_u64("seed", 0),
+            backend: Backend::parse(backend_str)
+                .unwrap_or_else(|| panic!("unknown backend '{backend_str}' (sim|thread)")),
         }
     }
 }
@@ -108,6 +119,7 @@ mod tests {
                 .into_owned(),
             full: false,
             seed: 0,
+            backend: Backend::Sim,
         };
         // A fast, pure-math subset end-to-end:
         for id in ["fig5.9", "fig5.20", "fig5.13"] {

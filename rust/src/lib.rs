@@ -7,10 +7,12 @@
 //! Layer 3 of the three-layer stack: the distributed-training
 //! coordinator. The JAX/Pallas layers (L2 model, L1 kernels) are
 //! AOT-lowered to HLO text at build time (`make artifacts`) and executed
-//! here through the PJRT C API (the `xla` crate); Python is never on the
-//! training path.
+//! here through the PJRT C API (the `xla` crate, behind the off-by-default
+//! `pjrt` feature); Python is never on the training path.
 //!
 //! Module map (see DESIGN.md for the full inventory):
+//! - [`error`] — string-backed error substrate (`Result`, `err!`,
+//!   `bail!`, `Context`; the offline crate set has no anyhow).
 //! - [`rng`], [`linalg`] — numeric substrates (deterministic RNG,
 //!   dense eigenvalues for the stability figures).
 //! - [`sim`] — the thesis' analysis chapters as executable models
@@ -20,16 +22,23 @@
 //!   links, compute/data/comm accounting, Table 4.4 semantics).
 //! - [`model`], [`data`] — flat parameter buffers + fused native update
 //!   ops; synthetic corpora and the §4.1 prefetch pipeline.
-//! - [`coordinator`] — EASGD/EAMSGD, DOWNPOUR and friends, sequential
-//!   baselines, round-robin ADMM, and the EASGD **Tree**.
-//! - [`runtime`] — PJRT artifact loading and execution.
-//! - [`config`] — the TOML config system; [`figures`] — one generator
-//!   per thesis table/figure.
+//! - [`coordinator`] — EASGD/EAMSGD, DOWNPOUR and friends behind the
+//!   [`coordinator::Executor`] abstraction with two backends
+//!   (virtual-time [`coordinator::SimExecutor`], real-thread
+//!   [`coordinator::ThreadExecutor`] with a sharded-lock center);
+//!   sequential baselines, round-robin ADMM, and the EASGD **Tree**.
+//! - [`runtime`] — PJRT artifact loading (always) and execution
+//!   (`pjrt` feature; the in-tree `vendor/xla` stub keeps it compiling
+//!   offline).
+//! - [`config`] — the key=value config system; [`figures`] — one
+//!   generator per thesis table/figure, backend-selectable via
+//!   `backend=sim|thread`.
 
 pub mod cluster;
 pub mod config;
 pub mod coordinator;
 pub mod data;
+pub mod error;
 pub mod figures;
 pub mod linalg;
 pub mod model;

@@ -12,12 +12,16 @@
 //!   repro inspect
 //!       Print the artifacts manifest summary.
 
-use anyhow::{bail, Result};
-use elastic_train::cluster::CostModel;
+use elastic_train::bail;
 use elastic_train::config::{Args, ExperimentConfig};
-use elastic_train::coordinator::{run_parallel, run_sequential, DriverConfig, MlpOracle};
+use elastic_train::coordinator::{run_sequential, run_with_backend, Backend, DriverConfig, MlpOracle};
+use elastic_train::error::Result;
 use elastic_train::figures::{self, FigOpts};
+#[cfg(feature = "pjrt")]
+use elastic_train::cluster::CostModel;
+#[cfg(feature = "pjrt")]
 use elastic_train::runtime::{PjrtModel, PjrtOracle};
+#[cfg(feature = "pjrt")]
 use std::rc::Rc;
 
 fn main() {
@@ -37,7 +41,8 @@ fn run() -> Result<()> {
         _ => {
             eprintln!(
                 "usage: repro <figure|train|train-pjrt|inspect> [key=value ...]\n\
-                 figures: repro figure list"
+                 figures: repro figure list\n\
+                 backend: train/figure accept backend=sim|thread"
             );
             Ok(())
         }
@@ -67,15 +72,22 @@ fn cmd_train(args: &Args) -> Result<()> {
     let mcfg = elastic_train::figures::ch4::sweep_mlp();
     let cost = cfg.cost_model(mcfg.n_params());
 
+    let backend_str = args.get_str("backend", "sim");
+    let backend = match Backend::parse(backend_str) {
+        Some(b) => b,
+        None => bail!("unknown backend '{backend_str}' (sim|thread)"),
+    };
+
     if let Some(m) = cfg.parallel_method() {
         println!(
-            "train: {} p={} τ={} η={} horizon={}s ({} cost model)",
+            "train: {} p={} τ={} η={} horizon={}s ({} cost model, {} backend)",
             m.name(),
             cfg.p,
             cfg.tau,
             cfg.eta,
             cfg.horizon,
-            cfg.cost_family
+            cfg.cost_family,
+            backend.name()
         );
         let mut oracles = MlpOracle::family(data, &mcfg, cfg.batch, cfg.p);
         let dc = DriverConfig {
@@ -92,7 +104,7 @@ fn cmd_train(args: &Args) -> Result<()> {
                 .and_then(|s| s.parse().ok())
                 .unwrap_or(0.0),
         };
-        let r = run_parallel(&mut oracles, &dc);
+        let r = run_with_backend(backend, &mut oracles, &dc);
         print_curve(&r);
     } else if let Some(m) = cfg.sequential_method() {
         println!(
@@ -112,6 +124,15 @@ fn cmd_train(args: &Args) -> Result<()> {
     Ok(())
 }
 
+#[cfg(not(feature = "pjrt"))]
+fn cmd_train_pjrt(_args: &Args) -> Result<()> {
+    bail!(
+        "this binary was built without the `pjrt` feature; \
+         rebuild with `cargo build --features pjrt` (see rust/README.md)"
+    )
+}
+
+#[cfg(feature = "pjrt")]
 fn cmd_train_pjrt(args: &Args) -> Result<()> {
     let p = args.get_usize("p", 2);
     let steps = args.get_u64("steps", 200);
@@ -151,7 +172,7 @@ fn cmd_train_pjrt(args: &Args) -> Result<()> {
         max_steps: steps,
         lr_decay_gamma: 0.0,
     };
-    let r = run_parallel(&mut oracles, &dc);
+    let r = elastic_train::coordinator::run_parallel(&mut oracles, &dc);
     print_curve(&r);
     Ok(())
 }

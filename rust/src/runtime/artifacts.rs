@@ -5,7 +5,8 @@
 //! reassigns ids (see /opt/xla-example/README.md and DESIGN.md).
 
 use crate::config::Json;
-use anyhow::{anyhow, bail, Context, Result};
+use crate::error::{Context, Result};
+use crate::{bail, err};
 use std::path::{Path, PathBuf};
 
 /// One entry of the parameter table (the contract with
@@ -48,12 +49,12 @@ impl Artifacts {
         let manifest_path = dir.join("manifest.json");
         let text = std::fs::read_to_string(&manifest_path)
             .with_context(|| format!("reading {manifest_path:?} — run `make artifacts`"))?;
-        let j = Json::parse(&text).map_err(|e| anyhow!("manifest parse: {e}"))?;
+        let j = Json::parse(&text).map_err(|e| err!("manifest parse: {e}"))?;
 
         let n_params = j
             .get("preset_params")
             .and_then(Json::as_usize)
-            .ok_or_else(|| anyhow!("manifest missing preset_params"))?;
+            .ok_or_else(|| err!("manifest missing preset_params"))?;
         let preset = j
             .get("preset")
             .and_then(Json::as_str)
@@ -65,18 +66,18 @@ impl Artifacts {
         for e in j
             .get("params")
             .and_then(Json::as_arr)
-            .ok_or_else(|| anyhow!("manifest missing params"))?
+            .ok_or_else(|| err!("manifest missing params"))?
         {
             let entry = ParamEntry {
                 name: e
                     .get("name")
                     .and_then(Json::as_str)
-                    .ok_or_else(|| anyhow!("param missing name"))?
+                    .ok_or_else(|| err!("param missing name"))?
                     .to_string(),
                 shape: e
                     .get("shape")
                     .and_then(Json::as_arr)
-                    .ok_or_else(|| anyhow!("param missing shape"))?
+                    .ok_or_else(|| err!("param missing shape"))?
                     .iter()
                     .map(|d| d.as_usize().unwrap_or(0))
                     .collect(),
@@ -98,11 +99,11 @@ impl Artifacts {
 
         let cfg = j
             .get("config")
-            .ok_or_else(|| anyhow!("manifest missing config"))?;
+            .ok_or_else(|| err!("manifest missing config"))?;
         let dim = |k: &str| -> Result<usize> {
             cfg.get(k)
                 .and_then(Json::as_usize)
-                .ok_or_else(|| anyhow!("config missing {k}"))
+                .ok_or_else(|| err!("config missing {k}"))
         };
         let dims = ModelDims {
             vocab: dim("vocab")?,
@@ -136,6 +137,7 @@ impl Artifacts {
     }
 
     /// Load + compile one HLO text artifact on the given client.
+    #[cfg(feature = "pjrt")]
     pub fn compile(
         &self,
         client: &xla::PjRtClient,
@@ -144,13 +146,13 @@ impl Artifacts {
         let path = self.dir.join(format!("{name}.hlo.txt"));
         let path_str = path
             .to_str()
-            .ok_or_else(|| anyhow!("non-utf8 path {path:?}"))?;
+            .ok_or_else(|| err!("non-utf8 path {path:?}"))?;
         let proto = xla::HloModuleProto::from_text_file(path_str)
-            .map_err(|e| anyhow!("parsing {path_str}: {e:?}"))?;
+            .map_err(|e| err!("parsing {path_str}: {e:?}"))?;
         let comp = xla::XlaComputation::from_proto(&proto);
         client
             .compile(&comp)
-            .map_err(|e| anyhow!("compiling {name}: {e:?}"))
+            .map_err(|e| err!("compiling {name}: {e:?}"))
     }
 }
 

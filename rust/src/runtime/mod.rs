@@ -1,19 +1,29 @@
 //! PJRT runtime: load the AOT artifacts (`make artifacts`) and execute
 //! them from the rust hot path. Python never runs here.
 //!
-//! - [`artifacts`] — manifest parsing, parameter table, HLO loading and
-//!   compilation (`PjRtClient::cpu()` → `HloModuleProto::from_text_file`
-//!   → `compile`), shared initial parameters.
-//! - [`session`] — `PjrtModel`: flat-buffer ⇄ literal packing and the
-//!   `train_step` / `eval_step` / update-kernel execution paths.
-//! - [`pjrt_oracle`] — `PjrtOracle`, the `GradOracle` implementation
-//!   that plugs the AOT transformer into the same EASGD/DOWNPOUR/Tree
-//!   drivers the sweeps use.
+//! - [`artifacts`] — manifest parsing, parameter table, shared initial
+//!   parameters (always available), plus HLO loading and compilation
+//!   (`PjRtClient::cpu()` → `HloModuleProto::from_text_file` →
+//!   `compile`) under the `pjrt` feature.
+//! - [`session`] (`pjrt`) — `PjrtModel`: flat-buffer ⇄ literal packing
+//!   and the `train_step` / `eval_step` / update-kernel execution paths.
+//! - [`pjrt_oracle`] (`pjrt`) — `PjrtOracle`, the `GradOracle`
+//!   implementation that plugs the AOT transformer into the same
+//!   EASGD/DOWNPOUR/Tree drivers the sweeps use.
+//!
+//! The `pjrt` feature is off by default so the tier-1 build has zero
+//! external dependencies; the vendored `xla` stub keeps
+//! `--features pjrt` compiling offline (every call errors at runtime
+//! until the real crate is swapped in — see rust/README.md).
 
 pub mod artifacts;
+#[cfg(feature = "pjrt")]
 pub mod pjrt_oracle;
+#[cfg(feature = "pjrt")]
 pub mod session;
 
 pub use artifacts::Artifacts;
+#[cfg(feature = "pjrt")]
 pub use pjrt_oracle::PjrtOracle;
+#[cfg(feature = "pjrt")]
 pub use session::PjrtModel;

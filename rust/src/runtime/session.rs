@@ -5,7 +5,8 @@
 //! and is packed into shaped literals only at execution time.
 
 use super::artifacts::Artifacts;
-use anyhow::{anyhow, Result};
+use crate::err;
+use crate::error::Result;
 use std::path::Path;
 
 /// Compiled model + kernels.
@@ -29,7 +30,7 @@ pub struct EvalOut {
 impl PjrtModel {
     pub fn load(dir: &Path) -> Result<PjrtModel> {
         let artifacts = Artifacts::load(dir)?;
-        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("pjrt cpu: {e:?}"))?;
+        let client = xla::PjRtClient::cpu().map_err(|e| err!("pjrt cpu: {e:?}"))?;
         let train_step = artifacts.compile(&client, "train_step")?;
         let eval_step = artifacts.compile(&client, "eval_step")?;
         let sgd_step = artifacts.compile(&client, "sgd_step")?;
@@ -58,7 +59,7 @@ impl PjrtModel {
                 let dims: Vec<i64> = p.shape.iter().map(|&d| d as i64).collect();
                 xla::Literal::vec1(sl)
                     .reshape(&dims)
-                    .map_err(|e| anyhow!("reshape {}: {e:?}", p.name))
+                    .map_err(|e| err!("reshape {}: {e:?}", p.name))
             })
             .collect()
     }
@@ -68,7 +69,7 @@ impl PjrtModel {
         assert_eq!(toks.len(), d.batch * d.seq_len);
         xla::Literal::vec1(toks)
             .reshape(&[d.batch as i64, d.seq_len as i64])
-            .map_err(|e| anyhow!("token reshape: {e:?}"))
+            .map_err(|e| err!("token reshape: {e:?}"))
     }
 
     /// Execute train_step: writes the mean-batch gradient into
@@ -87,12 +88,12 @@ impl PjrtModel {
         let result = self
             .train_step
             .execute::<xla::Literal>(&inputs)
-            .map_err(|e| anyhow!("train_step exec: {e:?}"))?[0][0]
+            .map_err(|e| err!("train_step exec: {e:?}"))?[0][0]
             .to_literal_sync()
-            .map_err(|e| anyhow!("to_literal: {e:?}"))?;
-        let parts = result.to_tuple().map_err(|e| anyhow!("tuple: {e:?}"))?;
+            .map_err(|e| err!("to_literal: {e:?}"))?;
+        let parts = result.to_tuple().map_err(|e| err!("tuple: {e:?}"))?;
         if parts.len() != 1 + self.artifacts.params.len() {
-            return Err(anyhow!(
+            return Err(err!(
                 "train_step returned {} parts, expected {}",
                 parts.len(),
                 1 + self.artifacts.params.len()
@@ -100,11 +101,11 @@ impl PjrtModel {
         }
         let loss = parts[0]
             .get_first_element::<f32>()
-            .map_err(|e| anyhow!("loss: {e:?}"))?;
+            .map_err(|e| err!("loss: {e:?}"))?;
         for (p, lit) in self.artifacts.params.iter().zip(&parts[1..]) {
             let v = lit
                 .to_vec::<f32>()
-                .map_err(|e| anyhow!("grad {}: {e:?}", p.name))?;
+                .map_err(|e| err!("grad {}: {e:?}", p.name))?;
             grad_out[p.offset..p.offset + p.size].copy_from_slice(&v);
         }
         Ok(loss)
@@ -118,19 +119,19 @@ impl PjrtModel {
         let result = self
             .eval_step
             .execute::<xla::Literal>(&inputs)
-            .map_err(|e| anyhow!("eval_step exec: {e:?}"))?[0][0]
+            .map_err(|e| err!("eval_step exec: {e:?}"))?[0][0]
             .to_literal_sync()
-            .map_err(|e| anyhow!("to_literal: {e:?}"))?;
+            .map_err(|e| err!("to_literal: {e:?}"))?;
         let (loss_l, correct_l) = result
             .to_tuple2()
-            .map_err(|e| anyhow!("tuple2: {e:?}"))?;
+            .map_err(|e| err!("tuple2: {e:?}"))?;
         Ok(EvalOut {
             loss: loss_l
                 .get_first_element::<f32>()
-                .map_err(|e| anyhow!("loss: {e:?}"))?,
+                .map_err(|e| err!("loss: {e:?}"))?,
             n_correct: correct_l
                 .get_first_element::<i32>()
-                .map_err(|e| anyhow!("correct: {e:?}"))?,
+                .map_err(|e| err!("correct: {e:?}"))?,
         })
     }
 
@@ -163,12 +164,12 @@ impl PjrtModel {
         let result = self
             .sgd_step
             .execute::<xla::Literal>(&inputs)
-            .map_err(|e| anyhow!("sgd_step exec: {e:?}"))?[0][0]
+            .map_err(|e| err!("sgd_step exec: {e:?}"))?[0][0]
             .to_literal_sync()
-            .map_err(|e| anyhow!("to_literal: {e:?}"))?;
-        let (xl, vl) = result.to_tuple2().map_err(|e| anyhow!("tuple2: {e:?}"))?;
-        x.copy_from_slice(&xl.to_vec::<f32>().map_err(|e| anyhow!("{e:?}"))?);
-        v.copy_from_slice(&vl.to_vec::<f32>().map_err(|e| anyhow!("{e:?}"))?);
+            .map_err(|e| err!("to_literal: {e:?}"))?;
+        let (xl, vl) = result.to_tuple2().map_err(|e| err!("tuple2: {e:?}"))?;
+        x.copy_from_slice(&xl.to_vec::<f32>().map_err(|e| err!("{e:?}"))?);
+        v.copy_from_slice(&vl.to_vec::<f32>().map_err(|e| err!("{e:?}"))?);
         Ok(())
     }
 
@@ -182,12 +183,12 @@ impl PjrtModel {
         let result = self
             .elastic
             .execute::<xla::Literal>(&inputs)
-            .map_err(|e| anyhow!("elastic exec: {e:?}"))?[0][0]
+            .map_err(|e| err!("elastic exec: {e:?}"))?[0][0]
             .to_literal_sync()
-            .map_err(|e| anyhow!("to_literal: {e:?}"))?;
-        let (xl, cl) = result.to_tuple2().map_err(|e| anyhow!("tuple2: {e:?}"))?;
-        x.copy_from_slice(&xl.to_vec::<f32>().map_err(|e| anyhow!("{e:?}"))?);
-        c.copy_from_slice(&cl.to_vec::<f32>().map_err(|e| anyhow!("{e:?}"))?);
+            .map_err(|e| err!("to_literal: {e:?}"))?;
+        let (xl, cl) = result.to_tuple2().map_err(|e| err!("tuple2: {e:?}"))?;
+        x.copy_from_slice(&xl.to_vec::<f32>().map_err(|e| err!("{e:?}"))?);
+        c.copy_from_slice(&cl.to_vec::<f32>().map_err(|e| err!("{e:?}"))?);
         Ok(())
     }
 
@@ -217,13 +218,13 @@ impl PjrtModel {
         let result = self
             .fused_step
             .execute::<xla::Literal>(&inputs)
-            .map_err(|e| anyhow!("fused exec: {e:?}"))?[0][0]
+            .map_err(|e| err!("fused exec: {e:?}"))?[0][0]
             .to_literal_sync()
-            .map_err(|e| anyhow!("to_literal: {e:?}"))?;
-        let (xl, vl, dl) = result.to_tuple3().map_err(|e| anyhow!("tuple3: {e:?}"))?;
-        x.copy_from_slice(&xl.to_vec::<f32>().map_err(|e| anyhow!("{e:?}"))?);
-        v.copy_from_slice(&vl.to_vec::<f32>().map_err(|e| anyhow!("{e:?}"))?);
-        dl.to_vec::<f32>().map_err(|e| anyhow!("{e:?}"))
+            .map_err(|e| err!("to_literal: {e:?}"))?;
+        let (xl, vl, dl) = result.to_tuple3().map_err(|e| err!("tuple3: {e:?}"))?;
+        x.copy_from_slice(&xl.to_vec::<f32>().map_err(|e| err!("{e:?}"))?);
+        v.copy_from_slice(&vl.to_vec::<f32>().map_err(|e| err!("{e:?}"))?);
+        dl.to_vec::<f32>().map_err(|e| err!("{e:?}"))
     }
 }
 

@@ -1,0 +1,192 @@
+//! Executor-equivalence suite: the virtual-time simulator and the
+//! real-thread backend are different machines running the SAME
+//! optimization — on a deterministic objective they must land in the
+//! same place, the simulator must stay bitwise reproducible, and the
+//! elastic fixed point must sit where the symmetric forces say it does.
+
+use elastic_train::cluster::CostModel;
+use elastic_train::coordinator::{
+    DriverConfig, Executor, Method, MlpOracle, QuadraticOracle, SimExecutor, ThreadExecutor,
+};
+use elastic_train::data::BlobDataset;
+use elastic_train::model::{flat, MlpConfig};
+use elastic_train::rng::Rng;
+use std::sync::Arc;
+
+fn fast_cost(n_params: usize) -> CostModel {
+    CostModel {
+        t_grad: 1e-3,
+        jitter: 0.0, // synchronous: no compute jitter
+        t_data: 0.0,
+        latency: 1e-5,
+        bandwidth: 1e12,
+        param_bytes: (n_params * 4) as f64,
+    }
+}
+
+/// (a) Synchronous EASGD (τ=1, jitter=0) on the quadratic objective:
+/// both executors must reach the same loss within 1e-4. The quadratic
+/// is deterministic and strongly convex, so every interleaving
+/// contracts to the same fixed point (workers = center = target); the
+/// tolerance absorbs f32 rounding along the two different paths.
+#[test]
+fn thread_matches_sim_on_quadratic_easgd() {
+    let (n, p, steps) = (512usize, 4usize, 20_000u64);
+    let method = Method::easgd_default(p, 1);
+
+    let mut sim_oracles = QuadraticOracle::family(n, 1.0, 0.0, 1.0, 0.0, p);
+    let sim_cfg = DriverConfig {
+        eta: 0.1,
+        method,
+        cost: fast_cost(n),
+        horizon: 1e6, // steps bound first
+        eval_every: 1e6,
+        seed: 11,
+        max_steps: steps,
+        lr_decay_gamma: 0.0,
+    };
+    let sim = SimExecutor.run(&mut sim_oracles, &sim_cfg);
+
+    let mut thr_oracles = QuadraticOracle::family(n, 1.0, 0.0, 1.0, 0.0, p);
+    let thr_cfg = DriverConfig {
+        horizon: 60.0, // REAL seconds safety net; steps bound first
+        ..sim_cfg.clone()
+    };
+    let thr = ThreadExecutor::default().run(&mut thr_oracles, &thr_cfg);
+
+    assert!(!sim.diverged && !thr.diverged);
+    assert_eq!(sim.total_steps, steps);
+    assert_eq!(thr.total_steps, steps);
+    let ls = sim.curve.last().unwrap().train_loss;
+    let lt = thr.curve.last().unwrap().train_loss;
+    // Both at the optimum (loss 0 for ½(θ−1)² from θ=0)...
+    assert!(ls < 1e-6, "sim final loss {ls}");
+    assert!(lt < 1e-6, "thread final loss {lt}");
+    // ...and within the required tolerance of each other.
+    assert!((ls - lt).abs() < 1e-4, "sim {ls} vs thread {lt}");
+}
+
+/// Same equivalence on a *noisy* quadratic: the stationary center MSE
+/// is interleaving-independent, so the two backends' final losses agree
+/// to the noise floor (looser tolerance than the deterministic case).
+#[test]
+fn thread_matches_sim_on_noisy_quadratic_within_noise_floor() {
+    let (n, p, steps) = (256usize, 4usize, 40_000u64);
+    let method = Method::easgd_default(p, 1);
+    let mk = || QuadraticOracle::family(n, 1.0, 0.0, 1.0, 0.05, p);
+
+    let cfg = DriverConfig {
+        eta: 0.1,
+        method,
+        cost: fast_cost(n),
+        horizon: 1e6,
+        eval_every: 1e6,
+        seed: 17,
+        max_steps: steps,
+        lr_decay_gamma: 0.0,
+    };
+    let sim = SimExecutor.run(&mut mk(), &cfg);
+    let thr_cfg = DriverConfig { horizon: 60.0, ..cfg.clone() };
+    let thr = ThreadExecutor::default().run(&mut mk(), &thr_cfg);
+
+    assert!(!sim.diverged && !thr.diverged);
+    let ls = sim.curve.last().unwrap().train_loss;
+    let lt = thr.curve.last().unwrap().train_loss;
+    // Stationary loss ≈ ½·E(θ−1)² per coordinate: tiny but nonzero;
+    // the two backends must agree on its scale.
+    assert!(ls > 0.0 && lt > 0.0);
+    assert!(ls < 1e-3 && lt < 1e-3, "sim {ls} thread {lt}");
+}
+
+/// (b) The simulator is bitwise deterministic: two runs with the same
+/// seed produce identical step counts and identical curves (every
+/// field, exact float equality).
+#[test]
+fn sim_executor_is_bitwise_deterministic() {
+    let run = || {
+        let data = Arc::new(BlobDataset::generate(8, 4, 1024, 256, 0.8, 1));
+        let mcfg = MlpConfig::new(&[8, 16, 4], 1e-4);
+        let mut oracles = MlpOracle::family(data, &mcfg, 32, 4);
+        let cfg = DriverConfig {
+            eta: 0.1,
+            method: Method::easgd_default(4, 4),
+            cost: CostModel {
+                t_grad: 1e-3,
+                jitter: 0.1,
+                t_data: 1e-4,
+                latency: 1e-4,
+                bandwidth: 1e9,
+                param_bytes: 1000.0,
+            },
+            horizon: 0.6,
+            eval_every: 0.1,
+            seed: 23,
+            max_steps: 1_000_000,
+            lr_decay_gamma: 0.0,
+        };
+        SimExecutor.run(&mut oracles, &cfg)
+    };
+    let (a, b) = (run(), run());
+    assert_eq!(a.total_steps, b.total_steps);
+    assert_eq!(a.curve.len(), b.curve.len());
+    for (pa, pb) in a.curve.iter().zip(&b.curve) {
+        assert_eq!(pa.time, pb.time);
+        assert_eq!(pa.train_loss, pb.train_loss);
+        assert_eq!(pa.test_loss, pb.test_loss);
+        assert_eq!(pa.test_error, pb.test_error);
+    }
+}
+
+/// (c) Under symmetric elastic forces with zero gradient, the fixed
+/// point of repeated worker↔center exchanges is consensus at the
+/// conserved mean: center = worker average = Σ(x_i) + c over p+1.
+#[test]
+fn elastic_fixed_point_is_worker_average() {
+    let (n, p) = (64usize, 5usize);
+    let mut rng = Rng::new(41);
+    let mut workers: Vec<Vec<f32>> = (0..p)
+        .map(|_| {
+            let mut v = vec![0.0f32; n];
+            rng.fill_gaussian_f32(&mut v, 2.0);
+            v
+        })
+        .collect();
+    let mut center = vec![0.0f32; n];
+    rng.fill_gaussian_f32(&mut center, 2.0);
+
+    // Conserved quantity: per-coordinate sum over workers + center.
+    let conserved: Vec<f64> = (0..n)
+        .map(|j| workers.iter().map(|w| w[j] as f64).sum::<f64>() + center[j] as f64)
+        .collect();
+
+    for _ in 0..2000 {
+        for w in &mut workers {
+            flat::elastic_exchange(w, &mut center, 0.3);
+        }
+    }
+
+    for j in 0..n {
+        let mean = workers.iter().map(|w| w[j] as f64).sum::<f64>() / p as f64;
+        let fixed = conserved[j] / (p as f64 + 1.0);
+        // Consensus: every worker pinned to the center...
+        for w in &workers {
+            assert!((w[j] as f64 - center[j] as f64).abs() < 1e-5, "coord {j}");
+        }
+        // ...center equals the worker average...
+        assert!((center[j] as f64 - mean).abs() < 1e-5, "coord {j}");
+        // ...and both sit at the conserved symmetric-force fixed point.
+        assert!(
+            (center[j] as f64 - fixed).abs() < 1e-3,
+            "coord {j}: center {} vs conserved mean {fixed}",
+            center[j]
+        );
+    }
+}
+
+/// The executor trait objects report their backend names (backend
+/// plumbing used by figures/CLI).
+#[test]
+fn executor_names() {
+    assert_eq!(SimExecutor.name(), "sim");
+    assert_eq!(ThreadExecutor::default().name(), "thread");
+}

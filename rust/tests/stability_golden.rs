@@ -1,0 +1,207 @@
+//! Golden stability-boundary tests: the closed-form EASGD/ADMM/MSGD
+//! stability conditions in `sim::moments` / `sim::admm` must predict —
+//! exactly at the boundary — what the `sim::quadratic` simulators and
+//! the round-robin linear maps actually do, over a grid of (p, ρ, η).
+
+use elastic_train::linalg::spectral_radius;
+use elastic_train::rng::Rng;
+use elastic_train::sim::{admm, moments, quadratic};
+
+/// Bisect the η·h stability boundary of Lemma 3.1.1's (γ, φ) condition
+/// at fixed (α, p), h = 1.
+fn easgd_eta_boundary(alpha: f64, p: usize) -> Option<f64> {
+    let (lo0, hi0) = (1e-6, 6.0);
+    if !moments::easgd_stable(lo0, alpha, 1.0, p) || moments::easgd_stable(hi0, alpha, 1.0, p) {
+        return None; // region empty or unbounded on this grid line
+    }
+    let (mut lo, mut hi) = (lo0, hi0);
+    for _ in 0..80 {
+        let mid = 0.5 * (lo + hi);
+        if moments::easgd_stable(mid, alpha, 1.0, p) {
+            lo = mid;
+        } else {
+            hi = mid;
+        }
+    }
+    Some(lo)
+}
+
+/// Noiseless synchronous EASGD (Eq 5.9, β = p·α) from x0 = 1: returns
+/// the final |center|.
+fn sync_easgd_final(eta: f64, alpha: f64, p: usize, t: usize) -> f64 {
+    let m = quadratic::Quadratic { h: 1.0, sigma: 0.0 };
+    let tr = quadratic::easgd_trajectory(
+        m,
+        eta,
+        alpha,
+        p as f64 * alpha,
+        p,
+        1.0,
+        t,
+        &mut Rng::new(1),
+    );
+    tr.last().unwrap().abs()
+}
+
+/// (1) The Lemma 3.1.1 boundary, empirically: for a grid of (p, α) the
+/// bisected η* separates a contracting simulation (0.9·η*) from a
+/// diverging one (1.1·η*), and `center_mse_infinite` flips to ∞ at the
+/// same edge. (Noiseless + symmetric init, so the reduced system the
+/// lemma analyzes is exactly what the simulator excites.)
+#[test]
+fn easgd_sync_boundary_matches_lemma_3_1_1() {
+    let mut checked = 0;
+    for &p in &[1usize, 2, 4, 8] {
+        for &alpha in &[0.05f64, 0.15, 0.3] {
+            let Some(eta_star) = easgd_eta_boundary(alpha, p) else {
+                // e.g. p=8, α=0.3 ⇒ β=2.4 > 2: unstable for every η.
+                assert!(
+                    !moments::easgd_stable(0.1, alpha, 1.0, p),
+                    "empty bracket must mean an empty stability region"
+                );
+                continue;
+            };
+            assert!(eta_star > 1.0 && eta_star < 2.0, "η*={eta_star} at p={p} α={alpha}");
+            let below = sync_easgd_final(0.9 * eta_star, alpha, p, 4000);
+            let above = sync_easgd_final(1.1 * eta_star, alpha, p, 4000);
+            assert!(
+                below < 1e-3,
+                "p={p} α={alpha}: stable side |x|={below} at η={:.4}",
+                0.9 * eta_star
+            );
+            assert!(
+                above > 1e6 || !above.is_finite(),
+                "p={p} α={alpha}: unstable side |x|={above} at η={:.4}",
+                1.1 * eta_star
+            );
+            // The closed-form stationary MSE agrees with the flip.
+            let model = moments::QuadraticModel { h: 1.0, sigma: 1.0, p };
+            let beta = p as f64 * alpha;
+            assert!(moments::center_mse_infinite(&model, 0.9 * eta_star, beta).is_finite());
+            assert!(moments::center_mse_infinite(&model, 1.1 * eta_star, beta).is_infinite());
+            checked += 1;
+        }
+    }
+    assert!(checked >= 10, "grid degenerated: only {checked} cells checked");
+}
+
+/// (2a) Round-robin EASGD: the closed-form §3.3 condition
+/// α ≤ (4 − 2η)/(4 − η) is EXACT at p = 1 — the spectral radius of the
+/// composed map crosses 1 precisely at the predicted boundary.
+#[test]
+fn easgd_rr_spectral_radius_crosses_one_at_closed_form_boundary() {
+    for &eta in &[0.3f64, 0.8, 1.5] {
+        let a_star = (4.0 - 2.0 * eta) / (4.0 - eta);
+        let sp_at = spectral_radius(&admm::easgd_round_robin_map(1, eta, a_star));
+        let sp_below = spectral_radius(&admm::easgd_round_robin_map(1, eta, a_star * 0.999));
+        let sp_above = spectral_radius(&admm::easgd_round_robin_map(1, eta, a_star * 1.001));
+        assert!((sp_at - 1.0).abs() < 1e-7, "η={eta}: sp at boundary {sp_at}");
+        assert!(sp_below < 1.0, "η={eta}: sp just inside {sp_below}");
+        assert!(sp_above > 1.0, "η={eta}: sp just outside {sp_above}");
+        assert!(admm::easgd_rr_stable(eta, a_star * 0.999));
+        assert!(!admm::easgd_rr_stable(eta, a_star * 1.001));
+    }
+}
+
+/// (2b) Round-robin ADMM over a (p, ρ, η) grid: sp(𝓕) < 1 ⟺ the
+/// iterated trajectory's envelope decays; sp > 1 ⟺ it grows. Cells
+/// within ~1e-3 of the unit circle are skipped (growth there needs far
+/// more rounds than a unit test affords — the thesis' Fig 3.3 chaos is
+/// exactly such a slow divergence).
+#[test]
+fn admm_spectral_radius_predicts_trajectory_envelope() {
+    let mut asserted = 0;
+    for &p in &[2usize, 3] {
+        for &eta in &[0.001f64, 0.3] {
+            for &rho in &[2.5f64, 6.0, 9.0] {
+                let sp = admm::admm_spectral_radius(p, eta, rho);
+                let tr = admm::admm_trajectory(p, eta, rho, 1.0, 20_000);
+                let finite = tr.iter().all(|x| x.is_finite());
+                let early = tr[..1000.min(tr.len())]
+                    .iter()
+                    .fold(0.0f64, |m, x| m.max(x.abs()));
+                let late = tr[tr.len().saturating_sub(1000)..]
+                    .iter()
+                    .fold(0.0f64, |m, x| m.max(x.abs()));
+                if sp < 0.9985 {
+                    assert!(finite, "p={p} η={eta} ρ={rho}: sp={sp} but blow-up");
+                    assert!(
+                        late <= early,
+                        "p={p} η={eta} ρ={rho}: sp={sp} but envelope grew {early} -> {late}"
+                    );
+                    asserted += 1;
+                } else if sp > 1.0008 {
+                    assert!(
+                        !finite || late > 10.0 * early.max(1e-300),
+                        "p={p} η={eta} ρ={rho}: sp={sp} but envelope did not grow \
+                         ({early} -> {late})"
+                    );
+                    asserted += 1;
+                } // else: borderline — skipped by design.
+            }
+        }
+    }
+    assert!(asserted >= 7, "grid degenerated: only {asserted} cells asserted");
+}
+
+/// (3) MSGD second moments: sp of the Eq 5.6 moment matrix < 1 ⟺ the
+/// simulated second moment stays bounded, over an (η·h, δ) grid that
+/// straddles the boundary several times.
+#[test]
+fn msgd_moment_matrix_sp_predicts_second_moment_divergence() {
+    let mut asserted = 0;
+    for &eta_h in &[0.2f64, 1.0, 1.9, 2.5, 3.5] {
+        for &delta in &[0.0f64, 0.5, 0.9] {
+            let sp = moments::sp(&moments::msgd_moment_matrix(eta_h, delta));
+            if (sp - 1.0).abs() < 0.05 {
+                continue; // borderline cells need asymptotic horizons
+            }
+            let m = quadratic::Quadratic { h: 1.0, sigma: 0.1 };
+            let mut worst = 0.0f64;
+            for rep in 0..4u64 {
+                let tr = quadratic::msgd_trajectory(
+                    m,
+                    eta_h,
+                    delta,
+                    0.0,
+                    3000,
+                    &mut Rng::new(500 + rep),
+                );
+                let last = tr.last().unwrap().abs();
+                worst = worst.max(if last.is_finite() { last } else { f64::INFINITY });
+            }
+            if sp < 1.0 {
+                assert!(
+                    worst < 1e3,
+                    "η_h={eta_h} δ={delta}: sp={sp} (stable) but |x|={worst}"
+                );
+            } else {
+                assert!(
+                    worst > 1e6 || worst.is_infinite(),
+                    "η_h={eta_h} δ={delta}: sp={sp} (unstable) but |x|={worst}"
+                );
+            }
+            asserted += 1;
+        }
+    }
+    assert!(asserted >= 12, "grid degenerated: only {asserted} cells asserted");
+}
+
+/// The MSGD stationary point of Eq 5.7 is achieved by the simulator
+/// inside the stable region (a golden value, not just a boundary).
+#[test]
+fn msgd_stationary_moment_matches_eq_5_7_inside_region() {
+    let (eta, delta, sigma) = (0.3f64, 0.4f64, 0.1f64);
+    let (_, _, x2_units) = moments::msgd_asymptotic(eta, delta);
+    let want = x2_units * eta * eta * sigma * sigma;
+    let m = quadratic::Quadratic { h: 1.0, sigma };
+    let got = quadratic::empirical_second_moment(
+        |r| quadratic::msgd_trajectory(m, eta, delta, 0.0, 4000, &mut Rng::new(900 + r as u64)),
+        40,
+        500,
+    );
+    assert!(
+        (got - want).abs() / want < 0.2,
+        "stationary x²: sim {got} vs closed form {want}"
+    );
+}

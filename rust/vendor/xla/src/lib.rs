@@ -1,0 +1,134 @@
+//! Offline stub of the `xla` crate (xla_extension / PJRT bindings):
+//! exactly the API surface `elastic_train`'s `pjrt` feature consumes,
+//! with every operation returning an error at runtime.
+//!
+//! Why this exists: the tier-1 build must work with no network and no
+//! XLA shared library, yet `--features pjrt` should still *compile* so
+//! the runtime layer cannot rot. To actually execute the AOT artifacts,
+//! replace the `xla = { path = "vendor/xla" }` dependency in
+//! `rust/Cargo.toml` with the real crate (see rust/README.md).
+
+use std::fmt;
+
+/// Stub error: carries the operation name that was attempted.
+#[derive(Debug, Clone)]
+pub struct Error(pub String);
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(
+            f,
+            "xla stub: '{}' requires the real xla crate (see rust/README.md)",
+            self.0
+        )
+    }
+}
+
+impl std::error::Error for Error {}
+
+pub type Result<T> = std::result::Result<T, Error>;
+
+fn unavailable<T>(op: &str) -> Result<T> {
+    Err(Error(op.to_string()))
+}
+
+/// A device literal (shaped host buffer).
+#[derive(Debug, Clone, Default)]
+pub struct Literal;
+
+impl Literal {
+    pub fn vec1<T: Copy>(_data: &[T]) -> Literal {
+        Literal
+    }
+
+    pub fn reshape(&self, _dims: &[i64]) -> Result<Literal> {
+        unavailable("Literal::reshape")
+    }
+
+    pub fn to_tuple(self) -> Result<Vec<Literal>> {
+        unavailable("Literal::to_tuple")
+    }
+
+    pub fn to_tuple2(self) -> Result<(Literal, Literal)> {
+        unavailable("Literal::to_tuple2")
+    }
+
+    pub fn to_tuple3(self) -> Result<(Literal, Literal, Literal)> {
+        unavailable("Literal::to_tuple3")
+    }
+
+    pub fn get_first_element<T>(&self) -> Result<T> {
+        unavailable("Literal::get_first_element")
+    }
+
+    pub fn to_vec<T>(&self) -> Result<Vec<T>> {
+        unavailable("Literal::to_vec")
+    }
+}
+
+/// A buffer resident on a PJRT device.
+#[derive(Debug)]
+pub struct PjRtBuffer;
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        unavailable("PjRtBuffer::to_literal_sync")
+    }
+}
+
+/// The PJRT client (CPU plugin in the real crate).
+#[derive(Debug)]
+pub struct PjRtClient;
+
+impl PjRtClient {
+    pub fn cpu() -> Result<PjRtClient> {
+        unavailable("PjRtClient::cpu")
+    }
+
+    pub fn compile(&self, _computation: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        unavailable("PjRtClient::compile")
+    }
+}
+
+/// A compiled executable.
+#[derive(Debug)]
+pub struct PjRtLoadedExecutable;
+
+impl PjRtLoadedExecutable {
+    pub fn execute<T>(&self, _args: &[T]) -> Result<Vec<Vec<PjRtBuffer>>> {
+        unavailable("PjRtLoadedExecutable::execute")
+    }
+}
+
+/// An HLO module proto parsed from text.
+#[derive(Debug)]
+pub struct HloModuleProto;
+
+impl HloModuleProto {
+    pub fn from_text_file(_path: &str) -> Result<HloModuleProto> {
+        unavailable("HloModuleProto::from_text_file")
+    }
+}
+
+/// An XLA computation wrapping an HLO module.
+#[derive(Debug)]
+pub struct XlaComputation;
+
+impl XlaComputation {
+    pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn every_operation_reports_stub() {
+        assert!(PjRtClient::cpu().is_err());
+        assert!(Literal::vec1(&[1.0f32]).reshape(&[1]).is_err());
+        let msg = format!("{}", Error("op".into()));
+        assert!(msg.contains("real xla crate"));
+    }
+}
