@@ -1,15 +1,21 @@
 //! EASGD Tree at scale (thesis Chapter 6): d-ary tree of workers with
 //! fully-asynchronous parameter messaging, comparing the two §6.1
-//! communication schemes on the synthetic CIFAR-like task.
+//! communication schemes on the synthetic CIFAR-like task — on either
+//! executor backend.
 //!
 //!     cargo run --release --example tree_scale -- [leaves=64] [degree=8] \
-//!         [eta=0.15] [delta=0] [horizon=25]
+//!         [eta=0.15] [delta=0] [horizon=25] [backend=sim|thread]
 //!
 //! Thesis scale is leaves=256 degree=16 (use those for the full run).
+//! With backend=thread the horizon is REAL seconds (default 25 is a
+//! long run — pass e.g. horizon=5) and every tree node is an OS thread.
 
 use elastic_train::cluster::CostModel;
 use elastic_train::config::Args;
-use elastic_train::coordinator::{run_tree, MlpOracle, TreeConfig, TreeScheme};
+use elastic_train::coordinator::{
+    run_with_backend_topology, Backend, DriverConfig, Method, MlpOracle, Topology, TreeScheme,
+    TreeSpec,
+};
 use elastic_train::data::BlobDataset;
 use elastic_train::model::MlpConfig;
 use std::sync::Arc;
@@ -21,35 +27,51 @@ fn main() {
     let eta = args.get_f32("eta", 0.15);
     let delta = args.get_f32("delta", 0.0);
     let horizon = args.get_f64("horizon", 25.0);
+    let backend_str = args.get_str("backend", "sim");
+    let backend = Backend::parse(backend_str).unwrap_or_else(|| {
+        eprintln!("error: unknown backend '{backend_str}' (sim|thread)");
+        std::process::exit(2);
+    });
 
     let data = Arc::new(BlobDataset::generate(32, 10, 4096, 512, 2.2, 1));
     let mcfg = MlpConfig::new(&[32, 64, 32, 10], 1e-4);
     let cost = CostModel::cifar_like(mcfg.n_params());
+    let alpha = 0.9 / (degree as f32 + 1.0);
+    let method = if delta > 0.0 {
+        Method::Eamsgd { alpha, tau: 1, delta }
+    } else {
+        Method::Easgd { alpha, tau: 1 }
+    };
 
     for (name, scheme) in [
         ("scheme-1 multi-scale (τ1=1, τ2=10)", TreeScheme::MultiScale { tau1: 1, tau2: 10 }),
         ("scheme-2 up/down    (τu=1, τd=10)", TreeScheme::UpDown { tau_up: 1, tau_down: 10 }),
     ] {
         let mut oracles = MlpOracle::family(data.clone(), &mcfg, 16, leaves);
-        let cfg = TreeConfig {
-            degree,
-            leaves,
-            scheme,
-            alpha: 0.9 / (degree as f32 + 1.0),
+        let topo = Topology::Tree(TreeSpec::new(degree, scheme));
+        let cfg = DriverConfig {
             eta,
-            delta,
+            method,
             cost,
-            interior_activity: 0.25,
-        intra_discount: 0.2,
             horizon,
             eval_every: horizon / 10.0,
             seed: args.get_u64("seed", 0),
-            max_events: 200_000_000,
+            max_steps: u64::MAX / 2,
+            lr_decay_gamma: 0.0,
         };
         let t0 = std::time::Instant::now();
-        let r = run_tree(&mut oracles, &cfg);
-        println!("== {name}: p={leaves}, d={degree}, α=0.9/(d+1), η={eta}, δ={delta}");
-        println!("  vt[s]   train_loss  test_err");
+        let r = match run_with_backend_topology(backend, &mut oracles, &cfg, &topo) {
+            Ok(r) => r,
+            Err(e) => {
+                eprintln!("error: {e}");
+                std::process::exit(1);
+            }
+        };
+        println!(
+            "== {name}: p={leaves}, d={degree}, α=0.9/(d+1), η={eta}, δ={delta}, {} backend",
+            backend.name()
+        );
+        println!("  t[s]    train_loss  test_err");
         for pt in &r.curve {
             println!("  {:<6.1}  {:<10.4}  {:.3}", pt.time, pt.train_loss, pt.test_error);
         }

@@ -11,7 +11,10 @@ use std::time::Instant;
 
 fn main() {
     // Accepts the same key=value args as `repro figure` (backend=, seed=).
-    let mut opts = FigOpts::from_args(&Args::from_env());
+    let mut opts = FigOpts::from_args(&Args::from_env()).unwrap_or_else(|e| {
+        eprintln!("error: {e}");
+        std::process::exit(2);
+    });
     opts.out_dir = "out".into();
     opts.full = false;
     let mut sw = Sweep::new(&opts);
@@ -27,7 +30,10 @@ fn main() {
         ("MDOWNPOUR", Method::MDownpour { delta: 0.9 }, 0.002),
     ] {
         let t0 = Instant::now();
-        let r = sw.run(8, method, eta, "cifar");
+        let r = sw.run(8, method, eta, "cifar").unwrap_or_else(|e| {
+            eprintln!("error: {e}");
+            std::process::exit(2);
+        });
         let wall = t0.elapsed().as_secs_f64();
         println!(
             "bench ch4/{name:<14} {wall:>7.2} s/run   best_err={:.3} steps={}",

@@ -1,9 +1,12 @@
-//! EASGD Tree benchmark (Chapter 6): host-time cost of the fully-async
-//! tree simulation at increasing scale, and the two communication
-//! schemes' relative virtual-time convergence (Figs 6.3–6.10 shape).
+//! EASGD Tree benchmark (Chapter 6), sim backend: host-time cost of
+//! the fully-async virtual-time tree at increasing scale, and the two
+//! communication schemes' relative convergence (Figs 6.3–6.10 shape).
+//! The real-thread twin is `bench_tree_threaded`.
 
 use elastic_train::cluster::CostModel;
-use elastic_train::coordinator::{run_tree, MlpOracle, TreeConfig, TreeScheme};
+use elastic_train::coordinator::{
+    run_tree_sim, DriverConfig, Method, MlpOracle, TreeScheme, TreeSpec,
+};
 use elastic_train::data::BlobDataset;
 use elastic_train::model::MlpConfig;
 use std::sync::Arc;
@@ -20,23 +23,19 @@ fn main() {
             ("scheme2", TreeScheme::UpDown { tau_up: 1, tau_down: 10 }),
         ] {
             let mut oracles = MlpOracle::family(data.clone(), &mcfg, 16, leaves);
-            let cfg = TreeConfig {
-                degree,
-                leaves,
-                scheme,
-                alpha: 0.9 / (degree as f32 + 1.0),
+            let spec = TreeSpec::new(degree, scheme);
+            let cfg = DriverConfig {
                 eta: 0.15,
-                delta: 0.0,
+                method: Method::Easgd { alpha: 0.9 / (degree as f32 + 1.0), tau: 1 },
                 cost,
-                interior_activity: 0.25,
-        intra_discount: 0.2,
                 horizon: 8.0,
                 eval_every: 4.0,
                 seed: 5,
-                max_events: 200_000_000,
+                max_steps: u64::MAX / 2,
+                lr_decay_gamma: 0.0,
             };
             let t0 = Instant::now();
-            let r = run_tree(&mut oracles, &cfg);
+            let r = run_tree_sim(&mut oracles, &cfg, &spec).expect("supported combination");
             let wall = t0.elapsed().as_secs_f64();
             println!(
                 "bench tree/{name}/p{leaves}d{degree}  {wall:>7.2} s/run  \

@@ -82,6 +82,13 @@ impl CostModel {
     pub fn one_way_time(&self) -> f64 {
         self.latency + self.param_bytes / self.bandwidth
     }
+
+    /// One-way time over a scaled link — the tree's bottom-layer
+    /// (leaf ↔ leaf-parent) messages stay inside one machine in the
+    /// thesis' deployment (§6.1) and take `scale` < 1.
+    pub fn one_way_time_scaled(&self, scale: f64) -> f64 {
+        self.one_way_time() * scale
+    }
 }
 
 /// Table 4.4's three columns, accumulated per run.
@@ -160,6 +167,7 @@ mod tests {
         };
         assert!((cm.exchange_time() - (1.0 + 4.0)).abs() < 1e-12);
         assert!((cm.one_way_time() - 2.5).abs() < 1e-12);
+        assert!((cm.one_way_time_scaled(0.2) - 0.5).abs() < 1e-12);
     }
 
     #[test]

@@ -1,31 +1,41 @@
 //! The `Executor` abstraction: one distributed-run contract, two
-//! backends.
+//! backends, two topologies.
 //!
-//! A backend takes a family of [`GradOracle`]s (one per worker, index 0
-//! doubling as the evaluator), a [`DriverConfig`], and produces a
-//! [`RunResult`] with the center-variable curve:
+//! A backend takes a family of [`GradOracle`]s (one per worker/leaf,
+//! index 0 doubling as the evaluator), a [`DriverConfig`], and a
+//! [`Topology`] (flat star or d-ary tree), and produces a [`RunResult`]
+//! with the tracked-variable curve:
 //!
 //! * [`SimExecutor`] — the virtual-time event simulator
-//!   ([`super::driver::run_parallel`]): a min-heap interleaves workers
-//!   by next-event time, communication/data costs come from the
-//!   [`crate::cluster::CostModel`], and runs are bitwise deterministic
-//!   given the seed. This is the figure-sweep substrate.
+//!   ([`super::driver::run_parallel`] for the star,
+//!   [`super::tree::run_tree_sim`] for the tree): a min-heap
+//!   interleaves nodes by next-event time, communication/data costs
+//!   come from the [`crate::cluster::CostModel`], and runs are bitwise
+//!   deterministic given the seed. This is the figure-sweep substrate.
 //! * [`ThreadExecutor`] — real `std::thread` workers
-//!   ([`super::threaded::run_threaded`]): the center variable lives
-//!   behind a sharded lock and exchanges execute concurrently against
-//!   genuinely stale center reads. Time-valued config fields are *real*
-//!   seconds here; runs are not bit-deterministic (the interleaving is
-//!   the OS scheduler's), but the optimization-level outcomes match the
-//!   simulator (see `tests/executor_equivalence.rs`).
+//!   ([`super::threaded::run_threaded`] for the star: sharded-lock
+//!   center, genuinely stale exchanges;
+//!   [`super::tree_threaded::run_tree_threaded`] for the tree: one
+//!   actor thread per node, snapshots over `mpsc` channels).
+//!   Time-valued config fields are *real* seconds here; runs are not
+//!   bit-deterministic (the interleaving is the OS scheduler's), but
+//!   the optimization-level outcomes match the simulator (see
+//!   `tests/executor_equivalence.rs` and `tests/tree_equivalence.rs`).
 //!
-//! This module also owns the state shared by both backends: the
+//! Which method runs where is a checked matrix ([`check_supported`]):
+//! unsupported method/backend/topology combinations get a descriptive
+//! error, never a silent fallback.
+//!
+//! This module also owns the state shared by every backend: the
 //! [`DriverConfig`], the per-worker [`WorkerState`], the virtual-time
 //! master's [`MasterState`], the master-decoupled local gradient step,
 //! and the evaluation-point recorder.
 
 use super::method::Method;
 use super::oracle::GradOracle;
+use super::topology::Topology;
 use crate::cluster::{CostModel, CurvePoint, RunResult};
+use crate::error::Result;
 use crate::model::flat;
 use crate::rng::Rng;
 
@@ -200,11 +210,63 @@ pub(crate) fn eval_point<O: GradOracle>(
     st.train_loss.is_finite()
 }
 
-/// Does the threaded backend implement this method? (MDOWNPOUR and
-/// async ADMM interleave master updates into every local step; they are
-/// defined on the virtual-time backend only.)
+/// Does the threaded backend implement this method on the STAR
+/// topology? (MDOWNPOUR and async ADMM interleave master updates into
+/// every local step; they are defined on the virtual-time backend
+/// only.)
 pub fn thread_supported(method: Method) -> bool {
     !matches!(method, Method::MDownpour { .. } | Method::AdmmAsync { .. })
+}
+
+/// Does the tree topology define this method? The EASGD tree (Alg. 6)
+/// has elastic leaf dynamics only — plain (EASGD) or Nesterov (EAMSGD);
+/// the DOWNPOUR/ADMM families have no tree form. Holds for BOTH
+/// backends: the tree's method matrix is backend-independent.
+pub fn tree_supported(method: Method) -> bool {
+    matches!(method, Method::Easgd { .. } | Method::Eamsgd { .. })
+}
+
+/// The per-arrival Gauss–Seidel moving rate α the tree backends use
+/// (the method's elastic rate), with a descriptive error for methods
+/// the tree does not define.
+pub(crate) fn tree_alpha(method: Method) -> Result<f32> {
+    match method {
+        Method::Easgd { alpha, .. } | Method::Eamsgd { alpha, .. } => Ok(alpha),
+        other => Err(crate::err!(
+            "{} has no tree form: the EASGD tree (Alg. 6) defines elastic leaf \
+             dynamics only — use method=easgd or method=eamsgd with topology=tree",
+            other.name()
+        )),
+    }
+}
+
+/// The full method × backend × topology support matrix. Returns `Ok`
+/// when the combination is implemented, and a descriptive error —
+/// never a silent fallback — when it is not.
+pub fn check_supported(method: Method, backend: Backend, topo: &Topology) -> Result<()> {
+    match topo {
+        Topology::Star => match backend {
+            // The virtual-time star driver implements every method.
+            Backend::Sim => Ok(()),
+            Backend::Thread => {
+                if thread_supported(method) {
+                    Ok(())
+                } else {
+                    Err(crate::err!(
+                        "{} is master-coupled (it updates master state inside every \
+                         local step) and is defined on the virtual-time backend only; \
+                         rerun with backend=sim",
+                        method.name()
+                    ))
+                }
+            }
+        },
+        Topology::Tree(spec) => {
+            spec.validate()?;
+            // Both backends implement the tree for the elastic methods.
+            tree_alpha(method).map(|_| ())
+        }
+    }
 }
 
 /// A distributed-run backend.
@@ -215,7 +277,21 @@ pub fn thread_supported(method: Method) -> bool {
 /// PJRT oracle).
 pub trait Executor {
     fn name(&self) -> &'static str;
+
+    /// Run on the flat star topology (the legacy single-topology
+    /// contract; infallible because every backend implements its
+    /// star — method gating happens in [`check_supported`] /
+    /// [`run_with_backend`]).
     fn run<O: GradOracle + Send>(&self, oracles: &mut [O], cfg: &DriverConfig) -> RunResult;
+
+    /// Run on an explicit topology, gating unsupported
+    /// method/backend/topology combinations with a descriptive error.
+    fn run_topology<O: GradOracle + Send>(
+        &self,
+        oracles: &mut [O],
+        cfg: &DriverConfig,
+        topo: &Topology,
+    ) -> Result<RunResult>;
 }
 
 /// Virtual-time event-driven backend (deterministic; the figure-sweep
@@ -230,6 +306,19 @@ impl Executor for SimExecutor {
 
     fn run<O: GradOracle + Send>(&self, oracles: &mut [O], cfg: &DriverConfig) -> RunResult {
         super::driver::run_parallel(oracles, cfg)
+    }
+
+    fn run_topology<O: GradOracle + Send>(
+        &self,
+        oracles: &mut [O],
+        cfg: &DriverConfig,
+        topo: &Topology,
+    ) -> Result<RunResult> {
+        check_supported(cfg.method, Backend::Sim, topo)?;
+        match topo {
+            Topology::Star => Ok(super::driver::run_parallel(oracles, cfg)),
+            Topology::Tree(spec) => super::tree::run_tree_sim(oracles, cfg, spec),
+        }
     }
 }
 
@@ -255,6 +344,19 @@ impl Executor for ThreadExecutor {
 
     fn run<O: GradOracle + Send>(&self, oracles: &mut [O], cfg: &DriverConfig) -> RunResult {
         super::threaded::run_threaded(oracles, cfg, self.shards)
+    }
+
+    fn run_topology<O: GradOracle + Send>(
+        &self,
+        oracles: &mut [O],
+        cfg: &DriverConfig,
+        topo: &Topology,
+    ) -> Result<RunResult> {
+        check_supported(cfg.method, Backend::Thread, topo)?;
+        match topo {
+            Topology::Star => Ok(super::threaded::run_threaded(oracles, cfg, self.shards)),
+            Topology::Tree(spec) => super::tree_threaded::run_tree_threaded(oracles, cfg, spec),
+        }
     }
 }
 
@@ -282,30 +384,30 @@ impl Backend {
     }
 }
 
-/// Dispatch a run to the selected backend. Methods the threaded
-/// backend does not implement fall back to the simulator (with a note
-/// on stderr) so method sweeps keep working under `backend=thread` —
-/// but beware that the fallback's curve is on VIRTUAL seconds while the
-/// thread backend's is on real seconds; don't plot the two on one axis.
+/// Dispatch a star-topology run to the selected backend. Methods the
+/// backend does not implement yield a descriptive error — NOT a silent
+/// sim fallback: the two backends' curves live on different time bases
+/// (virtual vs. wall-clock seconds), so quietly swapping executors
+/// would corrupt any sweep plotted on one axis.
 pub fn run_with_backend<O: GradOracle + Send>(
     backend: Backend,
     oracles: &mut [O],
     cfg: &DriverConfig,
-) -> RunResult {
+) -> Result<RunResult> {
+    run_with_backend_topology(backend, oracles, cfg, &Topology::Star)
+}
+
+/// Dispatch a run on an explicit topology to the selected backend,
+/// with the same no-silent-fallback contract as [`run_with_backend`].
+pub fn run_with_backend_topology<O: GradOracle + Send>(
+    backend: Backend,
+    oracles: &mut [O],
+    cfg: &DriverConfig,
+    topo: &Topology,
+) -> Result<RunResult> {
     match backend {
-        Backend::Sim => SimExecutor.run(oracles, cfg),
-        Backend::Thread => {
-            if thread_supported(cfg.method) {
-                ThreadExecutor::default().run(oracles, cfg)
-            } else {
-                eprintln!(
-                    "note: {} is master-coupled; falling back to the sim backend \
-                     (curve times are VIRTUAL seconds, not wall-clock)",
-                    cfg.method.name()
-                );
-                SimExecutor.run(oracles, cfg)
-            }
-        }
+        Backend::Sim => SimExecutor.run_topology(oracles, cfg, topo),
+        Backend::Thread => ThreadExecutor::default().run_topology(oracles, cfg, topo),
     }
 }
 
@@ -332,6 +434,53 @@ mod tests {
         assert!(thread_supported(Method::MvaDownpour { tau: 1, alpha: 0.001 }));
         assert!(!thread_supported(Method::MDownpour { delta: 0.9 }));
         assert!(!thread_supported(Method::AdmmAsync { rho: 1.0, tau: 4 }));
+    }
+
+    #[test]
+    fn tree_support_matrix() {
+        assert!(tree_supported(Method::easgd_default(4, 4)));
+        assert!(tree_supported(Method::eamsgd_default(4, 4)));
+        for m in [
+            Method::Downpour { tau: 1 },
+            Method::MDownpour { delta: 0.9 },
+            Method::ADownpour { tau: 1 },
+            Method::MvaDownpour { tau: 1, alpha: 0.001 },
+            Method::AdmmAsync { rho: 1.0, tau: 4 },
+        ] {
+            assert!(!tree_supported(m), "{}", m.name());
+            assert!(tree_alpha(m).is_err(), "{}", m.name());
+        }
+        let a = tree_alpha(Method::Easgd { alpha: 0.25, tau: 1 }).unwrap();
+        assert!((a - 0.25).abs() < 1e-7);
+    }
+
+    #[test]
+    fn check_supported_matrix_is_descriptive() {
+        use crate::coordinator::topology::{TreeScheme, TreeSpec};
+        let tree = Topology::Tree(TreeSpec::new(4, TreeScheme::UpDown { tau_up: 1, tau_down: 4 }));
+        // Sim star: everything runs.
+        for m in [
+            Method::easgd_default(4, 4),
+            Method::MDownpour { delta: 0.9 },
+            Method::AdmmAsync { rho: 1.0, tau: 4 },
+        ] {
+            assert!(check_supported(m, Backend::Sim, &Topology::Star).is_ok());
+        }
+        // Thread star: master-coupled methods refused with a reason.
+        let e = check_supported(Method::MDownpour { delta: 0.9 }, Backend::Thread, &Topology::Star)
+            .unwrap_err();
+        assert!(format!("{e}").contains("master-coupled"), "{e}");
+        // Tree (either backend): elastic methods only.
+        for b in [Backend::Sim, Backend::Thread] {
+            assert!(check_supported(Method::easgd_default(4, 4), b, &tree).is_ok());
+            assert!(check_supported(Method::eamsgd_default(4, 4), b, &tree).is_ok());
+            let e = check_supported(Method::Downpour { tau: 1 }, b, &tree).unwrap_err();
+            assert!(format!("{e}").contains("no tree form"), "{e}");
+        }
+        // Degenerate fan-out refused.
+        let skinny = Topology::Tree(TreeSpec::new(1, TreeScheme::UpDown { tau_up: 1, tau_down: 1 }));
+        let e = check_supported(Method::easgd_default(4, 4), Backend::Sim, &skinny).unwrap_err();
+        assert!(format!("{e}").contains("fan-out"), "{e}");
     }
 
     #[test]

@@ -7,17 +7,24 @@
 //!   EASGD / EAMSGD (Algorithms 1–2), DOWNPOUR (Alg. 3),
 //!   MDOWNPOUR (Algs 4–5), ADOWNPOUR / MVADOWNPOUR, and async ADMM.
 //! - [`executor`] — the `Executor` abstraction: one run contract, two
-//!   backends (`SimExecutor` / `ThreadExecutor`), plus the shared
-//!   config/worker/master state and `Backend` selection.
-//! - [`driver`] — the virtual-time event-driven backend: per-worker
-//!   virtual clocks, communication period τ, jittered compute,
-//!   Table-4.4 accounting. Bitwise deterministic given the seed.
-//! - [`threaded`] — the real-thread backend: one `std::thread` per
-//!   worker, center variable behind a sharded lock, genuinely stale
-//!   concurrent exchanges.
+//!   backends (`SimExecutor` / `ThreadExecutor`) × two topologies,
+//!   plus the shared config/worker/master state, `Backend` selection,
+//!   and the `check_supported` method/backend/topology matrix.
+//! - [`topology`] — how nodes are wired: the flat `Star`, the d-ary
+//!   `Tree` (spec, layout, §6.1 communication schemes, per-node τ
+//!   table) — shared by both tree backends.
+//! - [`driver`] — the virtual-time event-driven star backend:
+//!   per-worker virtual clocks, communication period τ, jittered
+//!   compute, Table-4.4 accounting. Bitwise deterministic given the
+//!   seed.
+//! - [`threaded`] — the real-thread star backend: one `std::thread`
+//!   per worker, center variable behind a sharded lock, genuinely
+//!   stale concurrent exchanges.
 //! - [`sequential`] — the p = 1 baselines: SGD, MSGD, ASGD, MVASGD.
-//! - [`tree`] — EASGD Tree (Alg. 6): d-ary topology, fully-async
-//!   messaging, the two communication schemes of §6.1.
+//! - [`tree`] — EASGD Tree (Alg. 6), virtual-time backend: fully-async
+//!   messaging on the shared worker/step machinery.
+//! - [`tree_threaded`] — EASGD Tree, real-thread backend: one actor
+//!   thread per node, parameter snapshots over `mpsc` channels.
 //! - [`gauss_seidel`] — §6.2: the Gauss–Seidel reformulation unifying
 //!   EASGD and DOWNPOUR, with its stability map.
 
@@ -28,14 +35,19 @@ pub mod method;
 pub mod oracle;
 pub mod sequential;
 pub mod threaded;
+pub mod topology;
 pub mod tree;
+pub mod tree_threaded;
 
 pub use driver::{run_parallel, DriverConfig};
 pub use executor::{
-    run_with_backend, thread_supported, Backend, Executor, SimExecutor, ThreadExecutor,
+    check_supported, run_with_backend, run_with_backend_topology, thread_supported,
+    tree_supported, Backend, Executor, SimExecutor, ThreadExecutor,
 };
 pub use method::Method;
 pub use oracle::{EvalStats, GradOracle, MlpOracle, QuadraticOracle};
 pub use sequential::{run_sequential, SeqMethod};
 pub use threaded::run_threaded;
-pub use tree::{run_tree, TreeConfig, TreeScheme};
+pub use topology::{node_taus, Topology, TreeLayout, TreeScheme, TreeSpec};
+pub use tree::run_tree_sim;
+pub use tree_threaded::run_tree_threaded;

@@ -1,0 +1,300 @@
+//! The `Topology` abstraction: how workers and the master (or the tree
+//! of nodes) are wired together.
+//!
+//! The thesis studies two layouts:
+//!
+//! * [`Topology::Star`] — the flat master–worker star of Chapter 4:
+//!   p workers exchange directly with one center variable.
+//! * [`Topology::Tree`] — the d-ary EASGD tree of Chapter 6
+//!   (Algorithm 6): leaves run local SGD/Nesterov, interior nodes do no
+//!   gradient work and absorb arriving parameter snapshots with the
+//!   Gauss–Seidel moving-average rule x ← x + α(x_arrived − x).
+//!
+//! Both layouts run on both [`super::executor::Executor`] backends
+//! (virtual-time simulator / real threads); this module owns the pieces
+//! the backends share: the tree wiring ([`TreeLayout`]), the §6.1
+//! communication schemes ([`TreeScheme`]), the per-node (τ_up, τ_down)
+//! table ([`node_taus`]) the schemes induce, and the spec validation
+//! ([`TreeSpec::validate`]) every entry path runs.
+
+use crate::error::Result;
+
+/// The two §6.1 communication schemes.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum TreeScheme {
+    /// Scheme 1 (multi-scale): fast period τ₁ on the bottom layer
+    /// (leaf ↔ leaf-parent), slow τ₂ between interior nodes.
+    MultiScale { tau1: u32, tau2: u32 },
+    /// Scheme 2 (fast-up/slow-down): every node pushes up every τ_up
+    /// activations and down every τ_down.
+    UpDown { tau_up: u32, tau_down: u32 },
+}
+
+impl TreeScheme {
+    pub fn name(&self) -> &'static str {
+        match self {
+            TreeScheme::MultiScale { .. } => "multiscale",
+            TreeScheme::UpDown { .. } => "updown",
+        }
+    }
+}
+
+/// Tree-specific run parameters (the rest of the configuration — η,
+/// method, horizon, seed, cost model — lives in the shared
+/// [`super::executor::DriverConfig`]).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct TreeSpec {
+    /// Fan-out d of the d-ary tree (≥ 2).
+    pub degree: usize,
+    pub scheme: TreeScheme,
+    /// How often interior nodes activate, as a fraction of the leaf
+    /// gradient-step time (virtual-time backend only).
+    pub interior_activity: f64,
+    /// Cost discount for bottom-layer (leaf ↔ leaf-parent) messages —
+    /// they stay inside one machine in the thesis' deployment (§6.1),
+    /// which is exactly what communication scheme 1 exploits
+    /// (virtual-time backend only).
+    pub intra_discount: f64,
+}
+
+impl TreeSpec {
+    pub fn new(degree: usize, scheme: TreeScheme) -> TreeSpec {
+        TreeSpec { degree, scheme, interior_activity: 0.25, intra_discount: 0.2 }
+    }
+
+    /// Thesis §6.1.2 defaults: d = 16, multi-scale τ₁ = 10 / τ₂ = 100.
+    pub fn thesis_default() -> TreeSpec {
+        TreeSpec::new(16, TreeScheme::MultiScale { tau1: 10, tau2: 100 })
+    }
+
+    /// Reject degenerate specs — fan-out < 2, zero communication
+    /// periods (a zero τ would hit `t % 0` in the drivers) — with a
+    /// descriptive error instead of a panic downstream. Run by every
+    /// entry path: `check_supported` and both tree backends.
+    pub fn validate(&self) -> Result<()> {
+        if self.degree < 2 {
+            return Err(crate::err!(
+                "tree fan-out must be ≥ 2, got degree={}",
+                self.degree
+            ));
+        }
+        let (a, b, what) = match self.scheme {
+            TreeScheme::MultiScale { tau1, tau2 } => (tau1, tau2, "tau1/tau2"),
+            TreeScheme::UpDown { tau_up, tau_down } => (tau_up, tau_down, "tau_up/tau_down"),
+        };
+        if a == 0 || b == 0 {
+            return Err(crate::err!(
+                "tree communication periods must be ≥ 1, got {what}={a}/{b}"
+            ));
+        }
+        Ok(())
+    }
+}
+
+/// How a distributed run is wired. The worker/leaf count is implied by
+/// the oracle family handed to the executor, so the topology itself
+/// stays a small copyable value.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum Topology {
+    /// Flat master–worker star (Chapter 4).
+    Star,
+    /// d-ary EASGD tree (Chapter 6, Algorithm 6).
+    Tree(TreeSpec),
+}
+
+impl Topology {
+    pub fn name(&self) -> &'static str {
+        match self {
+            Topology::Star => "star",
+            Topology::Tree(_) => "tree",
+        }
+    }
+}
+
+/// Static tree wiring: node 0 is the root; nodes are laid out level by
+/// level; leaves are the last `leaves` nodes.
+pub struct TreeLayout {
+    pub parent: Vec<Option<usize>>,
+    pub children: Vec<Vec<usize>>,
+    pub n_nodes: usize,
+    pub first_leaf: usize,
+}
+
+impl TreeLayout {
+    /// Build the minimal d-ary tree with `leaves` leaf nodes: levels of
+    /// size ⌈leaves/d^k⌉ from root down.
+    pub fn dary(degree: usize, leaves: usize) -> TreeLayout {
+        assert!(degree >= 2 && leaves >= 1);
+        // Level sizes from the leaf level up.
+        let mut sizes = vec![leaves];
+        while *sizes.last().unwrap() > 1 {
+            let s = sizes.last().unwrap().div_ceil(degree);
+            sizes.push(s);
+        }
+        sizes.reverse(); // root first
+        let n_nodes: usize = sizes.iter().sum();
+        let mut parent = vec![None; n_nodes];
+        let mut children = vec![Vec::new(); n_nodes];
+        // Offsets of each level.
+        let mut offs = vec![0usize];
+        for s in &sizes {
+            offs.push(offs.last().unwrap() + s);
+        }
+        for lvl in 1..sizes.len() {
+            for j in 0..sizes[lvl] {
+                let node = offs[lvl] + j;
+                let par = offs[lvl - 1] + j / degree;
+                parent[node] = Some(par);
+                children[par].push(node);
+            }
+        }
+        let first_leaf = n_nodes - leaves;
+        TreeLayout { parent, children, n_nodes, first_leaf }
+    }
+
+    pub fn is_leaf(&self, i: usize) -> bool {
+        i >= self.first_leaf
+    }
+
+    /// Is this node a parent of leaves (the "bottom layer" of scheme 1)?
+    pub fn is_leaf_parent(&self, i: usize) -> bool {
+        self.children[i].iter().any(|&c| self.is_leaf(c))
+    }
+}
+
+/// Per-node (τ_up, τ_down) communication periods under a scheme;
+/// `u64::MAX` means "never" (the root never pushes up, leaves never
+/// push down). Shared by both tree backends so the sim and the thread
+/// executor run the identical protocol.
+pub fn node_taus(layout: &TreeLayout, scheme: TreeScheme) -> Vec<(u64, u64)> {
+    (0..layout.n_nodes)
+        .map(|i| match scheme {
+            TreeScheme::MultiScale { tau1, tau2 } => {
+                if layout.is_leaf(i) {
+                    (tau1 as u64, u64::MAX)
+                } else if layout.is_leaf_parent(i) {
+                    (tau2 as u64, tau1 as u64)
+                } else if layout.parent[i].is_none() {
+                    (u64::MAX, tau2 as u64)
+                } else {
+                    (tau2 as u64, tau2 as u64)
+                }
+            }
+            TreeScheme::UpDown { tau_up, tau_down } => {
+                let up = if layout.parent[i].is_none() { u64::MAX } else { tau_up as u64 };
+                let down = if layout.is_leaf(i) { u64::MAX } else { tau_down as u64 };
+                (up, down)
+            }
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn dary_topology_shapes() {
+        let t = TreeLayout::dary(16, 256);
+        // 256 leaves, 16 parents, 1 root.
+        assert_eq!(t.n_nodes, 256 + 16 + 1);
+        assert_eq!(t.first_leaf, 17);
+        assert!(t.parent[0].is_none());
+        assert_eq!(t.children[0].len(), 16);
+        for i in 17..t.n_nodes {
+            assert!(t.is_leaf(i));
+            assert!(t.children[i].is_empty());
+        }
+        for i in 1..17 {
+            assert_eq!(t.children[i].len(), 16);
+            assert_eq!(t.parent[i], Some(0));
+            assert!(t.is_leaf_parent(i));
+        }
+    }
+
+    #[test]
+    fn ragged_tree_still_connects_everyone() {
+        let t = TreeLayout::dary(4, 10); // levels: 10, 3, 1
+        assert_eq!(t.n_nodes, 14);
+        for i in 1..t.n_nodes {
+            assert!(t.parent[i].is_some());
+        }
+        let total_children: usize = t.children.iter().map(|c| c.len()).sum();
+        assert_eq!(total_children, t.n_nodes - 1);
+    }
+
+    #[test]
+    fn multiscale_taus_follow_the_layer_structure() {
+        let layout = TreeLayout::dary(4, 16); // 1 root, 4 parents, 16 leaves
+        let taus = node_taus(&layout, TreeScheme::MultiScale { tau1: 2, tau2: 8 });
+        // Root: never up, slow down.
+        assert_eq!(taus[0], (u64::MAX, 8));
+        // Leaf parents: slow up, fast down.
+        for i in 1..5 {
+            assert_eq!(taus[i], (8, 2));
+        }
+        // Leaves: fast up, never down.
+        for i in 5..21 {
+            assert_eq!(taus[i], (2, u64::MAX));
+        }
+    }
+
+    #[test]
+    fn updown_taus_are_uniform_except_at_the_rim() {
+        let layout = TreeLayout::dary(4, 16);
+        let taus = node_taus(&layout, TreeScheme::UpDown { tau_up: 1, tau_down: 10 });
+        assert_eq!(taus[0], (u64::MAX, 10));
+        for i in 1..5 {
+            assert_eq!(taus[i], (1, 10));
+        }
+        for i in 5..21 {
+            assert_eq!(taus[i], (1, u64::MAX));
+        }
+    }
+
+    #[test]
+    fn single_node_tree_never_communicates() {
+        let layout = TreeLayout::dary(2, 1);
+        assert_eq!(layout.n_nodes, 1);
+        assert_eq!(layout.first_leaf, 0);
+        for scheme in [
+            TreeScheme::MultiScale { tau1: 1, tau2: 2 },
+            TreeScheme::UpDown { tau_up: 1, tau_down: 2 },
+        ] {
+            let taus = node_taus(&layout, scheme);
+            // Root-and-leaf at once: up is MAX (no parent) under updown,
+            // down is MAX (leaf); multiscale leaves the up period set but
+            // the drivers guard on `parent.is_none()`.
+            assert_eq!(taus[0].1, u64::MAX, "{scheme:?}");
+        }
+    }
+
+    #[test]
+    fn validate_rejects_degenerate_specs() {
+        assert!(TreeSpec::new(4, TreeScheme::UpDown { tau_up: 1, tau_down: 10 })
+            .validate()
+            .is_ok());
+        let e = TreeSpec::new(1, TreeScheme::UpDown { tau_up: 1, tau_down: 10 })
+            .validate()
+            .unwrap_err();
+        assert!(format!("{e}").contains("fan-out"), "{e}");
+        let e = TreeSpec::new(4, TreeScheme::UpDown { tau_up: 0, tau_down: 10 })
+            .validate()
+            .unwrap_err();
+        assert!(format!("{e}").contains("periods"), "{e}");
+        assert!(TreeSpec::new(4, TreeScheme::MultiScale { tau1: 10, tau2: 0 })
+            .validate()
+            .is_err());
+    }
+
+    #[test]
+    fn names_and_defaults() {
+        assert_eq!(Topology::Star.name(), "star");
+        let spec = TreeSpec::thesis_default();
+        assert_eq!(Topology::Tree(spec).name(), "tree");
+        assert_eq!(spec.degree, 16);
+        assert_eq!(spec.scheme.name(), "multiscale");
+        assert_eq!(TreeScheme::UpDown { tau_up: 1, tau_down: 4 }.name(), "updown");
+        assert!(spec.interior_activity > 0.0 && spec.intra_discount > 0.0);
+    }
+}

@@ -1,138 +1,38 @@
-//! EASGD **Tree** (thesis Chapter 6, Algorithm 6): scaling elastic
-//! averaging to hundreds of workers with a d-ary tree of nodes and a
-//! *fully asynchronous* message protocol.
+//! EASGD **Tree**, virtual-time backend (thesis Chapter 6, Algorithm
+//! 6): scaling elastic averaging to hundreds of workers with a d-ary
+//! tree of nodes and a *fully asynchronous* message protocol — as the
+//! [`super::executor::SimExecutor`] face of
+//! [`super::topology::Topology::Tree`].
 //!
-//! * Leaf nodes run local SGD (optionally Nesterov momentum, as in the
-//!   thesis' mini-batch experiments) and push their parameter up every
-//!   τ_up steps.
+//! * Leaf nodes run the shared master-decoupled local step
+//!   ([`super::executor::local_step_decoupled`]): plain SGD under
+//!   [`super::method::Method::Easgd`], Nesterov momentum under
+//!   [`super::method::Method::Eamsgd`] — with the same learning-rate
+//!   decay schedule as the star drivers.
 //! * Interior nodes do NO gradient work (the thesis' final design):
 //!   they absorb arriving child/parent parameters with the
 //!   Gauss–Seidel moving-average rule x ← x + α(x_arrived − x), and
-//!   push their own parameter up (τ_up) and down (τ_down).
-//! * Two communication schemes (§6.1, Fig 6.2):
-//!     Scheme 1 (multi-scale): fast period τ₁ at the bottom layer,
-//!       slow τ₂ above.
-//!     Scheme 2 (fast-up/slow-down): every node uses τ_u up, τ_d down.
+//!   push their own parameter up (τ_up) and down (τ_down) per the
+//!   [`super::topology::TreeScheme`] table from
+//!   [`super::topology::node_taus`].
 //!
 //! Messages carry full parameter snapshots with a one-way delivery
-//! delay from the cost model; arrival processing happens at the
-//! receiving node's next activation — exactly the "apply just-in-time,
-//! never during a gradient update" rule of §6.1.
+//! delay from the cost model (bottom-layer links take the intra-machine
+//! discount); arrival processing happens at the receiving node's next
+//! activation — exactly the "apply just-in-time, never during a
+//! gradient update" rule of §6.1. The run is bitwise deterministic
+//! given the seed; the real-thread face of the same topology is
+//! [`super::tree_threaded`].
 
+use super::executor::{local_step_decoupled, tree_alpha, DriverConfig, WorkerState};
 use super::oracle::GradOracle;
-use crate::cluster::{CostModel, CurvePoint, RunResult, TimeBreakdown};
+use super::topology::{node_taus, TreeLayout, TreeSpec};
+use crate::cluster::{CurvePoint, RunResult, TimeBreakdown};
+use crate::error::Result;
 use crate::model::flat;
 use crate::rng::Rng;
 use std::cmp::Ordering;
 use std::collections::BinaryHeap;
-
-/// The two §6.1 communication schemes.
-#[derive(Clone, Copy, Debug, PartialEq)]
-pub enum TreeScheme {
-    /// τ₁ between leaves and their parents, τ₂ between interior nodes.
-    MultiScale { tau1: u32, tau2: u32 },
-    /// τ_up / τ_down at every node.
-    UpDown { tau_up: u32, tau_down: u32 },
-}
-
-/// Tree run configuration.
-#[derive(Clone, Debug)]
-pub struct TreeConfig {
-    /// Fan-out d of the d-ary tree.
-    pub degree: usize,
-    /// Number of leaf workers (must be a power of `degree` for a full
-    /// tree; other values produce a ragged last level).
-    pub leaves: usize,
-    pub scheme: TreeScheme,
-    /// Moving rate at every node (thesis: 0.9/(d+1)).
-    pub alpha: f32,
-    pub eta: f32,
-    /// Leaf Nesterov momentum δ (0 disables).
-    pub delta: f32,
-    pub cost: CostModel,
-    /// Interior nodes activate this often (fraction of t_grad).
-    pub interior_activity: f64,
-    /// Cost discount for bottom-layer (leaf ↔ leaf-parent) messages —
-    /// they stay inside one machine in the thesis' deployment (§6.1),
-    /// which is exactly what communication scheme 1 exploits.
-    pub intra_discount: f64,
-    pub horizon: f64,
-    pub eval_every: f64,
-    pub seed: u64,
-    pub max_events: u64,
-}
-
-impl TreeConfig {
-    /// Thesis §6.1.2 defaults: d = 16, p = 256, α = 0.9/(d+1).
-    pub fn thesis_default(cost: CostModel) -> Self {
-        TreeConfig {
-            degree: 16,
-            leaves: 256,
-            scheme: TreeScheme::MultiScale { tau1: 10, tau2: 100 },
-            alpha: 0.9 / 17.0,
-            eta: 5e-3,
-            delta: 0.0,
-            cost,
-            interior_activity: 0.25,
-            intra_discount: 0.2,
-            horizon: 10.0,
-            eval_every: 1.0,
-            seed: 0,
-            max_events: 50_000_000,
-        }
-    }
-}
-
-/// Static tree topology: node 0 is the root; nodes are laid out level
-/// by level. Leaves are the last `leaves` nodes.
-pub struct Topology {
-    pub parent: Vec<Option<usize>>,
-    pub children: Vec<Vec<usize>>,
-    pub n_nodes: usize,
-    pub first_leaf: usize,
-}
-
-impl Topology {
-    /// Build the minimal d-ary tree with `leaves` leaf nodes: levels of
-    /// size ⌈leaves/d^k⌉ from root down.
-    pub fn dary(degree: usize, leaves: usize) -> Topology {
-        assert!(degree >= 2 && leaves >= 1);
-        // Level sizes from the leaf level up.
-        let mut sizes = vec![leaves];
-        while *sizes.last().unwrap() > 1 {
-            let s = sizes.last().unwrap().div_ceil(degree);
-            sizes.push(s);
-        }
-        sizes.reverse(); // root first
-        let n_nodes: usize = sizes.iter().sum();
-        let mut parent = vec![None; n_nodes];
-        let mut children = vec![Vec::new(); n_nodes];
-        // Offsets of each level.
-        let mut offs = vec![0usize];
-        for s in &sizes {
-            offs.push(offs.last().unwrap() + s);
-        }
-        for lvl in 1..sizes.len() {
-            for j in 0..sizes[lvl] {
-                let node = offs[lvl] + j;
-                let par = offs[lvl - 1] + j / degree;
-                parent[node] = Some(par);
-                children[par].push(node);
-            }
-        }
-        let first_leaf = n_nodes - leaves;
-        Topology { parent, children, n_nodes, first_leaf }
-    }
-
-    pub fn is_leaf(&self, i: usize) -> bool {
-        i >= self.first_leaf
-    }
-
-    /// Is this node a parent of leaves (the "bottom layer" of scheme 1)?
-    pub fn is_leaf_parent(&self, i: usize) -> bool {
-        self.children[i].iter().any(|&c| self.is_leaf(c))
-    }
-}
 
 #[derive(PartialEq)]
 enum EvKind {
@@ -158,56 +58,40 @@ impl Ord for Ev {
     }
 }
 
-/// Run an EASGD Tree experiment. `oracles[k]` serves leaf k (k-th leaf,
-/// i.e. node `first_leaf + k`); `oracles[0]` evaluates the ROOT node —
-/// the thesis' tracked variable.
-pub fn run_tree<O: GradOracle>(oracles: &mut [O], cfg: &TreeConfig) -> RunResult {
-    let topo = Topology::dary(cfg.degree, cfg.leaves);
-    assert_eq!(oracles.len(), cfg.leaves);
-    let n = oracles[0].n_params();
+/// Run an EASGD Tree experiment in virtual time. `oracles[k]` serves
+/// leaf k (node `first_leaf + k`); `oracles[0]` evaluates the ROOT node
+/// — the thesis' tracked variable. `cfg.method` must be EASGD/EAMSGD
+/// (its α is the per-arrival moving rate; EAMSGD's δ drives the leaf
+/// Nesterov dynamics); `cfg.max_steps` caps total leaf gradient steps.
+pub fn run_tree_sim<O: GradOracle>(
+    oracles: &mut [O],
+    cfg: &DriverConfig,
+    spec: &TreeSpec,
+) -> Result<RunResult> {
+    let leaves = oracles.len();
+    assert!(leaves >= 1);
+    spec.validate()?;
+    let alpha = tree_alpha(cfg.method)?;
+    let layout = TreeLayout::dary(spec.degree, leaves);
     let init = oracles[0].init_params();
 
-    // Per-node τ_up / τ_down per the scheme.
-    let taus: Vec<(u64, u64)> = (0..topo.n_nodes)
-        .map(|i| match cfg.scheme {
-            TreeScheme::MultiScale { tau1, tau2 } => {
-                if topo.is_leaf(i) {
-                    (tau1 as u64, u64::MAX)
-                } else if topo.is_leaf_parent(i) {
-                    (tau2 as u64, tau1 as u64)
-                } else if topo.parent[i].is_none() {
-                    (u64::MAX, tau2 as u64)
-                } else {
-                    (tau2 as u64, tau2 as u64)
-                }
-            }
-            TreeScheme::UpDown { tau_up, tau_down } => {
-                let up = if topo.parent[i].is_none() { u64::MAX } else { tau_up as u64 };
-                let down = if topo.is_leaf(i) { u64::MAX } else { tau_down as u64 };
-                (up, down)
-            }
-        })
-        .collect();
+    let taus = node_taus(&layout, spec.scheme);
 
-    let mut params: Vec<Vec<f32>> = vec![init.clone(); topo.n_nodes];
-    let mut vels: Vec<Vec<f32>> =
-        (0..cfg.leaves).map(|_| vec![0.0f32; n]).collect();
-    let mut grads: Vec<Vec<f32>> =
-        (0..cfg.leaves).map(|_| vec![0.0f32; n]).collect();
-    let mut clocks = vec![0u64; topo.n_nodes];
-    let mut inbox: Vec<Vec<usize>> = vec![Vec::new(); topo.n_nodes];
+    // Interior nodes are bare parameter vectors; leaves carry the full
+    // shared WorkerState (theta, momentum, local clock, RNG stream).
+    let mut interior: Vec<Vec<f32>> = (0..layout.first_leaf).map(|_| init.clone()).collect();
+    let mut root_rng = Rng::new(cfg.seed);
+    let mut workers = WorkerState::family(&init, leaves, &mut root_rng);
+    let mut time_rng = root_rng.split(0xABCD);
+
+    let mut clocks = vec![0u64; layout.n_nodes];
+    let mut inbox: Vec<Vec<usize>> = vec![Vec::new(); layout.n_nodes];
     let mut payloads: Vec<Vec<f32>> = Vec::new();
     let mut free_payloads: Vec<usize> = Vec::new();
 
-    let mut root_rng = Rng::new(cfg.seed);
-    let mut worker_rngs: Vec<Rng> =
-        (0..cfg.leaves).map(|k| root_rng.split(k as u64)).collect();
-    let mut time_rng = root_rng.split(0xABCD);
-    let mut scratch = vec![0.0f32; n];
-
     let mut heap: BinaryHeap<Ev> = BinaryHeap::new();
     let mut seq = 0u64;
-    for i in 0..topo.n_nodes {
+    for i in 0..layout.n_nodes {
         heap.push(Ev(time_rng.uniform() * cfg.cost.t_grad, seq, EvKind::Activate(i)));
         seq += 1;
     }
@@ -216,16 +100,18 @@ pub fn run_tree<O: GradOracle>(oracles: &mut [O], cfg: &TreeConfig) -> RunResult
     let mut breakdown = TimeBreakdown::default();
     let mut next_eval = 0.0f64;
     let mut total_steps = 0u64;
-    let mut events = 0u64;
     let mut diverged = false;
 
     while let Some(Ev(now, _, kind)) = heap.pop() {
-        if now > cfg.horizon || events >= cfg.max_events || diverged {
+        if now > cfg.horizon || total_steps >= cfg.max_steps || diverged {
             break;
         }
-        events += 1;
         while now >= next_eval {
-            let st = oracles[0].eval(&params[0]); // root node
+            // Root node — the tracked variable (a leaf only in the
+            // degenerate single-node tree).
+            let root_theta: &[f32] =
+                if layout.first_leaf == 0 { &workers[0].theta } else { &interior[0] };
+            let st = oracles[0].eval(root_theta);
             result.curve.push(CurvePoint {
                 time: next_eval,
                 train_loss: st.train_loss,
@@ -243,44 +129,35 @@ pub fn run_tree<O: GradOracle>(oracles: &mut [O], cfg: &TreeConfig) -> RunResult
                 inbox[to].push(payload_idx);
             }
             EvKind::Activate(i) => {
-                // 1) absorb arrivals (Gauss–Seidel moving average).
+                // 1) absorb arrivals (Gauss–Seidel moving average) —
+                //    just-in-time, never during a gradient update.
                 let pending = std::mem::take(&mut inbox[i]);
-                for pidx in pending {
-                    flat::moving_average(&mut params[i], &payloads[pidx], cfg.alpha);
-                    free_payloads.push(pidx);
+                if !pending.is_empty() {
+                    let theta = if i < layout.first_leaf {
+                        &mut interior[i]
+                    } else {
+                        &mut workers[i - layout.first_leaf].theta
+                    };
+                    for pidx in pending {
+                        flat::moving_average(theta, &payloads[pidx], alpha);
+                        free_payloads.push(pidx);
+                    }
                 }
                 // 2) leaf gradient step (interior nodes do no gradient
                 //    work — thesis' final design).
                 let mut dt;
-                if topo.is_leaf(i) {
-                    let k = i - topo.first_leaf;
-                    if cfg.delta > 0.0 {
-                        // Nesterov: g at lookahead θ + δv.
-                        for (s, (t, vv)) in scratch
-                            .iter_mut()
-                            .zip(params[i].iter().zip(vels[k].iter()))
-                        {
-                            *s = t + cfg.delta * vv;
-                        }
-                        oracles[k].grad(&scratch, &mut worker_rngs[k], &mut grads[k]);
-                        flat::nesterov_step(
-                            &mut params[i],
-                            &mut vels[k],
-                            &grads[k],
-                            cfg.eta,
-                            cfg.delta,
-                        );
-                    } else {
-                        let theta_now = &params[i];
-                        oracles[k].grad(theta_now, &mut worker_rngs[k], &mut grads[k]);
-                        flat::sgd_step(&mut params[i], &grads[k], cfg.eta);
+                if layout.is_leaf(i) {
+                    let k = i - layout.first_leaf;
+                    let loss = local_step_decoupled(cfg, &mut workers[k], &mut oracles[k]);
+                    if !loss.is_finite() {
+                        diverged = true;
                     }
                     dt = cfg.cost.grad_time(&mut time_rng) + cfg.cost.t_data;
                     breakdown.compute += dt - cfg.cost.t_data;
                     breakdown.data += cfg.cost.t_data;
                     total_steps += 1;
                 } else {
-                    dt = cfg.cost.t_grad * cfg.interior_activity;
+                    dt = cfg.cost.t_grad * spec.interior_activity;
                 }
                 clocks[i] += 1;
                 let t = clocks[i];
@@ -288,39 +165,42 @@ pub fn run_tree<O: GradOracle>(oracles: &mut [O], cfg: &TreeConfig) -> RunResult
                 let (tau_up, tau_down) = taus[i];
                 let mut send_to: Vec<usize> = Vec::new();
                 if tau_up != u64::MAX && t % tau_up == 0 {
-                    if let Some(par) = topo.parent[i] {
+                    if let Some(par) = layout.parent[i] {
                         send_to.push(par);
                     }
                 }
                 if tau_down != u64::MAX && t % tau_down == 0 {
-                    send_to.extend(topo.children[i].iter().copied());
+                    send_to.extend(layout.children[i].iter().copied());
                 }
+                let theta_now: &[f32] = if i < layout.first_leaf {
+                    &interior[i]
+                } else {
+                    &workers[i - layout.first_leaf].theta
+                };
                 for dest in send_to {
                     // Intra-machine (bottom-layer) links are cheap.
-                    let discount = if topo.is_leaf(dest)
-                        || topo.is_leaf(i)
-                    {
-                        cfg.intra_discount
+                    let discount = if layout.is_leaf(dest) || layout.is_leaf(i) {
+                        spec.intra_discount
                     } else {
                         1.0
                     };
                     let pidx = match free_payloads.pop() {
                         Some(idx) => {
-                            payloads[idx].copy_from_slice(&params[i]);
+                            payloads[idx].copy_from_slice(theta_now);
                             idx
                         }
                         None => {
-                            payloads.push(params[i].clone());
+                            payloads.push(theta_now.to_vec());
                             payloads.len() - 1
                         }
                     };
-                    let delay = cfg.cost.one_way_time() * discount;
+                    let delay = cfg.cost.one_way_time_scaled(discount);
                     breakdown.comm += delay;
                     heap.push(Ev(now + delay, seq, EvKind::Deliver { to: dest, payload_idx: pidx }));
                     seq += 1;
                     // Non-blocking: no dt added to the sender.
                 }
-                if flat::norm2(&params[i]) > 1e8 {
+                if flat::norm2(theta_now) > 1e8 {
                     diverged = true;
                 }
                 if dt <= 0.0 {
@@ -332,7 +212,9 @@ pub fn run_tree<O: GradOracle>(oracles: &mut [O], cfg: &TreeConfig) -> RunResult
         }
     }
 
-    let st = oracles[0].eval(&params[0]);
+    let root_theta: &[f32] =
+        if layout.first_leaf == 0 { &workers[0].theta } else { &interior[0] };
+    let st = oracles[0].eval(root_theta);
     result.curve.push(CurvePoint {
         time: cfg.horizon.min(next_eval),
         train_loss: st.train_loss,
@@ -342,39 +224,46 @@ pub fn run_tree<O: GradOracle>(oracles: &mut [O], cfg: &TreeConfig) -> RunResult
     result.breakdown = breakdown;
     result.total_steps = total_steps;
     result.diverged = diverged || !st.train_loss.is_finite();
-    result
+    Ok(result)
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::cluster::CostModel;
+    use crate::coordinator::method::Method;
+    use crate::coordinator::oracle::MlpOracle;
+    use crate::coordinator::topology::TreeScheme;
+    use crate::data::BlobDataset;
+    use crate::model::MlpConfig;
+    use std::sync::Arc;
 
-    #[test]
-    fn dary_topology_shapes() {
-        let t = Topology::dary(16, 256);
-        // 256 leaves, 16 parents, 1 root.
-        assert_eq!(t.n_nodes, 256 + 16 + 1);
-        assert_eq!(t.first_leaf, 17);
-        assert!(t.parent[0].is_none());
-        assert_eq!(t.children[0].len(), 16);
-        for i in 17..t.n_nodes {
-            assert!(t.is_leaf(i));
-            assert!(t.children[i].is_empty());
+    fn small_cost() -> CostModel {
+        CostModel {
+            t_grad: 1e-3,
+            jitter: 0.1,
+            t_data: 1e-4,
+            latency: 1e-4,
+            bandwidth: 1e9,
+            param_bytes: 1000.0,
         }
-        for i in 1..17 {
-            assert_eq!(t.children[i].len(), 16);
-            assert_eq!(t.parent[i], Some(0));
-            assert!(t.is_leaf_parent(i));
+    }
+
+    fn tree_cfg(method: Method, eta: f32, horizon: f64, eval_every: f64, seed: u64) -> DriverConfig {
+        DriverConfig {
+            eta,
+            method,
+            cost: small_cost(),
+            horizon,
+            eval_every,
+            seed,
+            max_steps: u64::MAX / 2,
+            lr_decay_gamma: 0.0,
         }
     }
 
     #[test]
     fn tree_trains_on_blobs_with_both_schemes() {
-        use crate::coordinator::oracle::MlpOracle;
-        use crate::data::BlobDataset;
-        use crate::model::MlpConfig;
-        use std::sync::Arc;
-
         let data = Arc::new(BlobDataset::generate(8, 4, 1024, 256, 0.8, 1));
         let mcfg = MlpConfig::new(&[8, 16, 4], 1e-4);
         for scheme in [
@@ -382,30 +271,15 @@ mod tests {
             TreeScheme::UpDown { tau_up: 2, tau_down: 8 },
         ] {
             let mut oracles = MlpOracle::family(data.clone(), &mcfg, 32, 16);
-            let cost = CostModel {
-                t_grad: 1e-3,
-                jitter: 0.1,
-                t_data: 1e-4,
-                latency: 1e-4,
-                bandwidth: 1e9,
-                param_bytes: 1000.0,
-            };
-            let cfg = TreeConfig {
-                degree: 4,
-                leaves: 16,
-                scheme,
-                alpha: 0.9 / 5.0,
-                eta: 0.1,
-                delta: 0.0,
-                cost,
-                interior_activity: 0.25,
-                intra_discount: 0.2,
-                horizon: 0.5,
-                eval_every: 0.1,
-                seed: 11,
-                max_events: 5_000_000,
-            };
-            let r = run_tree(&mut oracles, &cfg);
+            let spec = TreeSpec::new(4, scheme);
+            let cfg = tree_cfg(
+                Method::Easgd { alpha: 0.9 / 5.0, tau: 1 },
+                0.1,
+                0.5,
+                0.1,
+                11,
+            );
+            let r = run_tree_sim(&mut oracles, &cfg, &spec).unwrap();
             assert!(!r.diverged, "{scheme:?} diverged");
             assert!(r.total_steps > 1000, "{scheme:?}: {} steps", r.total_steps);
             let first = r.curve.first().unwrap().train_loss;
@@ -416,38 +290,19 @@ mod tests {
 
     #[test]
     fn tree_with_momentum_is_stable_at_reduced_eta() {
-        use crate::coordinator::oracle::MlpOracle;
-        use crate::data::BlobDataset;
-        use crate::model::MlpConfig;
-        use std::sync::Arc;
-
         let data = Arc::new(BlobDataset::generate(8, 4, 512, 128, 0.8, 2));
         let mcfg = MlpConfig::new(&[8, 16, 4], 1e-4);
         let mut oracles = MlpOracle::family(data, &mcfg, 32, 16);
-        let cost = CostModel {
-            t_grad: 1e-3,
-            jitter: 0.1,
-            t_data: 1e-4,
-            latency: 1e-4,
-            bandwidth: 1e9,
-            param_bytes: 1000.0,
-        };
-        let cfg = TreeConfig {
-            degree: 4,
-            leaves: 16,
-            scheme: TreeScheme::MultiScale { tau1: 1, tau2: 10 },
-            alpha: 0.9 / 5.0,
-            eta: 0.01, // thesis: momentum δ=0.9 ⇒ reduce η ×10
-            delta: 0.9,
-            cost,
-            interior_activity: 0.25,
-            intra_discount: 0.2,
-            horizon: 0.5,
-            eval_every: 0.25,
-            seed: 13,
-            max_events: 5_000_000,
-        };
-        let r = run_tree(&mut oracles, &cfg);
+        let spec = TreeSpec::new(4, TreeScheme::MultiScale { tau1: 1, tau2: 10 });
+        // Thesis: momentum δ=0.9 ⇒ reduce η ×10.
+        let cfg = tree_cfg(
+            Method::Eamsgd { alpha: 0.9 / 5.0, tau: 1, delta: 0.9 },
+            0.01,
+            0.5,
+            0.25,
+            13,
+        );
+        let r = run_tree_sim(&mut oracles, &cfg, &spec).unwrap();
         assert!(!r.diverged);
         let first = r.curve.first().unwrap().train_loss;
         let last = r.curve.last().unwrap().train_loss;
@@ -455,13 +310,24 @@ mod tests {
     }
 
     #[test]
-    fn ragged_tree_still_connects_everyone() {
-        let t = Topology::dary(4, 10); // levels: 10, 3, 1
-        assert_eq!(t.n_nodes, 14);
-        for i in 1..t.n_nodes {
-            assert!(t.parent[i].is_some());
-        }
-        let total_children: usize = t.children.iter().map(|c| c.len()).sum();
-        assert_eq!(total_children, t.n_nodes - 1);
+    fn tree_rejects_methods_without_a_tree_form() {
+        let mut oracles =
+            crate::coordinator::oracle::QuadraticOracle::family(8, 1.0, 0.0, 1.0, 0.0, 4);
+        let spec = TreeSpec::new(2, TreeScheme::UpDown { tau_up: 1, tau_down: 4 });
+        let cfg = tree_cfg(Method::Downpour { tau: 1 }, 0.1, 0.1, 0.1, 1);
+        let e = run_tree_sim(&mut oracles, &cfg, &spec).unwrap_err();
+        assert!(format!("{e}").contains("tree"), "{e}");
+    }
+
+    #[test]
+    fn tree_respects_the_step_budget() {
+        let mut oracles =
+            crate::coordinator::oracle::QuadraticOracle::family(16, 1.0, 0.0, 1.0, 0.0, 4);
+        let spec = TreeSpec::new(2, TreeScheme::UpDown { tau_up: 1, tau_down: 4 });
+        let mut cfg = tree_cfg(Method::Easgd { alpha: 0.3, tau: 1 }, 0.1, 1e6, 1e6, 3);
+        cfg.max_steps = 500;
+        let r = run_tree_sim(&mut oracles, &cfg, &spec).unwrap();
+        assert_eq!(r.total_steps, 500);
+        assert!(!r.diverged);
     }
 }

@@ -1,0 +1,437 @@
+//! EASGD **Tree**, real-thread backend: the
+//! [`super::executor::ThreadExecutor`] face of
+//! [`super::topology::Topology::Tree`].
+//!
+//! Where [`super::tree`] *models* the fully-asynchronous tree protocol
+//! in virtual time, this backend *is* that protocol: every tree node is
+//! an OS thread, and parameter snapshots travel over `mpsc` channels.
+//!
+//! * **Leaf workers** run the shared master-decoupled local step
+//!   ([`super::executor::local_step_decoupled`]) on their own
+//!   [`WorkerState`] — plain SGD under [`Method::Easgd`], Nesterov
+//!   under [`Method::Eamsgd`] — and push a full parameter snapshot to
+//!   their parent every τ_up steps.
+//! * **Interior nodes** are message-absorbing actors (no gradient
+//!   work, the thesis' final design): each activation — an arrival, or
+//!   an idle tick — drains the inbox, folding every snapshot in with
+//!   the Gauss–Seidel rule x ← x + α(x_arrived − x), then pushes its
+//!   own snapshot up (τ_up) / down (τ_down) per the
+//!   [`super::topology::node_taus`] table.
+//!
+//! The §6.1 delivery rule — "apply just-in-time, never during a
+//! gradient update" — holds by construction: a leaf owns its parameter
+//! vector, drains its inbox *before* each gradient step, and is never
+//! written by another thread.
+//!
+//! Shutdown is a bottom-up flush: an exiting leaf sends one final
+//! [`Msg::Flush`] snapshot up; an interior node waits (bounded) for a
+//! flush from every child, absorbs them, and flushes up in turn — so
+//! the root's last snapshot reflects the leaves' final parameters, not
+//! whatever happened to be absorbed when the stop flag flipped.
+//!
+//! Semantics match [`super::threaded`]: `horizon` / `eval_every` are
+//! REAL (wall-clock) seconds, the cost model is ignored (real compute
+//! is the cost), `max_steps` caps total leaf steps, and runs are not
+//! bit-deterministic. The root node — the thesis' tracked variable —
+//! publishes timestamped snapshots at the eval cadence; they are scored
+//! with `oracles[0]` after the threads join, so the evaluator never
+//! contends with the run.
+//!
+//! [`Method::Easgd`]: super::method::Method::Easgd
+//! [`Method::Eamsgd`]: super::method::Method::Eamsgd
+
+use super::executor::{eval_point, local_step_decoupled, tree_alpha, DriverConfig, WorkerState};
+use super::oracle::GradOracle;
+use super::topology::{node_taus, TreeLayout, TreeSpec};
+use crate::cluster::{RunResult, TimeBreakdown};
+use crate::error::Result;
+use crate::model::flat;
+use crate::rng::Rng;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender};
+use std::sync::Mutex;
+use std::time::{Duration, Instant};
+
+/// A parameter snapshot in flight.
+enum Msg {
+    /// Ordinary τ-cadence push.
+    Snap(Vec<f32>),
+    /// A child's final snapshot, sent exactly once as it exits (never
+    /// sent downward, so every flush a node receives is from a child).
+    Flush(Vec<f32>),
+}
+
+impl Msg {
+    fn payload(&self) -> &[f32] {
+        match self {
+            Msg::Snap(p) | Msg::Flush(p) => p,
+        }
+    }
+}
+
+/// Idle-activation period of interior actors: how long an interior
+/// node waits for an arrival before ticking anyway (the real-time
+/// analog of the simulator's `interior_activity`).
+const INTERIOR_TICK: Duration = Duration::from_micros(500);
+
+/// How long an interior node waits for its children's flushes at
+/// shutdown before giving up (children flush within microseconds unless
+/// one of them panicked).
+const FLUSH_DEADLINE: Duration = Duration::from_millis(250);
+
+/// One node's end of the tree wiring.
+struct NodeChans {
+    rx: Receiver<Msg>,
+    parent_tx: Option<Sender<Msg>>,
+    children_tx: Vec<Sender<Msg>>,
+    tau_up: u64,
+    tau_down: u64,
+}
+
+/// Cross-thread run state.
+struct Shared {
+    stop: AtomicBool,
+    /// Claimed leaf steps (global budget).
+    steps: AtomicU64,
+    diverged: AtomicBool,
+    compute_ns: AtomicU64,
+    comm_ns: AtomicU64,
+}
+
+/// The root's timestamped snapshot log (scored after the join).
+struct RootSnaps {
+    snaps: Mutex<Vec<(f64, Vec<f32>)>>,
+    t0: Instant,
+    cadence: f64,
+}
+
+impl RootSnaps {
+    fn maybe_publish(&self, theta: &[f32], next_pub: &mut f64) {
+        let el = self.t0.elapsed().as_secs_f64();
+        if el >= *next_pub {
+            self.snaps.lock().unwrap().push((el, theta.to_vec()));
+            while *next_pub <= el {
+                *next_pub += self.cadence;
+            }
+        }
+    }
+
+    fn publish_final(&self, theta: &[f32]) {
+        let el = self.t0.elapsed().as_secs_f64();
+        self.snaps.lock().unwrap().push((el, theta.to_vec()));
+    }
+}
+
+fn leaf_loop<O: GradOracle>(
+    cfg: &DriverConfig,
+    alpha: f32,
+    ch: NodeChans,
+    w: &mut WorkerState,
+    oracle: &mut O,
+    sh: &Shared,
+    root: Option<&RootSnaps>,
+) {
+    let mut next_pub = root.map_or(0.0, |r| r.cadence);
+    let mut clock = 0u64;
+    loop {
+        if sh.stop.load(Ordering::Relaxed) {
+            break;
+        }
+        // Absorb parent pushes just-in-time — before the gradient step,
+        // never during it (§6.1 delivery rule).
+        let t_comm = Instant::now();
+        let mut absorbed = false;
+        while let Ok(msg) = ch.rx.try_recv() {
+            flat::moving_average(&mut w.theta, msg.payload(), alpha);
+            absorbed = true;
+        }
+        if absorbed {
+            sh.comm_ns
+                .fetch_add(t_comm.elapsed().as_nanos() as u64, Ordering::Relaxed);
+        }
+        // Claim one step of the global leaf budget.
+        let k = sh.steps.fetch_add(1, Ordering::Relaxed);
+        if k >= cfg.max_steps {
+            sh.steps.fetch_sub(1, Ordering::Relaxed);
+            sh.stop.store(true, Ordering::Relaxed);
+            break;
+        }
+        let t_grad = Instant::now();
+        let loss = local_step_decoupled(cfg, w, oracle);
+        sh.compute_ns
+            .fetch_add(t_grad.elapsed().as_nanos() as u64, Ordering::Relaxed);
+        clock += 1;
+        if !loss.is_finite() || flat::norm2(&w.theta) > 1e8 {
+            sh.diverged.store(true, Ordering::Relaxed);
+            sh.stop.store(true, Ordering::Relaxed);
+            break;
+        }
+        if ch.tau_up != u64::MAX && clock % ch.tau_up == 0 {
+            if let Some(tx) = &ch.parent_tx {
+                let t_send = Instant::now();
+                let _ = tx.send(Msg::Snap(w.theta.clone()));
+                sh.comm_ns
+                    .fetch_add(t_send.elapsed().as_nanos() as u64, Ordering::Relaxed);
+            }
+        }
+        if let Some(r) = root {
+            // Single-node tree: the leaf doubles as the root.
+            r.maybe_publish(&w.theta, &mut next_pub);
+        }
+    }
+    if let Some(tx) = &ch.parent_tx {
+        let _ = tx.send(Msg::Flush(w.theta.clone()));
+    }
+    if let Some(r) = root {
+        r.publish_final(&w.theta);
+    }
+}
+
+fn interior_loop(
+    alpha: f32,
+    ch: NodeChans,
+    mut theta: Vec<f32>,
+    sh: &Shared,
+    root: Option<&RootSnaps>,
+) {
+    let mut next_pub = root.map_or(0.0, |r| r.cadence);
+    let mut clock = 0u64;
+    let mut flushed = 0usize;
+    let absorb = |theta: &mut Vec<f32>, m: &Msg, flushed: &mut usize| {
+        flat::moving_average(theta, m.payload(), alpha);
+        if matches!(m, Msg::Flush(_)) {
+            *flushed += 1;
+        }
+    };
+    loop {
+        if sh.stop.load(Ordering::Relaxed) {
+            break;
+        }
+        // One activation: wake on the first arrival (or an idle tick),
+        // then drain the inbox, absorbing each snapshot in arrival
+        // order (Gauss–Seidel).
+        match ch.rx.recv_timeout(INTERIOR_TICK) {
+            Ok(msg) => {
+                let t_comm = Instant::now();
+                absorb(&mut theta, &msg, &mut flushed);
+                while let Ok(m) = ch.rx.try_recv() {
+                    absorb(&mut theta, &m, &mut flushed);
+                }
+                sh.comm_ns
+                    .fetch_add(t_comm.elapsed().as_nanos() as u64, Ordering::Relaxed);
+            }
+            Err(RecvTimeoutError::Timeout) => {}
+            // Cannot happen while the run holds the sender set; avoid a
+            // busy spin if it ever does.
+            Err(RecvTimeoutError::Disconnected) => std::thread::sleep(INTERIOR_TICK),
+        }
+        clock += 1;
+        if ch.tau_up != u64::MAX && clock % ch.tau_up == 0 {
+            if let Some(tx) = &ch.parent_tx {
+                let _ = tx.send(Msg::Snap(theta.clone()));
+            }
+        }
+        if ch.tau_down != u64::MAX && clock % ch.tau_down == 0 {
+            for tx in &ch.children_tx {
+                let _ = tx.send(Msg::Snap(theta.clone()));
+            }
+        }
+        if let Some(r) = root {
+            r.maybe_publish(&theta, &mut next_pub);
+        }
+    }
+    // Bottom-up flush: absorb until every child has sent its final
+    // snapshot (bounded wait), then pass the aggregate up. No gradient
+    // runs anywhere anymore, so absorbing stays just-in-time.
+    let deadline = Instant::now() + FLUSH_DEADLINE;
+    while flushed < ch.children_tx.len() && Instant::now() < deadline {
+        match ch.rx.recv_timeout(INTERIOR_TICK) {
+            Ok(m) => absorb(&mut theta, &m, &mut flushed),
+            Err(RecvTimeoutError::Timeout) => {}
+            Err(RecvTimeoutError::Disconnected) => break,
+        }
+    }
+    while let Ok(m) = ch.rx.try_recv() {
+        absorb(&mut theta, &m, &mut flushed);
+    }
+    if let Some(tx) = &ch.parent_tx {
+        let _ = tx.send(Msg::Flush(theta.clone()));
+    }
+    if let Some(r) = root {
+        r.publish_final(&theta);
+    }
+}
+
+/// Run one EASGD Tree experiment on real threads. `oracles[k]` is leaf
+/// k's gradient computer; `oracles[0]` scores the root's snapshot log
+/// after the join. `cfg.method` must be EASGD/EAMSGD (its α is the
+/// per-arrival moving rate); `cfg.max_steps` caps total leaf steps and
+/// `cfg.horizon` is a real-seconds wall.
+pub fn run_tree_threaded<O: GradOracle + Send>(
+    oracles: &mut [O],
+    cfg: &DriverConfig,
+    spec: &TreeSpec,
+) -> Result<RunResult> {
+    let leaves = oracles.len();
+    assert!(leaves >= 1);
+    spec.validate()?;
+    let alpha = tree_alpha(cfg.method)?;
+    let layout = TreeLayout::dary(spec.degree, leaves);
+    let taus = node_taus(&layout, spec.scheme);
+    let init = oracles[0].init_params();
+
+    let mut root_rng = Rng::new(cfg.seed);
+    let mut workers = WorkerState::family(&init, leaves, &mut root_rng);
+
+    // One channel per node, wired along the tree edges. `txs` stays
+    // alive until the threads join, so no receiver sees a disconnect
+    // mid-run.
+    let (txs, rxs): (Vec<Sender<Msg>>, Vec<Receiver<Msg>>) =
+        (0..layout.n_nodes).map(|_| channel()).unzip();
+    let mut chans: Vec<NodeChans> = Vec::with_capacity(layout.n_nodes);
+    for (i, rx) in rxs.into_iter().enumerate() {
+        chans.push(NodeChans {
+            rx,
+            parent_tx: layout.parent[i].map(|p| txs[p].clone()),
+            children_tx: layout.children[i].iter().map(|&c| txs[c].clone()).collect(),
+            tau_up: taus[i].0,
+            tau_down: taus[i].1,
+        });
+    }
+
+    let shared = Shared {
+        stop: AtomicBool::new(false),
+        steps: AtomicU64::new(0),
+        diverged: AtomicBool::new(false),
+        compute_ns: AtomicU64::new(0),
+        comm_ns: AtomicU64::new(0),
+    };
+    let root_snaps = RootSnaps {
+        snaps: Mutex::new(vec![(0.0, init.clone())]),
+        t0: Instant::now(),
+        cadence: cfg.eval_every.max(1e-3),
+    };
+
+    std::thread::scope(|s| {
+        let mut leaf_handles = Vec::new();
+        let mut interior_handles = Vec::new();
+        let mut leaf_iter = workers.iter_mut().zip(oracles.iter_mut());
+        for (i, ch) in chans.into_iter().enumerate() {
+            let shared = &shared;
+            let root = if i == 0 { Some(&root_snaps) } else { None };
+            if i < layout.first_leaf {
+                let theta = init.clone();
+                interior_handles
+                    .push(s.spawn(move || interior_loop(alpha, ch, theta, shared, root)));
+            } else {
+                let (w, o) = leaf_iter.next().unwrap();
+                leaf_handles.push(s.spawn(move || leaf_loop(cfg, alpha, ch, w, o, shared, root)));
+            }
+        }
+        loop {
+            let el = root_snaps.t0.elapsed().as_secs_f64();
+            let leaves_done = leaf_handles.iter().all(|h| h.is_finished());
+            if el > cfg.horizon || leaves_done {
+                shared.stop.store(true, Ordering::Relaxed);
+            }
+            if leaves_done && interior_handles.iter().all(|h| h.is_finished()) {
+                break;
+            }
+            std::thread::sleep(Duration::from_micros(200));
+        }
+        // Scope joins on exit; propagate worker panics eagerly.
+        for h in leaf_handles.into_iter().chain(interior_handles) {
+            if let Err(e) = h.join() {
+                std::panic::resume_unwind(e);
+            }
+        }
+    });
+    drop(txs);
+
+    let mut result = RunResult::default();
+    let mut diverged = shared.diverged.load(Ordering::Relaxed);
+    let snaps = root_snaps.snaps.into_inner().unwrap();
+    for (t, theta) in &snaps {
+        if !eval_point(&mut oracles[0], theta, *t, &mut result.curve) {
+            diverged = true;
+        }
+    }
+    result.total_steps = shared.steps.load(Ordering::Relaxed);
+    result.breakdown = TimeBreakdown {
+        compute: shared.compute_ns.load(Ordering::Relaxed) as f64 * 1e-9,
+        data: 0.0,
+        comm: shared.comm_ns.load(Ordering::Relaxed) as f64 * 1e-9,
+    };
+    result.diverged = diverged;
+    Ok(result)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::CostModel;
+    use crate::coordinator::method::Method;
+    use crate::coordinator::oracle::QuadraticOracle;
+    use crate::coordinator::topology::TreeScheme;
+
+    fn cfg(method: Method, max_steps: u64) -> DriverConfig {
+        DriverConfig {
+            eta: 0.1,
+            method,
+            cost: CostModel::cifar_like(100), // unused by this backend
+            horizon: 30.0,                    // real-seconds safety net
+            eval_every: 1e6,
+            seed: 7,
+            max_steps,
+            lr_decay_gamma: 0.0,
+        }
+    }
+
+    #[test]
+    fn threaded_tree_converges_on_quadratic_with_both_schemes() {
+        for scheme in [
+            TreeScheme::MultiScale { tau1: 1, tau2: 4 },
+            TreeScheme::UpDown { tau_up: 1, tau_down: 4 },
+        ] {
+            let mut oracles = QuadraticOracle::family(64, 1.0, 0.0, 1.0, 0.0, 4);
+            let spec = TreeSpec::new(2, scheme);
+            let c = cfg(Method::Easgd { alpha: 0.3, tau: 1 }, 20_000);
+            let r = run_tree_threaded(&mut oracles, &c, &spec).unwrap();
+            assert!(!r.diverged, "{scheme:?}");
+            assert_eq!(r.total_steps, 20_000, "{scheme:?}");
+            assert!(r.curve.len() >= 2, "{scheme:?}");
+            let last = r.curve.last().unwrap().train_loss;
+            assert!(last < 1e-4, "{scheme:?}: final root loss {last}");
+        }
+    }
+
+    #[test]
+    fn threaded_tree_respects_budget_and_accounts_time() {
+        let mut oracles = QuadraticOracle::family(256, 1.0, 0.0, 1.0, 0.0, 8);
+        let spec = TreeSpec::new(4, TreeScheme::UpDown { tau_up: 2, tau_down: 8 });
+        let c = cfg(Method::Easgd { alpha: 0.9 / 5.0, tau: 1 }, 2000);
+        let r = run_tree_threaded(&mut oracles, &c, &spec).unwrap();
+        assert_eq!(r.total_steps, 2000);
+        assert!(!r.diverged);
+        assert!(r.breakdown.compute > 0.0);
+    }
+
+    #[test]
+    fn single_leaf_tree_degenerates_to_local_sgd() {
+        let mut oracles = QuadraticOracle::family(16, 2.0, 0.0, 1.0, 0.0, 1);
+        let spec = TreeSpec::new(2, TreeScheme::UpDown { tau_up: 1, tau_down: 1 });
+        let c = cfg(Method::Easgd { alpha: 0.3, tau: 1 }, 800);
+        let r = run_tree_threaded(&mut oracles, &c, &spec).unwrap();
+        assert!(!r.diverged);
+        assert!(r.curve.last().unwrap().train_loss < 1e-3);
+    }
+
+    #[test]
+    fn threaded_tree_rejects_methods_without_a_tree_form() {
+        let mut oracles = QuadraticOracle::family(8, 1.0, 0.0, 1.0, 0.0, 2);
+        let spec = TreeSpec::new(2, TreeScheme::UpDown { tau_up: 1, tau_down: 1 });
+        let c = cfg(Method::MDownpour { delta: 0.9 }, 10);
+        let e = run_tree_threaded(&mut oracles, &c, &spec).unwrap_err();
+        assert!(format!("{e}").contains("tree"), "{e}");
+    }
+}

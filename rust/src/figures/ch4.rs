@@ -53,7 +53,7 @@ impl Sweep {
         }
     }
 
-    pub fn run(&self, p: usize, method: Method, eta: f32, family: &str) -> RunResult {
+    pub fn run(&self, p: usize, method: Method, eta: f32, family: &str) -> Result<RunResult> {
         self.run_decay(p, method, eta, family, 0.0)
     }
 
@@ -64,7 +64,7 @@ impl Sweep {
         eta: f32,
         family: &str,
         gamma: f64,
-    ) -> RunResult {
+    ) -> Result<RunResult> {
         let mut oracles = MlpOracle::family(self.data.clone(), &self.mcfg, 32, p);
         let cfg = DriverConfig {
             eta,
@@ -148,13 +148,13 @@ pub fn fig4_tau_sweep(opts: &FigOpts) -> Result<()> {
     let mut downpour_best = vec![];
     for &tau in &[1u32, 4, 16, 64] {
         let runs: Vec<(&str, RunResult)> = vec![
-            ("EASGD", sw.run(p, Method::easgd_default(p, tau), 0.08, "cifar")),
-            ("EAMSGD", sw.run(p, eamsgd(p, tau), 0.016, "cifar")),
-            ("DOWNPOUR", sw.run(p, Method::Downpour { tau }, 0.05, "cifar")),
-            ("ADOWNPOUR", sw.run(p, Method::ADownpour { tau }, 0.05, "cifar")),
+            ("EASGD", sw.run(p, Method::easgd_default(p, tau), 0.08, "cifar")?),
+            ("EAMSGD", sw.run(p, eamsgd(p, tau), 0.016, "cifar")?),
+            ("DOWNPOUR", sw.run(p, Method::Downpour { tau }, 0.05, "cifar")?),
+            ("ADOWNPOUR", sw.run(p, Method::ADownpour { tau }, 0.05, "cifar")?),
             (
                 "MVADOWNPOUR",
-                sw.run(p, Method::MvaDownpour { tau, alpha: 0.001 }, 0.05, "cifar"),
+                sw.run(p, Method::MvaDownpour { tau, alpha: 0.001 }, 0.05, "cifar")?,
             ),
         ];
         for (name, r) in &runs {
@@ -174,7 +174,7 @@ pub fn fig4_tau_sweep(opts: &FigOpts) -> Result<()> {
         }
     }
     // MDOWNPOUR only defined at τ=1.
-    let r = sw.run(p, Method::MDownpour { delta: 0.9 }, 0.002, "cifar");
+    let r = sw.run(p, Method::MDownpour { delta: 0.9 }, 0.002, "cifar")?;
     dump_curve(&mut csv, "MDOWNPOUR", 1, p, &r)?;
     println!("fig4.x τ=1   MDOWNPOUR    best test err {:.3}", r.best_test_error());
 
@@ -210,13 +210,13 @@ pub fn fig4_p_sweep(opts: &FigOpts) -> Result<()> {
     let mut eamsgd_best = Vec::new();
     for &p in &[4usize, 8, 16] {
         let runs: Vec<(&str, u32, RunResult)> = vec![
-            ("EASGD", 10, sw.run(p, Method::easgd_default(p, 10), 0.08, "cifar")),
-            ("EAMSGD", 10, sw.run(p, eamsgd(p, 10), 0.016, "cifar")),
-            ("DOWNPOUR", 1, sw.run(p, Method::Downpour { tau: 1 }, 0.03, "cifar")),
+            ("EASGD", 10, sw.run(p, Method::easgd_default(p, 10), 0.08, "cifar")?),
+            ("EAMSGD", 10, sw.run(p, eamsgd(p, 10), 0.016, "cifar")?),
+            ("DOWNPOUR", 1, sw.run(p, Method::Downpour { tau: 1 }, 0.03, "cifar")?),
             (
                 "MDOWNPOUR",
                 1,
-                sw.run(p, Method::MDownpour { delta: 0.9 }, 0.002, "cifar"),
+                sw.run(p, Method::MDownpour { delta: 0.9 }, 0.002, "cifar")?,
             ),
         ];
         for (name, tau, r) in &runs {
@@ -256,9 +256,9 @@ pub fn fig4_imagenet(opts: &FigOpts) -> Result<()> {
     )?;
     for &p in &[4usize, 8] {
         let runs: Vec<(&str, u32, RunResult)> = vec![
-            ("EASGD", 10, sw.run(p, Method::easgd_default(p, 10), 0.1, "imagenet")),
-            ("EAMSGD", 10, sw.run(p, eamsgd(p, 10), 0.016, "imagenet")),
-            ("DOWNPOUR", 1, sw.run(p, Method::Downpour { tau: 1 }, 0.05, "imagenet")),
+            ("EASGD", 10, sw.run(p, Method::easgd_default(p, 10), 0.1, "imagenet")?),
+            ("EAMSGD", 10, sw.run(p, eamsgd(p, 10), 0.016, "imagenet")?),
+            ("DOWNPOUR", 1, sw.run(p, Method::Downpour { tau: 1 }, 0.05, "imagenet")?),
         ];
         for (name, tau, r) in &runs {
             dump_curve(&mut csv, name, *tau, p, r)?;
@@ -326,8 +326,8 @@ pub fn fig4_12_eta(opts: &FigOpts) -> Result<()> {
     let mut ea = Vec::new();
     let mut eam = Vec::new();
     for &eta in &etas {
-        let r1 = sw.run(p, Method::easgd_default(p, 10), eta, "cifar");
-        let r2 = sw.run(p, Method::eamsgd_default(p, 10), eta * 0.2, "cifar");
+        let r1 = sw.run(p, Method::easgd_default(p, 10), eta, "cifar")?;
+        let r2 = sw.run(p, Method::eamsgd_default(p, 10), eta * 0.2, "cifar")?;
         for pt in &r1.curve {
             csv_row!(csv, "EASGD", eta, pt.time, pt.train_loss, pt.test_loss, pt.test_error)?;
         }
@@ -371,8 +371,8 @@ pub fn fig4_13_tau_decay(opts: &FigOpts) -> Result<()> {
     let mut easgd_range = (f64::INFINITY, f64::NEG_INFINITY);
     for &tau in taus {
         for &(gamma, glab) in &[(0.0f64, "0"), (1e-3, "1e-3")] {
-            let r1 = sw.run_decay(p, Method::easgd_default(p, tau), 0.08, "cifar", gamma);
-            let r2 = sw.run_decay(p, eamsgd(p, tau), 0.016, "cifar", gamma);
+            let r1 = sw.run_decay(p, Method::easgd_default(p, tau), 0.08, "cifar", gamma)?;
+            let r2 = sw.run_decay(p, eamsgd(p, tau), 0.016, "cifar", gamma)?;
             for pt in &r1.curve {
                 csv_row!(csv, "EASGD", tau, glab, pt.time, pt.train_loss, pt.test_loss, pt.test_error)?;
             }
@@ -405,13 +405,17 @@ pub fn fig4_speedup(opts: &FigOpts) -> Result<()> {
     let sw = Sweep::new(opts);
     let mut results: Vec<(String, usize, RunResult)> = Vec::new();
     for &p in &[4usize, 8, 16] {
-        results.push(("EASGD".into(), p, sw.run(p, Method::easgd_default(p, 10), 0.08, "cifar")));
-        results.push(("EAMSGD".into(), p, sw.run(p, eamsgd(p, 10), 0.016, "cifar")));
-        results.push(("DOWNPOUR".into(), p, sw.run(p, Method::Downpour { tau: 1 }, 0.03, "cifar")));
+        results.push(("EASGD".into(), p, sw.run(p, Method::easgd_default(p, 10), 0.08, "cifar")?));
+        results.push(("EAMSGD".into(), p, sw.run(p, eamsgd(p, 10), 0.016, "cifar")?));
+        results.push((
+            "DOWNPOUR".into(),
+            p,
+            sw.run(p, Method::Downpour { tau: 1 }, 0.03, "cifar")?,
+        ));
         results.push((
             "MDOWNPOUR".into(),
             p,
-            sw.run(p, Method::MDownpour { delta: 0.9 }, 0.002, "cifar"),
+            sw.run(p, Method::MDownpour { delta: 0.9 }, 0.002, "cifar")?,
         ));
     }
     let msgd = sw.run_seq(SeqMethod::Msgd { delta: 0.9 }, 0.01, "cifar");
@@ -493,7 +497,7 @@ pub fn tab4_4(opts: &FigOpts) -> Result<()> {
                 if p == 1 && tau == 10 {
                     continue; // thesis marks τ=10, p=1 as NA
                 }
-                let r = iw.run(p, method, 0.03, family);
+                let r = iw.run(p, method, 0.03, family)?;
                 let steps = r.total_steps.max(1) as f64;
                 // Normalize like the paper: per 400 (CIFAR) / 1024
                 // (ImageNet) mini-batches PER WORKER.

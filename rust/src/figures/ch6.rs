@@ -5,7 +5,8 @@ use super::csv::Csv;
 use super::FigOpts;
 use crate::cluster::RunResult;
 use crate::coordinator::{
-    gauss_seidel, run_tree, Method, MlpOracle, TreeConfig, TreeScheme,
+    gauss_seidel, run_with_backend_topology, Backend, DriverConfig, Method, MlpOracle,
+    Topology, TreeScheme, TreeSpec,
 };
 use crate::csv_row;
 use crate::error::Result;
@@ -18,6 +19,29 @@ fn tree_dims(opts: &FigOpts) -> (usize, usize) {
     }
 }
 
+/// (horizon, eval cadence): virtual seconds under `backend=sim`
+/// (matching the ch4 sweeps), REAL wall-clock seconds under
+/// `backend=thread` — kept short, since real compute replaces the cost
+/// model there.
+fn tree_time(opts: &FigOpts) -> (f64, f64) {
+    match opts.backend {
+        Backend::Sim => {
+            if opts.full {
+                (240.0, 10.0)
+            } else {
+                (45.0, 2.5)
+            }
+        }
+        Backend::Thread => {
+            if opts.full {
+                (60.0, 2.5)
+            } else {
+                (8.0, 0.5)
+            }
+        }
+    }
+}
+
 fn tree_run(
     opts: &FigOpts,
     sw: &Sweep,
@@ -25,25 +49,29 @@ fn tree_run(
     eta: f32,
     delta: f32,
     seed: u64,
-) -> RunResult {
+) -> Result<RunResult> {
     let (degree, leaves) = tree_dims(opts);
-    let mut oracles = MlpOracle::family(sw.data.clone(), &sw.mcfg, 16, leaves);
-    let cfg = TreeConfig {
-        degree,
-        leaves,
-        scheme,
-        alpha: 0.9 / (degree as f32 + 1.0),
-        eta,
-        delta,
-        cost: sw.cost("cifar"),
-        interior_activity: 0.25,
-        intra_discount: 0.2,
-        horizon: if opts.full { 240.0 } else { 45.0 },
-        eval_every: if opts.full { 10.0 } else { 2.5 },
-        seed,
-        max_events: 100_000_000,
+    // Thesis rate: α = 0.9/(d+1) — each node has at most d+1 neighbors.
+    let alpha = 0.9 / (degree as f32 + 1.0);
+    let method = if delta > 0.0 {
+        Method::Eamsgd { alpha, tau: 1, delta }
+    } else {
+        Method::Easgd { alpha, tau: 1 }
     };
-    run_tree(&mut oracles, &cfg)
+    let (horizon, eval_every) = tree_time(opts);
+    let mut oracles = MlpOracle::family(sw.data.clone(), &sw.mcfg, 16, leaves);
+    let cfg = DriverConfig {
+        eta,
+        method,
+        cost: sw.cost("cifar"),
+        horizon,
+        eval_every,
+        seed,
+        max_steps: u64::MAX / 2,
+        lr_decay_gamma: 0.0,
+    };
+    let topo = Topology::Tree(TreeSpec::new(degree, scheme));
+    run_with_backend_topology(opts.backend, &mut oracles, &cfg, &topo)
 }
 
 /// Figs 6.3–6.10 — both schemes × momentum settings × repeated seeds
@@ -73,7 +101,7 @@ pub fn fig6_tree(opts: &FigOpts) -> Result<()> {
         let mut best = f64::INFINITY;
         let mut final_train = Vec::new();
         for run in 0..reps {
-            let r = tree_run(opts, &sw, scheme, eta, delta, opts.seed + 600 + run);
+            let r = tree_run(opts, &sw, scheme, eta, delta, opts.seed + 600 + run)?;
             for pt in &r.curve {
                 csv_row!(csv, fig, format!("{scheme:?}").replace(',', ";"), eta, delta, run,
                          pt.time, pt.train_loss, pt.test_loss, pt.test_error)?;
@@ -117,7 +145,13 @@ pub fn fig6_tree(opts: &FigOpts) -> Result<()> {
 /// Figs 6.11–6.12 — best-of comparison: EASGD Tree (p=256) vs flat
 /// DOWNPOUR / EASGD at p=16, no momentum.
 pub fn fig6_best(opts: &FigOpts) -> Result<()> {
-    let sw = Sweep::new(opts);
+    let mut sw = Sweep::new(opts);
+    // The flat-star comparators must share the tree's time base —
+    // under backend=thread the tree horizon is short real seconds, and
+    // a best-of comparison across different compute budgets is bogus.
+    let (horizon, eval_every) = tree_time(opts);
+    sw.horizon = horizon;
+    sw.eval_every = eval_every;
     let mut csv = Csv::create(
         format!("{}/fig6_11_6_12.csv", opts.out_dir),
         &["method", "time", "train_loss", "test_loss", "test_error"],
@@ -129,9 +163,9 @@ pub fn fig6_best(opts: &FigOpts) -> Result<()> {
         0.08,
         0.0,
         opts.seed + 990,
-    );
-    let easgd = sw.run(16, Method::easgd_default(16, 10), 0.08, "cifar");
-    let downpour = sw.run(16, Method::Downpour { tau: 1 }, 0.05, "cifar");
+    )?;
+    let easgd = sw.run(16, Method::easgd_default(16, 10), 0.08, "cifar")?;
+    let downpour = sw.run(16, Method::Downpour { tau: 1 }, 0.05, "cifar")?;
     for (name, r) in [("TREE", &tree), ("EASGD16", &easgd), ("DOWNPOUR16", &downpour)] {
         for pt in &r.curve {
             csv_row!(csv, name, pt.time, pt.train_loss, pt.test_loss, pt.test_error)?;

@@ -35,17 +35,21 @@ pub struct FigOpts {
 }
 
 impl FigOpts {
-    /// Panics on an unknown `backend=` value — a figure silently run on
-    /// the wrong executor is worse than a refused invocation.
-    pub fn from_args(args: &Args) -> FigOpts {
+    /// Errors on an unknown `backend=` value — a figure silently run
+    /// on the wrong executor is worse than a refused invocation, and a
+    /// `panic!` is worse than a clean CLI error.
+    pub fn from_args(args: &Args) -> Result<FigOpts> {
         let backend_str = args.get_str("backend", "sim");
-        FigOpts {
+        let backend = match Backend::parse(backend_str) {
+            Some(b) => b,
+            None => bail!("unknown backend '{backend_str}' (sim|thread)"),
+        };
+        Ok(FigOpts {
             out_dir: args.get_str("out-dir", "out").to_string(),
             full: args.get_bool("full", false),
             seed: args.get_u64("seed", 0),
-            backend: Backend::parse(backend_str)
-                .unwrap_or_else(|| panic!("unknown backend '{backend_str}' (sim|thread)")),
-        }
+            backend,
+        })
     }
 }
 
@@ -126,5 +130,14 @@ mod tests {
             run(id, &opts).unwrap();
         }
         assert!(run("nope", &opts).is_err());
+    }
+
+    #[test]
+    fn from_args_rejects_unknown_backend_with_an_error() {
+        let args = Args::parse(["backend=gpu".to_string()]);
+        let e = FigOpts::from_args(&args).unwrap_err();
+        assert!(format!("{e}").contains("unknown backend"), "{e}");
+        let args = Args::parse(["backend=thread".to_string()]);
+        assert_eq!(FigOpts::from_args(&args).unwrap().backend, Backend::Thread);
     }
 }

@@ -23,10 +23,15 @@
 //! - [`model`], [`data`] — flat parameter buffers + fused native update
 //!   ops; synthetic corpora and the §4.1 prefetch pipeline.
 //! - [`coordinator`] — EASGD/EAMSGD, DOWNPOUR and friends behind the
-//!   [`coordinator::Executor`] abstraction with two backends
-//!   (virtual-time [`coordinator::SimExecutor`], real-thread
-//!   [`coordinator::ThreadExecutor`] with a sharded-lock center);
-//!   sequential baselines, round-robin ADMM, and the EASGD **Tree**.
+//!   [`coordinator::Executor`] abstraction: two backends (virtual-time
+//!   [`coordinator::SimExecutor`], real-thread
+//!   [`coordinator::ThreadExecutor`]) × two
+//!   [`coordinator::Topology`]s (flat star with a sharded-lock center;
+//!   the Chapter-6 EASGD **Tree** — `coordinator::tree` in virtual
+//!   time, `coordinator::tree_threaded` as one actor thread per node
+//!   over `mpsc` channels), with a checked method/backend/topology
+//!   support matrix ([`coordinator::check_supported`]); sequential
+//!   baselines and round-robin ADMM ride along.
 //! - [`runtime`] — PJRT artifact loading (always) and execution
 //!   (`pjrt` feature; the in-tree `vendor/xla` stub keeps it compiling
 //!   offline).

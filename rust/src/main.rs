@@ -4,9 +4,12 @@
 //!   repro figure <id|all|list> [out-dir=out] [--full] [seed=N]
 //!       Regenerate a thesis table/figure (DESIGN.md §5 maps ids).
 //!   repro train [method=easgd|eamsgd|downpour|...] [p=4] [tau=10]
-//!               [eta=0.05] [horizon=60] [cost=cifar|imagenet] ...
+//!               [eta=0.05] [horizon=60] [cost=cifar|imagenet]
+//!               [backend=sim|thread] [topology=star|tree] ...
 //!       One distributed run on the native-MLP sweep workload; prints
-//!       the center-variable curve.
+//!       the tracked-variable curve. With topology=tree, p counts the
+//!       LEAVES and degree=/scheme=/tau1=/tau2=/tau_up=/tau_down=
+//!       shape the d-ary tree (thesis Ch. 6).
 //!   repro train-pjrt [p=2] [steps=200] [eta=0.3] [tau=4]
 //!       The end-to-end three-layer run: AOT transformer through PJRT.
 //!   repro inspect
@@ -14,7 +17,10 @@
 
 use elastic_train::bail;
 use elastic_train::config::{Args, ExperimentConfig};
-use elastic_train::coordinator::{run_sequential, run_with_backend, Backend, DriverConfig, MlpOracle};
+use elastic_train::coordinator::{
+    run_sequential, run_with_backend_topology, Backend, DriverConfig, Method, MlpOracle,
+    Topology, TreeScheme, TreeSpec,
+};
 use elastic_train::error::Result;
 use elastic_train::figures::{self, FigOpts};
 #[cfg(feature = "pjrt")]
@@ -41,8 +47,11 @@ fn run() -> Result<()> {
         _ => {
             eprintln!(
                 "usage: repro <figure|train|train-pjrt|inspect> [key=value ...]\n\
-                 figures: repro figure list\n\
-                 backend: train/figure accept backend=sim|thread"
+                 figures:  repro figure list\n\
+                 backend:  train/figure accept backend=sim|thread\n\
+                 topology: train accepts topology=star|tree; with tree:\n\
+                 \x20          degree=4 scheme=multiscale tau1=10 tau2=100\n\
+                 \x20          degree=4 scheme=updown tau_up=1 tau_down=10"
             );
             Ok(())
         }
@@ -57,8 +66,31 @@ fn cmd_figure(args: &Args) -> Result<()> {
         }
         return Ok(());
     }
-    let opts = FigOpts::from_args(args);
+    let opts = FigOpts::from_args(args)?;
     figures::run(id, &opts)
+}
+
+/// Parse `topology=star|tree` plus the tree's `degree=`/`scheme=` keys.
+fn topology_from_args(args: &Args) -> Result<Topology> {
+    match args.get_str("topology", "star") {
+        "star" => Ok(Topology::Star),
+        "tree" => {
+            let degree = args.get_usize("degree", 4);
+            let scheme = match args.get_str("scheme", "multiscale") {
+                "multiscale" | "1" => TreeScheme::MultiScale {
+                    tau1: args.get_u32("tau1", 10),
+                    tau2: args.get_u32("tau2", 100),
+                },
+                "updown" | "2" => TreeScheme::UpDown {
+                    tau_up: args.get_u32("tau_up", 1),
+                    tau_down: args.get_u32("tau_down", 10),
+                },
+                other => bail!("unknown scheme '{other}' (multiscale|updown)"),
+            };
+            Ok(Topology::Tree(TreeSpec::new(degree, scheme)))
+        }
+        other => bail!("unknown topology '{other}' (star|tree)"),
+    }
 }
 
 fn cmd_train(args: &Args) -> Result<()> {
@@ -78,16 +110,29 @@ fn cmd_train(args: &Args) -> Result<()> {
         None => bail!("unknown backend '{backend_str}' (sim|thread)"),
     };
 
-    if let Some(m) = cfg.parallel_method() {
+    let topo = topology_from_args(args)?;
+
+    if let Some(mut m) = cfg.parallel_method() {
+        // Tree runs use the thesis rate α = β/(d+1) — a node talks to
+        // at most d+1 neighbors — instead of the star's β/p.
+        if let Topology::Tree(spec) = &topo {
+            let alpha = cfg.beta / (spec.degree as f32 + 1.0);
+            m = match m {
+                Method::Easgd { tau, .. } => Method::Easgd { alpha, tau },
+                Method::Eamsgd { tau, delta, .. } => Method::Eamsgd { alpha, tau, delta },
+                other => other, // gated with a descriptive error below
+            };
+        }
         println!(
-            "train: {} p={} τ={} η={} horizon={}s ({} cost model, {} backend)",
+            "train: {} p={} τ={} η={} horizon={}s ({} cost model, {} backend, {} topology)",
             m.name(),
             cfg.p,
             cfg.tau,
             cfg.eta,
             cfg.horizon,
             cfg.cost_family,
-            backend.name()
+            backend.name(),
+            topo.name()
         );
         let mut oracles = MlpOracle::family(data, &mcfg, cfg.batch, cfg.p);
         let dc = DriverConfig {
@@ -104,9 +149,16 @@ fn cmd_train(args: &Args) -> Result<()> {
                 .and_then(|s| s.parse().ok())
                 .unwrap_or(0.0),
         };
-        let r = run_with_backend(backend, &mut oracles, &dc);
+        let r = run_with_backend_topology(backend, &mut oracles, &dc, &topo)?;
         print_curve(&r);
     } else if let Some(m) = cfg.sequential_method() {
+        if topo != Topology::Star {
+            bail!(
+                "{} is a sequential (p=1) method; topology={} does not apply",
+                m.name(),
+                topo.name()
+            );
+        }
         println!(
             "train: {} (sequential) η={} horizon={}s",
             m.name(),

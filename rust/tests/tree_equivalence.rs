@@ -1,0 +1,256 @@
+//! Tree-equivalence suite: the virtual-time tree simulator and the
+//! real-thread tree backend are different machines running the SAME
+//! protocol (Alg. 6) — on a deterministic objective they must land in
+//! the same place, the simulator must stay bitwise reproducible, the
+//! tree's elastic fixed point must sit at the conserved mean, and the
+//! method/backend/topology gate must refuse what the tree does not
+//! define.
+
+use elastic_train::cluster::CostModel;
+use elastic_train::coordinator::{
+    run_tree_sim, run_tree_threaded, run_with_backend_topology, Backend, DriverConfig, Method,
+    MlpOracle, QuadraticOracle, TreeLayout, Topology, TreeScheme, TreeSpec,
+};
+use elastic_train::data::BlobDataset;
+use elastic_train::model::MlpConfig;
+use elastic_train::rng::Rng;
+use std::sync::Arc;
+
+fn fast_cost(n_params: usize) -> CostModel {
+    CostModel {
+        t_grad: 1e-3,
+        jitter: 0.0, // synchronous: no compute jitter
+        t_data: 0.0,
+        latency: 1e-5,
+        bandwidth: 1e12,
+        param_bytes: (n_params * 4) as f64,
+    }
+}
+
+/// (a) τ = 1 / zero jitter on the deterministic quadratic: both tree
+/// backends contract every node to the target (the unique fixed point
+/// of elastic absorption + vanishing gradient), so the root losses
+/// agree within 1e-4. The tolerance absorbs f32 rounding along the two
+/// different interleavings.
+#[test]
+fn thread_tree_matches_sim_tree_on_quadratic() {
+    let (n, leaves, steps) = (512usize, 4usize, 20_000u64);
+    let spec = TreeSpec::new(2, TreeScheme::UpDown { tau_up: 1, tau_down: 1 });
+    let method = Method::Easgd { alpha: 0.3, tau: 1 };
+
+    let mut sim_oracles = QuadraticOracle::family(n, 1.0, 0.0, 1.0, 0.0, leaves);
+    let sim_cfg = DriverConfig {
+        eta: 0.1,
+        method,
+        cost: fast_cost(n),
+        horizon: 1e6, // steps bound first
+        eval_every: 1e6,
+        seed: 11,
+        max_steps: steps,
+        lr_decay_gamma: 0.0,
+    };
+    let sim = run_tree_sim(&mut sim_oracles, &sim_cfg, &spec).unwrap();
+
+    let mut thr_oracles = QuadraticOracle::family(n, 1.0, 0.0, 1.0, 0.0, leaves);
+    let thr_cfg = DriverConfig {
+        horizon: 60.0, // REAL seconds safety net; steps bound first
+        ..sim_cfg.clone()
+    };
+    let thr = run_tree_threaded(&mut thr_oracles, &thr_cfg, &spec).unwrap();
+
+    assert!(!sim.diverged && !thr.diverged);
+    assert_eq!(sim.total_steps, steps);
+    assert_eq!(thr.total_steps, steps);
+    let ls = sim.curve.last().unwrap().train_loss;
+    let lt = thr.curve.last().unwrap().train_loss;
+    // Both roots at the optimum (loss 0 for ½(θ−1)² from θ=0)...
+    assert!(ls < 1e-5, "sim-tree final root loss {ls}");
+    assert!(lt < 1e-5, "thread-tree final root loss {lt}");
+    // ...and within the required tolerance of each other.
+    assert!((ls - lt).abs() < 1e-4, "sim {ls} vs thread {lt}");
+}
+
+/// (b) The tree simulator is bitwise deterministic: two runs with the
+/// same seed produce identical step counts and identical curves (every
+/// field, exact float equality) — jittered costs and all.
+#[test]
+fn sim_tree_is_bitwise_deterministic() {
+    let run = || {
+        let data = Arc::new(BlobDataset::generate(8, 4, 1024, 256, 0.8, 1));
+        let mcfg = MlpConfig::new(&[8, 16, 4], 1e-4);
+        let mut oracles = MlpOracle::family(data, &mcfg, 32, 16);
+        let spec = TreeSpec::new(4, TreeScheme::MultiScale { tau1: 2, tau2: 8 });
+        let cfg = DriverConfig {
+            eta: 0.1,
+            method: Method::Easgd { alpha: 0.9 / 5.0, tau: 1 },
+            cost: CostModel {
+                t_grad: 1e-3,
+                jitter: 0.1,
+                t_data: 1e-4,
+                latency: 1e-4,
+                bandwidth: 1e9,
+                param_bytes: 1000.0,
+            },
+            horizon: 0.4,
+            eval_every: 0.1,
+            seed: 23,
+            max_steps: 1_000_000,
+            lr_decay_gamma: 0.0,
+        };
+        run_tree_sim(&mut oracles, &cfg, &spec).unwrap()
+    };
+    let (a, b) = (run(), run());
+    assert_eq!(a.total_steps, b.total_steps);
+    assert_eq!(a.curve.len(), b.curve.len());
+    for (pa, pb) in a.curve.iter().zip(&b.curve) {
+        assert_eq!(pa.time, pb.time);
+        assert_eq!(pa.train_loss, pb.train_loss);
+        assert_eq!(pa.test_loss, pb.test_loss);
+        assert_eq!(pa.test_error, pb.test_error);
+    }
+}
+
+/// (c) With zero gradient and synchronized symmetric exchanges along
+/// every tree edge (each endpoint moves α toward the other's
+/// pre-round snapshot), the per-coordinate mean over ALL nodes is
+/// conserved exactly, and the dynamics contract to consensus at that
+/// conserved mean — the tree analog of the star's
+/// elastic-fixed-point-is-worker-average invariant.
+#[test]
+fn tree_elastic_fixed_point_preserves_conserved_mean() {
+    let (n, alpha) = (32usize, 0.1f32);
+    let layout = TreeLayout::dary(4, 16); // 21 nodes, max degree 5
+    let mut rng = Rng::new(41);
+    let mut params: Vec<Vec<f32>> = (0..layout.n_nodes)
+        .map(|_| {
+            let mut v = vec![0.0f32; n];
+            rng.fill_gaussian_f32(&mut v, 2.0);
+            v
+        })
+        .collect();
+
+    // Conserved quantity: per-coordinate mean over all nodes.
+    let conserved: Vec<f64> = (0..n)
+        .map(|j| {
+            params.iter().map(|p| p[j] as f64).sum::<f64>() / layout.n_nodes as f64
+        })
+        .collect();
+
+    for _ in 0..3000 {
+        // Jacobi round: all deltas from the pre-round snapshot, so the
+        // ±α(x_child − x_parent) pairs cancel exactly edge by edge.
+        let snap = params.clone();
+        for (child, parent) in layout
+            .parent
+            .iter()
+            .enumerate()
+            .filter_map(|(c, p)| p.map(|p| (c, p)))
+        {
+            for j in 0..n {
+                let d = alpha * (snap[child][j] - snap[parent][j]);
+                params[parent][j] += d;
+                params[child][j] -= d;
+            }
+        }
+    }
+
+    for j in 0..n {
+        let mean_now =
+            params.iter().map(|p| p[j] as f64).sum::<f64>() / layout.n_nodes as f64;
+        // The mean never moved...
+        assert!(
+            (mean_now - conserved[j]).abs() < 1e-4,
+            "coord {j}: mean drifted {} -> {mean_now}",
+            conserved[j]
+        );
+        // ...and every node contracted onto it.
+        for (i, p) in params.iter().enumerate() {
+            assert!(
+                (p[j] as f64 - conserved[j]).abs() < 1e-3,
+                "node {i} coord {j}: {} vs conserved mean {}",
+                p[j],
+                conserved[j]
+            );
+        }
+    }
+}
+
+/// (d) The public dispatch refuses unsupported method/topology/backend
+/// combinations with a descriptive error instead of silently falling
+/// back to another executor.
+#[test]
+fn dispatch_gates_unsupported_combinations() {
+    let tree = Topology::Tree(TreeSpec::new(2, TreeScheme::UpDown { tau_up: 1, tau_down: 4 }));
+    let cfg = |method: Method| DriverConfig {
+        eta: 0.05,
+        method,
+        cost: fast_cost(64),
+        horizon: 0.01,
+        eval_every: 1.0,
+        seed: 1,
+        max_steps: 10,
+        lr_decay_gamma: 0.0,
+    };
+
+    // DOWNPOUR has no tree form — on either backend.
+    for backend in [Backend::Sim, Backend::Thread] {
+        let mut oracles = QuadraticOracle::family(64, 1.0, 0.0, 1.0, 0.0, 2);
+        let e = run_with_backend_topology(
+            backend,
+            &mut oracles,
+            &cfg(Method::Downpour { tau: 1 }),
+            &tree,
+        )
+        .unwrap_err();
+        assert!(format!("{e}").contains("no tree form"), "{backend:?}: {e}");
+    }
+
+    // Master-coupled methods stay sim-only on the star.
+    let mut oracles = QuadraticOracle::family(64, 1.0, 0.0, 1.0, 0.0, 2);
+    let e = run_with_backend_topology(
+        Backend::Thread,
+        &mut oracles,
+        &cfg(Method::MDownpour { delta: 0.9 }),
+        &Topology::Star,
+    )
+    .unwrap_err();
+    assert!(format!("{e}").contains("master-coupled"), "{e}");
+
+    // The same combination on the sim backend runs fine.
+    let mut oracles = QuadraticOracle::family(64, 1.0, 0.0, 1.0, 0.0, 2);
+    let r = run_with_backend_topology(
+        Backend::Sim,
+        &mut oracles,
+        &cfg(Method::MDownpour { delta: 0.9 }),
+        &Topology::Star,
+    )
+    .unwrap();
+    assert!(!r.curve.is_empty());
+}
+
+/// (e) Tree and star agree on the degenerate single-worker case: with
+/// one leaf/worker and no communication partners, both topologies are
+/// plain local SGD and reach the same quadratic optimum.
+#[test]
+fn single_worker_tree_matches_single_worker_star() {
+    let mk = || QuadraticOracle::family(32, 2.0, 0.0, 1.0, 0.0, 1);
+    let cfg = DriverConfig {
+        eta: 0.1,
+        method: Method::Easgd { alpha: 0.3, tau: 1 },
+        cost: fast_cost(32),
+        horizon: 1e6,
+        eval_every: 1e6,
+        seed: 3,
+        max_steps: 600,
+        lr_decay_gamma: 0.0,
+    };
+    let tree = Topology::Tree(TreeSpec::new(2, TreeScheme::UpDown { tau_up: 1, tau_down: 1 }));
+    let t = run_with_backend_topology(Backend::Sim, &mut mk(), &cfg, &tree).unwrap();
+    let s = run_with_backend_topology(Backend::Sim, &mut mk(), &cfg, &Topology::Star).unwrap();
+    assert!(!t.diverged && !s.diverged);
+    let (lt, ls) = (
+        t.curve.last().unwrap().train_loss,
+        s.curve.last().unwrap().train_loss,
+    );
+    assert!(lt < 1e-6 && ls < 1e-6, "tree {lt} star {ls}");
+}
