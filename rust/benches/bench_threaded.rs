@@ -2,7 +2,10 @@
 //! worker count p ∈ {1, 2, 4, 8} and communication period
 //! τ ∈ {1, 4, 16, 64}, EASGD on the deterministic quadratic oracle
 //! (gradient cost is a pure n-element stream, so the grid measures the
-//! executor — thread scheduling + sharded-lock center — not the model).
+//! executor — thread scheduling + sharded-lock center — not the model),
+//! plus a master-actor grid for the master-coupled methods (MDOWNPOUR,
+//! async ADMM), where every round is a serialized channel round trip
+//! through the dedicated master thread.
 //!
 //!     cargo bench --bench bench_threaded            # full grid
 //!     cargo bench --bench bench_threaded -- --quick # smoke (CI)
@@ -12,6 +15,8 @@
 //! shard, so scaling flattens — the thesis' communication-period story
 //! measured on real threads. The τ=16 column prints a monotonicity
 //! verdict (5% slack; oversubscribed p > cores legitimately plateaus).
+//! The master-actor rows are expected to flatten earlier: MDOWNPOUR
+//! serializes one master update per worker step by construction.
 
 use elastic_train::cluster::CostModel;
 use elastic_train::coordinator::{run_threaded, DriverConfig, Method, QuadraticOracle};
@@ -21,11 +26,11 @@ use std::time::Instant;
 /// dwarfs scheduling overhead, small enough for a quick grid.
 const N_PARAMS: usize = 65_536;
 
-fn steps_per_sec(p: usize, tau: u32, total_steps: u64) -> f64 {
+fn steps_per_sec(method: Method, eta: f32, p: usize, total_steps: u64) -> f64 {
     let mut oracles = QuadraticOracle::family(N_PARAMS, 1.0, 0.0, 1.0, 0.0, p);
     let cfg = DriverConfig {
-        eta: 0.05,
-        method: Method::easgd_default(p, tau),
+        eta,
+        method,
         cost: CostModel::cifar_like(N_PARAMS), // unused by the thread backend
         horizon: 120.0,                        // real-seconds safety net
         eval_every: 1e6,                       // no mid-run snapshots
@@ -35,7 +40,7 @@ fn steps_per_sec(p: usize, tau: u32, total_steps: u64) -> f64 {
     };
     let t0 = Instant::now();
     let r = run_threaded(&mut oracles, &cfg, 16);
-    assert!(!r.diverged, "p={p} τ={tau} diverged");
+    assert!(!r.diverged, "{} p={p} diverged", method.name());
     assert_eq!(r.total_steps, total_steps);
     r.total_steps as f64 / t0.elapsed().as_secs_f64()
 }
@@ -56,11 +61,12 @@ fn main() {
     for &tau in &[1u32, 4, 16, 64] {
         let mut base = 0.0f64;
         for &p in &[1usize, 2, 4, 8] {
+            let method = Method::easgd_default(p, tau);
             // Warm-up pass keeps first-touch page faults out of the cell.
             if p == 1 {
-                let _ = steps_per_sec(1, tau, steps / 4);
+                let _ = steps_per_sec(method, 0.05, 1, steps / 4);
             }
-            let rate = steps_per_sec(p, tau, steps);
+            let rate = steps_per_sec(method, 0.05, p, steps);
             if p == 1 {
                 base = rate;
             }
@@ -68,6 +74,33 @@ fn main() {
             if tau == 16 {
                 tau16.push((p, rate));
             }
+        }
+        println!();
+    }
+
+    // The master-actor methods: every round is a serialized channel
+    // round trip through the dedicated master thread (MDOWNPOUR pushes
+    // each gradient, τ = 1 by definition; ADMM pushes its contribution
+    // every τ steps).
+    println!(
+        "master-actor methods (serialized center), {steps} steps/cell:\n\n\
+         {:>14} {:>4} {:>14} {:>10}",
+        "method", "p", "steps/sec", "vs p=1"
+    );
+    for (name, method, eta) in [
+        ("MDOWNPOUR", Method::MDownpour { delta: 0.9 }, 0.005f32),
+        ("ADMM(tau=4)", Method::AdmmAsync { rho: 1.0, tau: 4 }, 0.05),
+    ] {
+        let mut base = 0.0f64;
+        for &p in &[1usize, 2, 4, 8] {
+            if p == 1 {
+                let _ = steps_per_sec(method, eta, 1, steps / 4);
+            }
+            let rate = steps_per_sec(method, eta, p, steps);
+            if p == 1 {
+                base = rate;
+            }
+            println!("{name:>14} {p:>4} {rate:>14.0} {:>9.2}x", rate / base);
         }
         println!();
     }

@@ -125,6 +125,14 @@ pub struct RunResult {
     pub breakdown: TimeBreakdown,
     /// Total local gradient steps summed over workers.
     pub total_steps: u64,
+    /// Center-update rounds (the master clock that drives ADOWNPOUR's
+    /// 1/t averaging rate). Tracked by the star backends; 0 where the
+    /// backend keeps no single master clock (tree, sequential). The
+    /// thread backend skips the no-op exchange at `t_local == 0`, so
+    /// its count runs one lower per worker than the virtual-time
+    /// driver's for the decoupled methods (the sim keeps the zeroth
+    /// round as part of its deterministic event schedule).
+    pub rounds: u64,
     pub diverged: bool,
 }
 

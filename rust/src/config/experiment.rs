@@ -19,6 +19,9 @@ pub struct ExperimentConfig {
     pub method: String,
     /// "cifar" | "imagenet" cost-model family.
     pub cost_family: String,
+    /// §4.1 prefetch sharding: "replicated" (CIFAR mode) or
+    /// "partitioned" (ImageNet mode).
+    pub sharding: String,
     pub horizon: f64,
     pub eval_every: f64,
     pub seed: u64,
@@ -37,6 +40,7 @@ impl Default for ExperimentConfig {
             delta: 0.99,
             method: "easgd".into(),
             cost_family: "cifar".into(),
+            sharding: "replicated".into(),
             horizon: 60.0,
             eval_every: 2.0,
             seed: 0,
@@ -79,6 +83,7 @@ impl ExperimentConfig {
             "delta" => self.delta = v.parse().unwrap_or(self.delta),
             "method" => self.method = v.to_string(),
             "cost" => self.cost_family = v.to_string(),
+            "sharding" => self.sharding = v.to_string(),
             "horizon" => self.horizon = v.parse().unwrap_or(self.horizon),
             "eval_every" => self.eval_every = v.parse().unwrap_or(self.eval_every),
             "seed" => self.seed = v.parse().unwrap_or(self.seed),
@@ -142,6 +147,12 @@ impl ExperimentConfig {
             _ => CostModel::cifar_like(n_params),
         }
     }
+
+    /// Resolve the §4.1 prefetch sharding mode; None on an unknown
+    /// value (callers report the CLI error).
+    pub fn sharding_mode(&self) -> Option<crate::data::Sharding> {
+        crate::data::Sharding::parse(&self.sharding)
+    }
 }
 
 #[cfg(test)]
@@ -180,6 +191,16 @@ mod tests {
         assert!(matches!(cfg.sequential_method(), Some(SeqMethod::Msgd { .. })));
         cfg.method = "bogus".into();
         assert!(cfg.sequential_method().is_none());
+    }
+
+    #[test]
+    fn sharding_resolution() {
+        let mut cfg = ExperimentConfig::default();
+        assert_eq!(cfg.sharding_mode(), Some(crate::data::Sharding::Replicated));
+        cfg.set("sharding", "partitioned");
+        assert_eq!(cfg.sharding_mode(), Some(crate::data::Sharding::Partitioned));
+        cfg.set("sharding", "bogus");
+        assert_eq!(cfg.sharding_mode(), None);
     }
 
     #[test]

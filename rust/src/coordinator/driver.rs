@@ -222,6 +222,7 @@ pub fn run_parallel<O: GradOracle>(oracles: &mut [O], cfg: &DriverConfig) -> Run
     );
     result.breakdown = breakdown;
     result.total_steps = total_steps;
+    result.rounds = master.clock;
     result.diverged = diverged || !finite;
     result
 }

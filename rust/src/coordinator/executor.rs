@@ -13,8 +13,10 @@
 //!   come from the [`crate::cluster::CostModel`], and runs are bitwise
 //!   deterministic given the seed. This is the figure-sweep substrate.
 //! * [`ThreadExecutor`] — real `std::thread` workers
-//!   ([`super::threaded::run_threaded`] for the star: sharded-lock
-//!   center, genuinely stale exchanges;
+//!   ([`super::threaded::run_threaded`] for the star, with the center
+//!   variable behind one of two `CenterBackend`s — a sharded lock for
+//!   the master-decoupled methods, the serialized master actor of
+//!   [`super::master_actor`] for MDOWNPOUR / async ADMM;
 //!   [`super::tree_threaded::run_tree_threaded`] for the tree: one
 //!   actor thread per node, snapshots over `mpsc` channels).
 //!   Time-valued config fields are *real* seconds here; runs are not
@@ -76,6 +78,8 @@ pub(crate) struct WorkerState {
     pub theta: Vec<f32>,
     pub v: Vec<f32>,
     pub grad: Vec<f32>,
+    /// EAMSGD lookahead buffer; on the thread backend, async ADMM's
+    /// cached copy of the center between exchanges.
     pub scratch: Vec<f32>,
     /// DOWNPOUR accumulated update; ADMM λ.
     pub aux: Vec<f32>,
@@ -105,7 +109,9 @@ impl WorkerState {
 /// Master-side state of the virtual-time driver (center variable,
 /// averaging sequences, master momentum, ADMM contributions). The
 /// threaded backend keeps the equivalent state sharded behind locks
-/// (`super::threaded::ShardedMaster`).
+/// (`super::threaded::ShardedMaster`) for the decoupled methods, or
+/// owned by the master-actor thread
+/// (`super::master_actor::ActorMaster`) for the master-coupled ones.
 pub(crate) struct MasterState {
     pub center: Vec<f32>,
     /// Averaged center (ADOWNPOUR / MVADOWNPOUR).
@@ -151,9 +157,10 @@ impl MasterState {
 /// accumulation). Returns the batch loss and advances `t_local`.
 ///
 /// MDOWNPOUR and async ADMM touch master state *inside* the local step
-/// (master momentum push / prox toward the center) and therefore stay
-/// inline in the virtual-time driver; [`thread_supported`] reports
-/// which methods the threaded backend accepts.
+/// (master momentum push / prox toward the center) and therefore never
+/// route through here: the virtual-time driver inlines their steps and
+/// the thread backend serializes them through the master actor
+/// ([`super::master_actor`]); see [`master_coupled`].
 pub(crate) fn local_step_decoupled<O: GradOracle>(
     cfg: &DriverConfig,
     w: &mut WorkerState,
@@ -210,12 +217,15 @@ pub(crate) fn eval_point<O: GradOracle>(
     st.train_loss.is_finite()
 }
 
-/// Does the threaded backend implement this method on the STAR
-/// topology? (MDOWNPOUR and async ADMM interleave master updates into
-/// every local step; they are defined on the virtual-time backend
-/// only.)
-pub fn thread_supported(method: Method) -> bool {
-    !matches!(method, Method::MDownpour { .. } | Method::AdmmAsync { .. })
+/// Is this method's master update coupled into every local step
+/// (MDOWNPOUR's Nesterov master, Algs 4–5; async ADMM's consensus
+/// step)? Master-coupled methods cannot race on a lock-sharded center:
+/// the star thread backend serializes them through the dedicated
+/// master-actor thread ([`super::master_actor`]); decoupled methods
+/// keep the sharded-lock center. Every method runs on both star
+/// backends either way — this only selects the center backend.
+pub fn master_coupled(method: Method) -> bool {
+    matches!(method, Method::MDownpour { .. } | Method::AdmmAsync { .. })
 }
 
 /// Does the tree topology define this method? The EASGD tree (Alg. 6)
@@ -245,22 +255,15 @@ pub(crate) fn tree_alpha(method: Method) -> Result<f32> {
 /// never a silent fallback — when it is not.
 pub fn check_supported(method: Method, backend: Backend, topo: &Topology) -> Result<()> {
     match topo {
-        Topology::Star => match backend {
-            // The virtual-time star driver implements every method.
-            Backend::Sim => Ok(()),
-            Backend::Thread => {
-                if thread_supported(method) {
-                    Ok(())
-                } else {
-                    Err(crate::err!(
-                        "{} is master-coupled (it updates master state inside every \
-                         local step) and is defined on the virtual-time backend only; \
-                         rerun with backend=sim",
-                        method.name()
-                    ))
-                }
-            }
-        },
+        // Every method runs on the star under BOTH backends: the sim
+        // driver inlines master-coupled updates, and the thread backend
+        // picks its center backend per method (sharded lock for the
+        // decoupled methods, the master actor for MDOWNPOUR / async
+        // ADMM) — see [`master_coupled`].
+        Topology::Star => {
+            let _ = (method, backend);
+            Ok(())
+        }
         Topology::Tree(spec) => {
             spec.validate()?;
             // Both backends implement the tree for the elastic methods.
@@ -322,12 +325,16 @@ impl Executor for SimExecutor {
     }
 }
 
-/// Real-thread backend: one `std::thread` per worker, sharded-lock
-/// center.
+/// Real-thread backend: one `std::thread` per worker; the center lives
+/// behind a sharded lock (decoupled methods) or a dedicated
+/// master-actor thread (master-coupled methods) — see
+/// [`master_coupled`].
 #[derive(Clone, Copy, Debug)]
 pub struct ThreadExecutor {
-    /// Number of center shards (lock granularity). More shards ⇒ finer
-    /// interleaving and less contention at small τ.
+    /// Number of center shards (lock granularity) for the sharded-lock
+    /// center backend. More shards ⇒ finer interleaving and less
+    /// contention at small τ. Ignored by the master actor, whose whole
+    /// point is one serialized center.
     pub shards: usize,
 }
 
@@ -426,14 +433,14 @@ mod tests {
     }
 
     #[test]
-    fn thread_support_matrix() {
-        assert!(thread_supported(Method::easgd_default(4, 4)));
-        assert!(thread_supported(Method::eamsgd_default(4, 4)));
-        assert!(thread_supported(Method::Downpour { tau: 1 }));
-        assert!(thread_supported(Method::ADownpour { tau: 1 }));
-        assert!(thread_supported(Method::MvaDownpour { tau: 1, alpha: 0.001 }));
-        assert!(!thread_supported(Method::MDownpour { delta: 0.9 }));
-        assert!(!thread_supported(Method::AdmmAsync { rho: 1.0, tau: 4 }));
+    fn master_coupling_split() {
+        assert!(!master_coupled(Method::easgd_default(4, 4)));
+        assert!(!master_coupled(Method::eamsgd_default(4, 4)));
+        assert!(!master_coupled(Method::Downpour { tau: 1 }));
+        assert!(!master_coupled(Method::ADownpour { tau: 1 }));
+        assert!(!master_coupled(Method::MvaDownpour { tau: 1, alpha: 0.001 }));
+        assert!(master_coupled(Method::MDownpour { delta: 0.9 }));
+        assert!(master_coupled(Method::AdmmAsync { rho: 1.0, tau: 4 }));
     }
 
     #[test]
@@ -458,18 +465,26 @@ mod tests {
     fn check_supported_matrix_is_descriptive() {
         use crate::coordinator::topology::{TreeScheme, TreeSpec};
         let tree = Topology::Tree(TreeSpec::new(4, TreeScheme::UpDown { tau_up: 1, tau_down: 4 }));
-        // Sim star: everything runs.
+        // Star: EVERY method runs on BOTH backends (the thread backend
+        // routes master-coupled methods through the master actor).
         for m in [
             Method::easgd_default(4, 4),
+            Method::eamsgd_default(4, 4),
+            Method::Downpour { tau: 1 },
             Method::MDownpour { delta: 0.9 },
+            Method::ADownpour { tau: 1 },
+            Method::MvaDownpour { tau: 1, alpha: 0.001 },
             Method::AdmmAsync { rho: 1.0, tau: 4 },
         ] {
-            assert!(check_supported(m, Backend::Sim, &Topology::Star).is_ok());
+            for b in [Backend::Sim, Backend::Thread] {
+                assert!(
+                    check_supported(m, b, &Topology::Star).is_ok(),
+                    "{} on {}",
+                    m.name(),
+                    b.name()
+                );
+            }
         }
-        // Thread star: master-coupled methods refused with a reason.
-        let e = check_supported(Method::MDownpour { delta: 0.9 }, Backend::Thread, &Topology::Star)
-            .unwrap_err();
-        assert!(format!("{e}").contains("master-coupled"), "{e}");
         // Tree (either backend): elastic methods only.
         for b in [Backend::Sim, Backend::Thread] {
             assert!(check_supported(Method::easgd_default(4, 4), b, &tree).is_ok());

@@ -1,0 +1,338 @@
+//! The master-actor [`CenterBackend`]: real-thread execution of the
+//! master-COUPLED methods (MDOWNPOUR, async ADMM) on the star
+//! topology.
+//!
+//! These methods fold a master update into every local step —
+//! MDOWNPOUR's Nesterov master (Algs 4–5) applies each arriving
+//! gradient to the center momentum, async ADMM's consensus step
+//! recomputes the center mean from the stored worker contributions.
+//! Neither update can race shard-by-shard on a lock-striped center:
+//! the momentum recursion and the consensus mean are whole-vector
+//! recurrences whose terms must be applied one arrival at a time.
+//!
+//! So the center gets an owner: a dedicated master thread
+//! ([`ActorMaster::serve`]) absorbs worker messages over `mpsc`
+//! channels and applies them **serialized, in arrival order** — the
+//! Gauss–Seidel rule of §6.2, and the same actor pattern
+//! [`super::tree_threaded`] uses for interior tree nodes. One
+//! serialized-absorb rule now implements tree interior nodes,
+//! MDOWNPOUR's master, and async ADMM's consensus step.
+//!
+//! Per-method protocol (one round trip per message; replies carry the
+//! worker's next read of the master, so a worker is stale by exactly
+//! the other workers' arrivals since its own last message — genuine
+//! asynchrony, serialized application):
+//!
+//! * **MDOWNPOUR** (τ = 1): the stateless worker evaluates its
+//!   gradient at the lookahead x̃ + δv it last received, pushes
+//!   `(η_t, g)`; the master applies v ← δv − η_t·g, x̃ ← x̃ + v, and
+//!   replies with the fresh lookahead.
+//! * **async ADMM** (every τ steps): the worker runs the dual ascent
+//!   λⁱ ← λⁱ − (xⁱ − x̃) against its cached center, pushes the
+//!   contribution xⁱ − λⁱ; the master stores it, recomputes the
+//!   center as the contribution mean (in full, like the sim driver, so
+//!   both backends share one rounding story), and replies with the
+//!   fresh center, which the worker caches for its next τ linearized
+//!   prox steps (Eq 3.53).
+//!
+//! Timing semantics match [`super::threaded`]: real seconds, measured
+//! compute/comm columns, no bit-determinism. ADMM skips the no-op
+//! exchange at `t_local == 0` like the sharded backend; MDOWNPOUR's
+//! first-step round is NOT skipped — it already carries a real
+//! gradient, so every one of its local steps is one master round.
+
+use super::executor::{DriverConfig, WorkerState};
+use super::method::Method;
+use super::oracle::GradOracle;
+use super::threaded::{CenterBackend, Shared};
+use std::sync::atomic::Ordering;
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::Mutex;
+use std::time::Instant;
+
+/// A worker message to the master actor.
+enum ToMaster {
+    /// MDOWNPOUR gradient push (Alg. 5): apply Nesterov on the master,
+    /// reply with the fresh lookahead x̃ + δv.
+    Grad { wid: usize, eta: f32, grad: Vec<f32> },
+    /// Async ADMM consensus push: replace worker `wid`'s stored
+    /// contribution (xⁱ − λⁱ), recompute the center mean, reply with
+    /// the fresh center.
+    Contrib { wid: usize, contrib: Vec<f32> },
+}
+
+/// One worker's channel endpoints, moved into its thread.
+pub(crate) struct ActorPort {
+    wid: usize,
+    tx: Sender<ToMaster>,
+    reply: Receiver<Vec<f32>>,
+}
+
+/// The master thread's state: touched only by [`ActorMaster::serve`]
+/// (one message at a time) and the main thread's snapshot path.
+struct ActorState {
+    method: Method,
+    center: Vec<f32>,
+    /// Master momentum (MDOWNPOUR).
+    mv: Option<Vec<f32>>,
+    /// ADMM: last (xⁱ − λⁱ) contribution per worker.
+    contrib: Option<Vec<Vec<f32>>>,
+    /// Master clock (# center updates).
+    clock: u64,
+    reply_tx: Vec<Sender<Vec<f32>>>,
+}
+
+impl ActorState {
+    /// Apply one absorbed message — THE serialized Gauss–Seidel step —
+    /// and reply to its sender.
+    fn apply(&mut self, msg: ToMaster) {
+        match msg {
+            ToMaster::Grad { wid, eta, grad } => {
+                let delta = match self.method {
+                    Method::MDownpour { delta } => delta,
+                    _ => unreachable!("Grad messages are MDOWNPOUR-only"),
+                };
+                let mv = self.mv.as_mut().unwrap();
+                // Alg. 5: v ← δv − η_t g ; x̃ ← x̃ + v.
+                for (c, (v, g)) in self.center.iter_mut().zip(mv.iter_mut().zip(&grad)) {
+                    *v = delta * *v - eta * g;
+                    *c += *v;
+                }
+                self.clock += 1;
+                // Alg. 4: the worker's next read is the lookahead.
+                let look: Vec<f32> = self
+                    .center
+                    .iter()
+                    .zip(mv.iter())
+                    .map(|(c, v)| c + delta * v)
+                    .collect();
+                let _ = self.reply_tx[wid].send(look);
+            }
+            ToMaster::Contrib { wid, contrib } => {
+                let contribs = self.contrib.as_mut().unwrap();
+                contribs[wid] = contrib;
+                // Consensus step: center = mean of stored contributions,
+                // recomputed in full like the sim driver.
+                let inv = 1.0 / contribs.len() as f32;
+                for (j, c) in self.center.iter_mut().enumerate() {
+                    let mut s = 0.0f32;
+                    for w in contribs.iter() {
+                        s += w[j];
+                    }
+                    *c = s * inv;
+                }
+                self.clock += 1;
+                let _ = self.reply_tx[wid].send(self.center.clone());
+            }
+        }
+    }
+}
+
+/// The dedicated-master-thread [`CenterBackend`] for master-coupled
+/// methods. Construct with [`ActorMaster::new`], hand to
+/// [`super::threaded::run_with_center`].
+pub(crate) struct ActorMaster {
+    rx: Mutex<Receiver<ToMaster>>,
+    state: Mutex<ActorState>,
+    ports: Mutex<Option<Vec<ActorPort>>>,
+}
+
+impl ActorMaster {
+    pub(crate) fn new(method: Method, init: &[f32], p: usize) -> ActorMaster {
+        let n = init.len();
+        let (tx, rx) = channel();
+        let mut ports = Vec::with_capacity(p);
+        let mut reply_tx = Vec::with_capacity(p);
+        for wid in 0..p {
+            let (rtx, rrx) = channel();
+            reply_tx.push(rtx);
+            ports.push(ActorPort { wid, tx: tx.clone(), reply: rrx });
+        }
+        // Only worker ports hold senders now: when the last worker
+        // exits, `serve`'s receive loop disconnects and returns.
+        drop(tx);
+        let state = ActorState {
+            method,
+            center: init.to_vec(),
+            mv: match method {
+                Method::MDownpour { .. } => Some(vec![0.0; n]),
+                _ => None,
+            },
+            contrib: match method {
+                Method::AdmmAsync { .. } => Some(vec![init.to_vec(); p]),
+                _ => None,
+            },
+            clock: 0,
+            reply_tx,
+        };
+        ActorMaster {
+            rx: Mutex::new(rx),
+            state: Mutex::new(state),
+            ports: Mutex::new(Some(ports)),
+        }
+    }
+}
+
+impl CenterBackend for ActorMaster {
+    type Port = ActorPort;
+
+    fn take_ports(&mut self, p: usize) -> Vec<ActorPort> {
+        let ports = self.ports.lock().unwrap().take().expect("ports already taken");
+        assert_eq!(ports.len(), p);
+        ports
+    }
+
+    fn snapshot(&self) -> Vec<f32> {
+        self.state.lock().unwrap().center.clone()
+    }
+
+    fn rounds(&self) -> u64 {
+        self.state.lock().unwrap().clock
+    }
+
+    /// The master thread: wake on each arrival, then drain the inbox
+    /// under one lock hold, applying every message in arrival order —
+    /// the serialized Gauss–Seidel absorb. Returns when every worker
+    /// port has been dropped.
+    fn serve(&self) {
+        let rx = self.rx.lock().unwrap();
+        while let Ok(msg) = rx.recv() {
+            let mut st = self.state.lock().unwrap();
+            st.apply(msg);
+            while let Ok(m) = rx.try_recv() {
+                st.apply(m);
+            }
+        }
+    }
+
+    fn step<O: GradOracle>(
+        &self,
+        cfg: &DriverConfig,
+        port: &mut ActorPort,
+        w: &mut WorkerState,
+        oracle: &mut O,
+        sh: &Shared,
+    ) -> f32 {
+        match cfg.method {
+            Method::MDownpour { .. } => {
+                // Gradient at the lookahead from the last reply (the
+                // shared init before the first one), Alg. 4.
+                let eta_t = cfg.eta_at(w.t_local);
+                let t0 = Instant::now();
+                let loss = oracle.grad(&w.theta, &mut w.rng, &mut w.grad);
+                sh.compute_ns
+                    .fetch_add(t0.elapsed().as_nanos() as u64, Ordering::Relaxed);
+                w.t_local += 1;
+                let tc = Instant::now();
+                let _ = port.tx.send(ToMaster::Grad {
+                    wid: port.wid,
+                    eta: eta_t,
+                    grad: w.grad.clone(),
+                });
+                if let Ok(look) = port.reply.recv() {
+                    w.theta = look;
+                }
+                sh.comm_ns
+                    .fetch_add(tc.elapsed().as_nanos() as u64, Ordering::Relaxed);
+                loss
+            }
+            Method::AdmmAsync { rho, .. } => {
+                let n = w.theta.len();
+                if w.t_local == 0 {
+                    // The worker-side center cache (w.scratch) starts at
+                    // the shared init — exactly theta before any step.
+                    w.scratch.copy_from_slice(&w.theta);
+                }
+                let tau = cfg.method.tau().max(1) as u64;
+                // No round at t_local == 0 (see super::threaded docs).
+                if w.t_local > 0 && w.t_local % tau == 0 {
+                    let tc = Instant::now();
+                    // Dual ascent against the cached center:
+                    // λⁱ ← λⁱ − (xⁱ − x̃). λ lives in w.aux.
+                    for j in 0..n {
+                        w.aux[j] -= w.theta[j] - w.scratch[j];
+                    }
+                    let contrib: Vec<f32> =
+                        w.theta.iter().zip(&w.aux).map(|(t, l)| t - l).collect();
+                    let _ = port.tx.send(ToMaster::Contrib { wid: port.wid, contrib });
+                    if let Ok(center) = port.reply.recv() {
+                        w.scratch = center;
+                    }
+                    sh.comm_ns
+                        .fetch_add(tc.elapsed().as_nanos() as u64, Ordering::Relaxed);
+                }
+                let eta_t = cfg.eta_at(w.t_local);
+                let t0 = Instant::now();
+                let loss = oracle.grad(&w.theta, &mut w.rng, &mut w.grad);
+                // Linearized prox step (Eq 3.53) toward the cached center.
+                let d = 1.0 + eta_t * rho;
+                for j in 0..n {
+                    w.theta[j] = (w.theta[j] - eta_t * w.grad[j]
+                        + eta_t * rho * (w.aux[j] + w.scratch[j]))
+                        / d;
+                }
+                w.t_local += 1;
+                sh.compute_ns
+                    .fetch_add(t0.elapsed().as_nanos() as u64, Ordering::Relaxed);
+                loss
+            }
+            _ => unreachable!("decoupled methods use the sharded-lock center"),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn actor_state_allocates_per_method() {
+        let init = vec![1.0f32; 8];
+        let m = ActorMaster::new(Method::MDownpour { delta: 0.9 }, &init, 3);
+        {
+            let st = m.state.lock().unwrap();
+            assert!(st.mv.is_some() && st.contrib.is_none());
+            assert_eq!(st.reply_tx.len(), 3);
+        }
+        assert_eq!(m.snapshot(), init);
+        assert_eq!(m.rounds(), 0);
+        let m = ActorMaster::new(Method::AdmmAsync { rho: 1.0, tau: 4 }, &init, 4);
+        let st = m.state.lock().unwrap();
+        assert!(st.mv.is_none());
+        assert_eq!(st.contrib.as_ref().unwrap().len(), 4);
+    }
+
+    #[test]
+    fn mdownpour_apply_is_nesterov_and_replies_lookahead() {
+        let init = vec![0.0f32; 4];
+        let mut m = ActorMaster::new(Method::MDownpour { delta: 0.5 }, &init, 1);
+        let ports = m.take_ports(1);
+        {
+            let mut st = m.state.lock().unwrap();
+            st.apply(ToMaster::Grad { wid: 0, eta: 0.1, grad: vec![1.0; 4] });
+            // v = 0.5·0 − 0.1·1 = −0.1 ; x̃ = −0.1.
+            assert!(st.center.iter().all(|c| (c + 0.1).abs() < 1e-7));
+            assert_eq!(st.clock, 1);
+        }
+        // Reply = x̃ + δv = −0.1 + 0.5·(−0.1) = −0.15.
+        let look = ports[0].reply.recv().unwrap();
+        assert!(look.iter().all(|l| (l + 0.15).abs() < 1e-7));
+    }
+
+    #[test]
+    fn admm_apply_recomputes_the_consensus_mean() {
+        let init = vec![0.0f32; 2];
+        let mut m = ActorMaster::new(Method::AdmmAsync { rho: 1.0, tau: 1 }, &init, 2);
+        let ports = m.take_ports(2);
+        {
+            let mut st = m.state.lock().unwrap();
+            st.apply(ToMaster::Contrib { wid: 1, contrib: vec![2.0, 4.0] });
+        }
+        // Worker 0's stored contribution is still the init (0,0):
+        // center = mean{(0,0), (2,4)} = (1,2).
+        let c = ports[1].reply.recv().unwrap();
+        assert_eq!(c, vec![1.0, 2.0]);
+        assert_eq!(m.snapshot(), vec![1.0, 2.0]);
+        assert_eq!(m.rounds(), 1);
+    }
+}

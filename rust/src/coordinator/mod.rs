@@ -18,8 +18,13 @@
 //!   compute, Table-4.4 accounting. Bitwise deterministic given the
 //!   seed.
 //! - [`threaded`] — the real-thread star backend: one `std::thread`
-//!   per worker, center variable behind a sharded lock, genuinely
-//!   stale concurrent exchanges.
+//!   per worker, the center variable behind a per-method
+//!   `CenterBackend` — the sharded lock (genuinely stale concurrent
+//!   exchanges) for the master-decoupled methods.
+//! - [`master_actor`] — the other `CenterBackend`: a dedicated master
+//!   thread absorbing worker messages over `mpsc` channels with
+//!   serialized Gauss–Seidel application, running the master-coupled
+//!   methods (MDOWNPOUR, async ADMM) on real threads.
 //! - [`sequential`] — the p = 1 baselines: SGD, MSGD, ASGD, MVASGD.
 //! - [`tree`] — EASGD Tree (Alg. 6), virtual-time backend: fully-async
 //!   messaging on the shared worker/step machinery.
@@ -31,6 +36,7 @@
 pub mod driver;
 pub mod executor;
 pub mod gauss_seidel;
+pub mod master_actor;
 pub mod method;
 pub mod oracle;
 pub mod sequential;
@@ -41,7 +47,7 @@ pub mod tree_threaded;
 
 pub use driver::{run_parallel, DriverConfig};
 pub use executor::{
-    check_supported, run_with_backend, run_with_backend_topology, thread_supported,
+    check_supported, master_coupled, run_with_backend, run_with_backend_topology,
     tree_supported, Backend, Executor, SimExecutor, ThreadExecutor,
 };
 pub use method::Method;

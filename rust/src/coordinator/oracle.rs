@@ -51,17 +51,25 @@ pub struct MlpOracle {
 }
 
 impl MlpOracle {
+    /// Replicated-loader oracle (the §4.1 CIFAR mode, the sweep
+    /// default). Use [`MlpOracle::new_sharded`] to pick the mode.
     pub fn new(data: Arc<BlobDataset>, cfg: MlpConfig, batch: usize, seed: u64) -> Self {
+        Self::new_sharded(data, cfg, batch, seed, Sharding::Replicated)
+    }
+
+    /// Oracle with an explicit §4.1 prefetch sharding mode: every
+    /// loader owns the whole dataset (`Replicated`, CIFAR mode) or a
+    /// distinct 1/k shard (`Partitioned`, ImageNet mode).
+    pub fn new_sharded(
+        data: Arc<BlobDataset>,
+        cfg: MlpConfig,
+        batch: usize,
+        seed: u64,
+        sharding: Sharding,
+    ) -> Self {
         assert_eq!(cfg.dims[0], data.dim);
         assert_eq!(*cfg.dims.last().unwrap(), data.classes);
-        let pool = PrefetchPool::new(
-            data.train.len(),
-            4,
-            batch * 2,
-            batch,
-            Sharding::Replicated,
-            seed,
-        );
+        let pool = PrefetchPool::new(data.train.len(), 4, batch * 2, batch, sharding, seed);
         let probe = (0..256.min(data.train.len())).collect();
         Self {
             data,
@@ -74,11 +82,25 @@ impl MlpOracle {
         }
     }
 
-    /// Sweep-default oracle family: every worker shares the dataset,
-    /// distinct RNG streams.
+    /// Sweep-default oracle family: every worker shares the dataset
+    /// through replicated loaders, distinct RNG streams.
     pub fn family(data: Arc<BlobDataset>, cfg: &MlpConfig, batch: usize, p: usize) -> Vec<Self> {
+        Self::family_sharded(data, cfg, batch, p, Sharding::Replicated)
+    }
+
+    /// Oracle family with an explicit prefetch sharding mode (the
+    /// `sharding=` knob of the `train` CLI and the ch4 sweeps).
+    pub fn family_sharded(
+        data: Arc<BlobDataset>,
+        cfg: &MlpConfig,
+        batch: usize,
+        p: usize,
+        sharding: Sharding,
+    ) -> Vec<Self> {
         (0..p)
-            .map(|i| Self::new(data.clone(), cfg.clone(), batch, 40_000 + i as u64))
+            .map(|i| {
+                Self::new_sharded(data.clone(), cfg.clone(), batch, 40_000 + i as u64, sharding)
+            })
             .collect()
     }
 
@@ -239,6 +261,26 @@ mod tests {
         for o in &fam[1..] {
             assert_eq!(o.init_params(), base, "shared init (§4.1)");
         }
+    }
+
+    #[test]
+    fn partitioned_family_trains_like_replicated() {
+        // The §4.1 ImageNet mode: each of a worker's 4 loaders owns a
+        // distinct quarter of the training set. Gradients still
+        // descend — the union of the shards is the whole set.
+        let (data, cfg) = small_setup();
+        let fam = MlpOracle::family_sharded(data, &cfg, 32, 2, Sharding::Partitioned);
+        let mut o = fam.into_iter().next().unwrap();
+        let mut theta = o.init_params();
+        let mut g = vec![0.0; o.n_params()];
+        let mut rng = Rng::new(2);
+        let e0 = o.eval(&theta);
+        for _ in 0..150 {
+            o.grad(&theta, &mut rng, &mut g);
+            crate::model::flat::sgd_step(&mut theta, &g, 0.2);
+        }
+        let e1 = o.eval(&theta);
+        assert!(e1.train_loss < e0.train_loss - 0.2, "{:?} -> {:?}", e0, e1);
     }
 
     #[test]

@@ -1,17 +1,29 @@
-//! Real-parallelism backend: one `std::thread` per worker, the center
-//! variable behind a sharded lock ([`super::executor::ThreadExecutor`]).
+//! Real-parallelism star backend: one `std::thread` per worker, the
+//! center variable behind a [`CenterBackend`]
+//! ([`super::executor::ThreadExecutor`]).
 //!
 //! Where the virtual-time driver *models* asynchrony (per-worker
 //! clocks, jittered costs), this backend *is* asynchronous: workers
-//! free-run on OS threads and the elastic/DOWNPOUR exchanges of
+//! free-run on OS threads and the exchanges of
 //! [`super::method::Method`] execute concurrently against genuinely
-//! stale center reads. The center is split into contiguous shards, each
-//! behind its own `Mutex`; an exchange locks one shard at a time, so
-//! two workers exchanging simultaneously interleave at shard
-//! granularity — the center a worker assembles is a mixture of
-//! before/after states, exactly the staleness regime the thesis argues
-//! EASGD tolerates (and Jin et al. 2016 argue must be validated on real
-//! concurrent workers).
+//! stale center reads. How the center variable survives that
+//! concurrency is the [`CenterBackend`] choice, made per method:
+//!
+//! * [`ShardedMaster`] — the master-DEcoupled methods (EASGD / EAMSGD,
+//!   the DOWNPOUR pull-push family). The center is split into
+//!   contiguous shards, each behind its own `Mutex`; an exchange locks
+//!   one shard at a time, so two workers exchanging simultaneously
+//!   interleave at shard granularity — the center a worker assembles
+//!   is a mixture of before/after states, exactly the staleness regime
+//!   the thesis argues EASGD tolerates (and Jin et al. 2016 argue must
+//!   be validated on real concurrent workers).
+//! * [`super::master_actor::ActorMaster`] — the master-COUPLED methods
+//!   (MDOWNPOUR, async ADMM), whose master update belongs to every
+//!   local step and cannot race shard-by-shard. A dedicated master
+//!   thread owns the center and absorbs worker messages over `mpsc`
+//!   channels with serialized Gauss–Seidel application — the same
+//!   actor pattern [`super::tree_threaded`] uses for interior tree
+//!   nodes.
 //!
 //! Semantics and differences from the simulator:
 //! * `DriverConfig::horizon` / `eval_every` are REAL (wall-clock)
@@ -21,9 +33,11 @@
 //! * Runs are not bit-deterministic — the OS scheduler picks the
 //!   interleaving — but optimization-level outcomes match the simulator
 //!   (`tests/executor_equivalence.rs`).
-//! * MDOWNPOUR / async ADMM interleave master updates into every local
-//!   step; they remain simulator-only
-//!   ([`super::executor::thread_supported`]).
+//! * A worker performs NO communication round at `t_local == 0`: the
+//!   round would be a no-op exchange (all-zero push, elastic average of
+//!   identical init params) yet would advance the master clock by one
+//!   per worker, skewing ADOWNPOUR's 1/t averaging schedule and
+//!   polluting the comm-time breakdown.
 //!
 //! Evaluation: the main thread snapshots the (averaged) center at the
 //! eval cadence while workers run, and scores the snapshots with
@@ -31,7 +45,7 @@
 //! with the workers.
 
 use super::executor::{
-    eval_point, local_step_decoupled, thread_supported, DriverConfig, WorkerState,
+    eval_point, local_step_decoupled, master_coupled, DriverConfig, WorkerState,
 };
 use super::method::Method;
 use super::oracle::GradOracle;
@@ -43,6 +57,52 @@ use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::Mutex;
 use std::time::{Duration, Instant};
 
+/// Cross-thread run state (borrowed by every worker).
+pub(crate) struct Shared {
+    pub(crate) stop: AtomicBool,
+    pub(crate) steps: AtomicU64,
+    pub(crate) diverged: AtomicBool,
+    pub(crate) compute_ns: AtomicU64,
+    pub(crate) comm_ns: AtomicU64,
+}
+
+/// The center variable's concurrency backend for the star thread
+/// executor: how worker threads read and update the shared center.
+/// Chosen per method by [`run_threaded`] —
+/// [`super::executor::master_coupled`] methods go through the
+/// channel-serialized master actor, the rest through the sharded lock.
+pub(crate) trait CenterBackend: Sync {
+    /// Per-worker endpoint, moved into that worker's thread (channel
+    /// ends for the actor; nothing for the sharded lock).
+    type Port: Send;
+
+    /// Mint the p worker endpoints. Called once, before spawning.
+    fn take_ports(&mut self, p: usize) -> Vec<Self::Port>;
+
+    /// Copy out the evaluation target (averaged center when defined).
+    /// Callable from the main thread at any point during the run.
+    fn snapshot(&self) -> Vec<f32>;
+
+    /// Center-update rounds applied so far (the master clock).
+    fn rounds(&self) -> u64;
+
+    /// Blocking service loop for backends that need a master thread
+    /// (the actor); returns once every worker port is dropped. The
+    /// sharded lock needs no server.
+    fn serve(&self) {}
+
+    /// One worker iteration: the method's communication round (when
+    /// due) plus one local gradient step. Returns the batch loss.
+    fn step<O: GradOracle>(
+        &self,
+        cfg: &DriverConfig,
+        port: &mut Self::Port,
+        w: &mut WorkerState,
+        oracle: &mut O,
+        sh: &Shared,
+    ) -> f32;
+}
+
 /// One lock-protected slice of master state.
 struct Shard {
     center: Vec<f32>,
@@ -52,16 +112,17 @@ struct Shard {
     clock: u64,
 }
 
-/// The center variable behind a sharded lock. Workers lock one shard
-/// at a time in index order; the snapshot path does the same, so there
-/// is a single global lock order and no deadlock.
-struct ShardedMaster {
+/// The center variable behind a sharded lock — the [`CenterBackend`]
+/// of the master-decoupled methods. Workers lock one shard at a time
+/// in index order; the snapshot path does the same, so there is a
+/// single global lock order and no deadlock.
+pub(crate) struct ShardedMaster {
     shards: Vec<Mutex<Shard>>,
     bounds: Vec<Range<usize>>,
 }
 
 impl ShardedMaster {
-    fn new(init: &[f32], n_shards: usize, averaged: bool) -> ShardedMaster {
+    pub(crate) fn new(init: &[f32], n_shards: usize, averaged: bool) -> ShardedMaster {
         let n = init.len();
         let s = n_shards.clamp(1, n.max(1));
         let bounds: Vec<Range<usize>> =
@@ -79,7 +140,52 @@ impl ShardedMaster {
         ShardedMaster { shards, bounds }
     }
 
-    /// Copy out the evaluation target (averaged center when defined).
+    /// One communication round: walk the shards in order, performing
+    /// the method's exchange on each slice under that shard's lock.
+    fn exchange(&self, cfg: &DriverConfig, w: &mut WorkerState) {
+        match cfg.method {
+            Method::Easgd { alpha, .. } | Method::Eamsgd { alpha, .. } => {
+                for (sh, r) in self.shards.iter().zip(&self.bounds) {
+                    let mut sh = sh.lock().unwrap();
+                    flat::elastic_exchange(&mut w.theta[r.clone()], &mut sh.center, alpha);
+                    sh.clock += 1;
+                }
+            }
+            Method::Downpour { .. } | Method::ADownpour { .. } | Method::MvaDownpour { .. } => {
+                for (sh, r) in self.shards.iter().zip(&self.bounds) {
+                    let mut guard = sh.lock().unwrap();
+                    let sh = &mut *guard;
+                    // Alg. 3 on this slice: push accumulated update, pull.
+                    flat::accumulate(&mut sh.center, &w.aux[r.clone()]);
+                    w.theta[r.clone()].copy_from_slice(&sh.center);
+                    w.aux[r.clone()].iter_mut().for_each(|a| *a = 0.0);
+                    sh.clock += 1;
+                    match cfg.method {
+                        Method::ADownpour { .. } => {
+                            let a = 1.0 / (sh.clock as f32);
+                            flat::moving_average(sh.z.as_mut().unwrap(), &sh.center, a);
+                        }
+                        Method::MvaDownpour { alpha, .. } => {
+                            flat::moving_average(sh.z.as_mut().unwrap(), &sh.center, alpha);
+                        }
+                        _ => {}
+                    }
+                }
+            }
+            Method::MDownpour { .. } | Method::AdmmAsync { .. } => {
+                unreachable!("master-coupled methods run on the master actor")
+            }
+        }
+    }
+}
+
+impl CenterBackend for ShardedMaster {
+    type Port = ();
+
+    fn take_ports(&mut self, p: usize) -> Vec<()> {
+        vec![(); p]
+    }
+
     fn snapshot(&self) -> Vec<f32> {
         let n = self.bounds.last().map(|r| r.end).unwrap_or(0);
         let mut out = Vec::with_capacity(n);
@@ -89,63 +195,45 @@ impl ShardedMaster {
         }
         out
     }
-}
 
-/// Cross-thread run state (borrowed by every worker).
-struct Shared<'a> {
-    master: &'a ShardedMaster,
-    stop: AtomicBool,
-    steps: AtomicU64,
-    diverged: AtomicBool,
-    compute_ns: AtomicU64,
-    comm_ns: AtomicU64,
-}
+    fn rounds(&self) -> u64 {
+        // Every exchange walks every shard exactly once, so any one
+        // shard's clock is the round count.
+        self.shards.first().map_or(0, |sh| sh.lock().unwrap().clock)
+    }
 
-/// One communication round: walk the shards in order, performing the
-/// method's exchange on each slice under that shard's lock.
-fn exchange(cfg: &DriverConfig, w: &mut WorkerState, master: &ShardedMaster) {
-    match cfg.method {
-        Method::Easgd { alpha, .. } | Method::Eamsgd { alpha, .. } => {
-            for (sh, r) in master.shards.iter().zip(&master.bounds) {
-                let mut sh = sh.lock().unwrap();
-                flat::elastic_exchange(&mut w.theta[r.clone()], &mut sh.center, alpha);
-                sh.clock += 1;
-            }
+    fn step<O: GradOracle>(
+        &self,
+        cfg: &DriverConfig,
+        _port: &mut (),
+        w: &mut WorkerState,
+        oracle: &mut O,
+        sh: &Shared,
+    ) -> f32 {
+        let tau = cfg.method.tau().max(1) as u64;
+        // No round at t_local == 0 — see the module docs.
+        if w.t_local > 0 && w.t_local % tau == 0 {
+            let t0 = Instant::now();
+            self.exchange(cfg, w);
+            sh.comm_ns
+                .fetch_add(t0.elapsed().as_nanos() as u64, Ordering::Relaxed);
         }
-        Method::Downpour { .. } | Method::ADownpour { .. } | Method::MvaDownpour { .. } => {
-            for (sh, r) in master.shards.iter().zip(&master.bounds) {
-                let mut guard = sh.lock().unwrap();
-                let sh = &mut *guard;
-                // Alg. 3 on this slice: push accumulated update, pull.
-                flat::accumulate(&mut sh.center, &w.aux[r.clone()]);
-                w.theta[r.clone()].copy_from_slice(&sh.center);
-                w.aux[r.clone()].iter_mut().for_each(|a| *a = 0.0);
-                sh.clock += 1;
-                match cfg.method {
-                    Method::ADownpour { .. } => {
-                        let a = 1.0 / (sh.clock as f32);
-                        flat::moving_average(sh.z.as_mut().unwrap(), &sh.center, a);
-                    }
-                    Method::MvaDownpour { alpha, .. } => {
-                        flat::moving_average(sh.z.as_mut().unwrap(), &sh.center, alpha);
-                    }
-                    _ => {}
-                }
-            }
-        }
-        Method::MDownpour { .. } | Method::AdmmAsync { .. } => {
-            unreachable!("thread_supported() gates master-coupled methods")
-        }
+        let t0 = Instant::now();
+        let loss = local_step_decoupled(cfg, w, oracle);
+        sh.compute_ns
+            .fetch_add(t0.elapsed().as_nanos() as u64, Ordering::Relaxed);
+        loss
     }
 }
 
-fn worker_loop<O: GradOracle>(
+fn worker_loop<O: GradOracle, C: CenterBackend>(
     cfg: &DriverConfig,
+    center: &C,
+    mut port: C::Port,
     w: &mut WorkerState,
     oracle: &mut O,
-    sh: &Shared<'_>,
+    sh: &Shared,
 ) {
-    let tau = cfg.method.tau().max(1) as u64;
     loop {
         if sh.stop.load(Ordering::Relaxed) {
             break;
@@ -157,50 +245,34 @@ fn worker_loop<O: GradOracle>(
             sh.stop.store(true, Ordering::Relaxed);
             break;
         }
-        if w.t_local % tau == 0 {
-            let t0 = Instant::now();
-            exchange(cfg, w, sh.master);
-            sh.comm_ns
-                .fetch_add(t0.elapsed().as_nanos() as u64, Ordering::Relaxed);
-        }
-        let t0 = Instant::now();
-        let loss = local_step_decoupled(cfg, w, oracle);
-        sh.compute_ns
-            .fetch_add(t0.elapsed().as_nanos() as u64, Ordering::Relaxed);
+        let loss = center.step(cfg, &mut port, w, oracle, sh);
         if !loss.is_finite() || flat::norm2(&w.theta) > 1e8 {
             sh.diverged.store(true, Ordering::Relaxed);
             sh.stop.store(true, Ordering::Relaxed);
             break;
         }
     }
+    // `port` drops here — for the actor backend this is the worker's
+    // goodbye: once every port is gone the master's receive loop
+    // disconnects and `serve` returns.
 }
 
-/// Run one distributed experiment on real threads. `oracles[i]` is
-/// worker i's gradient computer; `oracles[0]` doubles as the (post-run)
-/// evaluator. `n_shards` is the center lock granularity.
-pub fn run_threaded<O: GradOracle + Send>(
+/// The shared star driver: spawn the backend's server (if any) and one
+/// worker thread per oracle, snapshot the eval target at the cadence,
+/// join, score.
+pub(crate) fn run_with_center<O: GradOracle + Send, C: CenterBackend>(
     oracles: &mut [O],
     cfg: &DriverConfig,
-    n_shards: usize,
+    init: Vec<f32>,
+    mut center: C,
 ) -> RunResult {
     let p = oracles.len();
-    assert!(p >= 1);
-    assert!(
-        thread_supported(cfg.method),
-        "{} is master-coupled; use the sim backend",
-        cfg.method.name()
-    );
-    let init = oracles[0].init_params();
-    let averaged = matches!(
-        cfg.method,
-        Method::ADownpour { .. } | Method::MvaDownpour { .. }
-    );
-    let master = ShardedMaster::new(&init, n_shards, averaged);
     let mut root_rng = Rng::new(cfg.seed);
     let mut workers = WorkerState::family(&init, p, &mut root_rng);
+    let ports = center.take_ports(p);
+    let center = &center;
 
     let shared = Shared {
-        master: &master,
         stop: AtomicBool::new(false),
         steps: AtomicU64::new(0),
         diverged: AtomicBool::new(false),
@@ -212,12 +284,14 @@ pub fn run_threaded<O: GradOracle + Send>(
     let mut snaps: Vec<(f64, Vec<f32>)> = Vec::new();
     let t0 = Instant::now();
     std::thread::scope(|s| {
+        let server = s.spawn(move || center.serve());
         let handles: Vec<_> = workers
             .iter_mut()
             .zip(oracles.iter_mut())
-            .map(|(w, o)| {
+            .zip(ports)
+            .map(|((w, o), port)| {
                 let shared = &shared;
-                s.spawn(move || worker_loop(cfg, w, o, shared))
+                s.spawn(move || worker_loop(cfg, center, port, w, o, shared))
             })
             .collect();
         let cadence = cfg.eval_every.max(1e-3);
@@ -225,7 +299,7 @@ pub fn run_threaded<O: GradOracle + Send>(
         loop {
             let el = t0.elapsed().as_secs_f64();
             if el >= next_eval {
-                snaps.push((el, shared.master.snapshot()));
+                snaps.push((el, center.snapshot()));
                 next_eval += cadence;
             }
             if el > cfg.horizon {
@@ -236,14 +310,19 @@ pub fn run_threaded<O: GradOracle + Send>(
             }
             std::thread::sleep(Duration::from_micros(200));
         }
-        // Scope joins on exit; propagate worker panics eagerly.
+        // Scope joins on exit; propagate panics eagerly. Workers first
+        // (dropping their ports), then the server, whose receive loop
+        // disconnects once the last port is gone.
         for h in handles {
             if let Err(e) = h.join() {
                 std::panic::resume_unwind(e);
             }
         }
+        if let Err(e) = server.join() {
+            std::panic::resume_unwind(e);
+        }
     });
-    snaps.push((t0.elapsed().as_secs_f64(), master.snapshot()));
+    snaps.push((t0.elapsed().as_secs_f64(), center.snapshot()));
 
     let mut result = RunResult::default();
     let mut diverged = shared.diverged.load(Ordering::Relaxed);
@@ -253,6 +332,7 @@ pub fn run_threaded<O: GradOracle + Send>(
         }
     }
     result.total_steps = shared.steps.load(Ordering::Relaxed);
+    result.rounds = center.rounds();
     result.breakdown = TimeBreakdown {
         compute: shared.compute_ns.load(Ordering::Relaxed) as f64 * 1e-9,
         data: 0.0,
@@ -260,6 +340,32 @@ pub fn run_threaded<O: GradOracle + Send>(
     };
     result.diverged = diverged;
     result
+}
+
+/// Run one distributed experiment on real threads. `oracles[i]` is
+/// worker i's gradient computer; `oracles[0]` doubles as the (post-run)
+/// evaluator. `n_shards` is the center lock granularity for the
+/// sharded backend (master-coupled methods serialize through the actor
+/// instead and ignore it).
+pub fn run_threaded<O: GradOracle + Send>(
+    oracles: &mut [O],
+    cfg: &DriverConfig,
+    n_shards: usize,
+) -> RunResult {
+    let p = oracles.len();
+    assert!(p >= 1);
+    let init = oracles[0].init_params();
+    if master_coupled(cfg.method) {
+        let actor = super::master_actor::ActorMaster::new(cfg.method, &init, p);
+        run_with_center(oracles, cfg, init, actor)
+    } else {
+        let averaged = matches!(
+            cfg.method,
+            Method::ADownpour { .. } | Method::MvaDownpour { .. }
+        );
+        let master = ShardedMaster::new(&init, n_shards, averaged);
+        run_with_center(oracles, cfg, init, master)
+    }
 }
 
 #[cfg(test)]
@@ -334,10 +440,42 @@ mod tests {
     }
 
     #[test]
-    #[should_panic(expected = "master-coupled")]
-    fn master_coupled_methods_panic() {
-        let mut oracles = QuadraticOracle::family(8, 1.0, 0.0, 1.0, 0.0, 2);
-        let c = cfg(Method::MDownpour { delta: 0.9 }, 10);
-        let _ = run_threaded(&mut oracles, &c, 4);
+    fn no_round_at_t_local_zero() {
+        // One worker, τ=1, S steps: rounds happen at t_local = 1..S−1,
+        // never at 0, so the master clock reads S−1 (it read S before
+        // the fix — one spurious no-op round skewing the 1/t schedule).
+        let mut oracles = QuadraticOracle::family(16, 1.0, 0.0, 1.0, 0.0, 1);
+        let mut c = cfg(Method::ADownpour { tau: 1 }, 400);
+        c.eta = 0.05;
+        let r = run_threaded(&mut oracles, &c, 4);
+        assert!(!r.diverged);
+        assert_eq!(r.total_steps, 400);
+        assert_eq!(r.rounds, 399);
+    }
+
+    #[test]
+    fn threaded_mdownpour_converges_on_quadratic() {
+        let mut oracles = QuadraticOracle::family(32, 1.0, 0.0, 1.0, 0.0, 2);
+        let mut c = cfg(Method::MDownpour { delta: 0.9 }, 4000);
+        c.eta = 0.01;
+        let r = run_threaded(&mut oracles, &c, 4);
+        assert!(!r.diverged);
+        assert_eq!(r.total_steps, 4000);
+        // Master momentum pushes the center all the way to the target.
+        assert!(r.curve.last().unwrap().train_loss < 1e-4);
+        // Every local step is one serialized master round (τ = 1).
+        assert_eq!(r.rounds, 4000);
+    }
+
+    #[test]
+    fn threaded_admm_converges_on_quadratic() {
+        let mut oracles = QuadraticOracle::family(32, 1.0, 0.0, 1.0, 0.0, 2);
+        let mut c = cfg(Method::AdmmAsync { rho: 1.0, tau: 4 }, 8000);
+        c.eta = 0.05;
+        let r = run_threaded(&mut oracles, &c, 4);
+        assert!(!r.diverged);
+        assert_eq!(r.total_steps, 8000);
+        assert!(r.curve.last().unwrap().train_loss < 1e-4);
+        assert!(r.rounds > 0);
     }
 }

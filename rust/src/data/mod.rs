@@ -17,4 +17,4 @@ pub mod prefetch;
 
 pub use blobs::BlobDataset;
 pub use markov::MarkovCorpus;
-pub use prefetch::{DataLoader, PrefetchPool};
+pub use prefetch::{DataLoader, PrefetchPool, Sharding};

@@ -52,6 +52,10 @@ impl DataLoader {
 pub struct PrefetchPool {
     loaders: Vec<DataLoader>,
     batch: usize,
+    /// Trailing partial mini-batch carried into the next fetch — the
+    /// pool never drops fetched samples when k × chunk is not a
+    /// multiple of `batch`.
+    carry: Vec<usize>,
 }
 
 /// Sharding mode for constructing the pool (thesis §4.1).
@@ -61,6 +65,25 @@ pub enum Sharding {
     Replicated,
     /// Loader j owns the j-th 1/k fraction (ImageNet mode).
     Partitioned,
+}
+
+impl Sharding {
+    /// CLI/config selector (`sharding=replicated|partitioned`; the
+    /// thesis' dataset names are accepted as aliases).
+    pub fn parse(s: &str) -> Option<Sharding> {
+        match s {
+            "replicated" | "cifar" => Some(Sharding::Replicated),
+            "partitioned" | "imagenet" => Some(Sharding::Partitioned),
+            _ => None,
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Sharding::Replicated => "replicated",
+            Sharding::Partitioned => "partitioned",
+        }
+    }
 }
 
 impl PrefetchPool {
@@ -85,21 +108,22 @@ impl PrefetchPool {
                 DataLoader::new(file, chunk, batch, seed.wrapping_add(j as u64))
             })
             .collect();
-        Self { loaders, batch }
+        Self { loaders, batch, carry: Vec::new() }
     }
 
-    /// One worker fetch: k chunks (one per loader), shuffled, cut into
-    /// mini-batches of `batch` sample indices.
+    /// One worker fetch: the previous fetch's trailing remainder plus
+    /// k chunks (one per loader), shuffled, cut into mini-batches of
+    /// `batch` sample indices. The trailing partial mini-batch is
+    /// carried over into the next fetch, never dropped.
     pub fn fetch_minibatches(&mut self, rng: &mut Rng) -> Vec<Vec<usize>> {
-        let mut pool: Vec<usize> = Vec::new();
+        let mut pool: Vec<usize> = std::mem::take(&mut self.carry);
         for l in &mut self.loaders {
             pool.extend(l.next_chunk());
         }
         rng.shuffle(&mut pool);
-        pool.chunks(self.batch)
-            .filter(|c| c.len() == self.batch)
-            .map(|c| c.to_vec())
-            .collect()
+        let full = pool.len() / self.batch * self.batch;
+        self.carry = pool.split_off(full);
+        pool.chunks(self.batch).map(|c| c.to_vec()).collect()
     }
 }
 
@@ -147,6 +171,42 @@ mod tests {
             assert_eq!(mb.len(), 128);
             assert!(mb.iter().all(|&i| i < 512));
         }
+    }
+
+    #[test]
+    fn trailing_partial_minibatch_carries_over() {
+        // 3 loaders × 40 = 120 samples per fetch, batch 32:
+        // 120 = 3×32 + 24, so each fetch leaves a remainder.
+        let mut pool = PrefetchPool::new(240, 3, 40, 32, Sharding::Replicated, 7);
+        let mut rng = Rng::new(8);
+        let first = pool.fetch_minibatches(&mut rng);
+        assert_eq!(first.len(), 3); // 96 served, 24 carried
+        assert_eq!(pool.carry.len(), 24);
+        // Second fetch sees 24 + 120 = 144 = 4×32 + 16.
+        let second = pool.fetch_minibatches(&mut rng);
+        assert_eq!(second.len(), 4);
+        assert_eq!(pool.carry.len(), 16);
+        // Over many fetches nothing is ever dropped: served + carry
+        // always accounts for every fetched sample.
+        let mut served = (first.len() + second.len()) * 32;
+        for _ in 0..10 {
+            served += pool.fetch_minibatches(&mut rng).len() * 32;
+        }
+        let fetched = 12 * 120;
+        assert!(
+            fetched - served < 32,
+            "served {served} of {fetched}; the rest must sit in carry"
+        );
+        assert_eq!(served + pool.carry.len(), fetched);
+    }
+
+    #[test]
+    fn sharding_parse_roundtrip() {
+        assert_eq!(Sharding::parse("replicated"), Some(Sharding::Replicated));
+        assert_eq!(Sharding::parse("partitioned"), Some(Sharding::Partitioned));
+        assert_eq!(Sharding::parse("imagenet"), Some(Sharding::Partitioned));
+        assert_eq!(Sharding::parse("bogus"), None);
+        assert_eq!(Sharding::Partitioned.name(), "partitioned");
     }
 
     #[test]

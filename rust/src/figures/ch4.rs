@@ -10,7 +10,7 @@ use crate::coordinator::{
     run_sequential, run_with_backend, Backend, DriverConfig, Method, MlpOracle, SeqMethod,
 };
 use crate::csv_row;
-use crate::data::BlobDataset;
+use crate::data::{BlobDataset, Sharding};
 use crate::model::MlpConfig;
 use crate::error::Result;
 use std::sync::Arc;
@@ -32,6 +32,9 @@ pub struct Sweep {
     /// Executor backend every parallel run in this sweep goes through
     /// (sim = virtual time; thread = real workers, real seconds).
     pub backend: Backend,
+    /// §4.1 prefetch sharding for every oracle family in this sweep
+    /// (Replicated = CIFAR mode; Partitioned = ImageNet mode).
+    pub sharding: Sharding,
 }
 
 impl Sweep {
@@ -43,6 +46,7 @@ impl Sweep {
             eval_every: if opts.full { 5.0 } else { 2.5 },
             seed: opts.seed,
             backend: opts.backend,
+            sharding: Sharding::Replicated,
         }
     }
 
@@ -65,7 +69,8 @@ impl Sweep {
         family: &str,
         gamma: f64,
     ) -> Result<RunResult> {
-        let mut oracles = MlpOracle::family(self.data.clone(), &self.mcfg, 32, p);
+        let mut oracles =
+            MlpOracle::family_sharded(self.data.clone(), &self.mcfg, 32, p, self.sharding);
         let cfg = DriverConfig {
             eta,
             method,
@@ -250,6 +255,8 @@ pub fn fig4_imagenet(opts: &FigOpts) -> Result<()> {
     let mut sw = Sweep::new(opts);
     sw.horizon = if opts.full { 4000.0 } else { 900.0 };
     sw.eval_every = sw.horizon / 18.0;
+    // The §4.1 ImageNet mode: each loader owns a distinct 1/k shard.
+    sw.sharding = Sharding::Partitioned;
     let mut csv = Csv::create(
         format!("{}/fig4_8_4_9.csv", opts.out_dir),
         &["method", "tau", "p", "time", "train_loss", "test_loss", "test_error"],
@@ -489,6 +496,9 @@ pub fn tab4_4(opts: &FigOpts) -> Result<()> {
             sw.horizon
         };
         iw.eval_every = iw.horizon;
+        if family == "imagenet" {
+            iw.sharding = Sharding::Partitioned;
+        }
         for &p in &[1usize, 4, 8, 16] {
             for (name, method, tau) in [
                 ("DOWNPOUR", Method::Downpour { tau: 1 }, 1u32),

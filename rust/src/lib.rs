@@ -26,10 +26,13 @@
 //!   [`coordinator::Executor`] abstraction: two backends (virtual-time
 //!   [`coordinator::SimExecutor`], real-thread
 //!   [`coordinator::ThreadExecutor`]) × two
-//!   [`coordinator::Topology`]s (flat star with a sharded-lock center;
-//!   the Chapter-6 EASGD **Tree** — `coordinator::tree` in virtual
-//!   time, `coordinator::tree_threaded` as one actor thread per node
-//!   over `mpsc` channels), with a checked method/backend/topology
+//!   [`coordinator::Topology`]s (flat star, method-complete on both
+//!   backends — sharded-lock center for the decoupled methods, the
+//!   `coordinator::master_actor` serialized master thread for
+//!   MDOWNPOUR / async ADMM; the Chapter-6 EASGD **Tree** —
+//!   `coordinator::tree` in virtual time,
+//!   `coordinator::tree_threaded` as one actor thread per node over
+//!   `mpsc` channels), with a checked method/backend/topology
 //!   support matrix ([`coordinator::check_supported`]); sequential
 //!   baselines and round-robin ADMM ride along.
 //! - [`runtime`] — PJRT artifact loading (always) and execution

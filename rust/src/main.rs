@@ -5,11 +5,15 @@
 //!       Regenerate a thesis table/figure (DESIGN.md §5 maps ids).
 //!   repro train [method=easgd|eamsgd|downpour|...] [p=4] [tau=10]
 //!               [eta=0.05] [horizon=60] [cost=cifar|imagenet]
+//!               [sharding=replicated|partitioned]
 //!               [backend=sim|thread] [topology=star|tree] ...
 //!       One distributed run on the native-MLP sweep workload; prints
-//!       the tracked-variable curve. With topology=tree, p counts the
-//!       LEAVES and degree=/scheme=/tau1=/tau2=/tau_up=/tau_down=
-//!       shape the d-ary tree (thesis Ch. 6).
+//!       the tracked-variable curve. Every parallel method runs on
+//!       both backends (the thread backend serializes MDOWNPOUR and
+//!       async ADMM through a master-actor thread). With
+//!       topology=tree, p counts the LEAVES and
+//!       degree=/scheme=/tau1=/tau2=/tau_up=/tau_down= shape the
+//!       d-ary tree (thesis Ch. 6).
 //!   repro train-pjrt [p=2] [steps=200] [eta=0.3] [tau=4]
 //!       The end-to-end three-layer run: AOT transformer through PJRT.
 //!   repro inspect
@@ -49,6 +53,7 @@ fn run() -> Result<()> {
                 "usage: repro <figure|train|train-pjrt|inspect> [key=value ...]\n\
                  figures:  repro figure list\n\
                  backend:  train/figure accept backend=sim|thread\n\
+                 data:     train accepts sharding=replicated|partitioned (§4.1)\n\
                  topology: train accepts topology=star|tree; with tree:\n\
                  \x20          degree=4 scheme=multiscale tau1=10 tau2=100\n\
                  \x20          degree=4 scheme=updown tau_up=1 tau_down=10"
@@ -112,6 +117,11 @@ fn cmd_train(args: &Args) -> Result<()> {
 
     let topo = topology_from_args(args)?;
 
+    let sharding = match cfg.sharding_mode() {
+        Some(s) => s,
+        None => bail!("unknown sharding '{}' (replicated|partitioned)", cfg.sharding),
+    };
+
     if let Some(mut m) = cfg.parallel_method() {
         // Tree runs use the thesis rate α = β/(d+1) — a node talks to
         // at most d+1 neighbors — instead of the star's β/p.
@@ -124,17 +134,18 @@ fn cmd_train(args: &Args) -> Result<()> {
             };
         }
         println!(
-            "train: {} p={} τ={} η={} horizon={}s ({} cost model, {} backend, {} topology)",
+            "train: {} p={} τ={} η={} horizon={}s ({} cost model, {} sharding, {} backend, {} topology)",
             m.name(),
             cfg.p,
             cfg.tau,
             cfg.eta,
             cfg.horizon,
             cfg.cost_family,
+            sharding.name(),
             backend.name(),
             topo.name()
         );
-        let mut oracles = MlpOracle::family(data, &mcfg, cfg.batch, cfg.p);
+        let mut oracles = MlpOracle::family_sharded(data, &mcfg, cfg.batch, cfg.p, sharding);
         let dc = DriverConfig {
             eta: cfg.eta,
             method: m,
@@ -165,7 +176,7 @@ fn cmd_train(args: &Args) -> Result<()> {
             cfg.eta,
             cfg.horizon
         );
-        let mut oracle = MlpOracle::new(data, mcfg, cfg.batch, 40_000);
+        let mut oracle = MlpOracle::new_sharded(data, mcfg, cfg.batch, 40_000, sharding);
         let r = run_sequential(
             &mut oracle, m, cfg.eta, &cost, cfg.horizon, cfg.eval_every, cfg.seed,
         );
@@ -262,8 +273,9 @@ fn print_curve(r: &elastic_train::cluster::RunResult) {
         );
     }
     println!(
-        "steps={} diverged={} best_test_err={:.4} | breakdown compute/data/comm = {:.1}/{:.1}/{:.1}s",
+        "steps={} rounds={} diverged={} best_test_err={:.4} | breakdown compute/data/comm = {:.1}/{:.1}/{:.1}s",
         r.total_steps,
+        r.rounds,
         r.diverged,
         r.best_test_error(),
         r.breakdown.compute,

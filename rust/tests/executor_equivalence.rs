@@ -98,6 +98,117 @@ fn thread_matches_sim_on_noisy_quadratic_within_noise_floor() {
     assert!(ls < 1e-3 && lt < 1e-3, "sim {ls} thread {lt}");
 }
 
+/// Same sim ⇄ thread agreement for MDOWNPOUR — a master-COUPLED
+/// method, which the thread backend runs through the master-actor
+/// thread (serialized Gauss–Seidel application of every gradient
+/// push). On the deterministic quadratic both machines must drive the
+/// center to the optimum.
+#[test]
+fn thread_matches_sim_on_quadratic_mdownpour() {
+    let (n, p, steps) = (128usize, 4usize, 20_000u64);
+    let method = Method::MDownpour { delta: 0.9 };
+    let mk = || QuadraticOracle::family(n, 1.0, 0.0, 1.0, 0.0, p);
+
+    let cfg = DriverConfig {
+        eta: 0.01, // master momentum amplifies: small lr (thesis §4.2)
+        method,
+        cost: fast_cost(n),
+        horizon: 1e6,
+        eval_every: 1e6,
+        seed: 29,
+        max_steps: steps,
+        lr_decay_gamma: 0.0,
+    };
+    let sim = SimExecutor.run(&mut mk(), &cfg);
+    let thr_cfg = DriverConfig { horizon: 60.0, ..cfg.clone() };
+    let thr = ThreadExecutor::default().run(&mut mk(), &thr_cfg);
+
+    assert!(!sim.diverged && !thr.diverged);
+    assert_eq!(sim.total_steps, steps);
+    assert_eq!(thr.total_steps, steps);
+    // MDOWNPOUR is τ=1: every local step is one serialized master round.
+    assert_eq!(thr.rounds, steps);
+    let ls = sim.curve.last().unwrap().train_loss;
+    let lt = thr.curve.last().unwrap().train_loss;
+    assert!(ls < 1e-5, "sim final loss {ls}");
+    assert!(lt < 1e-5, "thread final loss {lt}");
+    assert!((ls - lt).abs() < 1e-4, "sim {ls} vs thread {lt}");
+}
+
+/// Same agreement for async ADMM: dual ascent + serialized consensus
+/// mean at the master actor. The quadratic's ADMM fixed point is
+/// exactly the optimum (λ = 0, center = target), so both backends
+/// must land there.
+#[test]
+fn thread_matches_sim_on_quadratic_admm() {
+    let (n, p, steps) = (128usize, 4usize, 24_000u64);
+    let method = Method::AdmmAsync { rho: 1.0, tau: 4 };
+    let mk = || QuadraticOracle::family(n, 1.0, 0.0, 1.0, 0.0, p);
+
+    let cfg = DriverConfig {
+        eta: 0.05,
+        method,
+        cost: fast_cost(n),
+        horizon: 1e6,
+        eval_every: 1e6,
+        seed: 31,
+        max_steps: steps,
+        lr_decay_gamma: 0.0,
+    };
+    let sim = SimExecutor.run(&mut mk(), &cfg);
+    let thr_cfg = DriverConfig { horizon: 60.0, ..cfg.clone() };
+    let thr = ThreadExecutor::default().run(&mut mk(), &thr_cfg);
+
+    assert!(!sim.diverged && !thr.diverged);
+    assert_eq!(sim.total_steps, steps);
+    assert_eq!(thr.total_steps, steps);
+    assert!(thr.rounds > 0);
+    let ls = sim.curve.last().unwrap().train_loss;
+    let lt = thr.curve.last().unwrap().train_loss;
+    assert!(ls < 1e-5, "sim final loss {ls}");
+    assert!(lt < 1e-5, "thread final loss {lt}");
+    assert!((ls - lt).abs() < 1e-4, "sim {ls} vs thread {lt}");
+}
+
+/// Regression for the `t_local == 0` fix: the thread backend performs
+/// NO communication round before the first gradient step, so
+/// ADOWNPOUR's 1/t master clock counts exactly the data-carrying
+/// rounds. With one worker and τ=1 that is max_steps − 1 (it was
+/// max_steps before the fix — one spurious no-op round); with p
+/// workers each skips its own zeroth round.
+#[test]
+fn adownpour_thread_clock_has_no_spurious_zeroth_rounds() {
+    let steps = 500u64;
+    let cfg = DriverConfig {
+        eta: 0.05,
+        method: Method::ADownpour { tau: 1 },
+        cost: fast_cost(64),
+        horizon: 60.0,
+        eval_every: 1e6,
+        seed: 37,
+        max_steps: steps,
+        lr_decay_gamma: 0.0,
+    };
+    // p = 1: exact pin.
+    let mut one = QuadraticOracle::family(64, 1.0, 0.0, 1.0, 0.0, 1);
+    let r = ThreadExecutor::default().run(&mut one, &cfg);
+    assert!(!r.diverged);
+    assert_eq!(r.total_steps, steps);
+    assert_eq!(r.rounds, steps - 1);
+    // p = 3: every worker that ran skips one round (a worker that the
+    // scheduler never started before the budget ran out skips none).
+    let p = 3u64;
+    let mut fam = QuadraticOracle::family(64, 1.0, 0.0, 1.0, 0.0, p as usize);
+    let r = ThreadExecutor::default().run(&mut fam, &cfg);
+    assert_eq!(r.total_steps, steps);
+    assert!(
+        r.rounds >= steps - p && r.rounds < steps,
+        "rounds {} for {} steps, p={p}",
+        r.rounds,
+        steps
+    );
+}
+
 /// (b) The simulator is bitwise deterministic: two runs with the same
 /// seed produce identical step counts and identical curves (every
 /// field, exact float equality).

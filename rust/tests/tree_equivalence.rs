@@ -177,7 +177,8 @@ fn tree_elastic_fixed_point_preserves_conserved_mean() {
 
 /// (d) The public dispatch refuses unsupported method/topology/backend
 /// combinations with a descriptive error instead of silently falling
-/// back to another executor.
+/// back to another executor — and the star matrix is complete: every
+/// method runs there on both backends.
 #[test]
 fn dispatch_gates_unsupported_combinations() {
     let tree = Topology::Tree(TreeSpec::new(2, TreeScheme::UpDown { tau_up: 1, tau_down: 4 }));
@@ -205,27 +206,19 @@ fn dispatch_gates_unsupported_combinations() {
         assert!(format!("{e}").contains("no tree form"), "{backend:?}: {e}");
     }
 
-    // Master-coupled methods stay sim-only on the star.
-    let mut oracles = QuadraticOracle::family(64, 1.0, 0.0, 1.0, 0.0, 2);
-    let e = run_with_backend_topology(
-        Backend::Thread,
-        &mut oracles,
-        &cfg(Method::MDownpour { delta: 0.9 }),
-        &Topology::Star,
-    )
-    .unwrap_err();
-    assert!(format!("{e}").contains("master-coupled"), "{e}");
-
-    // The same combination on the sim backend runs fine.
-    let mut oracles = QuadraticOracle::family(64, 1.0, 0.0, 1.0, 0.0, 2);
-    let r = run_with_backend_topology(
-        Backend::Sim,
-        &mut oracles,
-        &cfg(Method::MDownpour { delta: 0.9 }),
-        &Topology::Star,
-    )
-    .unwrap();
-    assert!(!r.curve.is_empty());
+    // Master-coupled methods run on the star under BOTH backends (the
+    // thread backend serializes them through the master actor).
+    for backend in [Backend::Sim, Backend::Thread] {
+        let mut oracles = QuadraticOracle::family(64, 1.0, 0.0, 1.0, 0.0, 2);
+        let r = run_with_backend_topology(
+            backend,
+            &mut oracles,
+            &cfg(Method::MDownpour { delta: 0.9 }),
+            &Topology::Star,
+        )
+        .unwrap();
+        assert!(!r.curve.is_empty(), "{backend:?}");
+    }
 }
 
 /// (e) Tree and star agree on the degenerate single-worker case: with
