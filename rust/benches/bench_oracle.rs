@@ -1,0 +1,281 @@
+//! Samples/sec of the MLP gradient oracle across three compute paths:
+//!
+//! - **seed**: a verbatim replica of the pre-GEMM per-sample
+//!   algorithm (strided matvec loops, `exps`/`dpre`/`offsets` heap
+//!   allocations per sample) — the fixed baseline every PR is
+//!   measured against;
+//! - **per-sample**: today's `Mlp::grad` wrapper looped over the
+//!   batch (batch-of-one through the GEMM kernels);
+//! - **batched**: `Mlp::batch_grad`, one fused forward/backward over
+//!   the whole `n × dim` panel.
+//!
+//! Grid: batch ∈ {32, 128} × {sweep-default, wider} dims. This is the
+//! perf trajectory for every Chapter-4/6 figure sweep and both
+//! real-thread backends, whose wall clock is exactly this gradient
+//! step.
+//!
+//!     cargo bench --bench bench_oracle            # full grid
+//!     cargo bench --bench bench_oracle -- --quick # smoke (CI)
+//!
+//! Emits `BENCH_oracle.json` at the repository root (anchored via
+//! `CARGO_MANIFEST_DIR`, independent of the invocation directory).
+//! Acceptance shape: batched ≥ 3× the seed path at
+//! batch=128 on `MlpConfig::sweep_default` — the GEMM micro-kernels
+//! amortize weight-panel traffic over the batch, which
+//! one-sample-at-a-time matvecs cannot.
+
+use elastic_train::data::BlobDataset;
+use elastic_train::figures::benchkit;
+use elastic_train::model::{Mlp, MlpConfig};
+use elastic_train::rng::Rng;
+use std::hint::black_box;
+
+/// The seed's per-sample forward/backward, reproduced verbatim (minus
+/// the l2 term, identical across paths): scalar strided loops and the
+/// per-sample `exps`/`dpre`/`offsets` allocations the GEMM refactor
+/// removed. Kept here as the frozen baseline.
+struct SeedMlp {
+    dims: Vec<usize>,
+    acts: Vec<Vec<f32>>,
+    pre: Vec<Vec<f32>>,
+    grads_a: Vec<Vec<f32>>,
+}
+
+impl SeedMlp {
+    fn new(dims: &[usize]) -> Self {
+        Self {
+            dims: dims.to_vec(),
+            acts: dims.iter().map(|&d| vec![0.0; d]).collect(),
+            pre: dims[1..].iter().map(|&d| vec![0.0; d]).collect(),
+            grads_a: dims.iter().map(|&d| vec![0.0; d]).collect(),
+        }
+    }
+
+    fn grad(&mut self, theta: &[f32], x: &[f32], label: usize, grad: &mut [f32]) -> f32 {
+        self.acts[0].copy_from_slice(x);
+        let n_layers = self.dims.len() - 1;
+        let mut off = 0;
+        for l in 0..n_layers {
+            let (din, dout) = (self.dims[l], self.dims[l + 1]);
+            let w = &theta[off..off + din * dout];
+            let b = &theta[off + din * dout..off + din * dout + dout];
+            off += din * dout + dout;
+            let (inp, pre) = {
+                let (a, b2) = (&self.acts[l], &mut self.pre[l]);
+                (a.as_slice(), b2)
+            };
+            for (j, (pj, bj)) in pre.iter_mut().zip(b).enumerate() {
+                let mut s = *bj;
+                for (i, xi) in inp.iter().enumerate() {
+                    s += xi * w[i * dout + j];
+                }
+                *pj = s;
+            }
+            let last = l == n_layers - 1;
+            let (acts, pre) = (&mut self.acts, &self.pre);
+            for (aj, pj) in acts[l + 1].iter_mut().zip(&pre[l]) {
+                *aj = if last { *pj } else { pj.max(0.0) };
+            }
+        }
+        let logits = self.acts.last().unwrap();
+        let m = logits.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+        let exps: Vec<f32> = logits.iter().map(|z| (z - m).exp()).collect();
+        let sum: f32 = exps.iter().sum();
+        let loss = sum.ln() + m - logits[label];
+        {
+            let top = self.grads_a.last_mut().unwrap();
+            for (g, e) in top.iter_mut().zip(&exps) {
+                *g = e / sum;
+            }
+            top[label] -= 1.0;
+        }
+        let mut offsets = Vec::with_capacity(n_layers);
+        let mut off = 0;
+        for w in self.dims.windows(2) {
+            offsets.push(off);
+            off += w[0] * w[1] + w[1];
+        }
+        for l in (0..n_layers).rev() {
+            let (din, dout) = (self.dims[l], self.dims[l + 1]);
+            let woff = offsets[l];
+            let last = l == n_layers - 1;
+            let dpre: Vec<f32> = self.grads_a[l + 1]
+                .iter()
+                .zip(&self.pre[l])
+                .map(|(g, p)| if last || *p > 0.0 { *g } else { 0.0 })
+                .collect();
+            {
+                let inp = &self.acts[l];
+                let gw = &mut grad[woff..woff + din * dout];
+                for (i, xi) in inp.iter().enumerate() {
+                    if *xi == 0.0 {
+                        continue;
+                    }
+                    let row = &mut gw[i * dout..(i + 1) * dout];
+                    for (gj, dj) in row.iter_mut().zip(&dpre) {
+                        *gj += xi * dj;
+                    }
+                }
+                let gb = &mut grad[woff + din * dout..woff + din * dout + dout];
+                for (g, d) in gb.iter_mut().zip(&dpre) {
+                    *g += d;
+                }
+            }
+            if l > 0 {
+                let w = &theta[woff..woff + din * dout];
+                let ga = &mut self.grads_a[l];
+                for (i, gi) in ga.iter_mut().enumerate() {
+                    let row = &w[i * dout..(i + 1) * dout];
+                    *gi = row.iter().zip(&dpre).map(|(wj, dj)| wj * dj).sum();
+                }
+            }
+        }
+        loss
+    }
+}
+
+struct Cell {
+    model: &'static str,
+    dims: Vec<usize>,
+    batch: usize,
+    seed_sps: f64,
+    per_sample_sps: f64,
+    batched_sps: f64,
+}
+
+fn bench_model(
+    name: &'static str,
+    cfg: &MlpConfig,
+    data: &BlobDataset,
+    batch: usize,
+    target_ms: f64,
+    batches: usize,
+) -> Cell {
+    let mut mlp = Mlp::new(cfg.clone());
+    let mut seed = SeedMlp::new(&cfg.dims);
+    let mut rng = Rng::new(1234);
+    let theta = mlp.init_params(&mut rng);
+    let mut grad = vec![0.0f32; theta.len()];
+    // Fixed deterministic mini-batch: the first `batch` training rows.
+    let samples: Vec<(Vec<f32>, usize)> = data.train[..batch].to_vec();
+    let mut sink = 0.0f32;
+
+    // Seed path: the pre-refactor loop shape — zero, accumulate one
+    // sample at a time through the scalar kernels, scale to the mean.
+    let sd = benchkit::bench(&format!("{name}/b{batch}/seed"), target_ms, batches, || {
+        grad.iter_mut().for_each(|g| *g = 0.0);
+        let mut loss = 0.0f32;
+        for (x, y) in &samples {
+            loss += seed.grad(black_box(&theta), x, *y, &mut grad);
+        }
+        let inv = 1.0 / samples.len() as f32;
+        grad.iter_mut().for_each(|g| *g *= inv);
+        sink += loss * inv;
+    });
+
+    // Per-sample wrapper: batch-of-one through the GEMM kernels.
+    let per = benchkit::bench(&format!("{name}/b{batch}/per-sample"), target_ms, batches, || {
+        grad.iter_mut().for_each(|g| *g = 0.0);
+        let mut loss = 0.0f32;
+        for (x, y) in &samples {
+            loss += mlp.grad(black_box(&theta), x, *y, &mut grad);
+        }
+        let inv = 1.0 / samples.len() as f32;
+        grad.iter_mut().for_each(|g| *g *= inv);
+        sink += loss * inv;
+    });
+
+    // Batched path: one fused forward/backward over the whole panel.
+    let bat = benchkit::bench(&format!("{name}/b{batch}/batched"), target_ms, batches, || {
+        sink += mlp.batch_grad(black_box(&theta), &samples, &mut grad);
+    });
+    black_box(sink);
+
+    Cell {
+        model: name,
+        dims: cfg.dims.clone(),
+        batch,
+        seed_sps: sd.throughput(batch as f64),
+        per_sample_sps: per.throughput(batch as f64),
+        batched_sps: bat.throughput(batch as f64),
+    }
+}
+
+fn json_row(c: &Cell) -> String {
+    let dims = c
+        .dims
+        .iter()
+        .map(|d| d.to_string())
+        .collect::<Vec<_>>()
+        .join(",");
+    format!(
+        "    {{\"model\": \"{}\", \"dims\": [{}], \"batch\": {}, \"seed_sps\": {:.1}, \
+         \"per_sample_sps\": {:.1}, \"batched_sps\": {:.1}, \"speedup_vs_seed\": {:.2}}}",
+        c.model,
+        dims,
+        c.batch,
+        c.seed_sps,
+        c.per_sample_sps,
+        c.batched_sps,
+        c.batched_sps / c.seed_sps
+    )
+}
+
+fn main() {
+    let quick = std::env::args().any(|a| a == "--quick" || a == "quick");
+    let (target_ms, batches) = if quick { (8.0, 3) } else { (50.0, 7) };
+
+    // The sweep-default model every figure uses, plus a wider net where
+    // the GEMM panels are large enough for the register tiles to run
+    // full blocks.
+    let sweep_cfg = MlpConfig::sweep_default();
+    let sweep_data = BlobDataset::sweep_default(3);
+    let wide_cfg = MlpConfig::new(&[64, 256, 128, 10], 1e-4);
+    let wide_data = BlobDataset::generate(64, 10, 2048, 256, 1.0, 3);
+
+    println!("oracle gradient throughput (samples/sec): seed vs per-sample vs batched GEMM\n");
+    let mut cells = Vec::new();
+    for (name, cfg, data) in [
+        ("sweep", &sweep_cfg, &sweep_data),
+        ("wide", &wide_cfg, &wide_data),
+    ] {
+        for batch in [32usize, 128] {
+            let c = bench_model(name, cfg, data, batch, target_ms, batches);
+            println!(
+                "  {name:>5} batch={batch:<4} seed {:>11.0}  per-sample {:>11.0}  batched {:>11.0} sps  ({:.2}x vs seed)",
+                c.seed_sps,
+                c.per_sample_sps,
+                c.batched_sps,
+                c.batched_sps / c.seed_sps
+            );
+            cells.push(c);
+        }
+        println!();
+    }
+
+    // Acceptance shape: ≥ 3× over the seed path at batch=128 on the
+    // sweep-default net.
+    let key = cells
+        .iter()
+        .find(|c| c.model == "sweep" && c.batch == 128)
+        .unwrap();
+    let speedup = key.batched_sps / key.seed_sps;
+    println!(
+        "sweep batch=128 batched/seed: {speedup:.2}x ({})",
+        if speedup >= 3.0 { "OK, >= 3x" } else { "BELOW 3x target" }
+    );
+
+    let rows: Vec<String> = cells.iter().map(json_row).collect();
+    let json = format!(
+        "{{\n  \"bench\": \"oracle\",\n  \"quick\": {},\n  \"unit\": \"samples_per_sec\",\n  \
+         \"results\": [\n{}\n  ]\n}}\n",
+        quick,
+        rows.join(",\n")
+    );
+    // Anchor at the repository root (cargo runs benches with cwd at the
+    // package root, rust/), so the tracked trajectory copy is the one
+    // that gets rewritten.
+    let out = concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_oracle.json");
+    std::fs::write(out, &json).expect("write BENCH_oracle.json");
+    println!("wrote {out}");
+}

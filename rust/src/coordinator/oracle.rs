@@ -38,7 +38,10 @@ pub trait GradOracle {
 }
 
 /// Native-MLP oracle over the blob dataset, fed through the §4.1
-/// prefetch pipeline.
+/// prefetch pipeline. Whole mini-batches flow through the model's
+/// batch-major GEMM path (`Mlp::grad_batch` / `Mlp::eval_batch`); the
+/// scratch panels inside `Mlp` are reused so the steady-state `grad`
+/// call is allocation-free on the model side.
 pub struct MlpOracle {
     data: Arc<BlobDataset>,
     mlp: Mlp,
@@ -125,37 +128,53 @@ impl GradOracle for MlpOracle {
     }
 
     fn grad(&mut self, theta: &[f32], rng: &mut Rng, out: &mut [f32]) -> f32 {
+        // The whole mini-batch goes through the GEMM path in one
+        // forward/backward; `grad_batch` writes the mean gradient and
+        // returns the mean loss (incl. l2), exactly the per-sample
+        // loop's semantics.
         let idx = self.next_batch(rng);
-        out.iter_mut().for_each(|g| *g = 0.0);
-        let mut loss = 0.0;
-        for &i in &idx {
-            let (x, y) = &self.data.train[i];
-            loss += self.mlp.grad(theta, x, *y, out);
-        }
-        let inv = 1.0 / idx.len() as f32;
-        out.iter_mut().for_each(|g| *g *= inv);
-        (loss * inv) as f32
+        let data = &self.data;
+        self.mlp.grad_batch(
+            theta,
+            idx.iter().map(|&i| {
+                let (x, y) = &data.train[i];
+                (x.as_slice(), *y)
+            }),
+            out,
+        )
     }
 
     fn eval(&mut self, theta: &[f32]) -> EvalStats {
-        let mut train_loss = 0.0;
-        for &i in &self.probe {
-            let (x, y) = &self.data.train[i];
-            train_loss += self.mlp.loss(theta, x, *y) as f64;
+        // Batched eval in fixed-size panels; the O(n_params) l2 scan
+        // runs ONCE per θ and is shared across every sample (the seed
+        // recomputed it inside each `loss` call).
+        const CHUNK: usize = 128;
+        let l2 = self.mlp.l2_penalty(theta) as f64;
+        let data = &self.data;
+        let mut train_nll = 0.0f64;
+        for chunk in self.probe.chunks(CHUNK) {
+            let (nll, _) = self.mlp.eval_batch(
+                theta,
+                chunk.iter().map(|&i| {
+                    let (x, y) = &data.train[i];
+                    (x.as_slice(), *y)
+                }),
+            );
+            train_nll += nll;
         }
-        train_loss /= self.probe.len() as f64;
-        let mut test_loss = 0.0;
+        let mut test_nll = 0.0f64;
         let mut wrong = 0usize;
-        for (x, y) in &self.data.test {
-            test_loss += self.mlp.loss(theta, x, *y) as f64;
-            if self.mlp.predict(theta, x) != *y {
-                wrong += 1;
-            }
+        for chunk in data.test.chunks(CHUNK) {
+            let (nll, w) = self
+                .mlp
+                .eval_batch(theta, chunk.iter().map(|(x, y)| (x.as_slice(), *y)));
+            test_nll += nll;
+            wrong += w;
         }
         EvalStats {
-            train_loss,
-            test_loss: test_loss / self.data.test.len() as f64,
-            test_error: wrong as f64 / self.data.test.len() as f64,
+            train_loss: train_nll / self.probe.len() as f64 + l2,
+            test_loss: test_nll / data.test.len() as f64 + l2,
+            test_error: wrong as f64 / data.test.len() as f64,
         }
     }
 }

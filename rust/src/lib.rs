@@ -13,15 +13,19 @@
 //! Module map (see DESIGN.md for the full inventory):
 //! - [`error`] — string-backed error substrate (`Result`, `err!`,
 //!   `bail!`, `Context`; the offline crate set has no anyhow).
-//! - [`rng`], [`linalg`] — numeric substrates (deterministic RNG,
-//!   dense eigenvalues for the stability figures).
+//! - [`rng`], [`linalg`] — numeric substrates (deterministic RNG;
+//!   dense eigenvalues for the stability figures; the
+//!   [`linalg::gemm`] register-blocked f32 micro-kernels under the
+//!   batched MLP oracle).
 //! - [`sim`] — the thesis' analysis chapters as executable models
 //!   (closed-form MSE, moment matrices, ADMM round-robin maps,
 //!   the non-convex double well).
 //! - [`cluster`] — virtual-time simulated cluster (latency/bandwidth
 //!   links, compute/data/comm accounting, Table 4.4 semantics).
 //! - [`model`], [`data`] — flat parameter buffers + fused native update
-//!   ops; synthetic corpora and the §4.1 prefetch pipeline.
+//!   ops; the batch-major GEMM-backed MLP gradient oracle
+//!   (`Mlp::grad_batch`, allocation-free steady state); synthetic
+//!   corpora and the §4.1 prefetch pipeline.
 //! - [`coordinator`] — EASGD/EAMSGD, DOWNPOUR and friends behind the
 //!   [`coordinator::Executor`] abstraction: two backends (virtual-time
 //!   [`coordinator::SimExecutor`], real-thread

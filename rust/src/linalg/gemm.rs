@@ -1,0 +1,390 @@
+//! Blocked f32 GEMM micro-kernels — the compute substrate of the
+//! batched MLP oracle.
+//!
+//! The Chapter-4/6 sweeps and both real-thread backends spend their
+//! wall clock inside `Mlp::grad_batch`; every matrix product there
+//! lands on [`sgemm`] (accumulating `C += op(A)·op(B)` with transpose
+//! flags) or on the fused [`sgemm_bias_act`] forward epilogue (bias
+//! broadcast + optional ReLU applied while the accumulator tile is
+//! still in registers). The kernels are register-blocked — an
+//! [`MR`]×[`NR`] accumulator tile per iteration, streaming
+//! contiguously along the output row so the inner loops
+//! auto-vectorize — and never allocate: callers own every buffer.
+//!
+//! Layout convention: everything is row-major and contiguous (leading
+//! dimension = column count), which is both how the model stores its
+//! batch-major activation matrices and how a flat `theta` stores each
+//! layer's `din × dout` weight block. Three storage-aware paths cover
+//! the MLP's products without packing scratch:
+//!
+//! - `A·B` (forward): broadcast kernel, B streamed along rows;
+//! - `Aᵀ·B` (weight gradient, sum over the batch): same broadcast
+//!   kernel with swapped A strides — the broadcast load is scalar, so
+//!   the strided access costs nothing in the vector lanes;
+//! - `A·Bᵀ` (input gradient): both operands are walked along their
+//!   contiguous k-axis, so each output is one vectorized dot product.
+//!
+//! Not to be confused with [`super::Matrix`], the f64 substrate of the
+//! eigenvalue solver: that one optimizes for robustness on ≤ 20×20
+//! stability matrices, this one for throughput on batch × dim panels.
+
+/// Register-tile rows of the broadcast kernels.
+pub const MR: usize = 4;
+/// Register-tile columns (f32 lanes) of the broadcast kernels.
+pub const NR: usize = 16;
+
+/// `C(m×n) += op(A)·op(B)`, accumulating into `C`.
+///
+/// `op(A)` is `m×k` (stored `k×m` row-major when `ta`), `op(B)` is
+/// `k×n` (stored `n×k` row-major when `tb`). All slices must be
+/// exactly the implied size.
+#[allow(clippy::too_many_arguments)]
+pub fn sgemm(
+    ta: bool,
+    tb: bool,
+    m: usize,
+    n: usize,
+    k: usize,
+    a: &[f32],
+    b: &[f32],
+    c: &mut [f32],
+) {
+    assert_eq!(a.len(), m * k, "A size");
+    assert_eq!(b.len(), k * n, "B size");
+    assert_eq!(c.len(), m * n, "C size");
+    match (ta, tb) {
+        // op(A)[i][p] = a[i*ars + p*acs]; broadcast loads are scalar,
+        // so runtime strides cost nothing in the vector lanes.
+        (false, false) => kernel_broadcast(m, n, k, [k, 1], a, b, c),
+        (true, false) => kernel_broadcast(m, n, k, [1, m], a, b, c),
+        (false, true) => kernel_dot(m, n, k, a, b, c),
+        (true, true) => kernel_both_t(m, n, k, a, b, c),
+    }
+}
+
+/// Fused forward step: `C(m×n) = act(A(m×k)·B(k×n) + bias)`,
+/// overwriting `C`. `bias` (length `n`) is broadcast over rows; the
+/// activation is ReLU when `relu`, identity otherwise — applied in the
+/// epilogue, before the accumulator tile is stored.
+#[allow(clippy::too_many_arguments)]
+pub fn sgemm_bias_act(
+    m: usize,
+    n: usize,
+    k: usize,
+    a: &[f32],
+    b: &[f32],
+    bias: &[f32],
+    relu: bool,
+    c: &mut [f32],
+) {
+    assert_eq!(a.len(), m * k, "A size");
+    assert_eq!(b.len(), k * n, "B size");
+    assert_eq!(bias.len(), n, "bias size");
+    assert_eq!(c.len(), m * n, "C size");
+    let mut i = 0;
+    while i + MR <= m {
+        let mut j = 0;
+        while j + NR <= n {
+            let mut acc = [[0.0f32; NR]; MR];
+            for accr in acc.iter_mut() {
+                accr.copy_from_slice(&bias[j..j + NR]);
+            }
+            for p in 0..k {
+                let brow = &b[p * n + j..p * n + j + NR];
+                for (r, accr) in acc.iter_mut().enumerate() {
+                    let arp = a[(i + r) * k + p];
+                    for (av, &bv) in accr.iter_mut().zip(brow) {
+                        *av += arp * bv;
+                    }
+                }
+            }
+            for (r, accr) in acc.iter().enumerate() {
+                let crow = &mut c[(i + r) * n + j..(i + r) * n + j + NR];
+                for (cv, &av) in crow.iter_mut().zip(accr) {
+                    *cv = if relu { av.max(0.0) } else { av };
+                }
+            }
+            j += NR;
+        }
+        if j < n {
+            for r in 0..MR {
+                let row = i + r;
+                let crow = &mut c[row * n + j..(row + 1) * n];
+                crow.copy_from_slice(&bias[j..]);
+                for p in 0..k {
+                    let arp = a[row * k + p];
+                    let brow = &b[p * n + j..(p + 1) * n];
+                    for (cv, &bv) in crow.iter_mut().zip(brow) {
+                        *cv += arp * bv;
+                    }
+                }
+                if relu {
+                    for cv in crow.iter_mut() {
+                        *cv = cv.max(0.0);
+                    }
+                }
+            }
+        }
+        i += MR;
+    }
+    while i < m {
+        let crow = &mut c[i * n..(i + 1) * n];
+        crow.copy_from_slice(bias);
+        for p in 0..k {
+            let aip = a[i * k + p];
+            let brow = &b[p * n..(p + 1) * n];
+            for (cv, &bv) in crow.iter_mut().zip(brow) {
+                *cv += aip * bv;
+            }
+        }
+        if relu {
+            for cv in crow.iter_mut() {
+                *cv = cv.max(0.0);
+            }
+        }
+        i += 1;
+    }
+}
+
+/// `out[j] += Σ_i a[i][j]` over an `m×n` row-major panel — the bias
+/// gradient's column reduction, batched.
+pub fn col_sums_accum(m: usize, n: usize, a: &[f32], out: &mut [f32]) {
+    assert_eq!(a.len(), m * n, "A size");
+    assert_eq!(out.len(), n, "out size");
+    for i in 0..m {
+        let row = &a[i * n..(i + 1) * n];
+        for (ov, &av) in out.iter_mut().zip(row) {
+            *ov += av;
+        }
+    }
+}
+
+/// Lane-blocked dot product (8 independent partial sums so the
+/// reduction auto-vectorizes).
+#[inline]
+pub fn dot(x: &[f32], y: &[f32]) -> f32 {
+    debug_assert_eq!(x.len(), y.len());
+    let head = x.len() / 8 * 8;
+    let mut lanes = [0.0f32; 8];
+    for (xc, yc) in x[..head].chunks_exact(8).zip(y[..head].chunks_exact(8)) {
+        for (l, lane) in lanes.iter_mut().enumerate() {
+            *lane += xc[l] * yc[l];
+        }
+    }
+    let mut s: f32 = lanes.iter().sum();
+    for (&xv, &yv) in x[head..].iter().zip(&y[head..]) {
+        s += xv * yv;
+    }
+    s
+}
+
+/// Broadcast-form kernel: `C += op(A)·B` with `op(A)[i][p] =
+/// a[i*strides[0] + p*strides[1]]` and `B` stored `k×n` row-major.
+/// Covers the no-transpose and A-transposed cases; the inner loop
+/// streams `B` and `C` rows while `op(A)` supplies scalar broadcasts.
+fn kernel_broadcast(
+    m: usize,
+    n: usize,
+    k: usize,
+    strides: [usize; 2],
+    a: &[f32],
+    b: &[f32],
+    c: &mut [f32],
+) {
+    let [ars, acs] = strides;
+    let mut i = 0;
+    while i + MR <= m {
+        let mut j = 0;
+        while j + NR <= n {
+            let mut acc = [[0.0f32; NR]; MR];
+            for p in 0..k {
+                let brow = &b[p * n + j..p * n + j + NR];
+                for (r, accr) in acc.iter_mut().enumerate() {
+                    let arp = a[(i + r) * ars + p * acs];
+                    for (av, &bv) in accr.iter_mut().zip(brow) {
+                        *av += arp * bv;
+                    }
+                }
+            }
+            for (r, accr) in acc.iter().enumerate() {
+                let crow = &mut c[(i + r) * n + j..(i + r) * n + j + NR];
+                for (cv, &av) in crow.iter_mut().zip(accr) {
+                    *cv += av;
+                }
+            }
+            j += NR;
+        }
+        if j < n {
+            for p in 0..k {
+                let brow = &b[p * n + j..(p + 1) * n];
+                for r in 0..MR {
+                    let arp = a[(i + r) * ars + p * acs];
+                    let crow = &mut c[(i + r) * n + j..(i + r + 1) * n];
+                    for (cv, &bv) in crow.iter_mut().zip(brow) {
+                        *cv += arp * bv;
+                    }
+                }
+            }
+        }
+        i += MR;
+    }
+    while i < m {
+        for p in 0..k {
+            let aip = a[i * ars + p * acs];
+            let brow = &b[p * n..(p + 1) * n];
+            let crow = &mut c[i * n..(i + 1) * n];
+            for (cv, &bv) in crow.iter_mut().zip(brow) {
+                *cv += aip * bv;
+            }
+        }
+        i += 1;
+    }
+}
+
+/// Dot-form kernel: `C += A·Bᵀ` with `A` stored `m×k` and `B` stored
+/// `n×k` — both operands contiguous along `k`, so every output element
+/// is one vectorized [`dot`].
+fn kernel_dot(m: usize, n: usize, k: usize, a: &[f32], b: &[f32], c: &mut [f32]) {
+    for i in 0..m {
+        let arow = &a[i * k..(i + 1) * k];
+        let crow = &mut c[i * n..(i + 1) * n];
+        for (j, cv) in crow.iter_mut().enumerate() {
+            *cv += dot(arow, &b[j * k..(j + 1) * k]);
+        }
+    }
+}
+
+/// `C += Aᵀ·Bᵀ` — not on any hot path (kept for completeness of the
+/// flag matrix); plain triple loop.
+fn kernel_both_t(m: usize, n: usize, k: usize, a: &[f32], b: &[f32], c: &mut [f32]) {
+    for i in 0..m {
+        for j in 0..n {
+            let mut s = 0.0f32;
+            for p in 0..k {
+                s += a[p * m + i] * b[j * k + p];
+            }
+            c[i * n + j] += s;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Rng;
+
+    fn fill(rng: &mut Rng, len: usize) -> Vec<f32> {
+        (0..len).map(|_| rng.normal(0.0, 1.0) as f32).collect()
+    }
+
+    fn naive(ta: bool, tb: bool, m: usize, n: usize, k: usize, a: &[f32], b: &[f32]) -> Vec<f32> {
+        let mut c = vec![0.0f32; m * n];
+        for i in 0..m {
+            for j in 0..n {
+                let mut s = 0.0f64;
+                for p in 0..k {
+                    let av = if ta { a[p * m + i] } else { a[i * k + p] };
+                    let bv = if tb { b[j * k + p] } else { b[p * n + j] };
+                    s += av as f64 * bv as f64;
+                }
+                c[i * n + j] = s as f32;
+            }
+        }
+        c
+    }
+
+    fn close(got: &[f32], want: &[f32]) {
+        assert_eq!(got.len(), want.len());
+        for (i, (g, w)) in got.iter().zip(want).enumerate() {
+            assert!((g - w).abs() < 1e-3 * (1.0 + w.abs()), "elem {i}: {g} vs {w}");
+        }
+    }
+
+    #[test]
+    fn all_transpose_flags_match_naive_reference() {
+        // Sizes chosen to hit the blocked body, the n-tail, the m-tail,
+        // and the degenerate single-row/column cases.
+        let shapes = [(1, 1, 1), (3, 5, 7), (4, 16, 8), (9, 33, 17), (128, 10, 32), (2, 64, 1)];
+        let mut rng = Rng::new(42);
+        for &(m, n, k) in &shapes {
+            let a = fill(&mut rng, m * k);
+            let b = fill(&mut rng, k * n);
+            for ta in [false, true] {
+                for tb in [false, true] {
+                    let mut c = vec![0.0f32; m * n];
+                    sgemm(ta, tb, m, n, k, &a, &b, &mut c);
+                    close(&c, &naive(ta, tb, m, n, k, &a, &b));
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn sgemm_accumulates_into_c() {
+        let mut rng = Rng::new(7);
+        let (m, n, k) = (5, 18, 6);
+        let a = fill(&mut rng, m * k);
+        let b = fill(&mut rng, k * n);
+        let seed = fill(&mut rng, m * n);
+        let mut c = seed.clone();
+        sgemm(false, false, m, n, k, &a, &b, &mut c);
+        let prod = naive(false, false, m, n, k, &a, &b);
+        let want: Vec<f32> = seed.iter().zip(&prod).map(|(s, p)| s + p).collect();
+        close(&c, &want);
+    }
+
+    #[test]
+    fn fused_bias_act_matches_unfused() {
+        let mut rng = Rng::new(9);
+        for &(m, n, k) in &[(1, 10, 32), (6, 16, 4), (7, 33, 13), (128, 10, 64)] {
+            let a = fill(&mut rng, m * k);
+            let b = fill(&mut rng, k * n);
+            let bias = fill(&mut rng, n);
+            for relu in [false, true] {
+                let mut c = vec![-1.0f32; m * n]; // overwritten, not accumulated
+                sgemm_bias_act(m, n, k, &a, &b, &bias, relu, &mut c);
+                let prod = naive(false, false, m, n, k, &a, &b);
+                let want: Vec<f32> = prod
+                    .iter()
+                    .enumerate()
+                    .map(|(idx, p)| {
+                        let v = p + bias[idx % n];
+                        if relu {
+                            v.max(0.0)
+                        } else {
+                            v
+                        }
+                    })
+                    .collect();
+                close(&c, &want);
+            }
+        }
+    }
+
+    #[test]
+    fn col_sums_accumulate() {
+        let a = [1.0f32, 2.0, 3.0, 10.0, 20.0, 30.0];
+        let mut out = vec![1.0f32; 3];
+        col_sums_accum(2, 3, &a, &mut out);
+        assert_eq!(out, vec![12.0, 23.0, 34.0]);
+    }
+
+    #[test]
+    fn dot_handles_tails() {
+        for len in [0usize, 1, 7, 8, 9, 17, 64] {
+            let x: Vec<f32> = (0..len).map(|i| i as f32).collect();
+            let y: Vec<f32> = (0..len).map(|i| (i as f32) * 0.5).collect();
+            let want: f32 = x.iter().zip(&y).map(|(a, b)| a * b).sum();
+            assert!((dot(&x, &y) - want).abs() < 1e-3 * (1.0 + want.abs()), "len {len}");
+        }
+    }
+
+    #[test]
+    fn zero_sized_dims_are_noops() {
+        let mut c = vec![5.0f32; 6];
+        sgemm(false, false, 2, 3, 0, &[], &[], &mut c);
+        assert_eq!(c, vec![5.0; 6]);
+        let mut empty: Vec<f32> = Vec::new();
+        sgemm(false, false, 0, 3, 2, &[], &[0.0; 6], &mut empty);
+    }
+}

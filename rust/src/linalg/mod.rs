@@ -1,16 +1,23 @@
-//! Dense linear-algebra substrate.
+//! Dense linear-algebra substrate. Two tiers with different jobs:
 //!
-//! Every stability figure in the thesis (Figs 3.2, 5.1–5.19) is the
-//! spectral radius of a small dense, generally *non-symmetric* matrix:
-//! the drift/moment matrices of the optimization dynamics and the
-//! composed round-robin ADMM maps. We therefore need a general real
-//! eigenvalue solver; this module implements Householder Hessenberg
-//! reduction followed by complex Wilkinson-shifted QR with deflation —
-//! compact, robust for the ≤ 20×20 matrices the figures sweep over
-//! millions of times.
+//! - **Eigen tier** ([`Matrix`], [`eigenvalues`], [`spectral_radius`];
+//!   f64): every stability figure in the thesis (Figs 3.2, 5.1–5.19)
+//!   is the spectral radius of a small dense, generally
+//!   *non-symmetric* matrix — the drift/moment matrices of the
+//!   optimization dynamics and the composed round-robin ADMM maps. We
+//!   therefore need a general real eigenvalue solver: Householder
+//!   Hessenberg reduction followed by complex Wilkinson-shifted QR
+//!   with deflation — compact, robust for the ≤ 20×20 matrices the
+//!   figures sweep over millions of times.
+//! - **Throughput tier** ([`gemm`]; f32): register-blocked GEMM
+//!   micro-kernels ([`gemm::sgemm`] with transpose flags, the fused
+//!   [`gemm::sgemm_bias_act`] bias+ReLU epilogue) under the batched
+//!   MLP oracle's forward/backward — the wall clock of every
+//!   Chapter-4/6 sweep and both real-thread backends.
 
 mod complex;
 mod eig;
+pub mod gemm;
 mod matrix;
 
 pub use complex::Complex;

@@ -9,7 +9,19 @@
 //! optional l2 regularization (thesis §4.1). Parameters live in ONE
 //! flat f32 buffer so the coordinator's elastic/momentum ops
 //! ([`super::flat`]) apply directly.
+//!
+//! Compute path: **batch-major**. Activations are `n_batch × dim`
+//! row-major panels and every layer product runs on the
+//! [`crate::linalg::gemm`] micro-kernels — fused bias+ReLU on the way
+//! up ([`gemm::sgemm_bias_act`]), `Aᵀ·B` / `A·Bᵀ` accumulating GEMMs
+//! on the way down — with the softmax-CE top vectorized over the
+//! batch. All scratch is pre-allocated on first use and reused, so a
+//! steady-state [`Mlp::grad_batch`] call performs zero heap
+//! allocations (enforced by `tests/alloc_free.rs`). Thin per-sample
+//! wrappers ([`Mlp::grad`], [`Mlp::loss`], [`Mlp::predict`]) keep the
+//! single-sample callers and the PJRT oracle untouched.
 
+use crate::linalg::gemm;
 use crate::rng::Rng;
 
 /// Layer sizes: `dims = [in, h1, ..., out]`.
@@ -42,22 +54,52 @@ impl MlpConfig {
     }
 }
 
+/// Total-order argmax: the first strict maximum wins; NaN entries never
+/// win (an all-NaN row degrades to class 0 instead of panicking).
+#[inline]
+fn argmax(z: &[f32]) -> usize {
+    let mut best = 0;
+    let mut bv = f32::NEG_INFINITY;
+    for (i, &v) in z.iter().enumerate() {
+        if v > bv {
+            best = i;
+            bv = v;
+        }
+    }
+    best
+}
+
 /// The model: holds no parameters itself — they are passed as flat
-/// slices — only scratch buffers for fwd/bwd (re-used across calls so
-/// the sweep hot loop is allocation-free).
+/// slices — only the batch-major scratch panels for fwd/bwd, re-used
+/// across calls so the sweep hot loop is allocation-free.
 pub struct Mlp {
     cfg: MlpConfig,
-    acts: Vec<Vec<f32>>,  // post-activation per layer (incl. input copy)
-    pre: Vec<Vec<f32>>,   // pre-activation per layer
-    grads_a: Vec<Vec<f32>>, // activation gradients
+    /// θ offset of layer l's weight block (its bias follows at
+    /// `offsets[l] + din·dout`).
+    offsets: Vec<usize>,
+    /// Row capacity of the scratch panels below (grows monotonically).
+    cap: usize,
+    /// Post-activation panels, `cap × dims[l]` row-major; `acts[0]` is
+    /// the packed input batch and is sized by [`Mlp::pack`] itself.
+    acts: Vec<Vec<f32>>,
+    /// Activation-gradient panels, same shapes; `d[0]` stays empty
+    /// (the input gradient is never needed).
+    d: Vec<Vec<f32>>,
+    /// Labels of the packed batch.
+    labels: Vec<usize>,
 }
 
 impl Mlp {
     pub fn new(cfg: MlpConfig) -> Self {
-        let acts = cfg.dims.iter().map(|&d| vec![0.0; d]).collect();
-        let pre = cfg.dims[1..].iter().map(|&d| vec![0.0; d]).collect();
-        let grads_a = cfg.dims.iter().map(|&d| vec![0.0; d]).collect();
-        Self { cfg, acts, pre, grads_a }
+        let mut offsets = Vec::with_capacity(cfg.dims.len() - 1);
+        let mut off = 0;
+        for w in cfg.dims.windows(2) {
+            offsets.push(off);
+            off += w[0] * w[1] + w[1];
+        }
+        let acts = cfg.dims.iter().map(|_| Vec::new()).collect();
+        let d = cfg.dims.iter().map(|_| Vec::new()).collect();
+        Self { cfg, offsets, cap: 0, acts, d, labels: Vec::new() }
     }
 
     pub fn config(&self) -> &MlpConfig {
@@ -79,165 +121,253 @@ impl Mlp {
         theta
     }
 
-    /// Forward pass; returns the loss for (x, label). Logits stay in the
-    /// last activation buffer.
-    fn forward(&mut self, theta: &[f32], x: &[f32]) {
-        assert_eq!(x.len(), self.cfg.dims[0]);
-        self.acts[0].copy_from_slice(x);
-        let mut off = 0;
+    /// Grow the hidden/output scratch panels to `n` rows (amortized:
+    /// a no-op once the largest batch size has been seen).
+    fn ensure_rows(&mut self, n: usize) {
+        if n <= self.cap {
+            return;
+        }
+        for l in 1..self.cfg.dims.len() {
+            let dim = self.cfg.dims[l];
+            self.acts[l].resize(n * dim, 0.0);
+            self.d[l].resize(n * dim, 0.0);
+        }
+        self.cap = n;
+    }
+
+    /// Copy the batch into the packed input panel + label buffer;
+    /// returns the batch size. Reuses capacity — allocation-free at a
+    /// steady batch size.
+    fn pack<'a, I: IntoIterator<Item = (&'a [f32], usize)>>(&mut self, samples: I) -> usize {
+        let din = self.cfg.dims[0];
+        let nc = self.cfg.n_classes();
+        self.acts[0].clear();
+        self.labels.clear();
+        for (x, y) in samples {
+            assert_eq!(x.len(), din, "input dim mismatch");
+            assert!(y < nc, "label {y} out of range");
+            self.acts[0].extend_from_slice(x);
+            self.labels.push(y);
+        }
+        let n = self.labels.len();
+        self.ensure_rows(n);
+        n
+    }
+
+    /// Forward over the packed batch: one fused GEMM (bias broadcast +
+    /// ReLU epilogue) per layer, logits left in the last panel.
+    fn forward_packed(&mut self, theta: &[f32], n: usize) {
         let n_layers = self.cfg.dims.len() - 1;
         for l in 0..n_layers {
             let (din, dout) = (self.cfg.dims[l], self.cfg.dims[l + 1]);
+            let off = self.offsets[l];
             let w = &theta[off..off + din * dout];
-            let b = &theta[off + din * dout..off + din * dout + dout];
-            off += din * dout + dout;
-            // Split borrows: acts[l] is input, pre[l] is output.
-            let (inp, pre) = {
-                let (a, b2) = (&self.acts[l], &mut self.pre[l]);
-                (a.as_slice(), b2)
-            };
-            for (j, (pj, bj)) in pre.iter_mut().zip(b).enumerate() {
-                // column-major access: w[i * dout + j]
-                let mut s = *bj;
-                for (i, xi) in inp.iter().enumerate() {
-                    s += xi * w[i * dout + j];
-                }
-                *pj = s;
-                let _ = j;
-            }
-            let last = l == n_layers - 1;
-            // acts and pre are distinct fields: disjoint borrows.
-            let (acts, pre) = (&mut self.acts, &self.pre);
-            for (aj, pj) in acts[l + 1].iter_mut().zip(&pre[l]) {
-                *aj = if last { *pj } else { pj.max(0.0) };
-            }
+            let bias = &theta[off + din * dout..off + din * dout + dout];
+            let (lo, hi) = self.acts.split_at_mut(l + 1);
+            let inp = &lo[l][..n * din];
+            let out = &mut hi[0][..n * dout];
+            gemm::sgemm_bias_act(n, dout, din, inp, w, bias, l + 1 < n_layers, out);
         }
     }
 
-    /// Loss only (evaluation path).
-    pub fn loss(&mut self, theta: &[f32], x: &[f32], label: usize) -> f32 {
-        self.forward(theta, x);
-        let logits = self.acts.last().unwrap();
-        let m = logits.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
-        let lse = m + logits.iter().map(|z| (z - m).exp()).sum::<f32>().ln();
-        let nll = lse - logits[label];
-        let l2: f32 = if self.cfg.l2 > 0.0 {
-            0.5 * self.cfg.l2 * theta.iter().map(|t| t * t).sum::<f32>()
-        } else {
-            0.0
-        };
-        nll + l2
+    /// Batched forward pass; packs the samples (labels ride along for
+    /// the loss paths; pass 0 when irrelevant) and leaves the logits in
+    /// the internal panel read by [`Mlp::logits`]. Returns the batch
+    /// size.
+    pub fn forward_batch<'a, I: IntoIterator<Item = (&'a [f32], usize)>>(
+        &mut self,
+        theta: &[f32],
+        samples: I,
+    ) -> usize {
+        let n = self.pack(samples);
+        self.forward_packed(theta, n);
+        n
     }
 
-    /// Predicted class (evaluation path).
-    pub fn predict(&mut self, theta: &[f32], x: &[f32]) -> usize {
-        self.forward(theta, x);
-        let logits = self.acts.last().unwrap();
-        logits
-            .iter()
-            .enumerate()
-            .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
-            .unwrap()
-            .0
+    /// Logits panel of the last [`Mlp::forward_batch`] (`n × classes`
+    /// row-major).
+    pub fn logits(&self, n: usize) -> &[f32] {
+        let nc = self.cfg.n_classes();
+        &self.acts[self.cfg.dims.len() - 1][..n * nc]
     }
 
-    /// Accumulate ∂loss/∂θ for one sample into `grad` (caller zeroes or
-    /// scales). Returns the sample loss. This is THE inner loop of every
-    /// Chapter-4/6 sweep.
-    pub fn grad(&mut self, theta: &[f32], x: &[f32], label: usize, grad: &mut [f32]) -> f32 {
-        assert_eq!(grad.len(), theta.len());
-        self.forward(theta, x);
+    /// `0.5·λ‖θ‖²` — computed ONCE per θ; the eval loop shares it
+    /// across every sample instead of rescanning `n_params` each time.
+    pub fn l2_penalty(&self, theta: &[f32]) -> f32 {
+        if self.cfg.l2 == 0.0 {
+            return 0.0;
+        }
+        0.5 * self.cfg.l2 * theta.iter().map(|t| t * t).sum::<f32>()
+    }
+
+    /// Backprop over the packed batch, ACCUMULATING the summed (not
+    /// averaged) data-term gradient into `grad`; returns the summed
+    /// data loss (no l2). Shared core of [`Mlp::grad`] and
+    /// [`Mlp::grad_batch`].
+    fn grad_packed(&mut self, theta: &[f32], n: usize, grad: &mut [f32]) -> f32 {
+        self.forward_packed(theta, n);
         let n_layers = self.cfg.dims.len() - 1;
+        let nc = self.cfg.n_classes();
 
-        // Softmax CE gradient at the top.
-        let logits = self.acts.last().unwrap();
-        let m = logits.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
-        let exps: Vec<f32> = logits.iter().map(|z| (z - m).exp()).collect();
-        let sum: f32 = exps.iter().sum();
-        let loss = sum.ln() + m - logits[label];
+        // Softmax-CE top, vectorized over the batch: d_top row =
+        // softmax(logits) − onehot(label), written in place.
+        let mut loss = 0.0f32;
         {
-            let top = self.grads_a.last_mut().unwrap();
-            for (g, e) in top.iter_mut().zip(&exps) {
-                *g = e / sum;
+            let logits = &self.acts[n_layers];
+            let dtop = &mut self.d[n_layers];
+            for r in 0..n {
+                let z = &logits[r * nc..(r + 1) * nc];
+                let dz = &mut dtop[r * nc..(r + 1) * nc];
+                let m = z.iter().fold(f32::NEG_INFINITY, |a, &v| a.max(v));
+                let mut sum = 0.0f32;
+                for (e, &v) in dz.iter_mut().zip(z) {
+                    *e = (v - m).exp();
+                    sum += *e;
+                }
+                let label = self.labels[r];
+                loss += sum.ln() + m - z[label];
+                let inv = 1.0 / sum;
+                for e in dz.iter_mut() {
+                    *e *= inv;
+                }
+                dz[label] -= 1.0;
             }
-            top[label] -= 1.0;
         }
 
-        // Backward through layers.
-        let mut offsets = Vec::with_capacity(n_layers);
-        let mut off = 0;
-        for w in self.cfg.dims.windows(2) {
-            offsets.push(off);
-            off += w[0] * w[1] + w[1];
-        }
+        // Backward through layers, three GEMM-shaped products each.
         for l in (0..n_layers).rev() {
             let (din, dout) = (self.cfg.dims[l], self.cfg.dims[l + 1]);
-            let woff = offsets[l];
-            // dpre = dact ⊙ relu' (last layer is linear).
-            let last = l == n_layers - 1;
-            let dpre: Vec<f32> = self.grads_a[l + 1]
-                .iter()
-                .zip(&self.pre[l])
-                .map(|(g, p)| if last || *p > 0.0 { *g } else { 0.0 })
-                .collect();
-            // Weight and bias grads.
-            {
-                let inp = &self.acts[l];
-                let gw = &mut grad[woff..woff + din * dout];
-                for (i, xi) in inp.iter().enumerate() {
-                    if *xi == 0.0 {
-                        continue;
+            let off = self.offsets[l];
+            // dpre = dact ⊙ relu' for hidden layers (act > 0 ⇔ pre > 0;
+            // the last layer is linear), applied in place.
+            if l + 1 < n_layers {
+                let act = &self.acts[l + 1][..n * dout];
+                let dl = &mut self.d[l + 1][..n * dout];
+                for (dv, &av) in dl.iter_mut().zip(act) {
+                    if av <= 0.0 {
+                        *dv = 0.0;
                     }
-                    let row = &mut gw[i * dout..(i + 1) * dout];
-                    for (gj, dj) in row.iter_mut().zip(&dpre) {
-                        *gj += xi * dj;
-                    }
-                }
-                let gb = &mut grad[woff + din * dout..woff + din * dout + dout];
-                for (g, d) in gb.iter_mut().zip(&dpre) {
-                    *g += d;
                 }
             }
-            // Input gradient for the next level down.
+            // gW(din×dout) += actsᵀ(l) · dpre — the batch sum is the
+            // GEMM's k-reduction.
+            gemm::sgemm(
+                true,
+                false,
+                din,
+                dout,
+                n,
+                &self.acts[l][..n * din],
+                &self.d[l + 1][..n * dout],
+                &mut grad[off..off + din * dout],
+            );
+            // gb += column sums of dpre.
+            gemm::col_sums_accum(
+                n,
+                dout,
+                &self.d[l + 1][..n * dout],
+                &mut grad[off + din * dout..off + din * dout + dout],
+            );
+            // dact(l) = dpre · Wᵀ for the next level down.
             if l > 0 {
-                let w = &theta[woff..woff + din * dout];
-                let ga = &mut self.grads_a[l];
-                for (i, gi) in ga.iter_mut().enumerate() {
-                    let row = &w[i * dout..(i + 1) * dout];
-                    *gi = row.iter().zip(&dpre).map(|(wj, dj)| wj * dj).sum();
-                }
+                let w = &theta[off..off + din * dout];
+                let (dlo, dhi) = self.d.split_at_mut(l + 1);
+                let dl = &mut dlo[l][..n * din];
+                dl.iter_mut().for_each(|v| *v = 0.0);
+                gemm::sgemm(false, true, n, din, dout, &dhi[0][..n * dout], w, dl);
             }
         }
+        loss
+    }
 
-        // l2 term.
+    /// Batched mini-batch gradient: the MEAN gradient over the batch is
+    /// written into `grad` (overwritten, not accumulated) with the l2
+    /// term applied once. Returns the mean loss (incl. l2) — the
+    /// oracle-facing hot path.
+    pub fn grad_batch<'a, I: IntoIterator<Item = (&'a [f32], usize)>>(
+        &mut self,
+        theta: &[f32],
+        samples: I,
+        grad: &mut [f32],
+    ) -> f32 {
+        assert_eq!(grad.len(), theta.len());
+        let n = self.pack(samples);
+        assert!(n > 0, "empty batch");
+        grad.iter_mut().for_each(|g| *g = 0.0);
+        let loss = self.grad_packed(theta, n, grad);
+        let inv = 1.0 / n as f32;
+        grad.iter_mut().for_each(|g| *g *= inv);
         if self.cfg.l2 > 0.0 {
             for (g, t) in grad.iter_mut().zip(theta) {
                 *g += self.cfg.l2 * t;
             }
         }
-        loss + if self.cfg.l2 > 0.0 {
-            0.5 * self.cfg.l2 * theta.iter().map(|t| t * t).sum::<f32>()
-        } else {
-            0.0
-        }
+        loss * inv + self.l2_penalty(theta)
     }
 
-    /// Mini-batch gradient: mean over the batch. Returns mean loss.
+    /// Mini-batch gradient over owned samples: mean over the batch.
+    /// Returns mean loss. (Slice-of-pairs convenience over
+    /// [`Mlp::grad_batch`].)
     pub fn batch_grad(
         &mut self,
         theta: &[f32],
         xs: &[(Vec<f32>, usize)],
         grad: &mut [f32],
     ) -> f32 {
-        grad.iter_mut().for_each(|g| *g = 0.0);
-        let mut loss = 0.0;
-        for (x, y) in xs {
-            loss += self.grad(theta, x, *y, grad);
+        self.grad_batch(theta, xs.iter().map(|(x, y)| (x.as_slice(), *y)), grad)
+    }
+
+    /// Accumulate ∂loss/∂θ for one sample into `grad` (caller zeroes or
+    /// scales; the l2 term is added per call). Returns the sample loss.
+    /// Thin batch-of-one wrapper — the sweeps should prefer
+    /// [`Mlp::grad_batch`].
+    pub fn grad(&mut self, theta: &[f32], x: &[f32], label: usize, grad: &mut [f32]) -> f32 {
+        assert_eq!(grad.len(), theta.len());
+        let n = self.pack(std::iter::once((x, label)));
+        let loss = self.grad_packed(theta, n, grad);
+        if self.cfg.l2 > 0.0 {
+            for (g, t) in grad.iter_mut().zip(theta) {
+                *g += self.cfg.l2 * t;
+            }
         }
-        let inv = 1.0 / xs.len() as f32;
-        grad.iter_mut().for_each(|g| *g *= inv);
-        // l2 was added per-sample; keep its mean (same value each time).
-        loss * inv
+        loss + self.l2_penalty(theta)
+    }
+
+    /// Summed data-term NLL and misclassification count over the batch
+    /// (no l2 — add [`Mlp::l2_penalty`] once per θ) — the eval path.
+    pub fn eval_batch<'a, I: IntoIterator<Item = (&'a [f32], usize)>>(
+        &mut self,
+        theta: &[f32],
+        samples: I,
+    ) -> (f64, usize) {
+        let n = self.forward_batch(theta, samples);
+        let nc = self.cfg.n_classes();
+        let logits = &self.acts[self.cfg.dims.len() - 1];
+        let mut nll = 0.0f64;
+        let mut wrong = 0usize;
+        for r in 0..n {
+            let z = &logits[r * nc..(r + 1) * nc];
+            let m = z.iter().fold(f32::NEG_INFINITY, |a, &v| a.max(v));
+            let lse = m + z.iter().map(|v| (v - m).exp()).sum::<f32>().ln();
+            nll += (lse - z[self.labels[r]]) as f64;
+            if argmax(z) != self.labels[r] {
+                wrong += 1;
+            }
+        }
+        (nll, wrong)
+    }
+
+    /// Loss only (evaluation path; batch-of-one wrapper).
+    pub fn loss(&mut self, theta: &[f32], x: &[f32], label: usize) -> f32 {
+        let (nll, _) = self.eval_batch(theta, std::iter::once((x, label)));
+        nll as f32 + self.l2_penalty(theta)
+    }
+
+    /// Predicted class (evaluation path; batch-of-one wrapper). NaN
+    /// logits degrade to class 0 instead of panicking.
+    pub fn predict(&mut self, theta: &[f32], x: &[f32]) -> usize {
+        let n = self.forward_batch(theta, std::iter::once((x, 0)));
+        argmax(self.logits(n))
     }
 }
 
@@ -360,4 +490,38 @@ mod tests {
         let m2 = Mlp::new(cfg).init_params(&mut Rng::new(3));
         assert_eq!(m1, m2);
     }
+
+    #[test]
+    fn predict_survives_nan_logits() {
+        // NaN parameters poison every logit; the argmax must degrade to
+        // class 0 instead of panicking (seed code unwrap()ed a
+        // partial_cmp here).
+        let (mut mlp, theta) = tiny();
+        let bad = vec![f32::NAN; theta.len()];
+        let x = vec![0.5, -0.25, 1.0, 0.0];
+        assert_eq!(mlp.predict(&bad, &x), 0);
+        // Sane logits still pick the true maximum afterwards.
+        let p = mlp.predict(&theta, &x);
+        assert!(p < 3);
+        let n = mlp.forward_batch(&theta, std::iter::once((x.as_slice(), 0)));
+        let logits = mlp.logits(n).to_vec();
+        let want = logits
+            .iter()
+            .enumerate()
+            .max_by(|a, b| a.1.total_cmp(b.1))
+            .unwrap()
+            .0;
+        assert_eq!(p, want);
+    }
+
+    #[test]
+    fn argmax_total_order_edge_cases() {
+        assert_eq!(argmax(&[1.0, 3.0, 2.0]), 1);
+        assert_eq!(argmax(&[f32::NAN, 3.0, 2.0]), 1);
+        assert_eq!(argmax(&[1.0, f32::NAN, 2.0]), 2);
+        assert_eq!(argmax(&[f32::NAN, f32::NAN]), 0);
+        assert_eq!(argmax(&[f32::NEG_INFINITY, f32::NEG_INFINITY]), 0);
+        assert_eq!(argmax(&[2.0, 2.0]), 0, "first strict max wins ties");
+    }
+
 }

@@ -9,6 +9,11 @@
 //!   the cheap gradient oracle the Chapter-4/6 figure sweeps use at
 //!   p up to 256 workers, where running the PJRT transformer per
 //!   worker-step would be wall-clock prohibitive (DESIGN.md §2).
+//!   Compute is batch-major: whole mini-batches flow through the
+//!   register-blocked [`crate::linalg::gemm`] micro-kernels
+//!   (`grad_batch` / `eval_batch`, zero steady-state allocations),
+//!   with per-sample `grad`/`loss`/`predict` kept as thin wrappers;
+//!   `bench_oracle` tracks the samples/sec trajectory.
 
 pub mod flat;
 pub mod mlp;

@@ -1,0 +1,84 @@
+//! The acceptance gate for the batched compute path's memory behavior:
+//! a steady-state `Mlp::grad_batch` call performs ZERO heap
+//! allocations — all activation/gradient panels are pre-allocated on
+//! first use and reused. Enforced with a counting global allocator;
+//! this file must hold exactly one test (the counter is process-wide
+//! and the default test harness runs a binary's tests in parallel).
+
+use elastic_train::model::{Mlp, MlpConfig};
+use elastic_train::rng::Rng;
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::sync::atomic::{AtomicU64, Ordering};
+
+static ALLOC_CALLS: AtomicU64 = AtomicU64::new(0);
+
+struct CountingAlloc;
+
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        ALLOC_CALLS.fetch_add(1, Ordering::Relaxed);
+        System.alloc(layout)
+    }
+
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        System.dealloc(ptr, layout)
+    }
+
+    unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
+        ALLOC_CALLS.fetch_add(1, Ordering::Relaxed);
+        System.realloc(ptr, layout, new_size)
+    }
+
+    unsafe fn alloc_zeroed(&self, layout: Layout) -> *mut u8 {
+        ALLOC_CALLS.fetch_add(1, Ordering::Relaxed);
+        System.alloc_zeroed(layout)
+    }
+}
+
+#[global_allocator]
+static GLOBAL: CountingAlloc = CountingAlloc;
+
+#[test]
+fn grad_batch_steady_state_does_not_allocate() {
+    let cfg = MlpConfig::sweep_default();
+    let mut mlp = Mlp::new(cfg);
+    let mut rng = Rng::new(17);
+    let theta = mlp.init_params(&mut rng);
+    let mut grad = vec![0.0f32; theta.len()];
+    let batch: Vec<(Vec<f32>, usize)> = (0..128)
+        .map(|_| {
+            let x = (0..32).map(|_| rng.normal(0.0, 1.0) as f32).collect();
+            (x, rng.below(10))
+        })
+        .collect();
+
+    // Warm up: first calls size the scratch panels.
+    for _ in 0..3 {
+        mlp.batch_grad(&theta, &batch, &mut grad);
+    }
+
+    let before = ALLOC_CALLS.load(Ordering::SeqCst);
+    let mut sink = 0.0f32;
+    for _ in 0..10 {
+        sink += mlp.batch_grad(&theta, &batch, &mut grad);
+    }
+    let after = ALLOC_CALLS.load(Ordering::SeqCst);
+    assert!(sink.is_finite());
+    assert_eq!(
+        after - before,
+        0,
+        "grad_batch allocated {} times across 10 steady-state calls",
+        after - before
+    );
+
+    // A smaller batch reuses the larger panels — still allocation-free,
+    // including through the iterator-based entry point.
+    let small = &batch[..32];
+    let before = ALLOC_CALLS.load(Ordering::SeqCst);
+    for _ in 0..5 {
+        sink += mlp.grad_batch(&theta, small.iter().map(|(x, y)| (x.as_slice(), *y)), &mut grad);
+    }
+    let after = ALLOC_CALLS.load(Ordering::SeqCst);
+    assert!(sink.is_finite());
+    assert_eq!(after - before, 0, "smaller batches must reuse the panels");
+}
