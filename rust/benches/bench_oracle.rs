@@ -1,4 +1,6 @@
-//! Samples/sec of the MLP gradient oracle across three compute paths:
+//! Samples/sec of the native gradient oracles.
+//!
+//! MLP grid — three compute paths:
 //!
 //! - **seed**: a verbatim replica of the pre-GEMM per-sample
 //!   algorithm (strided matvec loops, `exps`/`dpre`/`offsets` heap
@@ -9,16 +11,23 @@
 //! - **batched**: `Mlp::batch_grad`, one fused forward/backward over
 //!   the whole `n × dim` panel.
 //!
-//! Grid: batch ∈ {32, 128} × {sweep-default, wider} dims. This is the
-//! perf trajectory for every Chapter-4/6 figure sweep and both
-//! real-thread backends, whose wall clock is exactly this gradient
-//! step.
+//! Conv grid — the im2col `ConvNet` (`model=conv`): per-sample
+//! (batch-of-one `grad_batch` looped) vs batched, on the sweep blob
+//! read as a 1×4×8 image and a wider 1×8×8 one.
+//!
+//! Grid: batch ∈ {32, 128} per model. This is the perf trajectory for
+//! every Chapter-4/6 figure sweep and both real-thread backends, whose
+//! wall clock is exactly this gradient step.
 //!
 //!     cargo bench --bench bench_oracle            # full grid
 //!     cargo bench --bench bench_oracle -- --quick # smoke (CI)
 //!
-//! Emits `BENCH_oracle.json` at the repository root (anchored via
-//! `CARGO_MANIFEST_DIR`, independent of the invocation directory).
+//! APPENDS one history entry — keyed by the current git SHA — to
+//! `BENCH_oracle.json` at the repository root (anchored via
+//! `CARGO_MANIFEST_DIR`, independent of the invocation directory), so
+//! the conv-vs-MLP samples/sec trajectory stays visible across PRs
+//! instead of each run erasing the last. A legacy single-object file
+//! is replaced by a fresh one-entry history.
 //! Acceptance shape: batched ≥ 3× the seed path at
 //! batch=128 on `MlpConfig::sweep_default` — the GEMM micro-kernels
 //! amortize weight-panel traffic over the batch, which
@@ -26,7 +35,7 @@
 
 use elastic_train::data::BlobDataset;
 use elastic_train::figures::benchkit;
-use elastic_train::model::{Mlp, MlpConfig};
+use elastic_train::model::{ConvNet, ConvNetConfig, Mlp, MlpConfig};
 use elastic_train::rng::Rng;
 use std::hint::black_box;
 
@@ -209,7 +218,7 @@ fn json_row(c: &Cell) -> String {
         .collect::<Vec<_>>()
         .join(",");
     format!(
-        "    {{\"model\": \"{}\", \"dims\": [{}], \"batch\": {}, \"seed_sps\": {:.1}, \
+        "      {{\"model\": \"{}\", \"dims\": [{}], \"batch\": {}, \"seed_sps\": {:.1}, \
          \"per_sample_sps\": {:.1}, \"batched_sps\": {:.1}, \"speedup_vs_seed\": {:.2}}}",
         c.model,
         dims,
@@ -219,6 +228,116 @@ fn json_row(c: &Cell) -> String {
         c.batched_sps,
         c.batched_sps / c.seed_sps
     )
+}
+
+/// One conv grid cell: the im2col `ConvNet` has no pre-GEMM "seed"
+/// replica (it never existed before the GEMM path), so the baseline is
+/// the batch-of-one loop through the same kernels.
+struct ConvCell {
+    model: &'static str,
+    shape: (usize, usize, usize),
+    batch: usize,
+    per_sample_sps: f64,
+    batched_sps: f64,
+}
+
+fn bench_conv(
+    name: &'static str,
+    cfg: &ConvNetConfig,
+    data: &BlobDataset,
+    batch: usize,
+    target_ms: f64,
+    batches: usize,
+) -> ConvCell {
+    let mut net = ConvNet::new(cfg.clone());
+    let mut rng = Rng::new(1234);
+    let theta = net.init_params(&mut rng);
+    let mut grad = vec![0.0f32; theta.len()];
+    let mut gtmp = vec![0.0f32; theta.len()];
+    let samples: Vec<(Vec<f32>, usize)> = data.train[..batch].to_vec();
+    let mut sink = 0.0f32;
+
+    // Per-sample: batch-of-one through the im2col + GEMM path,
+    // accumulated to the mean like the seed algorithm would.
+    let per = benchkit::bench(&format!("{name}/b{batch}/per-sample"), target_ms, batches, || {
+        grad.iter_mut().for_each(|g| *g = 0.0);
+        let mut loss = 0.0f32;
+        for (x, y) in &samples {
+            let one = std::iter::once((x.as_slice(), *y));
+            loss += net.grad_batch(black_box(&theta), one, &mut gtmp);
+            for (g, &t) in grad.iter_mut().zip(&gtmp) {
+                *g += t;
+            }
+        }
+        let inv = 1.0 / samples.len() as f32;
+        grad.iter_mut().for_each(|g| *g *= inv);
+        sink += loss * inv;
+    });
+
+    // Batched: one fused im2col + GEMM forward/backward per layer over
+    // the whole panel.
+    let bat = benchkit::bench(&format!("{name}/b{batch}/batched"), target_ms, batches, || {
+        sink += net.batch_grad(black_box(&theta), &samples, &mut grad);
+    });
+    black_box(sink);
+
+    ConvCell {
+        model: name,
+        shape: (cfg.in_c, cfg.in_h, cfg.in_w),
+        batch,
+        per_sample_sps: per.throughput(batch as f64),
+        batched_sps: bat.throughput(batch as f64),
+    }
+}
+
+fn conv_json_row(c: &ConvCell) -> String {
+    format!(
+        "      {{\"model\": \"{}\", \"shape\": \"{}x{}x{}\", \"batch\": {}, \
+         \"per_sample_sps\": {:.1}, \"batched_sps\": {:.1}, \"speedup_batched_vs_per_sample\": {:.2}}}",
+        c.model,
+        c.shape.0,
+        c.shape.1,
+        c.shape.2,
+        c.batch,
+        c.per_sample_sps,
+        c.batched_sps,
+        c.batched_sps / c.per_sample_sps
+    )
+}
+
+/// Short git SHA of HEAD (the history key); "unknown" outside a git
+/// checkout.
+fn git_sha() -> String {
+    std::process::Command::new("git")
+        .args(["rev-parse", "--short=12", "HEAD"])
+        .current_dir(env!("CARGO_MANIFEST_DIR"))
+        .output()
+        .ok()
+        .filter(|o| o.status.success())
+        .and_then(|o| String::from_utf8(o.stdout).ok())
+        .map(|s| s.trim().to_string())
+        .filter(|s| !s.is_empty())
+        .unwrap_or_else(|| "unknown".to_string())
+}
+
+/// Append `entry` (one JSON object, pre-indented) to the history array
+/// at `path`. The file is a JSON array of per-run entries; a legacy
+/// single-object file (the pre-history format) or a missing/corrupt
+/// file starts a fresh array.
+fn append_history(path: &str, entry: &str) {
+    let existing = std::fs::read_to_string(path).unwrap_or_default();
+    let trimmed = existing.trim();
+    let body = if trimmed.starts_with('[') && trimmed.ends_with(']') {
+        let inner = trimmed[1..trimmed.len() - 1].trim_end();
+        if inner.trim().is_empty() {
+            format!("[\n{entry}\n]\n")
+        } else {
+            format!("[{inner},\n{entry}\n]\n")
+        }
+    } else {
+        format!("[\n{entry}\n]\n")
+    };
+    std::fs::write(path, body).expect("write BENCH_oracle.json");
 }
 
 fn main() {
@@ -253,6 +372,28 @@ fn main() {
         println!();
     }
 
+    // The conv grid (`model=conv`): the sweep blob read as a 1×4×8
+    // image plus a wider 1×8×8 one, same batch axis as the MLP grid.
+    let conv_sweep_cfg = ConvNetConfig::for_blob(32, 10, 1e-4);
+    let conv_wide_cfg = ConvNetConfig::for_blob(64, 10, 1e-4);
+    let mut conv_cells = Vec::new();
+    for (name, cfg, data) in [
+        ("conv-sweep", &conv_sweep_cfg, &sweep_data),
+        ("conv-wide", &conv_wide_cfg, &wide_data),
+    ] {
+        for batch in [32usize, 128] {
+            let c = bench_conv(name, cfg, data, batch, target_ms, batches);
+            println!(
+                "  {name:>10} batch={batch:<4} per-sample {:>11.0}  batched {:>11.0} sps  ({:.2}x batched)",
+                c.per_sample_sps,
+                c.batched_sps,
+                c.batched_sps / c.per_sample_sps
+            );
+            conv_cells.push(c);
+        }
+        println!();
+    }
+
     // Acceptance shape: ≥ 3× over the seed path at batch=128 on the
     // sweep-default net.
     let key = cells
@@ -265,17 +406,24 @@ fn main() {
         if speedup >= 3.0 { "OK, >= 3x" } else { "BELOW 3x target" }
     );
 
-    let rows: Vec<String> = cells.iter().map(json_row).collect();
-    let json = format!(
-        "{{\n  \"bench\": \"oracle\",\n  \"quick\": {},\n  \"unit\": \"samples_per_sec\",\n  \
-         \"results\": [\n{}\n  ]\n}}\n",
+    let mut rows: Vec<String> = cells.iter().map(json_row).collect();
+    rows.extend(conv_cells.iter().map(conv_json_row));
+    let unix_time = std::time::SystemTime::now()
+        .duration_since(std::time::UNIX_EPOCH)
+        .map(|d| d.as_secs())
+        .unwrap_or(0);
+    let entry = format!(
+        "  {{\n    \"bench\": \"oracle\",\n    \"sha\": \"{}\",\n    \"unix_time\": {},\n    \
+         \"quick\": {},\n    \"unit\": \"samples_per_sec\",\n    \"results\": [\n{}\n    ]\n  }}",
+        git_sha(),
+        unix_time,
         quick,
         rows.join(",\n")
     );
     // Anchor at the repository root (cargo runs benches with cwd at the
     // package root, rust/), so the tracked trajectory copy is the one
-    // that gets rewritten.
+    // that accumulates the per-PR history.
     let out = concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_oracle.json");
-    std::fs::write(out, &json).expect("write BENCH_oracle.json");
-    println!("wrote {out}");
+    append_history(out, &entry);
+    println!("appended history entry to {out}");
 }

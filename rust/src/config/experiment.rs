@@ -22,6 +22,9 @@ pub struct ExperimentConfig {
     /// §4.1 prefetch sharding: "replicated" (CIFAR mode) or
     /// "partitioned" (ImageNet mode).
     pub sharding: String,
+    /// Native gradient model: "mlp" (historical stand-in) or "conv"
+    /// (§4.1-faithful im2col conv net).
+    pub model: String,
     pub horizon: f64,
     pub eval_every: f64,
     pub seed: u64,
@@ -41,6 +44,7 @@ impl Default for ExperimentConfig {
             method: "easgd".into(),
             cost_family: "cifar".into(),
             sharding: "replicated".into(),
+            model: "mlp".into(),
             horizon: 60.0,
             eval_every: 2.0,
             seed: 0,
@@ -84,6 +88,7 @@ impl ExperimentConfig {
             "method" => self.method = v.to_string(),
             "cost" => self.cost_family = v.to_string(),
             "sharding" => self.sharding = v.to_string(),
+            "model" => self.model = v.to_string(),
             "horizon" => self.horizon = v.parse().unwrap_or(self.horizon),
             "eval_every" => self.eval_every = v.parse().unwrap_or(self.eval_every),
             "seed" => self.seed = v.parse().unwrap_or(self.seed),
@@ -153,6 +158,12 @@ impl ExperimentConfig {
     pub fn sharding_mode(&self) -> Option<crate::data::Sharding> {
         crate::data::Sharding::parse(&self.sharding)
     }
+
+    /// Resolve the `model=mlp|conv` knob; None on an unknown value
+    /// (callers report the CLI error).
+    pub fn model_kind(&self) -> Option<crate::model::ModelKind> {
+        crate::model::ModelKind::parse(&self.model)
+    }
 }
 
 #[cfg(test)]
@@ -201,6 +212,16 @@ mod tests {
         assert_eq!(cfg.sharding_mode(), Some(crate::data::Sharding::Partitioned));
         cfg.set("sharding", "bogus");
         assert_eq!(cfg.sharding_mode(), None);
+    }
+
+    #[test]
+    fn model_resolution() {
+        let mut cfg = ExperimentConfig::default();
+        assert_eq!(cfg.model_kind(), Some(crate::model::ModelKind::Mlp));
+        cfg.set("model", "conv");
+        assert_eq!(cfg.model_kind(), Some(crate::model::ModelKind::Conv));
+        cfg.set("model", "bogus");
+        assert_eq!(cfg.model_kind(), None);
     }
 
     #[test]

@@ -51,7 +51,7 @@ pub use executor::{
     tree_supported, Backend, Executor, SimExecutor, ThreadExecutor,
 };
 pub use method::Method;
-pub use oracle::{EvalStats, GradOracle, MlpOracle, QuadraticOracle};
+pub use oracle::{ConvOracle, EvalStats, GradOracle, MlpOracle, NativeOracle, QuadraticOracle};
 pub use sequential::{run_sequential, SeqMethod};
 pub use threaded::run_threaded;
 pub use topology::{node_taus, Topology, TreeLayout, TreeScheme, TreeSpec};

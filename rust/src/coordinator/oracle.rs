@@ -1,15 +1,18 @@
 //! The gradient oracle abstraction — what a "worker" computes.
 //!
 //! The coordinator is generic over this trait so the same EASGD /
-//! DOWNPOUR / Tree drivers run against (a) the native MLP on synthetic
-//! CIFAR-like data (figure sweeps, p up to 256) and (b) the AOT-lowered
-//! JAX transformer through PJRT (`runtime::PjrtOracle`, the end-to-end
-//! example). Python is never involved in either.
+//! DOWNPOUR / Tree drivers run against (a) the native models on
+//! synthetic CIFAR-like data (figure sweeps, p up to 256) — the MLP
+//! stand-in or the §4.1-faithful conv net, both behind the generic
+//! [`NativeOracle`] — and (b) the AOT-lowered JAX transformer through
+//! PJRT (`runtime::PjrtOracle`, the end-to-end example). Python is
+//! never involved in either.
 
 use crate::data::prefetch::{PrefetchPool, Sharding};
 use crate::data::BlobDataset;
-use crate::model::{Mlp, MlpConfig};
+use crate::model::{BatchModel, ConvNet, ConvNetConfig, Mlp, MlpConfig};
 use crate::rng::Rng;
+use std::collections::VecDeque;
 use std::sync::Arc;
 
 /// Evaluation summary for the center variable.
@@ -37,32 +40,84 @@ pub trait GradOracle {
     fn eval(&mut self, theta: &[f32]) -> EvalStats;
 }
 
-/// Native-MLP oracle over the blob dataset, fed through the §4.1
-/// prefetch pipeline. Whole mini-batches flow through the model's
-/// batch-major GEMM path (`Mlp::grad_batch` / `Mlp::eval_batch`); the
-/// scratch panels inside `Mlp` are reused so the steady-state `grad`
-/// call is allocation-free on the model side.
-pub struct MlpOracle {
+/// Native oracle over the blob dataset, generic over the
+/// [`BatchModel`] (MLP or conv net), fed through the §4.1 prefetch
+/// pipeline. Whole mini-batches flow through the model's batch-major
+/// GEMM path (`grad_batch` / `eval_batch`); the scratch panels inside
+/// the model are reused so the steady-state `grad` call is
+/// allocation-free on the model side.
+pub struct NativeOracle<M: BatchModel> {
     data: Arc<BlobDataset>,
-    mlp: Mlp,
+    model: M,
     pool: PrefetchPool,
-    queue: Vec<Vec<usize>>,
-    batch: usize,
+    /// Mini-batches cut by the pool, served FRONT-first so workers
+    /// consume them in the order the shuffled union was cut (the seed
+    /// `pop()`ed the back, reversing every fetch).
+    queue: VecDeque<Vec<usize>>,
     init_seed: u64,
     /// Fixed probe subset for train loss (cheap, low-variance).
     probe: Vec<usize>,
 }
 
-impl MlpOracle {
+/// The historical sweep oracle: [`NativeOracle`] over the MLP stand-in.
+pub type MlpOracle = NativeOracle<Mlp>;
+
+/// The §4.1-faithful conv oracle (`model=conv`): [`NativeOracle`] over
+/// the im2col + GEMM conv net, the blob input read as a 1×h×w image.
+pub type ConvOracle = NativeOracle<ConvNet>;
+
+impl<M: BatchModel> NativeOracle<M> {
+    /// Wrap an explicit model instance with an explicit §4.1 prefetch
+    /// sharding mode: every loader owns the whole dataset
+    /// (`Replicated`, CIFAR mode) or a distinct 1/k shard
+    /// (`Partitioned`, ImageNet mode).
+    pub fn with_model(
+        data: Arc<BlobDataset>,
+        model: M,
+        batch: usize,
+        seed: u64,
+        sharding: Sharding,
+    ) -> Self {
+        assert_eq!(model.in_dim(), data.dim, "model input dim vs dataset dim");
+        assert_eq!(model.n_classes(), data.classes, "model classes vs dataset classes");
+        let pool = PrefetchPool::new(data.train.len(), 4, batch * 2, batch, sharding, seed);
+        let probe = (0..256.min(data.train.len())).collect();
+        Self {
+            data,
+            model,
+            pool,
+            queue: VecDeque::new(),
+            init_seed: 9000,
+            probe,
+        }
+    }
+
+    /// Next mini-batch of sample indices, ALWAYS from the §4.1 prefetch
+    /// pipeline: keep fetching until the pool cuts at least one full
+    /// mini-batch (early fetches can come back empty while the
+    /// shuffled union is still smaller than `batch` — the carry
+    /// accumulates, so this loop terminates), and serve the cuts in
+    /// order. The seed silently fell back to uniform i.i.d. indices on
+    /// an empty fetch, bypassing the chunked loaders/sharding/carry
+    /// semantics the Replicated-vs-Partitioned comparisons depend on.
+    fn next_batch(&mut self, rng: &mut Rng) -> Vec<usize> {
+        loop {
+            if let Some(mb) = self.queue.pop_front() {
+                return mb;
+            }
+            self.queue.extend(self.pool.fetch_minibatches(rng));
+        }
+    }
+}
+
+impl NativeOracle<Mlp> {
     /// Replicated-loader oracle (the §4.1 CIFAR mode, the sweep
     /// default). Use [`MlpOracle::new_sharded`] to pick the mode.
     pub fn new(data: Arc<BlobDataset>, cfg: MlpConfig, batch: usize, seed: u64) -> Self {
         Self::new_sharded(data, cfg, batch, seed, Sharding::Replicated)
     }
 
-    /// Oracle with an explicit §4.1 prefetch sharding mode: every
-    /// loader owns the whole dataset (`Replicated`, CIFAR mode) or a
-    /// distinct 1/k shard (`Partitioned`, ImageNet mode).
+    /// MLP oracle with an explicit §4.1 prefetch sharding mode.
     pub fn new_sharded(
         data: Arc<BlobDataset>,
         cfg: MlpConfig,
@@ -70,19 +125,7 @@ impl MlpOracle {
         seed: u64,
         sharding: Sharding,
     ) -> Self {
-        assert_eq!(cfg.dims[0], data.dim);
-        assert_eq!(*cfg.dims.last().unwrap(), data.classes);
-        let pool = PrefetchPool::new(data.train.len(), 4, batch * 2, batch, sharding, seed);
-        let probe = (0..256.min(data.train.len())).collect();
-        Self {
-            data,
-            mlp: Mlp::new(cfg),
-            pool,
-            queue: Vec::new(),
-            batch,
-            init_seed: 9000,
-            probe,
-        }
+        Self::with_model(data, Mlp::new(cfg), batch, seed, sharding)
     }
 
     /// Sweep-default oracle family: every worker shares the dataset
@@ -106,25 +149,45 @@ impl MlpOracle {
             })
             .collect()
     }
+}
 
-    fn next_batch(&mut self, rng: &mut Rng) -> Vec<usize> {
-        if self.queue.is_empty() {
-            self.queue = self.pool.fetch_minibatches(rng);
-        }
-        self.queue.pop().unwrap_or_else(|| {
-            (0..self.batch).map(|_| rng.below(self.data.train.len())).collect()
-        })
+impl NativeOracle<ConvNet> {
+    /// Conv oracle with an explicit §4.1 prefetch sharding mode.
+    pub fn new_sharded(
+        data: Arc<BlobDataset>,
+        cfg: ConvNetConfig,
+        batch: usize,
+        seed: u64,
+        sharding: Sharding,
+    ) -> Self {
+        Self::with_model(data, ConvNet::new(cfg), batch, seed, sharding)
+    }
+
+    /// Conv oracle family (the `model=conv` sweeps), same seed layout
+    /// as [`MlpOracle::family_sharded`] so curves are comparable.
+    pub fn family_sharded(
+        data: Arc<BlobDataset>,
+        cfg: &ConvNetConfig,
+        batch: usize,
+        p: usize,
+        sharding: Sharding,
+    ) -> Vec<Self> {
+        (0..p)
+            .map(|i| {
+                Self::new_sharded(data.clone(), cfg.clone(), batch, 40_000 + i as u64, sharding)
+            })
+            .collect()
     }
 }
 
-impl GradOracle for MlpOracle {
+impl<M: BatchModel> GradOracle for NativeOracle<M> {
     fn n_params(&self) -> usize {
-        self.mlp.config().n_params()
+        self.model.n_params()
     }
 
     fn init_params(&self) -> Vec<f32> {
         let mut rng = Rng::new(self.init_seed);
-        self.mlp.init_params(&mut rng)
+        self.model.init_params(&mut rng)
     }
 
     fn grad(&mut self, theta: &[f32], rng: &mut Rng, out: &mut [f32]) -> f32 {
@@ -134,7 +197,7 @@ impl GradOracle for MlpOracle {
         // loop's semantics.
         let idx = self.next_batch(rng);
         let data = &self.data;
-        self.mlp.grad_batch(
+        self.model.grad_batch(
             theta,
             idx.iter().map(|&i| {
                 let (x, y) = &data.train[i];
@@ -149,11 +212,11 @@ impl GradOracle for MlpOracle {
         // runs ONCE per θ and is shared across every sample (the seed
         // recomputed it inside each `loss` call).
         const CHUNK: usize = 128;
-        let l2 = self.mlp.l2_penalty(theta) as f64;
+        let l2 = self.model.l2_penalty(theta) as f64;
         let data = &self.data;
         let mut train_nll = 0.0f64;
         for chunk in self.probe.chunks(CHUNK) {
-            let (nll, _) = self.mlp.eval_batch(
+            let (nll, _) = self.model.eval_batch(
                 theta,
                 chunk.iter().map(|&i| {
                     let (x, y) = &data.train[i];
@@ -166,16 +229,30 @@ impl GradOracle for MlpOracle {
         let mut wrong = 0usize;
         for chunk in data.test.chunks(CHUNK) {
             let (nll, w) = self
-                .mlp
+                .model
                 .eval_batch(theta, chunk.iter().map(|(x, y)| (x.as_slice(), *y)));
             test_nll += nll;
             wrong += w;
         }
-        EvalStats {
-            train_loss: train_nll / self.probe.len() as f64 + l2,
-            test_loss: test_nll / data.test.len() as f64 + l2,
-            test_error: wrong as f64 / data.test.len() as f64,
-        }
+        // Guarded divisions: an empty probe/test set means 0 samples,
+        // so the stat is DEFINED as 0 rather than the 0/0 = NaN the
+        // seed emitted (a NaN here poisons every figure CSV
+        // downstream). No debug assert on emptiness — the guarded path
+        // is itself under test.
+        let train_loss = if self.probe.is_empty() {
+            0.0
+        } else {
+            train_nll / self.probe.len() as f64 + l2
+        };
+        let (test_loss, test_error) = if data.test.is_empty() {
+            (0.0, 0.0)
+        } else {
+            (
+                test_nll / data.test.len() as f64 + l2,
+                wrong as f64 / data.test.len() as f64,
+            )
+        };
+        EvalStats { train_loss, test_loss, test_error }
     }
 }
 
@@ -273,10 +350,44 @@ mod tests {
     }
 
     #[test]
+    fn conv_oracle_gradient_descends() {
+        // The conv stand-in trains end-to-end through the same oracle
+        // machinery: blob input read as a 1×2×4 image.
+        let (data, _) = small_setup();
+        let cfg = ConvNetConfig::for_blob(8, 4, 1e-4);
+        let mut o = ConvOracle::new_sharded(data, cfg, 32, 7, Sharding::Replicated);
+        let mut theta = o.init_params();
+        let mut g = vec![0.0; o.n_params()];
+        let mut rng = Rng::new(1);
+        let e0 = o.eval(&theta);
+        for _ in 0..150 {
+            o.grad(&theta, &mut rng, &mut g);
+            crate::model::flat::sgd_step(&mut theta, &g, 0.1);
+        }
+        let e1 = o.eval(&theta);
+        assert!(e1.train_loss < e0.train_loss, "{:?} -> {:?}", e0, e1);
+        // Weight sharing constrains the tiny conv net, so only require
+        // that generalization does not regress materially.
+        assert!(e1.test_error <= e0.test_error + 0.05, "{:?} -> {:?}", e0, e1);
+    }
+
+    #[test]
     fn init_params_identical_across_family() {
         let (data, cfg) = small_setup();
         let fam = MlpOracle::family(data, &cfg, 32, 4);
         let base = fam[0].init_params();
+        for o in &fam[1..] {
+            assert_eq!(o.init_params(), base, "shared init (§4.1)");
+        }
+    }
+
+    #[test]
+    fn conv_family_shares_init_and_matches_mlp_contract() {
+        let (data, _) = small_setup();
+        let cfg = ConvNetConfig::for_blob(8, 4, 1e-4);
+        let fam = ConvOracle::family_sharded(data, &cfg, 32, 3, Sharding::Replicated);
+        let base = fam[0].init_params();
+        assert_eq!(base.len(), fam[0].n_params());
         for o in &fam[1..] {
             assert_eq!(o.init_params(), base, "shared init (§4.1)");
         }
@@ -302,6 +413,54 @@ mod tests {
         assert!(e1.train_loss < e0.train_loss - 0.2, "{:?} -> {:?}", e0, e1);
     }
 
+    /// Regression for the silent uniform-sampling fallback: every index
+    /// the oracle serves must have flowed through the prefetch pool,
+    /// in the exact order the pool cut its mini-batches. A shadow pool
+    /// built with the oracle's constructor parameters and driven by an
+    /// identical RNG stream must predict every served batch; the old
+    /// fallback (fresh `rng.below` draws) and the old reversed `pop()`
+    /// order both diverge from this prediction immediately.
+    #[test]
+    fn served_batches_flow_through_the_pool_in_cut_order() {
+        let (data, cfg) = small_setup();
+        let batch = 32;
+        let seed = 77;
+        for sharding in [Sharding::Replicated, Sharding::Partitioned] {
+            let mut o = MlpOracle::new_sharded(data.clone(), cfg.clone(), batch, seed, sharding);
+            let mut shadow =
+                PrefetchPool::new(data.train.len(), 4, batch * 2, batch, sharding, seed);
+            let mut rng_o = Rng::new(5);
+            let mut rng_s = Rng::new(5);
+            let mut expected: VecDeque<Vec<usize>> = VecDeque::new();
+            for step in 0..40 {
+                let got = o.next_batch(&mut rng_o);
+                while expected.is_empty() {
+                    expected.extend(shadow.fetch_minibatches(&mut rng_s));
+                }
+                let want = expected.pop_front().unwrap();
+                assert_eq!(got, want, "{sharding:?} step {step}: not the pool's cut order");
+            }
+        }
+    }
+
+    /// A tiny dataset under `Partitioned` sharding: every loader owns a
+    /// 4-sample shard it must cycle repeatedly per fetch — the oracle
+    /// must serve only pool-fetched indices, never fall back to
+    /// uniform sampling, and never panic on the small shards.
+    #[test]
+    fn next_batch_survives_small_fetches_without_fallback() {
+        let data = Arc::new(BlobDataset::generate(8, 4, 16, 8, 0.8, 3));
+        let cfg = MlpConfig::new(&[8, 16, 4], 1e-4);
+        let mut o =
+            MlpOracle::new_sharded(data.clone(), cfg, 8, 11, Sharding::Partitioned);
+        let mut rng = Rng::new(9);
+        for _ in 0..20 {
+            let mb = o.next_batch(&mut rng);
+            assert_eq!(mb.len(), 8);
+            assert!(mb.iter().all(|&i| i < data.train.len()));
+        }
+    }
+
     #[test]
     fn eval_stats_are_deterministic_for_same_theta() {
         let (data, cfg) = small_setup();
@@ -311,6 +470,22 @@ mod tests {
         let b = o.eval(&theta);
         assert_eq!(a.train_loss, b.train_loss);
         assert_eq!(a.test_error, b.test_error);
+    }
+
+    /// Regression for the unguarded `/ data.test.len()`: an empty test
+    /// set used to yield NaN test stats that poisoned every figure CSV
+    /// downstream; they are now defined as 0.
+    #[test]
+    fn eval_with_empty_test_set_yields_zero_not_nan() {
+        let data = Arc::new(BlobDataset::generate(8, 4, 64, 0, 0.8, 1));
+        assert!(data.test.is_empty());
+        let cfg = MlpConfig::new(&[8, 16, 4], 1e-4);
+        let mut o = MlpOracle::new(data, cfg, 16, 7);
+        let theta = o.init_params();
+        let e = o.eval(&theta);
+        assert!(e.train_loss.is_finite());
+        assert_eq!(e.test_loss, 0.0, "empty test set defines test_loss = 0");
+        assert_eq!(e.test_error, 0.0, "empty test set defines test_error = 0");
     }
 
     #[test]

@@ -37,8 +37,12 @@ impl DataLoader {
         for _ in 0..self.chunk {
             if self.pos >= self.file.len() {
                 // Wrap: restart from a random offset in [0, s],
-                // s = len mod batch (the thesis' rule).
-                let s = self.file.len() % self.batch;
+                // s = len mod batch (the thesis' rule). When the file
+                // is SMALLER than a mini-batch (tiny partitioned
+                // shards), len mod batch = len, and an offset of len
+                // would read one past the end — clamp the offset range
+                // to [0, len − 1] so the restart stays in bounds.
+                let s = (self.file.len() % self.batch).min(self.file.len() - 1);
                 self.pos = if s == 0 { 0 } else { self.rng.below(s + 1) };
             }
             out.push(self.file[self.pos]);
@@ -95,6 +99,13 @@ impl PrefetchPool {
         mode: Sharding,
         seed: u64,
     ) -> Self {
+        assert!(n_samples > 0, "prefetch pool over an empty dataset");
+        // Partitioned mode hands loader j the j-th 1/k fraction; with
+        // n_samples < k some fractions are EMPTY, and an empty "mmap
+        // file" trips the `DataLoader::new` assert — a panic reachable
+        // straight from the `sharding=` CLI knob on small datasets.
+        // Clamp the loader count so every loader owns ≥ 1 sample.
+        let k = k.min(n_samples).max(1);
         let loaders = (0..k)
             .map(|j| {
                 let file: Vec<usize> = match mode {
@@ -141,6 +152,25 @@ mod tests {
         // After wrap, restart offset ∈ [0, 10 mod 4] = [0, 2].
         assert!(third[2] <= 2, "wrap offset {:?}", &third[2..]);
         assert_eq!(third[3], third[2] + 1);
+    }
+
+    /// Regression: a file SMALLER than the mini-batch size (tiny
+    /// partitioned shards) used to make the wrap rule draw an offset of
+    /// `len` itself (len mod batch = len) and index one past the end.
+    /// The offset range is now clamped to [0, len − 1].
+    #[test]
+    fn files_smaller_than_batch_cycle_without_out_of_bounds() {
+        for len in [1usize, 2, 3, 5] {
+            let mut l = DataLoader::new((0..len).collect(), 4, 8, 9);
+            // Many wraps: every draw of the restart offset must stay
+            // in bounds (the old rule panicked with probability
+            // ~1/(len+1) per wrap).
+            for _ in 0..200 {
+                for idx in l.next_chunk() {
+                    assert!(idx < len);
+                }
+            }
+        }
     }
 
     #[test]
@@ -198,6 +228,36 @@ mod tests {
             "served {served} of {fetched}; the rest must sit in carry"
         );
         assert_eq!(served + pool.carry.len(), fetched);
+    }
+
+    /// Regression for the `n_samples < k` panic: `Partitioned` used to
+    /// build empty loader files (e.g. 3 samples across 4 loaders ⇒ one
+    /// loader owns nothing) and trip the `DataLoader::new` assert —
+    /// reachable from the `sharding=` CLI knob on small datasets. The
+    /// loader count is now clamped to `min(k, n_samples)`.
+    #[test]
+    fn tiny_dataset_clamps_loader_count_instead_of_panicking() {
+        for mode in [Sharding::Partitioned, Sharding::Replicated] {
+            let mut pool = PrefetchPool::new(3, 4, 8, 4, mode, 1);
+            assert_eq!(pool.loaders.len(), 3, "{mode:?}: one loader per sample");
+            // The clamped pool still serves valid full mini-batches.
+            let mut rng = Rng::new(2);
+            let mut served = 0;
+            for _ in 0..8 {
+                for mb in pool.fetch_minibatches(&mut rng) {
+                    assert_eq!(mb.len(), 4);
+                    assert!(mb.iter().all(|&i| i < 3));
+                    served += 1;
+                }
+            }
+            assert!(served > 0, "{mode:?}: clamped pool must still serve batches");
+        }
+        // Partitioned coverage: the 3 clamped loaders own disjoint
+        // singleton shards that union to the whole set.
+        let pool = PrefetchPool::new(3, 4, 8, 4, Sharding::Partitioned, 1);
+        let mut all: Vec<usize> = pool.loaders.iter().flat_map(|l| l.file.clone()).collect();
+        all.sort_unstable();
+        assert_eq!(all, vec![0, 1, 2]);
     }
 
     #[test]

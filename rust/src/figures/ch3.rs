@@ -154,6 +154,7 @@ mod tests {
             full: false,
             seed: 0,
             backend: crate::coordinator::Backend::Sim,
+            model: crate::model::ModelKind::Mlp,
         }
     }
 

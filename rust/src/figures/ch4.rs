@@ -7,12 +7,13 @@ use super::csv::Csv;
 use super::FigOpts;
 use crate::cluster::{CostModel, RunResult};
 use crate::coordinator::{
-    run_sequential, run_with_backend, Backend, DriverConfig, Method, MlpOracle, SeqMethod,
+    run_sequential, run_with_backend, Backend, ConvOracle, DriverConfig, Method, MlpOracle,
+    SeqMethod,
 };
 use crate::csv_row;
 use crate::data::{BlobDataset, Sharding};
-use crate::model::MlpConfig;
 use crate::error::Result;
+use crate::model::{ConvNetConfig, MlpConfig, ModelKind};
 use std::sync::Arc;
 
 pub fn sweep_data(seed: u64) -> Arc<BlobDataset> {
@@ -23,9 +24,20 @@ pub fn sweep_mlp() -> MlpConfig {
     MlpConfig::new(&[32, 64, 32, 10], 1e-4)
 }
 
+/// The `model=conv` sweep architecture: the 32-dim blob input read as a
+/// 1×4×8 image through two 3×3 conv blocks (§4.1's conv-net shape on
+/// the same data the MLP sweeps use).
+pub fn sweep_conv() -> ConvNetConfig {
+    ConvNetConfig::for_blob(32, 10, 1e-4)
+}
+
 pub struct Sweep {
     pub data: Arc<BlobDataset>,
     pub mcfg: MlpConfig,
+    /// Conv architecture for `model=conv`, derived from the sweep
+    /// dataset's dimension (callers swapping `data` should refresh it
+    /// with [`ConvNetConfig::for_blob`]).
+    pub ccfg: ConvNetConfig,
     pub horizon: f64,
     pub eval_every: f64,
     pub seed: u64,
@@ -35,25 +47,41 @@ pub struct Sweep {
     /// §4.1 prefetch sharding for every oracle family in this sweep
     /// (Replicated = CIFAR mode; Partitioned = ImageNet mode).
     pub sharding: Sharding,
+    /// Gradient model every oracle family in this sweep runs
+    /// (`model=mlp` historical stand-in; `model=conv` im2col conv net).
+    pub model: ModelKind,
 }
 
 impl Sweep {
     pub fn new(opts: &FigOpts) -> Sweep {
+        let data = sweep_data(opts.seed + 1);
+        let ccfg = ConvNetConfig::for_blob(data.dim, data.classes, 1e-4);
         Sweep {
-            data: sweep_data(opts.seed + 1),
+            data,
             mcfg: sweep_mlp(),
+            ccfg,
             horizon: if opts.full { 240.0 } else { 45.0 },
             eval_every: if opts.full { 5.0 } else { 2.5 },
             seed: opts.seed,
             backend: opts.backend,
             sharding: Sharding::Replicated,
+            model: opts.model,
+        }
+    }
+
+    /// Parameter count of the selected sweep model (the cost model
+    /// scales communication with it).
+    pub fn n_params(&self) -> usize {
+        match self.model {
+            ModelKind::Mlp => self.mcfg.n_params(),
+            ModelKind::Conv => self.ccfg.n_params(),
         }
     }
 
     pub fn cost(&self, family: &str) -> CostModel {
         match family {
-            "imagenet" => CostModel::imagenet_like(self.mcfg.n_params()),
-            _ => CostModel::cifar_like(self.mcfg.n_params()),
+            "imagenet" => CostModel::imagenet_like(self.n_params()),
+            _ => CostModel::cifar_like(self.n_params()),
         }
     }
 
@@ -69,8 +97,6 @@ impl Sweep {
         family: &str,
         gamma: f64,
     ) -> Result<RunResult> {
-        let mut oracles =
-            MlpOracle::family_sharded(self.data.clone(), &self.mcfg, 32, p, self.sharding);
         let cfg = DriverConfig {
             eta,
             method,
@@ -81,20 +107,43 @@ impl Sweep {
             max_steps: 40_000_000,
             lr_decay_gamma: gamma,
         };
-        run_with_backend(self.backend, &mut oracles, &cfg)
+        match self.model {
+            ModelKind::Mlp => {
+                let mut oracles =
+                    MlpOracle::family_sharded(self.data.clone(), &self.mcfg, 32, p, self.sharding);
+                run_with_backend(self.backend, &mut oracles, &cfg)
+            }
+            ModelKind::Conv => {
+                let mut oracles = ConvOracle::family_sharded(
+                    self.data.clone(),
+                    &self.ccfg,
+                    32,
+                    p,
+                    self.sharding,
+                );
+                run_with_backend(self.backend, &mut oracles, &cfg)
+            }
+        }
     }
 
     pub fn run_seq(&self, m: SeqMethod, eta: f32, family: &str) -> RunResult {
-        let mut o = MlpOracle::new(self.data.clone(), self.mcfg.clone(), 32, 40_000);
-        run_sequential(
-            &mut o,
-            m,
-            eta,
-            &self.cost(family),
-            self.horizon,
-            self.eval_every,
-            self.seed + 77,
-        )
+        let cost = self.cost(family);
+        match self.model {
+            ModelKind::Mlp => {
+                let mut o = MlpOracle::new(self.data.clone(), self.mcfg.clone(), 32, 40_000);
+                run_sequential(&mut o, m, eta, &cost, self.horizon, self.eval_every, self.seed + 77)
+            }
+            ModelKind::Conv => {
+                let mut o = ConvOracle::new_sharded(
+                    self.data.clone(),
+                    self.ccfg.clone(),
+                    32,
+                    40_000,
+                    Sharding::Replicated,
+                );
+                run_sequential(&mut o, m, eta, &cost, self.horizon, self.eval_every, self.seed + 77)
+            }
+        }
     }
 }
 
@@ -533,17 +582,56 @@ pub fn tab4_4(opts: &FigOpts) -> Result<()> {
 mod tests {
     use super::*;
 
-    #[test]
-    fn quick_sequential_figure_runs() {
-        let opts = FigOpts {
+    fn opts(backend: Backend, model: ModelKind) -> FigOpts {
+        FigOpts {
             out_dir: std::env::temp_dir()
                 .join("et_fig_ch4")
                 .to_string_lossy()
                 .into_owned(),
             full: false,
             seed: 0,
-            backend: Backend::Sim,
-        };
-        tab4_1(&opts).unwrap();
+            backend,
+            model,
+        }
+    }
+
+    #[test]
+    fn quick_sequential_figure_runs() {
+        tab4_1(&opts(Backend::Sim, ModelKind::Mlp)).unwrap();
+    }
+
+    /// The `model=conv` acceptance cell: one EASGD sweep cell runs
+    /// end-to-end with the conv oracle on BOTH executor backends (sim
+    /// virtual time, thread real seconds) and produces a finite,
+    /// non-trivial curve.
+    #[test]
+    fn conv_sweep_cell_runs_on_both_backends() {
+        for backend in [Backend::Sim, Backend::Thread] {
+            let mut sw = Sweep::new(&opts(backend, ModelKind::Conv));
+            // Keep the cell tiny: the thread backend's horizon is real
+            // wall-clock seconds.
+            sw.horizon = if backend == Backend::Thread { 0.4 } else { 6.0 };
+            sw.eval_every = sw.horizon / 2.0;
+            let r = sw
+                .run(2, Method::easgd_default(2, 4), 0.02, "cifar")
+                .unwrap_or_else(|e| panic!("{backend:?}: {e}"));
+            assert!(!r.curve.is_empty(), "{backend:?}: no eval points");
+            assert!(
+                r.curve.iter().all(|pt| pt.train_loss.is_finite() && pt.test_loss.is_finite()),
+                "{backend:?}: non-finite conv sweep stats"
+            );
+            assert!(r.total_steps > 0, "{backend:?}: no steps taken");
+        }
+    }
+
+    /// The conv sweep's cost model scales with the conv net's parameter
+    /// count, not the MLP's.
+    #[test]
+    fn sweep_n_params_follows_the_model_knob() {
+        let mlp = Sweep::new(&opts(Backend::Sim, ModelKind::Mlp));
+        let conv = Sweep::new(&opts(Backend::Sim, ModelKind::Conv));
+        assert_eq!(mlp.n_params(), sweep_mlp().n_params());
+        assert_eq!(conv.n_params(), sweep_conv().n_params());
+        assert_ne!(mlp.n_params(), conv.n_params());
     }
 }

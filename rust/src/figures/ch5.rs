@@ -468,6 +468,7 @@ mod tests {
             full: false,
             seed: 0,
             backend: crate::coordinator::Backend::Sim,
+            model: crate::model::ModelKind::Mlp,
         }
     }
 

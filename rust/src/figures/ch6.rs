@@ -5,11 +5,12 @@ use super::csv::Csv;
 use super::FigOpts;
 use crate::cluster::RunResult;
 use crate::coordinator::{
-    gauss_seidel, run_with_backend_topology, Backend, DriverConfig, Method, MlpOracle,
-    Topology, TreeScheme, TreeSpec,
+    gauss_seidel, run_with_backend_topology, Backend, ConvOracle, DriverConfig, Method,
+    MlpOracle, Topology, TreeScheme, TreeSpec,
 };
 use crate::csv_row;
 use crate::error::Result;
+use crate::model::ModelKind;
 
 fn tree_dims(opts: &FigOpts) -> (usize, usize) {
     if opts.full {
@@ -59,7 +60,6 @@ fn tree_run(
         Method::Easgd { alpha, tau: 1 }
     };
     let (horizon, eval_every) = tree_time(opts);
-    let mut oracles = MlpOracle::family(sw.data.clone(), &sw.mcfg, 16, leaves);
     let cfg = DriverConfig {
         eta,
         method,
@@ -71,7 +71,25 @@ fn tree_run(
         lr_decay_gamma: 0.0,
     };
     let topo = Topology::Tree(TreeSpec::new(degree, scheme));
-    run_with_backend_topology(opts.backend, &mut oracles, &cfg, &topo)
+    // Honor the sweep's `model=` knob like the ch4 cells do — the cost
+    // model above already scales with the selected model's n_params,
+    // and the fig6.11-6.12 comparators run the same model.
+    match sw.model {
+        ModelKind::Mlp => {
+            let mut oracles = MlpOracle::family(sw.data.clone(), &sw.mcfg, 16, leaves);
+            run_with_backend_topology(opts.backend, &mut oracles, &cfg, &topo)
+        }
+        ModelKind::Conv => {
+            let mut oracles = ConvOracle::family_sharded(
+                sw.data.clone(),
+                &sw.ccfg,
+                16,
+                leaves,
+                crate::data::Sharding::Replicated,
+            );
+            run_with_backend_topology(opts.backend, &mut oracles, &cfg, &topo)
+        }
+    }
 }
 
 /// Figs 6.3–6.10 — both schemes × momentum settings × repeated seeds
@@ -241,6 +259,7 @@ mod tests {
             full: false,
             seed: 0,
             backend: crate::coordinator::Backend::Sim,
+            model: crate::model::ModelKind::Mlp,
         };
         fig6_gs(&opts).unwrap();
     }

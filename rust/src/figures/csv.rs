@@ -22,7 +22,16 @@ impl Csv {
     }
 
     pub fn row(&mut self, fields: &[String]) -> Result<()> {
-        debug_assert_eq!(fields.len(), self.cols, "column count mismatch");
+        // A real error, not a debug assert: release-built figure
+        // binaries used to silently emit ragged rows on a column-count
+        // mismatch, corrupting the CSV for every downstream plot.
+        if fields.len() != self.cols {
+            return Err(crate::err!(
+                "csv row has {} fields but the header declared {} columns",
+                fields.len(),
+                self.cols
+            ));
+        }
         writeln!(self.w, "{}", fields.join(","))?;
         Ok(())
     }
@@ -56,5 +65,22 @@ mod tests {
         }
         let text = std::fs::read_to_string(&path).unwrap();
         assert_eq!(text, "a,b\n1,x\n2.5,3.5\n");
+    }
+
+    /// Regression: a ragged row is a hard `Err` in every build profile
+    /// (it was a `debug_assert!`, so release figure binaries silently
+    /// wrote corrupt CSV).
+    #[test]
+    fn ragged_rows_are_rejected_with_an_error() {
+        let dir = std::env::temp_dir().join("et_csv_ragged_test");
+        let path = dir.join("t.csv");
+        let mut c = Csv::create(&path, &["a", "b", "c"]).unwrap();
+        let e = c.row(&["1".into(), "2".into()]).unwrap_err();
+        assert!(format!("{e}").contains("2 fields"), "{e}");
+        assert!(format!("{e}").contains("3 columns"), "{e}");
+        let e = csv_row!(c, 1, 2, 3, 4).unwrap_err();
+        assert!(format!("{e}").contains("4 fields"), "{e}");
+        // Well-formed rows still go through afterwards.
+        c.row_f64(&[1.0, 2.0, 3.0]).unwrap();
     }
 }

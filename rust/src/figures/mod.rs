@@ -20,6 +20,7 @@ use crate::bail;
 use crate::config::Args;
 use crate::coordinator::Backend;
 use crate::error::Result;
+use crate::model::ModelKind;
 
 /// Global options every figure generator receives.
 #[derive(Clone, Debug)]
@@ -32,23 +33,34 @@ pub struct FigOpts {
     /// keeps virtual time; `backend=thread` runs real workers, with
     /// horizons read as wall-clock seconds).
     pub backend: Backend,
+    /// Gradient model for the native-oracle sweeps (`model=mlp` is the
+    /// historical stand-in; `model=conv` is the §4.1-faithful im2col
+    /// conv net over the same blob data read as a 1×h×w image).
+    pub model: ModelKind,
 }
 
 impl FigOpts {
-    /// Errors on an unknown `backend=` value — a figure silently run
-    /// on the wrong executor is worse than a refused invocation, and a
-    /// `panic!` is worse than a clean CLI error.
+    /// Errors on an unknown `backend=`/`model=` value — a figure
+    /// silently run on the wrong executor or model is worse than a
+    /// refused invocation, and a `panic!` is worse than a clean CLI
+    /// error.
     pub fn from_args(args: &Args) -> Result<FigOpts> {
         let backend_str = args.get_str("backend", "sim");
         let backend = match Backend::parse(backend_str) {
             Some(b) => b,
             None => bail!("unknown backend '{backend_str}' (sim|thread)"),
         };
+        let model_str = args.get_str("model", "mlp");
+        let model = match ModelKind::parse(model_str) {
+            Some(m) => m,
+            None => bail!("unknown model '{model_str}' (mlp|conv)"),
+        };
         Ok(FigOpts {
             out_dir: args.get_str("out-dir", "out").to_string(),
             full: args.get_bool("full", false),
             seed: args.get_u64("seed", 0),
             backend,
+            model,
         })
     }
 }
@@ -124,6 +136,7 @@ mod tests {
             full: false,
             seed: 0,
             backend: Backend::Sim,
+            model: ModelKind::Mlp,
         };
         // A fast, pure-math subset end-to-end:
         for id in ["fig5.9", "fig5.20", "fig5.13"] {
@@ -139,5 +152,16 @@ mod tests {
         assert!(format!("{e}").contains("unknown backend"), "{e}");
         let args = Args::parse(["backend=thread".to_string()]);
         assert_eq!(FigOpts::from_args(&args).unwrap().backend, Backend::Thread);
+    }
+
+    #[test]
+    fn from_args_parses_the_model_knob() {
+        let args = Args::parse(["model=conv".to_string()]);
+        assert_eq!(FigOpts::from_args(&args).unwrap().model, ModelKind::Conv);
+        let args = Args::parse(Vec::<String>::new());
+        assert_eq!(FigOpts::from_args(&args).unwrap().model, ModelKind::Mlp);
+        let args = Args::parse(["model=resnet".to_string()]);
+        let e = FigOpts::from_args(&args).unwrap_err();
+        assert!(format!("{e}").contains("unknown model"), "{e}");
     }
 }

@@ -23,9 +23,12 @@
 //! - [`cluster`] — virtual-time simulated cluster (latency/bandwidth
 //!   links, compute/data/comm accounting, Table 4.4 semantics).
 //! - [`model`], [`data`] — flat parameter buffers + fused native update
-//!   ops; the batch-major GEMM-backed MLP gradient oracle
-//!   (`Mlp::grad_batch`, allocation-free steady state); synthetic
-//!   corpora and the §4.1 prefetch pipeline.
+//!   ops; the batch-major GEMM-backed gradient models behind the
+//!   [`model::BatchModel`] trait — the MLP stand-in and the
+//!   §4.1-faithful im2col conv net (`model::conv`), both
+//!   allocation-free at steady state and selected by the
+//!   `model=mlp|conv` knob; synthetic corpora and the §4.1 prefetch
+//!   pipeline (mini-batches served strictly in pool cut order).
 //! - [`coordinator`] — EASGD/EAMSGD, DOWNPOUR and friends behind the
 //!   [`coordinator::Executor`] abstraction: two backends (virtual-time
 //!   [`coordinator::SimExecutor`], real-thread

@@ -5,7 +5,7 @@
 //!       Regenerate a thesis table/figure (DESIGN.md §5 maps ids).
 //!   repro train [method=easgd|eamsgd|downpour|...] [p=4] [tau=10]
 //!               [eta=0.05] [horizon=60] [cost=cifar|imagenet]
-//!               [sharding=replicated|partitioned]
+//!               [sharding=replicated|partitioned] [model=mlp|conv]
 //!               [backend=sim|thread] [topology=star|tree] ...
 //!       One distributed run on the native-MLP sweep workload; prints
 //!       the tracked-variable curve. Every parallel method runs on
@@ -22,11 +22,12 @@
 use elastic_train::bail;
 use elastic_train::config::{Args, ExperimentConfig};
 use elastic_train::coordinator::{
-    run_sequential, run_with_backend_topology, Backend, DriverConfig, Method, MlpOracle,
-    Topology, TreeScheme, TreeSpec,
+    run_sequential, run_with_backend_topology, Backend, ConvOracle, DriverConfig, Method,
+    MlpOracle, Topology, TreeScheme, TreeSpec,
 };
 use elastic_train::error::Result;
 use elastic_train::figures::{self, FigOpts};
+use elastic_train::model::ModelKind;
 #[cfg(feature = "pjrt")]
 use elastic_train::cluster::CostModel;
 #[cfg(feature = "pjrt")]
@@ -53,6 +54,7 @@ fn run() -> Result<()> {
                 "usage: repro <figure|train|train-pjrt|inspect> [key=value ...]\n\
                  figures:  repro figure list\n\
                  backend:  train/figure accept backend=sim|thread\n\
+                 model:    train/figure accept model=mlp|conv (native oracle)\n\
                  data:     train accepts sharding=replicated|partitioned (§4.1)\n\
                  topology: train accepts topology=star|tree; with tree:\n\
                  \x20          degree=4 scheme=multiscale tau1=10 tau2=100\n\
@@ -107,7 +109,7 @@ fn cmd_train(args: &Args) -> Result<()> {
 
     let data = elastic_train::figures::ch4::sweep_data(cfg.seed + 1);
     let mcfg = elastic_train::figures::ch4::sweep_mlp();
-    let cost = cfg.cost_model(mcfg.n_params());
+    let ccfg = elastic_train::figures::ch4::sweep_conv();
 
     let backend_str = args.get_str("backend", "sim");
     let backend = match Backend::parse(backend_str) {
@@ -122,6 +124,17 @@ fn cmd_train(args: &Args) -> Result<()> {
         None => bail!("unknown sharding '{}' (replicated|partitioned)", cfg.sharding),
     };
 
+    let model = match cfg.model_kind() {
+        Some(m) => m,
+        None => bail!("unknown model '{}' (mlp|conv)", cfg.model),
+    };
+    // The cost model's communication terms scale with the parameter
+    // count of the model actually being trained.
+    let cost = cfg.cost_model(match model {
+        ModelKind::Mlp => mcfg.n_params(),
+        ModelKind::Conv => ccfg.n_params(),
+    });
+
     if let Some(mut m) = cfg.parallel_method() {
         // Tree runs use the thesis rate α = β/(d+1) — a node talks to
         // at most d+1 neighbors — instead of the star's β/p.
@@ -134,7 +147,7 @@ fn cmd_train(args: &Args) -> Result<()> {
             };
         }
         println!(
-            "train: {} p={} τ={} η={} horizon={}s ({} cost model, {} sharding, {} backend, {} topology)",
+            "train: {} p={} τ={} η={} horizon={}s ({} cost model, {} sharding, {} model, {} backend, {} topology)",
             m.name(),
             cfg.p,
             cfg.tau,
@@ -142,10 +155,10 @@ fn cmd_train(args: &Args) -> Result<()> {
             cfg.horizon,
             cfg.cost_family,
             sharding.name(),
+            model.name(),
             backend.name(),
             topo.name()
         );
-        let mut oracles = MlpOracle::family_sharded(data, &mcfg, cfg.batch, cfg.p, sharding);
         let dc = DriverConfig {
             eta: cfg.eta,
             method: m,
@@ -160,7 +173,18 @@ fn cmd_train(args: &Args) -> Result<()> {
                 .and_then(|s| s.parse().ok())
                 .unwrap_or(0.0),
         };
-        let r = run_with_backend_topology(backend, &mut oracles, &dc, &topo)?;
+        let r = match model {
+            ModelKind::Mlp => {
+                let mut oracles =
+                    MlpOracle::family_sharded(data, &mcfg, cfg.batch, cfg.p, sharding);
+                run_with_backend_topology(backend, &mut oracles, &dc, &topo)?
+            }
+            ModelKind::Conv => {
+                let mut oracles =
+                    ConvOracle::family_sharded(data, &ccfg, cfg.batch, cfg.p, sharding);
+                run_with_backend_topology(backend, &mut oracles, &dc, &topo)?
+            }
+        };
         print_curve(&r);
     } else if let Some(m) = cfg.sequential_method() {
         if topo != Topology::Star {
@@ -171,15 +195,22 @@ fn cmd_train(args: &Args) -> Result<()> {
             );
         }
         println!(
-            "train: {} (sequential) η={} horizon={}s",
+            "train: {} (sequential) η={} horizon={}s ({} model)",
             m.name(),
             cfg.eta,
-            cfg.horizon
+            cfg.horizon,
+            model.name()
         );
-        let mut oracle = MlpOracle::new_sharded(data, mcfg, cfg.batch, 40_000, sharding);
-        let r = run_sequential(
-            &mut oracle, m, cfg.eta, &cost, cfg.horizon, cfg.eval_every, cfg.seed,
-        );
+        let r = match model {
+            ModelKind::Mlp => {
+                let mut oracle = MlpOracle::new_sharded(data, mcfg, cfg.batch, 40_000, sharding);
+                run_sequential(&mut oracle, m, cfg.eta, &cost, cfg.horizon, cfg.eval_every, cfg.seed)
+            }
+            ModelKind::Conv => {
+                let mut oracle = ConvOracle::new_sharded(data, ccfg, cfg.batch, 40_000, sharding);
+                run_sequential(&mut oracle, m, cfg.eta, &cost, cfg.horizon, cfg.eval_every, cfg.seed)
+            }
+        };
         print_curve(&r);
     } else {
         bail!("unknown method '{}'", cfg.method);

@@ -1,0 +1,1065 @@
+//! CIFAR-faithful convolutional stand-in model on the GEMM path.
+//!
+//! The thesis' Chapter-4 experiments train a 7-layer *convolutional*
+//! net on CIFAR (§4.1); [`super::Mlp`] is the historical stand-in. This
+//! module closes the gap while staying on the PR-4 micro-kernels:
+//! every convolution is lowered to **im2col + [`gemm::sgemm`]** —
+//! patches of the input image are unrolled into rows of a
+//! `(batch·oh·ow) × (kh·kw·c)` panel so the convolution becomes one
+//! register-blocked GEMM with the fused bias+ReLU epilogue
+//! ([`gemm::sgemm_bias_act`]) applied while the accumulator tile is
+//! still in registers. A 2×2/stride-2 max-pool (argmax recorded for
+//! the backward routing) follows each conv block where the spatial
+//! extent allows, and a small fully-connected head finishes with the
+//! same softmax-CE top as the MLP.
+//!
+//! Layout convention: images are **HWC** row-major — the value at
+//! `(y, x, ch)` lives at `(y·w + x)·c + ch` — so an im2col row is `kh`
+//! contiguous `kw·c` segments and the GEMM output panel
+//! `(batch·oh·ow) × out_c` IS the batch of HWC feature maps,
+//! concatenated. Flattening into the FC head is therefore a straight
+//! copy, and the whole batch flows through ONE GEMM per layer.
+//!
+//! Like [`super::Mlp`], parameters live in one flat f32 buffer
+//! (conv blocks first — `W` as `(kh·kw·c) × out_c` row-major then the
+//! bias — followed by the FC layers), all scratch panels are
+//! pre-allocated on first use and reused, and a steady-state
+//! [`ConvNet::grad_batch`] performs zero heap allocations
+//! (enforced by `tests/alloc_free.rs`). Parity against a naive direct
+//! convolution and against finite differences is tested below.
+
+use super::mlp::argmax;
+use crate::linalg::gemm;
+use crate::rng::Rng;
+
+/// One convolution block: `out_c` filters of `kh × kw`, given stride
+/// and zero-padding, ReLU, and an optional 2×2/stride-2 max-pool.
+#[derive(Clone, Copy, Debug)]
+pub struct ConvSpec {
+    pub out_c: usize,
+    pub kh: usize,
+    pub kw: usize,
+    pub stride: usize,
+    pub pad: usize,
+    pub pool: bool,
+}
+
+impl ConvSpec {
+    /// A 3×3, stride-1, pad-1 block (spatial-preserving, the CIFAR
+    /// workhorse shape).
+    pub fn k3(out_c: usize, pool: bool) -> ConvSpec {
+        ConvSpec { out_c, kh: 3, kw: 3, stride: 1, pad: 1, pool }
+    }
+
+    /// Conv output spatial dims for an `h × w` input.
+    fn out_hw(&self, h: usize, w: usize) -> (usize, usize) {
+        assert!(self.stride > 0, "stride must be positive");
+        assert!(
+            h + 2 * self.pad >= self.kh && w + 2 * self.pad >= self.kw,
+            "kernel {}x{} larger than padded input {}x{}",
+            self.kh,
+            self.kw,
+            h + 2 * self.pad,
+            w + 2 * self.pad
+        );
+        (
+            (h + 2 * self.pad - self.kh) / self.stride + 1,
+            (w + 2 * self.pad - self.kw) / self.stride + 1,
+        )
+    }
+}
+
+/// Factor a flat blob dimension into a near-square `(h, w)` image:
+/// the largest divisor of `dim` not exceeding √dim becomes the height
+/// (a prime `dim` degrades to a 1 × dim "image").
+pub fn image_shape(dim: usize) -> (usize, usize) {
+    assert!(dim > 0, "empty input dimension");
+    let mut h = (dim as f64).sqrt().floor() as usize;
+    h = h.max(1);
+    while h > 1 && dim % h != 0 {
+        h -= 1;
+    }
+    (h, dim / h)
+}
+
+/// Architecture of a [`ConvNet`]: input image shape, the conv blocks,
+/// and the FC head (`hidden` ReLU widths then a linear `classes`
+/// layer).
+#[derive(Clone, Debug)]
+pub struct ConvNetConfig {
+    pub in_c: usize,
+    pub in_h: usize,
+    pub in_w: usize,
+    pub convs: Vec<ConvSpec>,
+    pub hidden: Vec<usize>,
+    pub classes: usize,
+    pub l2: f32,
+}
+
+impl ConvNetConfig {
+    /// The conv oracle for a flat `dim`-dimensional blob input,
+    /// interpreted as a 1 × h × w image (`h·w = dim`): two 3×3 conv
+    /// blocks (8 then 16 channels) pooling while the spatial extent
+    /// allows, then one hidden FC layer — the §4.1-shaped stand-in the
+    /// `model=conv` sweeps use.
+    pub fn for_blob(dim: usize, classes: usize, l2: f32) -> ConvNetConfig {
+        let (h, w) = image_shape(dim);
+        let (mut ch, mut cw) = (h, w);
+        let mut convs = Vec::new();
+        let mut c = 1usize;
+        for out_c in [8usize, 16] {
+            // 3×3 pad-1 stride-1 preserves the spatial dims, so the
+            // pool decision only needs the incoming extent.
+            let pool = ch >= 2 && cw >= 2;
+            convs.push(ConvSpec::k3(out_c, pool));
+            if pool {
+                ch /= 2;
+                cw /= 2;
+            }
+            c = out_c;
+        }
+        let flat = c * ch * cw;
+        ConvNetConfig {
+            in_c: 1,
+            in_h: h,
+            in_w: w,
+            convs,
+            hidden: vec![flat.max(16)],
+            classes,
+            l2,
+        }
+    }
+
+    /// Flat input size (`c·h·w`) — what [`ConvNet::grad_batch`] expects
+    /// each sample slice to hold.
+    pub fn in_dim(&self) -> usize {
+        self.in_c * self.in_h * self.in_w
+    }
+
+    /// Walk the conv stack: per block, the pre-pool `(c, h, w)` and
+    /// post-pool `(c, h, w)` output shapes.
+    fn conv_shapes(&self) -> Vec<((usize, usize, usize), (usize, usize, usize))> {
+        let (mut h, mut w) = (self.in_h, self.in_w);
+        let mut out = Vec::with_capacity(self.convs.len());
+        for s in &self.convs {
+            let (oh, ow) = s.out_hw(h, w);
+            let (ph, pw) = if s.pool {
+                assert!(oh >= 2 && ow >= 2, "2x2 pool needs >= 2x2 input, got {oh}x{ow}");
+                (oh / 2, ow / 2)
+            } else {
+                (oh, ow)
+            };
+            out.push(((s.out_c, oh, ow), (s.out_c, ph, pw)));
+            h = ph;
+            w = pw;
+        }
+        out
+    }
+
+    /// FC layer widths: `[flat, hidden .., classes]`.
+    fn fc_dims(&self) -> Vec<usize> {
+        let flat = match self.conv_shapes().last() {
+            Some((_, (c, h, w))) => c * h * w,
+            None => self.in_dim(),
+        };
+        let mut dims = Vec::with_capacity(self.hidden.len() + 2);
+        dims.push(flat);
+        dims.extend_from_slice(&self.hidden);
+        dims.push(self.classes);
+        dims
+    }
+
+    pub fn n_classes(&self) -> usize {
+        self.classes
+    }
+
+    /// Total flat-θ length: conv `W + b` blocks then FC `W + b` layers.
+    pub fn n_params(&self) -> usize {
+        let mut n = 0;
+        let mut c = self.in_c;
+        for s in &self.convs {
+            n += s.kh * s.kw * c * s.out_c + s.out_c;
+            c = s.out_c;
+        }
+        n + self.fc_dims().windows(2).map(|d| d[0] * d[1] + d[1]).sum::<usize>()
+    }
+}
+
+/// Per-block runtime state: resolved shapes, the θ offset, and the
+/// scratch panels (sized to the largest batch seen, reused forever).
+struct ConvStage {
+    spec: ConvSpec,
+    in_c: usize,
+    in_h: usize,
+    in_w: usize,
+    /// Conv (pre-pool) output spatial dims.
+    oh: usize,
+    ow: usize,
+    /// Post-pool spatial dims (= `oh, ow` when `!spec.pool`).
+    ph: usize,
+    pw: usize,
+    /// im2col width `kh·kw·in_c`.
+    k: usize,
+    /// θ offset of this block's `k × out_c` weight panel (bias at
+    /// `off + k·out_c`).
+    off: usize,
+    /// im2col panel, `(n·oh·ow) × k` — kept for the weight-gradient
+    /// GEMM on the way back down.
+    col: Vec<f32>,
+    /// Post-ReLU pre-pool activations, `(n·oh·ow) × out_c`.
+    act: Vec<f32>,
+    /// Pooled activations, `(n·ph·pw) × out_c` (unused when `!pool`).
+    pooled: Vec<f32>,
+    /// Absolute argmax index into `act` per pooled element.
+    pool_idx: Vec<usize>,
+    d_act: Vec<f32>,
+    d_pooled: Vec<f32>,
+    d_col: Vec<f32>,
+}
+
+impl ConvStage {
+    /// The block's output panel (what the next layer reads).
+    fn output(&self, n: usize) -> &[f32] {
+        if self.spec.pool {
+            &self.pooled[..n * self.ph * self.pw * self.spec.out_c]
+        } else {
+            &self.act[..n * self.oh * self.ow * self.spec.out_c]
+        }
+    }
+
+    /// Gradient panel of the block's output (what the layer above
+    /// writes).
+    fn d_output_mut(&mut self, n: usize) -> &mut [f32] {
+        if self.spec.pool {
+            &mut self.d_pooled[..n * self.ph * self.pw * self.spec.out_c]
+        } else {
+            &mut self.d_act[..n * self.oh * self.ow * self.spec.out_c]
+        }
+    }
+
+    /// Flat output size per sample.
+    fn out_dim(&self) -> usize {
+        self.ph * self.pw * self.spec.out_c
+    }
+
+    /// Unroll `src` (the previous layer's HWC batch panel, `n` samples
+    /// of `in_h·in_w·in_c`) into the im2col panel: row `(i, oy, ox)`
+    /// holds the `kh × kw × in_c` patch under filter position
+    /// `(oy, ox)`, out-of-bounds entries zero-filled.
+    fn im2col(&mut self, src: &[f32], n: usize) {
+        let (kh, kw, s, pad) = (self.spec.kh, self.spec.kw, self.spec.stride, self.spec.pad);
+        let (c, h, w) = (self.in_c, self.in_h, self.in_w);
+        let seg = kw * c;
+        for i in 0..n {
+            let img = &src[i * h * w * c..(i + 1) * h * w * c];
+            for oy in 0..self.oh {
+                for ox in 0..self.ow {
+                    let r = (i * self.oh + oy) * self.ow + ox;
+                    let row = &mut self.col[r * self.k..(r + 1) * self.k];
+                    for ky in 0..kh {
+                        let y = (oy * s + ky) as isize - pad as isize;
+                        let dst = &mut row[ky * seg..(ky + 1) * seg];
+                        if y < 0 || y >= h as isize {
+                            dst.fill(0.0);
+                            continue;
+                        }
+                        let yrow = y as usize * w;
+                        for kx in 0..kw {
+                            let x = (ox * s + kx) as isize - pad as isize;
+                            let d = &mut dst[kx * c..(kx + 1) * c];
+                            if x < 0 || x >= w as isize {
+                                d.fill(0.0);
+                            } else {
+                                let base = (yrow + x as usize) * c;
+                                d.copy_from_slice(&img[base..base + c]);
+                            }
+                        }
+                    }
+                }
+            }
+        }
+    }
+
+    /// Mirror of [`ConvStage::im2col`]: scatter-add the im2col-shaped
+    /// gradient back onto the (pre-zeroed) input-gradient panel.
+    fn col2im_accum(&self, d_src: &mut [f32], n: usize) {
+        let (kh, kw, s, pad) = (self.spec.kh, self.spec.kw, self.spec.stride, self.spec.pad);
+        let (c, h, w) = (self.in_c, self.in_h, self.in_w);
+        for i in 0..n {
+            let dimg = &mut d_src[i * h * w * c..(i + 1) * h * w * c];
+            for oy in 0..self.oh {
+                for ox in 0..self.ow {
+                    let r = (i * self.oh + oy) * self.ow + ox;
+                    let row = &self.d_col[r * self.k..(r + 1) * self.k];
+                    for ky in 0..kh {
+                        let y = (oy * s + ky) as isize - pad as isize;
+                        if y < 0 || y >= h as isize {
+                            continue;
+                        }
+                        let yrow = y as usize * w;
+                        for kx in 0..kw {
+                            let x = (ox * s + kx) as isize - pad as isize;
+                            if x < 0 || x >= w as isize {
+                                continue;
+                            }
+                            let base = (yrow + x as usize) * c;
+                            let seg = &row[(ky * kw + kx) * c..(ky * kw + kx + 1) * c];
+                            for (dv, &sv) in dimg[base..base + c].iter_mut().zip(seg) {
+                                *dv += sv;
+                            }
+                        }
+                    }
+                }
+            }
+        }
+    }
+
+    /// 2×2/stride-2 max-pool over the HWC `act` panel, recording the
+    /// winning absolute index for the backward routing. Odd trailing
+    /// rows/columns are dropped (standard floor semantics).
+    fn pool_forward(&mut self, n: usize) {
+        let oc = self.spec.out_c;
+        for i in 0..n {
+            for py in 0..self.ph {
+                for px in 0..self.pw {
+                    for ch in 0..oc {
+                        let j0 = ((i * self.oh + py * 2) * self.ow + px * 2) * oc + ch;
+                        let mut best_j = j0;
+                        let mut best_v = self.act[j0];
+                        for (dy, dx) in [(0usize, 1usize), (1, 0), (1, 1)] {
+                            let j = ((i * self.oh + py * 2 + dy) * self.ow + px * 2 + dx) * oc
+                                + ch;
+                            let v = self.act[j];
+                            if v > best_v {
+                                best_v = v;
+                                best_j = j;
+                            }
+                        }
+                        let out = ((i * self.ph + py) * self.pw + px) * oc + ch;
+                        self.pooled[out] = best_v;
+                        self.pool_idx[out] = best_j;
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// The model: holds no parameters — they are passed as one flat slice,
+/// same contract as [`super::Mlp`] — only the resolved layer shapes and
+/// the batch-major scratch panels, reused across calls so the sweep hot
+/// loop is allocation-free.
+pub struct ConvNet {
+    cfg: ConvNetConfig,
+    stages: Vec<ConvStage>,
+    /// FC widths `[flat, hidden .., classes]` and per-layer θ offsets.
+    fc_dims: Vec<usize>,
+    fc_offsets: Vec<usize>,
+    /// Row capacity of every scratch panel (grows monotonically).
+    cap: usize,
+    /// Packed input batch, `n × in_dim` (sized by [`ConvNet::pack`]).
+    input: Vec<f32>,
+    /// FC activation panels; `fc_acts[0]` is the flatten copy of the
+    /// last conv output.
+    fc_acts: Vec<Vec<f32>>,
+    fc_d: Vec<Vec<f32>>,
+    labels: Vec<usize>,
+}
+
+impl ConvNet {
+    pub fn new(cfg: ConvNetConfig) -> Self {
+        assert!(cfg.classes >= 2, "need at least two classes");
+        let shapes = cfg.conv_shapes(); // validates every block
+        let mut stages = Vec::with_capacity(cfg.convs.len());
+        let (mut c, mut h, mut w) = (cfg.in_c, cfg.in_h, cfg.in_w);
+        let mut off = 0;
+        for (spec, &((oc, oh, ow), (_, ph, pw))) in cfg.convs.iter().zip(shapes.iter()) {
+            let k = spec.kh * spec.kw * c;
+            stages.push(ConvStage {
+                spec: *spec,
+                in_c: c,
+                in_h: h,
+                in_w: w,
+                oh,
+                ow,
+                ph,
+                pw,
+                k,
+                off,
+                col: Vec::new(),
+                act: Vec::new(),
+                pooled: Vec::new(),
+                pool_idx: Vec::new(),
+                d_act: Vec::new(),
+                d_pooled: Vec::new(),
+                d_col: Vec::new(),
+            });
+            off += k * oc + oc;
+            c = oc;
+            h = ph;
+            w = pw;
+        }
+        let fc_dims = cfg.fc_dims();
+        let mut fc_offsets = Vec::with_capacity(fc_dims.len() - 1);
+        for d in fc_dims.windows(2) {
+            fc_offsets.push(off);
+            off += d[0] * d[1] + d[1];
+        }
+        debug_assert_eq!(off, cfg.n_params());
+        let fc_acts = fc_dims.iter().map(|_| Vec::new()).collect();
+        let fc_d = fc_dims.iter().map(|_| Vec::new()).collect();
+        Self {
+            cfg,
+            stages,
+            fc_dims,
+            fc_offsets,
+            cap: 0,
+            input: Vec::new(),
+            fc_acts,
+            fc_d,
+            labels: Vec::new(),
+        }
+    }
+
+    pub fn config(&self) -> &ConvNetConfig {
+        &self.cfg
+    }
+
+    /// He-scaled random init (fan-in = receptive field size for conv
+    /// filters), zero biases — same §4.1 convention as the MLP.
+    pub fn init_params(&self, rng: &mut Rng) -> Vec<f32> {
+        let mut theta = vec![0.0f32; self.cfg.n_params()];
+        for st in &self.stages {
+            let n_w = st.k * st.spec.out_c;
+            let std = (2.0 / st.k as f64).sqrt() as f32;
+            rng.fill_gaussian_f32(&mut theta[st.off..st.off + n_w], std);
+        }
+        for (l, &off) in self.fc_offsets.iter().enumerate() {
+            let (din, dout) = (self.fc_dims[l], self.fc_dims[l + 1]);
+            let std = (2.0 / din as f64).sqrt() as f32;
+            rng.fill_gaussian_f32(&mut theta[off..off + din * dout], std);
+        }
+        theta
+    }
+
+    /// `0.5·λ‖θ‖²`, computed once per θ (shared across the eval loop).
+    pub fn l2_penalty(&self, theta: &[f32]) -> f32 {
+        if self.cfg.l2 == 0.0 {
+            return 0.0;
+        }
+        0.5 * self.cfg.l2 * theta.iter().map(|t| t * t).sum::<f32>()
+    }
+
+    /// Grow every scratch panel to `n` rows (amortized no-op once the
+    /// largest batch has been seen).
+    fn ensure_rows(&mut self, n: usize) {
+        if n <= self.cap {
+            return;
+        }
+        for st in &mut self.stages {
+            let m = n * st.oh * st.ow;
+            let oc = st.spec.out_c;
+            st.col.resize(m * st.k, 0.0);
+            st.act.resize(m * oc, 0.0);
+            st.d_act.resize(m * oc, 0.0);
+            st.d_col.resize(m * st.k, 0.0);
+            if st.spec.pool {
+                let pm = n * st.ph * st.pw * oc;
+                st.pooled.resize(pm, 0.0);
+                st.pool_idx.resize(pm, 0);
+                st.d_pooled.resize(pm, 0.0);
+            }
+        }
+        for (l, &dim) in self.fc_dims.iter().enumerate() {
+            self.fc_acts[l].resize(n * dim, 0.0);
+            self.fc_d[l].resize(n * dim, 0.0);
+        }
+        self.cap = n;
+    }
+
+    /// Copy the batch into the packed input panel + label buffer;
+    /// returns the batch size. Allocation-free at a steady batch size.
+    fn pack<'a, I: IntoIterator<Item = (&'a [f32], usize)>>(&mut self, samples: I) -> usize {
+        let din = self.cfg.in_dim();
+        let nc = self.cfg.classes;
+        self.input.clear();
+        self.labels.clear();
+        for (x, y) in samples {
+            assert_eq!(x.len(), din, "input dim mismatch (expect c*h*w = {din})");
+            assert!(y < nc, "label {y} out of range");
+            self.input.extend_from_slice(x);
+            self.labels.push(y);
+        }
+        let n = self.labels.len();
+        self.ensure_rows(n);
+        n
+    }
+
+    /// Forward over the packed batch: per conv block, im2col then one
+    /// fused GEMM (bias + ReLU epilogue) then the optional pool; then
+    /// the FC head, logits left in the last panel.
+    fn forward_packed(&mut self, theta: &[f32], n: usize) {
+        for s in 0..self.stages.len() {
+            let (done, rest) = self.stages.split_at_mut(s);
+            let st = &mut rest[0];
+            let src: &[f32] = match done.last() {
+                Some(prev) => prev.output(n),
+                None => &self.input[..n * st.in_c * st.in_h * st.in_w],
+            };
+            st.im2col(src, n);
+            let m = n * st.oh * st.ow;
+            let oc = st.spec.out_c;
+            let w = &theta[st.off..st.off + st.k * oc];
+            let bias = &theta[st.off + st.k * oc..st.off + st.k * oc + oc];
+            gemm::sgemm_bias_act(
+                m,
+                oc,
+                st.k,
+                &st.col[..m * st.k],
+                w,
+                bias,
+                true,
+                &mut st.act[..m * oc],
+            );
+            if st.spec.pool {
+                st.pool_forward(n);
+            }
+        }
+        // Flatten: the conv output panel already is the packed
+        // `n × flat` matrix — one copy into the FC input panel.
+        let flat = self.fc_dims[0];
+        match self.stages.last() {
+            Some(st) => self.fc_acts[0][..n * flat].copy_from_slice(st.output(n)),
+            None => self.fc_acts[0][..n * flat].copy_from_slice(&self.input[..n * flat]),
+        }
+        let n_fc = self.fc_dims.len() - 1;
+        for l in 0..n_fc {
+            let (din, dout) = (self.fc_dims[l], self.fc_dims[l + 1]);
+            let off = self.fc_offsets[l];
+            let w = &theta[off..off + din * dout];
+            let bias = &theta[off + din * dout..off + din * dout + dout];
+            let (lo, hi) = self.fc_acts.split_at_mut(l + 1);
+            gemm::sgemm_bias_act(
+                n,
+                dout,
+                din,
+                &lo[l][..n * din],
+                w,
+                bias,
+                l + 1 < n_fc,
+                &mut hi[0][..n * dout],
+            );
+        }
+    }
+
+    /// Batched forward pass (labels ride along for the loss paths; pass
+    /// 0 when irrelevant). Returns the batch size; logits readable via
+    /// [`ConvNet::logits`].
+    pub fn forward_batch<'a, I: IntoIterator<Item = (&'a [f32], usize)>>(
+        &mut self,
+        theta: &[f32],
+        samples: I,
+    ) -> usize {
+        let n = self.pack(samples);
+        self.forward_packed(theta, n);
+        n
+    }
+
+    /// Logits panel of the last forward (`n × classes` row-major).
+    pub fn logits(&self, n: usize) -> &[f32] {
+        &self.fc_acts[self.fc_dims.len() - 1][..n * self.cfg.classes]
+    }
+
+    /// Backprop over the packed batch, ACCUMULATING the summed
+    /// data-term gradient into `grad`; returns the summed data loss
+    /// (no l2).
+    fn grad_packed(&mut self, theta: &[f32], n: usize, grad: &mut [f32]) -> f32 {
+        self.forward_packed(theta, n);
+        let n_fc = self.fc_dims.len() - 1;
+        let nc = self.cfg.classes;
+
+        // Softmax-CE top, shared with the MLP ([`super::softmax_ce_top`]):
+        // d_top row = softmax(logits) − onehot(label).
+        let loss = super::softmax_ce_top(
+            &self.fc_acts[n_fc][..n * nc],
+            &self.labels,
+            nc,
+            &mut self.fc_d[n_fc][..n * nc],
+        );
+
+        // FC head backward — three GEMM-shaped products per layer.
+        // Unlike the MLP we also produce d at level 0: that is the
+        // flatten gradient the conv stack consumes.
+        for l in (0..n_fc).rev() {
+            let (din, dout) = (self.fc_dims[l], self.fc_dims[l + 1]);
+            let off = self.fc_offsets[l];
+            if l + 1 < n_fc {
+                let act = &self.fc_acts[l + 1][..n * dout];
+                let dl = &mut self.fc_d[l + 1][..n * dout];
+                for (dv, &av) in dl.iter_mut().zip(act) {
+                    if av <= 0.0 {
+                        *dv = 0.0;
+                    }
+                }
+            }
+            gemm::sgemm(
+                true,
+                false,
+                din,
+                dout,
+                n,
+                &self.fc_acts[l][..n * din],
+                &self.fc_d[l + 1][..n * dout],
+                &mut grad[off..off + din * dout],
+            );
+            gemm::col_sums_accum(
+                n,
+                dout,
+                &self.fc_d[l + 1][..n * dout],
+                &mut grad[off + din * dout..off + din * dout + dout],
+            );
+            if l > 0 || !self.stages.is_empty() {
+                let w = &theta[off..off + din * dout];
+                let (dlo, dhi) = self.fc_d.split_at_mut(l + 1);
+                let dl = &mut dlo[l][..n * din];
+                dl.iter_mut().for_each(|v| *v = 0.0);
+                gemm::sgemm(false, true, n, din, dout, &dhi[0][..n * dout], w, dl);
+            }
+        }
+
+        // Hand the flatten gradient to the last conv block.
+        if let Some(st) = self.stages.last_mut() {
+            let flat = st.out_dim();
+            st.d_output_mut(n).copy_from_slice(&self.fc_d[0][..n * flat]);
+        }
+
+        // Conv stack backward.
+        for s in (0..self.stages.len()).rev() {
+            let (done, rest) = self.stages.split_at_mut(s);
+            let st = &mut rest[0];
+            let m = n * st.oh * st.ow;
+            let oc = st.spec.out_c;
+            // Un-pool: route each pooled gradient to its argmax.
+            if st.spec.pool {
+                st.d_act[..m * oc].iter_mut().for_each(|v| *v = 0.0);
+                let pm = n * st.ph * st.pw * oc;
+                for j in 0..pm {
+                    let tgt = st.pool_idx[j];
+                    let v = st.d_pooled[j];
+                    st.d_act[tgt] += v;
+                }
+            }
+            // ReLU mask (act stores post-ReLU values: act > 0 ⇔ pre > 0).
+            {
+                let act = &st.act[..m * oc];
+                let dl = &mut st.d_act[..m * oc];
+                for (dv, &av) in dl.iter_mut().zip(act) {
+                    if av <= 0.0 {
+                        *dv = 0.0;
+                    }
+                }
+            }
+            // gW(k × oc) += colᵀ · dpre; gb += column sums of dpre.
+            gemm::sgemm(
+                true,
+                false,
+                st.k,
+                oc,
+                m,
+                &st.col[..m * st.k],
+                &st.d_act[..m * oc],
+                &mut grad[st.off..st.off + st.k * oc],
+            );
+            gemm::col_sums_accum(
+                m,
+                oc,
+                &st.d_act[..m * oc],
+                &mut grad[st.off + st.k * oc..st.off + st.k * oc + oc],
+            );
+            // Input gradient for the block below: d_col = dpre · Wᵀ,
+            // then col2im scatter-add. Skipped for block 0 (the input
+            // gradient is never needed).
+            if let Some(prev) = done.last_mut() {
+                let w = &theta[st.off..st.off + st.k * oc];
+                st.d_col[..m * st.k].iter_mut().for_each(|v| *v = 0.0);
+                gemm::sgemm(
+                    false,
+                    true,
+                    m,
+                    st.k,
+                    oc,
+                    &st.d_act[..m * oc],
+                    w,
+                    &mut st.d_col[..m * st.k],
+                );
+                let d_prev = prev.d_output_mut(n);
+                d_prev.iter_mut().for_each(|v| *v = 0.0);
+                st.col2im_accum(d_prev, n);
+            }
+        }
+        loss
+    }
+
+    /// Batched mini-batch gradient: writes the MEAN gradient
+    /// (overwritten, not accumulated) with the l2 term applied once;
+    /// returns the mean loss (incl. l2). Same contract as
+    /// [`super::Mlp::grad_batch`] — the oracle-facing hot path.
+    pub fn grad_batch<'a, I: IntoIterator<Item = (&'a [f32], usize)>>(
+        &mut self,
+        theta: &[f32],
+        samples: I,
+        grad: &mut [f32],
+    ) -> f32 {
+        assert_eq!(grad.len(), theta.len());
+        let n = self.pack(samples);
+        assert!(n > 0, "empty batch");
+        grad.iter_mut().for_each(|g| *g = 0.0);
+        let loss = self.grad_packed(theta, n, grad);
+        let inv = 1.0 / n as f32;
+        grad.iter_mut().for_each(|g| *g *= inv);
+        if self.cfg.l2 > 0.0 {
+            for (g, t) in grad.iter_mut().zip(theta) {
+                *g += self.cfg.l2 * t;
+            }
+        }
+        loss * inv + self.l2_penalty(theta)
+    }
+
+    /// Mini-batch gradient over owned samples (slice-of-pairs
+    /// convenience over [`ConvNet::grad_batch`]).
+    pub fn batch_grad(
+        &mut self,
+        theta: &[f32],
+        xs: &[(Vec<f32>, usize)],
+        grad: &mut [f32],
+    ) -> f32 {
+        self.grad_batch(theta, xs.iter().map(|(x, y)| (x.as_slice(), *y)), grad)
+    }
+
+    /// Summed data-term NLL and misclassification count over the batch
+    /// (no l2 — add [`ConvNet::l2_penalty`] once per θ) — the eval path.
+    pub fn eval_batch<'a, I: IntoIterator<Item = (&'a [f32], usize)>>(
+        &mut self,
+        theta: &[f32],
+        samples: I,
+    ) -> (f64, usize) {
+        let n = self.forward_batch(theta, samples);
+        let nc = self.cfg.classes;
+        let logits = &self.fc_acts[self.fc_dims.len() - 1][..n * nc];
+        super::batch_nll_wrong(logits, &self.labels, nc)
+    }
+
+    /// Predicted class (batch-of-one wrapper; NaN logits degrade to
+    /// class 0).
+    pub fn predict(&mut self, theta: &[f32], x: &[f32]) -> usize {
+        let n = self.forward_batch(theta, std::iter::once((x, 0)));
+        argmax(self.logits(n))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Naive direct convolution + bias + ReLU over one HWC image —
+    /// the reference the im2col path must match.
+    #[allow(clippy::too_many_arguments)]
+    fn naive_conv(
+        img: &[f32],
+        (c, h, w): (usize, usize, usize),
+        spec: &ConvSpec,
+        wgt: &[f32],
+        bias: &[f32],
+    ) -> Vec<f32> {
+        let (oh, ow) = spec.out_hw(h, w);
+        let oc = spec.out_c;
+        let mut out = vec![0.0f32; oh * ow * oc];
+        for oy in 0..oh {
+            for ox in 0..ow {
+                for f in 0..oc {
+                    let mut acc = bias[f] as f64;
+                    for ky in 0..spec.kh {
+                        let y = (oy * spec.stride + ky) as isize - spec.pad as isize;
+                        if y < 0 || y >= h as isize {
+                            continue;
+                        }
+                        for kx in 0..spec.kw {
+                            let x = (ox * spec.stride + kx) as isize - spec.pad as isize;
+                            if x < 0 || x >= w as isize {
+                                continue;
+                            }
+                            for ch in 0..c {
+                                let iv = img[((y as usize) * w + x as usize) * c + ch];
+                                let wv = wgt[((ky * spec.kw + kx) * c + ch) * oc + f];
+                                acc += iv as f64 * wv as f64;
+                            }
+                        }
+                    }
+                    out[(oy * ow + ox) * oc + f] = (acc as f32).max(0.0);
+                }
+            }
+        }
+        out
+    }
+
+    fn fill(rng: &mut Rng, len: usize) -> Vec<f32> {
+        (0..len).map(|_| rng.normal(0.0, 1.0) as f32).collect()
+    }
+
+    #[test]
+    fn image_shape_factors_near_square() {
+        assert_eq!(image_shape(32), (4, 8));
+        assert_eq!(image_shape(36), (6, 6));
+        assert_eq!(image_shape(8), (2, 4));
+        assert_eq!(image_shape(7), (1, 7)); // prime degrades to a row
+        assert_eq!(image_shape(1), (1, 1));
+    }
+
+    #[test]
+    fn param_count_matches_layout() {
+        let cfg = ConvNetConfig {
+            in_c: 2,
+            in_h: 6,
+            in_w: 6,
+            convs: vec![ConvSpec::k3(4, true)], // 6x6 -> 6x6 -> pool 3x3
+            hidden: vec![10],
+            classes: 5,
+            l2: 0.0,
+        };
+        // conv: 3*3*2*4 + 4 = 76; flat = 4*3*3 = 36;
+        // fc: 36*10 + 10 + 10*5 + 5 = 425.
+        assert_eq!(cfg.n_params(), 76 + 360 + 10 + 50 + 5);
+        let net = ConvNet::new(cfg);
+        let mut rng = Rng::new(3);
+        assert_eq!(net.init_params(&mut rng).len(), net.cfg.n_params());
+    }
+
+    /// The tentpole guard: im2col + sgemm convolution ≡ the naive
+    /// direct convolution, over stride/pad/channel variations.
+    #[test]
+    fn im2col_conv_matches_naive_direct_convolution() {
+        let mut rng = Rng::new(21);
+        let shapes: &[((usize, usize, usize), ConvSpec)] = &[
+            ((1, 5, 7), ConvSpec { out_c: 3, kh: 3, kw: 3, stride: 1, pad: 1, pool: false }),
+            ((2, 6, 6), ConvSpec { out_c: 4, kh: 3, kw: 3, stride: 1, pad: 0, pool: false }),
+            ((3, 8, 8), ConvSpec { out_c: 5, kh: 3, kw: 3, stride: 2, pad: 1, pool: false }),
+            ((1, 4, 9), ConvSpec { out_c: 2, kh: 2, kw: 4, stride: 1, pad: 2, pool: false }),
+            ((2, 7, 5), ConvSpec { out_c: 17, kh: 5, kw: 3, stride: 2, pad: 2, pool: false }),
+        ];
+        for &((c, h, w), spec) in shapes {
+            let cfg = ConvNetConfig {
+                in_c: c,
+                in_h: h,
+                in_w: w,
+                convs: vec![spec],
+                hidden: vec![],
+                classes: 3,
+                l2: 0.0,
+            };
+            let mut net = ConvNet::new(cfg);
+            let theta = net.init_params(&mut rng);
+            let n = 3; // a small batch so panel indexing is exercised
+            let xs: Vec<Vec<f32>> = (0..n).map(|_| fill(&mut rng, c * h * w)).collect();
+            net.forward_batch(&theta, xs.iter().map(|x| (x.as_slice(), 0)));
+            let st = &net.stages[0];
+            let oc = spec.out_c;
+            let per = st.oh * st.ow * oc;
+            let wgt = &theta[st.off..st.off + st.k * oc];
+            let bias = &theta[st.off + st.k * oc..st.off + st.k * oc + oc];
+            for (i, x) in xs.iter().enumerate() {
+                let want = naive_conv(x, (c, h, w), &spec, wgt, bias);
+                let got = &st.act[i * per..(i + 1) * per];
+                for (j, (g, e)) in got.iter().zip(&want).enumerate() {
+                    assert!(
+                        (g - e).abs() < 1e-4 * (1.0 + e.abs()),
+                        "shape {c}x{h}x{w} spec {spec:?} sample {i} elem {j}: {g} vs {e}"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn pool_halves_dims_and_routes_max() {
+        let cfg = ConvNetConfig {
+            in_c: 1,
+            in_h: 4,
+            in_w: 4,
+            convs: vec![ConvSpec::k3(2, true)],
+            hidden: vec![],
+            classes: 2,
+            l2: 0.0,
+        };
+        let mut net = ConvNet::new(cfg);
+        let mut rng = Rng::new(5);
+        let theta = net.init_params(&mut rng);
+        let x = fill(&mut rng, 16);
+        net.forward_batch(&theta, std::iter::once((x.as_slice(), 0)));
+        let st = &net.stages[0];
+        assert_eq!((st.ph, st.pw), (2, 2));
+        // Every pooled value is the max of its 2×2 window and the
+        // recorded index points at it.
+        let oc = 2;
+        for py in 0..2 {
+            for px in 0..2 {
+                for ch in 0..oc {
+                    let out = ((py * st.pw) + px) * oc + ch;
+                    let vals: Vec<f32> = (0..4)
+                        .map(|q| {
+                            let (dy, dx) = (q / 2, q % 2);
+                            st.act[((py * 2 + dy) * st.ow + px * 2 + dx) * oc + ch]
+                        })
+                        .collect();
+                    let want = vals.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+                    assert_eq!(st.pooled[out], want);
+                    assert_eq!(st.act[st.pool_idx[out]], want);
+                }
+            }
+        }
+    }
+
+    /// The other tentpole guard: analytic `grad_batch` ≡ central finite
+    /// differences on a tiny end-to-end net (conv → pool → conv → fc),
+    /// including the l2 term.
+    #[test]
+    fn grad_batch_matches_finite_differences() {
+        let cfg = ConvNetConfig {
+            in_c: 1,
+            in_h: 4,
+            in_w: 4,
+            convs: vec![
+                ConvSpec { out_c: 3, kh: 3, kw: 3, stride: 1, pad: 1, pool: true },
+                ConvSpec { out_c: 2, kh: 2, kw: 2, stride: 1, pad: 0, pool: false },
+            ],
+            hidden: vec![6],
+            classes: 3,
+            l2: 1e-3,
+        };
+        let mut net = ConvNet::new(cfg);
+        let mut rng = Rng::new(9);
+        let mut theta = net.init_params(&mut rng);
+        let data: Vec<(Vec<f32>, usize)> = (0..4)
+            .map(|i| (fill(&mut rng, 16), i % 3))
+            .collect();
+        let mut g = vec![0.0f32; theta.len()];
+        net.batch_grad(&theta, &data, &mut g);
+
+        // f(θ) = mean data NLL + l2 penalty — what grad_batch differentiates.
+        let f = |net: &mut ConvNet, theta: &[f32]| -> f32 {
+            let (nll, _) = net.eval_batch(theta, data.iter().map(|(x, y)| (x.as_slice(), *y)));
+            nll as f32 / data.len() as f32 + net.l2_penalty(theta)
+        };
+        let eps = 1e-2f32;
+        let mut checked = 0;
+        for _ in 0..40 {
+            let i = rng.below(theta.len());
+            let orig = theta[i];
+            theta[i] = orig + eps;
+            let lp = f(&mut net, &theta);
+            theta[i] = orig - eps;
+            let lm = f(&mut net, &theta);
+            theta[i] = orig;
+            let fd = (lp - lm) / (2.0 * eps);
+            assert!(
+                (fd - g[i]).abs() < 5e-3 * (1.0 + fd.abs()),
+                "param {i}: fd {fd} vs analytic {}",
+                g[i]
+            );
+            checked += 1;
+        }
+        assert!(checked > 0);
+    }
+
+    /// Batched ≡ mean of per-sample gradients (the same parity the MLP
+    /// guarantees), through every conv/pool/fc layer.
+    #[test]
+    fn batched_grad_is_mean_of_per_sample_grads() {
+        let cfg = ConvNetConfig::for_blob(32, 4, 0.0);
+        let mut net = ConvNet::new(cfg);
+        let mut rng = Rng::new(13);
+        let theta = net.init_params(&mut rng);
+        let data: Vec<(Vec<f32>, usize)> =
+            (0..5).map(|i| (fill(&mut rng, 32), i % 4)).collect();
+        let mut gb = vec![0.0f32; theta.len()];
+        net.batch_grad(&theta, &data, &mut gb);
+        let mut acc = vec![0.0f64; theta.len()];
+        let mut g1 = vec![0.0f32; theta.len()];
+        for (x, y) in &data {
+            net.grad_batch(&theta, std::iter::once((x.as_slice(), *y)), &mut g1);
+            for (a, &g) in acc.iter_mut().zip(&g1) {
+                *a += g as f64;
+            }
+        }
+        for (i, (b, a)) in gb.iter().zip(&acc).enumerate() {
+            let want = (a / data.len() as f64) as f32;
+            assert!(
+                (b - want).abs() < 1e-5 * (1.0 + want.abs()),
+                "param {i}: batched {b} vs mean-of-singles {want}"
+            );
+        }
+    }
+
+    #[test]
+    fn training_reduces_loss_on_separable_blobs() {
+        // Two well-separated classes on a 1×4×4 "image": a few hundred
+        // SGD steps must cut the loss and beat chance comfortably.
+        let cfg = ConvNetConfig {
+            in_c: 1,
+            in_h: 4,
+            in_w: 4,
+            convs: vec![ConvSpec::k3(4, true)],
+            hidden: vec![8],
+            classes: 2,
+            l2: 0.0,
+        };
+        let mut net = ConvNet::new(cfg);
+        let mut rng = Rng::new(7);
+        let mut theta = net.init_params(&mut rng);
+        let data: Vec<(Vec<f32>, usize)> = (0..80)
+            .map(|_| {
+                let y = rng.below(2);
+                let cx = if y == 0 { -1.0f32 } else { 1.0 };
+                let x = (0..16)
+                    .map(|_| cx + rng.normal(0.0, 0.4) as f32)
+                    .collect();
+                (x, y)
+            })
+            .collect();
+        let mut g = vec![0.0f32; theta.len()];
+        let l0 = net.batch_grad(&theta, &data, &mut g);
+        for _ in 0..200 {
+            net.batch_grad(&theta, &data, &mut g);
+            crate::model::flat::sgd_step(&mut theta, &g, 0.2);
+        }
+        let l1 = net.batch_grad(&theta, &data, &mut g);
+        assert!(l1 < l0 * 0.3, "loss {l0} -> {l1}");
+        let correct = data
+            .iter()
+            .filter(|(x, y)| net.predict(&theta, x) == *y)
+            .count();
+        assert!(correct >= 72, "accuracy {correct}/80");
+    }
+
+    #[test]
+    fn deterministic_given_seed_and_shrinking_batches_reuse_panels() {
+        let cfg = ConvNetConfig::for_blob(32, 10, 1e-4);
+        let t1 = ConvNet::new(cfg.clone()).init_params(&mut Rng::new(3));
+        let t2 = ConvNet::new(cfg.clone()).init_params(&mut Rng::new(3));
+        assert_eq!(t1, t2);
+        // A large batch then a smaller one: panels are reused, results
+        // stay consistent with a fresh model evaluating the small batch.
+        let mut rng = Rng::new(4);
+        let data: Vec<(Vec<f32>, usize)> = (0..16)
+            .map(|i| (fill(&mut rng, 32), i % 10))
+            .collect();
+        let mut warm = ConvNet::new(cfg.clone());
+        let theta = warm.init_params(&mut Rng::new(5));
+        let mut g_warm = vec![0.0f32; theta.len()];
+        warm.batch_grad(&theta, &data, &mut g_warm); // sizes panels at 16 rows
+        warm.batch_grad(&theta, &data[..4], &mut g_warm);
+        let mut cold = ConvNet::new(cfg);
+        let mut g_cold = vec![0.0f32; theta.len()];
+        cold.batch_grad(&theta, &data[..4], &mut g_cold);
+        assert_eq!(g_warm, g_cold, "shrunken batch must match a cold model");
+    }
+}

@@ -56,8 +56,9 @@ impl MlpConfig {
 
 /// Total-order argmax: the first strict maximum wins; NaN entries never
 /// win (an all-NaN row degrades to class 0 instead of panicking).
+/// Shared with the conv model ([`super::conv`]).
 #[inline]
-fn argmax(z: &[f32]) -> usize {
+pub(crate) fn argmax(z: &[f32]) -> usize {
     let mut best = 0;
     let mut bv = f32::NEG_INFINITY;
     for (i, &v) in z.iter().enumerate() {
@@ -210,29 +211,14 @@ impl Mlp {
         let nc = self.cfg.n_classes();
 
         // Softmax-CE top, vectorized over the batch: d_top row =
-        // softmax(logits) − onehot(label), written in place.
-        let mut loss = 0.0f32;
-        {
-            let logits = &self.acts[n_layers];
-            let dtop = &mut self.d[n_layers];
-            for r in 0..n {
-                let z = &logits[r * nc..(r + 1) * nc];
-                let dz = &mut dtop[r * nc..(r + 1) * nc];
-                let m = z.iter().fold(f32::NEG_INFINITY, |a, &v| a.max(v));
-                let mut sum = 0.0f32;
-                for (e, &v) in dz.iter_mut().zip(z) {
-                    *e = (v - m).exp();
-                    sum += *e;
-                }
-                let label = self.labels[r];
-                loss += sum.ln() + m - z[label];
-                let inv = 1.0 / sum;
-                for e in dz.iter_mut() {
-                    *e *= inv;
-                }
-                dz[label] -= 1.0;
-            }
-        }
+        // softmax(logits) − onehot(label), written in place (shared
+        // with the conv model — [`super::softmax_ce_top`]).
+        let loss = super::softmax_ce_top(
+            &self.acts[n_layers][..n * nc],
+            &self.labels,
+            nc,
+            &mut self.d[n_layers][..n * nc],
+        );
 
         // Backward through layers, three GEMM-shaped products each.
         for l in (0..n_layers).rev() {
@@ -342,19 +328,8 @@ impl Mlp {
     ) -> (f64, usize) {
         let n = self.forward_batch(theta, samples);
         let nc = self.cfg.n_classes();
-        let logits = &self.acts[self.cfg.dims.len() - 1];
-        let mut nll = 0.0f64;
-        let mut wrong = 0usize;
-        for r in 0..n {
-            let z = &logits[r * nc..(r + 1) * nc];
-            let m = z.iter().fold(f32::NEG_INFINITY, |a, &v| a.max(v));
-            let lse = m + z.iter().map(|v| (v - m).exp()).sum::<f32>().ln();
-            nll += (lse - z[self.labels[r]]) as f64;
-            if argmax(z) != self.labels[r] {
-                wrong += 1;
-            }
-        }
-        (nll, wrong)
+        let logits = &self.acts[self.cfg.dims.len() - 1][..n * nc];
+        super::batch_nll_wrong(logits, &self.labels, nc)
     }
 
     /// Loss only (evaluation path; batch-of-one wrapper).

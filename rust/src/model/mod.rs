@@ -14,9 +14,252 @@
 //!   (`grad_batch` / `eval_batch`, zero steady-state allocations),
 //!   with per-sample `grad`/`loss`/`predict` kept as thin wrappers;
 //!   `bench_oracle` tracks the samples/sec trajectory.
+//! - [`conv`] — the CIFAR-faithful convolutional stand-in (thesis §4.1
+//!   trains conv nets): im2col + `sgemm` convolution blocks with the
+//!   fused bias+ReLU epilogue, 2×2 max-pool, and an FC head — same
+//!   flat-θ batch contract, same micro-kernels, same allocation-free
+//!   steady state.
+//!
+//! Both gradient models implement [`BatchModel`], the small trait the
+//! generic native oracle (`coordinator::NativeOracle`) is written
+//! against; [`ModelKind`] is the `model=mlp|conv` CLI/config selector.
 
+pub mod conv;
 pub mod flat;
 pub mod mlp;
 
+pub use conv::{image_shape, ConvNet, ConvNetConfig, ConvSpec};
 pub use flat::{elastic_exchange, nesterov_step, sgd_step};
 pub use mlp::{Mlp, MlpConfig};
+
+use crate::rng::Rng;
+
+/// Softmax + cross-entropy top over a batch logits panel (`n × nc`
+/// row-major, `n = labels.len()`): writes each `dtop` row as
+/// `softmax(logits) − onehot(label)` and returns the summed data loss.
+/// The SHARED backward top of both gradient models — a numerical
+/// change here (max-shift, NaN behavior) applies to `model=mlp` and
+/// `model=conv` alike.
+pub(crate) fn softmax_ce_top(
+    logits: &[f32],
+    labels: &[usize],
+    nc: usize,
+    dtop: &mut [f32],
+) -> f32 {
+    let mut loss = 0.0f32;
+    for (r, &label) in labels.iter().enumerate() {
+        let z = &logits[r * nc..(r + 1) * nc];
+        let dz = &mut dtop[r * nc..(r + 1) * nc];
+        let m = z.iter().fold(f32::NEG_INFINITY, |a, &v| a.max(v));
+        let mut sum = 0.0f32;
+        for (e, &v) in dz.iter_mut().zip(z) {
+            *e = (v - m).exp();
+            sum += *e;
+        }
+        loss += sum.ln() + m - z[label];
+        let inv = 1.0 / sum;
+        for e in dz.iter_mut() {
+            *e *= inv;
+        }
+        dz[label] -= 1.0;
+    }
+    loss
+}
+
+/// Summed data-term NLL + misclassification count over a batch logits
+/// panel — the shared eval top (log-sum-exp + the NaN-hardened
+/// total-order argmax) of both gradient models.
+pub(crate) fn batch_nll_wrong(logits: &[f32], labels: &[usize], nc: usize) -> (f64, usize) {
+    let mut nll = 0.0f64;
+    let mut wrong = 0usize;
+    for (r, &label) in labels.iter().enumerate() {
+        let z = &logits[r * nc..(r + 1) * nc];
+        let m = z.iter().fold(f32::NEG_INFINITY, |a, &v| a.max(v));
+        let lse = m + z.iter().map(|v| (v - m).exp()).sum::<f32>().ln();
+        nll += (lse - z[label]) as f64;
+        if mlp::argmax(z) != label {
+            wrong += 1;
+        }
+    }
+    (nll, wrong)
+}
+
+/// The batch-major gradient-model contract shared by [`Mlp`] and
+/// [`ConvNet`]: parameters live in ONE flat f32 slice, whole
+/// mini-batches flow through `grad_batch` / `eval_batch`, and a
+/// steady-state `grad_batch` call is allocation-free. The generic
+/// native oracle (`coordinator::NativeOracle`) is written against this
+/// trait, so every distributed method runs unchanged on either model.
+pub trait BatchModel {
+    /// Flat-θ length.
+    fn n_params(&self) -> usize;
+    /// Flat input dimension each sample slice must hold.
+    fn in_dim(&self) -> usize;
+    fn n_classes(&self) -> usize;
+    /// Fresh He-scaled random θ.
+    fn init_params(&self, rng: &mut Rng) -> Vec<f32>;
+    /// `0.5·λ‖θ‖²`, computed once per θ.
+    fn l2_penalty(&self, theta: &[f32]) -> f32;
+    /// Mean mini-batch gradient into `grad` (overwritten), l2 applied
+    /// once; returns the mean loss incl. l2.
+    fn grad_batch<'a, I: IntoIterator<Item = (&'a [f32], usize)>>(
+        &mut self,
+        theta: &[f32],
+        samples: I,
+        grad: &mut [f32],
+    ) -> f32;
+    /// Summed data-term NLL + misclassification count (no l2).
+    fn eval_batch<'a, I: IntoIterator<Item = (&'a [f32], usize)>>(
+        &mut self,
+        theta: &[f32],
+        samples: I,
+    ) -> (f64, usize);
+}
+
+impl BatchModel for Mlp {
+    fn n_params(&self) -> usize {
+        self.config().n_params()
+    }
+
+    fn in_dim(&self) -> usize {
+        self.config().dims[0]
+    }
+
+    fn n_classes(&self) -> usize {
+        self.config().n_classes()
+    }
+
+    fn init_params(&self, rng: &mut Rng) -> Vec<f32> {
+        Mlp::init_params(self, rng)
+    }
+
+    fn l2_penalty(&self, theta: &[f32]) -> f32 {
+        Mlp::l2_penalty(self, theta)
+    }
+
+    fn grad_batch<'a, I: IntoIterator<Item = (&'a [f32], usize)>>(
+        &mut self,
+        theta: &[f32],
+        samples: I,
+        grad: &mut [f32],
+    ) -> f32 {
+        Mlp::grad_batch(self, theta, samples, grad)
+    }
+
+    fn eval_batch<'a, I: IntoIterator<Item = (&'a [f32], usize)>>(
+        &mut self,
+        theta: &[f32],
+        samples: I,
+    ) -> (f64, usize) {
+        Mlp::eval_batch(self, theta, samples)
+    }
+}
+
+impl BatchModel for ConvNet {
+    fn n_params(&self) -> usize {
+        self.config().n_params()
+    }
+
+    fn in_dim(&self) -> usize {
+        self.config().in_dim()
+    }
+
+    fn n_classes(&self) -> usize {
+        self.config().n_classes()
+    }
+
+    fn init_params(&self, rng: &mut Rng) -> Vec<f32> {
+        ConvNet::init_params(self, rng)
+    }
+
+    fn l2_penalty(&self, theta: &[f32]) -> f32 {
+        ConvNet::l2_penalty(self, theta)
+    }
+
+    fn grad_batch<'a, I: IntoIterator<Item = (&'a [f32], usize)>>(
+        &mut self,
+        theta: &[f32],
+        samples: I,
+        grad: &mut [f32],
+    ) -> f32 {
+        ConvNet::grad_batch(self, theta, samples, grad)
+    }
+
+    fn eval_batch<'a, I: IntoIterator<Item = (&'a [f32], usize)>>(
+        &mut self,
+        theta: &[f32],
+        samples: I,
+    ) -> (f64, usize) {
+        ConvNet::eval_batch(self, theta, samples)
+    }
+}
+
+/// The `model=mlp|conv` selector plumbed through the config system,
+/// the `train` CLI, the ch4 sweeps, and `bench_oracle`.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ModelKind {
+    /// The historical MLP stand-in ([`Mlp`], `MlpConfig::sweep_default`).
+    Mlp,
+    /// The §4.1-faithful conv stand-in ([`ConvNet`],
+    /// `ConvNetConfig::for_blob` over the same blob input reshaped to
+    /// a 1×h×w image).
+    Conv,
+}
+
+impl ModelKind {
+    pub fn parse(s: &str) -> Option<ModelKind> {
+        match s {
+            "mlp" => Some(ModelKind::Mlp),
+            "conv" | "convnet" | "cnn" => Some(ModelKind::Conv),
+            _ => None,
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            ModelKind::Mlp => "mlp",
+            ModelKind::Conv => "conv",
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn model_kind_parse_roundtrip() {
+        assert_eq!(ModelKind::parse("mlp"), Some(ModelKind::Mlp));
+        assert_eq!(ModelKind::parse("conv"), Some(ModelKind::Conv));
+        assert_eq!(ModelKind::parse("cnn"), Some(ModelKind::Conv));
+        assert_eq!(ModelKind::parse("transformer"), None);
+        assert_eq!(ModelKind::Conv.name(), "conv");
+    }
+
+    #[test]
+    fn both_models_satisfy_the_batch_contract() {
+        fn check<M: BatchModel>(mut m: M) {
+            let mut rng = Rng::new(2);
+            let theta = m.init_params(&mut rng);
+            assert_eq!(theta.len(), m.n_params());
+            let din = m.in_dim();
+            let batch: Vec<(Vec<f32>, usize)> = (0..6)
+                .map(|i| {
+                    let x: Vec<f32> =
+                        (0..din).map(|_| rng.normal(0.0, 1.0) as f32).collect();
+                    (x, i % m.n_classes())
+                })
+                .collect();
+            let mut g = vec![0.0f32; theta.len()];
+            let loss =
+                m.grad_batch(&theta, batch.iter().map(|(x, y)| (x.as_slice(), *y)), &mut g);
+            assert!(loss.is_finite());
+            assert!(g.iter().any(|v| *v != 0.0), "gradient must be non-trivial");
+            let (nll, wrong) =
+                m.eval_batch(&theta, batch.iter().map(|(x, y)| (x.as_slice(), *y)));
+            assert!(nll.is_finite() && wrong <= batch.len());
+        }
+        check(Mlp::new(MlpConfig::new(&[12, 8, 3], 1e-4)));
+        check(ConvNet::new(ConvNetConfig::for_blob(12, 3, 1e-4)));
+    }
+}

@@ -1,11 +1,12 @@
 //! The acceptance gate for the batched compute path's memory behavior:
-//! a steady-state `Mlp::grad_batch` call performs ZERO heap
-//! allocations — all activation/gradient panels are pre-allocated on
-//! first use and reused. Enforced with a counting global allocator;
-//! this file must hold exactly one test (the counter is process-wide
-//! and the default test harness runs a binary's tests in parallel).
+//! a steady-state `grad_batch` call performs ZERO heap allocations —
+//! all activation/gradient panels (and, for the conv model, the
+//! im2col/pool panels) are pre-allocated on first use and reused.
+//! Enforced with a counting global allocator; this file must hold
+//! exactly one test (the counter is process-wide and the default test
+//! harness runs a binary's tests in parallel).
 
-use elastic_train::model::{Mlp, MlpConfig};
+use elastic_train::model::{ConvNet, ConvNetConfig, Mlp, MlpConfig};
 use elastic_train::rng::Rng;
 use std::alloc::{GlobalAlloc, Layout, System};
 use std::sync::atomic::{AtomicU64, Ordering};
@@ -81,4 +82,37 @@ fn grad_batch_steady_state_does_not_allocate() {
     let after = ALLOC_CALLS.load(Ordering::SeqCst);
     assert!(sink.is_finite());
     assert_eq!(after - before, 0, "smaller batches must reuse the panels");
+
+    // The conv model holds the same contract: after warm-up, the
+    // im2col/activation/pool/backward panels are all reused — a
+    // steady-state `ConvNet::grad_batch` never touches the allocator.
+    let cfg = ConvNetConfig::for_blob(32, 10, 1e-4);
+    let mut conv = ConvNet::new(cfg);
+    let ctheta = conv.init_params(&mut rng);
+    let mut cgrad = vec![0.0f32; ctheta.len()];
+    for _ in 0..3 {
+        conv.batch_grad(&ctheta, &batch, &mut cgrad);
+    }
+    let before = ALLOC_CALLS.load(Ordering::SeqCst);
+    for _ in 0..10 {
+        sink += conv.batch_grad(&ctheta, &batch, &mut cgrad);
+    }
+    let after = ALLOC_CALLS.load(Ordering::SeqCst);
+    assert!(sink.is_finite());
+    assert_eq!(
+        after - before,
+        0,
+        "ConvNet::grad_batch allocated {} times across 10 steady-state calls",
+        after - before
+    );
+
+    // Shrunken conv batches reuse the larger panels too.
+    let before = ALLOC_CALLS.load(Ordering::SeqCst);
+    for _ in 0..5 {
+        let it = small.iter().map(|(x, y)| (x.as_slice(), *y));
+        sink += conv.grad_batch(&ctheta, it, &mut cgrad);
+    }
+    let after = ALLOC_CALLS.load(Ordering::SeqCst);
+    assert!(sink.is_finite());
+    assert_eq!(after - before, 0, "smaller conv batches must reuse the panels");
 }
