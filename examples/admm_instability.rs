@@ -6,11 +6,11 @@
 use elastic_train::config::Args;
 use elastic_train::sim::admm;
 
-fn main() {
+fn main() -> elastic_train::error::Result<()> {
     let args = Args::from_env();
-    let p = args.get_usize("p", 3);
-    let eta = args.get_f64("eta", 0.001);
-    let rho = args.get_f64("rho", 2.5);
+    let p = args.get_usize("p", 3)?;
+    let eta = args.get_f64("eta", 0.001)?;
+    let rho = args.get_f64("rho", 2.5)?;
 
     let sp = admm::admm_spectral_radius(p, eta, rho);
     println!("ADMM round-robin p={p}, η={eta}, ρ={rho}: sp(𝓕) = {sp:.6}");
@@ -43,4 +43,5 @@ fn main() {
          (0.5, 0.3) satisfies it: {}",
         admm::easgd_rr_stable(0.5, 0.3)
     );
+    Ok(())
 }

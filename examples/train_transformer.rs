@@ -20,11 +20,11 @@ use std::rc::Rc;
 
 fn main() -> elastic_train::error::Result<()> {
     let args = Args::from_env();
-    let p = args.get_usize("p", 4);
-    let steps = args.get_u64("steps", 300);
-    let eta = args.get_f32("eta", 0.3);
-    let tau = args.get_u32("tau", 4);
-    let delta = args.get_f32("delta", 0.9);
+    let p = args.get_usize("p", 4)?;
+    let steps = args.get_u64("steps", 300)?;
+    let eta = args.get_f32("eta", 0.3)?;
+    let tau = args.get_u32("tau", 4)?;
+    let delta = args.get_f32("delta", 0.9)?;
     let out = args.get_str("out", "out/e2e_loss.csv").to_string();
     let dir = std::path::PathBuf::from(args.get_str("artifacts", "artifacts"));
 
@@ -64,7 +64,7 @@ fn main() -> elastic_train::error::Result<()> {
         cost,
         horizon,
         eval_every: horizon / 15.0,
-        seed: args.get_u64("seed", 0),
+        seed: args.get_u64("seed", 0)?,
         max_steps: steps,
         lr_decay_gamma: 0.0,
     };

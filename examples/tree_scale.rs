@@ -20,13 +20,13 @@ use elastic_train::data::BlobDataset;
 use elastic_train::model::MlpConfig;
 use std::sync::Arc;
 
-fn main() {
+fn main() -> elastic_train::error::Result<()> {
     let args = Args::from_env();
-    let leaves = args.get_usize("leaves", 64);
-    let degree = args.get_usize("degree", 8);
-    let eta = args.get_f32("eta", 0.15);
-    let delta = args.get_f32("delta", 0.0);
-    let horizon = args.get_f64("horizon", 25.0);
+    let leaves = args.get_usize("leaves", 64)?;
+    let degree = args.get_usize("degree", 8)?;
+    let eta = args.get_f32("eta", 0.15)?;
+    let delta = args.get_f32("delta", 0.0)?;
+    let horizon = args.get_f64("horizon", 25.0)?;
     let backend_str = args.get_str("backend", "sim");
     let backend = Backend::parse(backend_str).unwrap_or_else(|| {
         eprintln!("error: unknown backend '{backend_str}' (sim|thread)");
@@ -55,7 +55,7 @@ fn main() {
             cost,
             horizon,
             eval_every: horizon / 10.0,
-            seed: args.get_u64("seed", 0),
+            seed: args.get_u64("seed", 0)?,
             max_steps: u64::MAX / 2,
             lr_decay_gamma: 0.0,
         };
@@ -83,4 +83,5 @@ fn main() {
             if r.diverged { "  [DIVERGED]" } else { "" }
         );
     }
+    Ok(())
 }

@@ -72,7 +72,7 @@ fn main() {
             lr_decay_gamma: 0.0,
         };
         let t0 = Instant::now();
-        let r = run_threaded(&mut oracles, &cfg, 16);
+        let r = run_threaded(&mut oracles, &cfg, 16).expect("bench run");
         let el = t0.elapsed().as_secs_f64();
         println!(
             "  -> thread/{name}/p8: {:.0} worker-steps/s real time ({} steps in {el:.2}s)",

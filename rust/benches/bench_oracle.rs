@@ -305,40 +305,7 @@ fn conv_json_row(c: &ConvCell) -> String {
     )
 }
 
-/// Short git SHA of HEAD (the history key); "unknown" outside a git
-/// checkout.
-fn git_sha() -> String {
-    std::process::Command::new("git")
-        .args(["rev-parse", "--short=12", "HEAD"])
-        .current_dir(env!("CARGO_MANIFEST_DIR"))
-        .output()
-        .ok()
-        .filter(|o| o.status.success())
-        .and_then(|o| String::from_utf8(o.stdout).ok())
-        .map(|s| s.trim().to_string())
-        .filter(|s| !s.is_empty())
-        .unwrap_or_else(|| "unknown".to_string())
-}
-
-/// Append `entry` (one JSON object, pre-indented) to the history array
-/// at `path`. The file is a JSON array of per-run entries; a legacy
-/// single-object file (the pre-history format) or a missing/corrupt
-/// file starts a fresh array.
-fn append_history(path: &str, entry: &str) {
-    let existing = std::fs::read_to_string(path).unwrap_or_default();
-    let trimmed = existing.trim();
-    let body = if trimmed.starts_with('[') && trimmed.ends_with(']') {
-        let inner = trimmed[1..trimmed.len() - 1].trim_end();
-        if inner.trim().is_empty() {
-            format!("[\n{entry}\n]\n")
-        } else {
-            format!("[{inner},\n{entry}\n]\n")
-        }
-    } else {
-        format!("[\n{entry}\n]\n")
-    };
-    std::fs::write(path, body).expect("write BENCH_oracle.json");
-}
+use elastic_train::figures::benchkit::{append_history, git_sha, unix_time};
 
 fn main() {
     let quick = std::env::args().any(|a| a == "--quick" || a == "quick");
@@ -408,15 +375,11 @@ fn main() {
 
     let mut rows: Vec<String> = cells.iter().map(json_row).collect();
     rows.extend(conv_cells.iter().map(conv_json_row));
-    let unix_time = std::time::SystemTime::now()
-        .duration_since(std::time::UNIX_EPOCH)
-        .map(|d| d.as_secs())
-        .unwrap_or(0);
     let entry = format!(
         "  {{\n    \"bench\": \"oracle\",\n    \"sha\": \"{}\",\n    \"unix_time\": {},\n    \
          \"quick\": {},\n    \"unit\": \"samples_per_sec\",\n    \"results\": [\n{}\n    ]\n  }}",
         git_sha(),
-        unix_time,
+        unix_time(),
         quick,
         rows.join(",\n")
     );

@@ -1,0 +1,134 @@
+//! Real-socket throughput of the PROCESS backend: worker-steps/sec and
+//! measured wire costs vs worker count p ∈ {1, 2, 4} and communication
+//! period τ ∈ {4, 16, 64}, EASGD on the deterministic quadratic oracle
+//! — each cell spawns p OS processes that exchange flat-θ frames with
+//! the parameter-server master over TCP, so the grid measures the
+//! executor (fork/exec + serialize + socket round trips), not the
+//! model.
+//!
+//!     cargo bench --bench bench_process            # full grid
+//!     cargo bench --bench bench_process -- --quick # smoke (CI)
+//!
+//! Expected shape: per-round wire cost is roughly constant (one
+//! n-element frame each way), so steps/sec rises with τ — the thesis'
+//! communication-period story measured on a real transport. The
+//! serialize and transfer columns are the measured per-cell totals that
+//! single-address-space backends can only model.
+
+use elastic_train::cluster::CostModel;
+use elastic_train::coordinator::{run_process, DriverConfig, Method, OracleSpec, ProcessOpts};
+use elastic_train::figures::benchkit::{append_history, git_sha, unix_time};
+use std::time::Instant;
+
+/// Per-step gradient size: big enough that a frame is a real message
+/// (256 KiB of f32), small enough for a quick grid.
+const N_PARAMS: usize = 65_536;
+
+struct Cell {
+    tau: u32,
+    p: usize,
+    steps_per_sec: f64,
+    serialize_s: f64,
+    transfer_s: f64,
+    frames: u64,
+    payload_mb: f64,
+}
+
+fn run_cell(tau: u32, p: usize, total_steps: u64) -> Cell {
+    let spec = OracleSpec::Quadratic { n: N_PARAMS, h: 1.0, x0: 0.0, target: 1.0, noise: 0.0 };
+    let cfg = DriverConfig {
+        eta: 0.05,
+        method: Method::easgd_default(p, tau),
+        cost: CostModel::cifar_like(N_PARAMS), // unused by the process backend
+        horizon: 120.0,                        // real-seconds safety net
+        eval_every: 1e6,                       // no mid-run snapshots
+        seed: 9,
+        max_steps: total_steps,
+        lr_decay_gamma: 0.0,
+    };
+    let opts = ProcessOpts {
+        exe: Some(std::path::PathBuf::from(env!("CARGO_BIN_EXE_repro"))),
+        ..ProcessOpts::default()
+    };
+    let t0 = Instant::now();
+    let r = run_process(&spec, p, &cfg, &opts).expect("bench run");
+    let elapsed = t0.elapsed().as_secs_f64();
+    assert!(!r.diverged, "easgd tau={tau} p={p} diverged");
+    let wire = r.wire.expect("process runs report wire stats");
+    Cell {
+        tau,
+        p,
+        steps_per_sec: r.total_steps as f64 / elapsed,
+        serialize_s: r.breakdown.serialize,
+        transfer_s: r.breakdown.transfer,
+        frames: wire.frames,
+        payload_mb: wire.payload_bytes as f64 * 1e-6,
+    }
+}
+
+fn main() {
+    let quick = std::env::args().any(|a| a == "--quick" || a == "quick");
+    let steps: u64 = if quick { 2_000 } else { 12_000 };
+    println!(
+        "process backend: EASGD on quadratic(n={N_PARAMS}) over TCP, {steps} steps/cell, \
+         workers as OS processes\n"
+    );
+    println!(
+        "{:>5} {:>3} {:>12} {:>12} {:>12} {:>8} {:>10}",
+        "tau", "p", "steps/sec", "serialize_s", "transfer_s", "frames", "wire_MB"
+    );
+
+    let taus: &[u32] = if quick { &[4, 64] } else { &[4, 16, 64] };
+    let ps: &[usize] = if quick { &[1, 2] } else { &[1, 2, 4] };
+    let mut cells: Vec<Cell> = Vec::new();
+    for &tau in taus {
+        for &p in ps {
+            let c = run_cell(tau, p, steps);
+            println!(
+                "{:>5} {:>3} {:>12.0} {:>12.4} {:>12.4} {:>8} {:>10.2}",
+                c.tau, c.p, c.steps_per_sec, c.serialize_s, c.transfer_s, c.frames, c.payload_mb
+            );
+            cells.push(c);
+        }
+        println!();
+    }
+
+    // Acceptance shape: at any fixed p, fewer rounds (larger τ) must
+    // not slow the run down (20% slack — fork/exec noise is real).
+    for &p in ps {
+        let col: Vec<&Cell> = cells.iter().filter(|c| c.p == p).collect();
+        let monotone = col.windows(2).all(|w| w[1].steps_per_sec >= w[0].steps_per_sec * 0.8);
+        println!(
+            "p={p} steps/sec vs tau: {} ({})",
+            if monotone { "NON-DEGRADING" } else { "DEGRADING" },
+            col.iter()
+                .map(|c| format!("tau{}={:.0}", c.tau, c.steps_per_sec))
+                .collect::<Vec<_>>()
+                .join(" "),
+        );
+    }
+
+    // Per-PR history, keyed by git SHA like BENCH_oracle.json.
+    let rows: Vec<String> = cells
+        .iter()
+        .map(|c| {
+            format!(
+                "      {{\"tau\": {}, \"p\": {}, \"steps_per_sec\": {:.1}, \
+                 \"serialize_s\": {:.6}, \"transfer_s\": {:.6}, \"frames\": {}, \
+                 \"payload_mb\": {:.3}}}",
+                c.tau, c.p, c.steps_per_sec, c.serialize_s, c.transfer_s, c.frames, c.payload_mb
+            )
+        })
+        .collect();
+    let entry = format!(
+        "  {{\n    \"bench\": \"process\",\n    \"sha\": \"{}\",\n    \"unix_time\": {},\n    \
+         \"quick\": {},\n    \"unit\": \"steps_per_sec\",\n    \"results\": [\n{}\n    ]\n  }}",
+        git_sha(),
+        unix_time(),
+        quick,
+        rows.join(",\n")
+    );
+    let out = concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_process.json");
+    append_history(out, &entry);
+    println!("appended history entry to {out}");
+}

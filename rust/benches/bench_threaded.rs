@@ -20,6 +20,7 @@
 
 use elastic_train::cluster::CostModel;
 use elastic_train::coordinator::{run_threaded, DriverConfig, Method, QuadraticOracle};
+use elastic_train::figures::benchkit::{append_history, git_sha, unix_time};
 use std::time::Instant;
 
 /// Per-step gradient size: big enough that one step (~tens of µs)
@@ -39,7 +40,7 @@ fn steps_per_sec(method: Method, eta: f32, p: usize, total_steps: u64) -> f64 {
         lr_decay_gamma: 0.0,
     };
     let t0 = Instant::now();
-    let r = run_threaded(&mut oracles, &cfg, 16);
+    let r = run_threaded(&mut oracles, &cfg, 16).expect("bench run");
     assert!(!r.diverged, "{} p={p} diverged", method.name());
     assert_eq!(r.total_steps, total_steps);
     r.total_steps as f64 / t0.elapsed().as_secs_f64()
@@ -57,6 +58,7 @@ fn main() {
     );
     println!("{:>6} {:>4} {:>14} {:>10}", "tau", "p", "steps/sec", "vs p=1");
 
+    let mut rows: Vec<String> = Vec::new();
     let mut tau16: Vec<(usize, f64)> = Vec::new();
     for &tau in &[1u32, 4, 16, 64] {
         let mut base = 0.0f64;
@@ -71,6 +73,9 @@ fn main() {
                 base = rate;
             }
             println!("{tau:>6} {p:>4} {rate:>14.0} {:>9.2}x", rate / base);
+            rows.push(format!(
+                "      {{\"method\": \"easgd\", \"tau\": {tau}, \"p\": {p}, \"steps_per_sec\": {rate:.1}}}"
+            ));
             if tau == 16 {
                 tau16.push((p, rate));
             }
@@ -101,6 +106,9 @@ fn main() {
                 base = rate;
             }
             println!("{name:>14} {p:>4} {rate:>14.0} {:>9.2}x", rate / base);
+            rows.push(format!(
+                "      {{\"method\": \"{name}\", \"p\": {p}, \"steps_per_sec\": {rate:.1}}}"
+            ));
         }
         println!();
     }
@@ -121,4 +129,19 @@ fn main() {
     if cores < 4 {
         println!("(only {cores} cores visible — scaling beyond p={cores} plateaus by design)");
     }
+
+    // Per-PR history, keyed by git SHA like BENCH_oracle.json.
+    let entry = format!(
+        "  {{\n    \"bench\": \"threaded\",\n    \"sha\": \"{}\",\n    \"unix_time\": {},\n    \
+         \"quick\": {},\n    \"cores\": {},\n    \"unit\": \"steps_per_sec\",\n    \
+         \"results\": [\n{}\n    ]\n  }}",
+        git_sha(),
+        unix_time(),
+        quick,
+        cores,
+        rows.join(",\n")
+    );
+    let out = concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_threaded.json");
+    append_history(out, &entry);
+    println!("appended history entry to {out}");
 }

@@ -19,6 +19,7 @@ use elastic_train::cluster::CostModel;
 use elastic_train::coordinator::{
     run_tree_threaded, DriverConfig, Method, QuadraticOracle, TreeScheme, TreeSpec,
 };
+use elastic_train::figures::benchkit::{append_history, git_sha, unix_time};
 use std::time::Instant;
 
 /// Per-step gradient size: big enough that one step (~tens of µs)
@@ -63,6 +64,7 @@ fn main() {
         "tau_u", "d", "p", "steps/sec", "vs p=4"
     );
 
+    let mut rows: Vec<String> = Vec::new();
     let mut verdict_col: Vec<(usize, f64)> = Vec::new();
     for &tau_up in &[1u32, 8] {
         for &degree in &[2usize, 4] {
@@ -80,6 +82,10 @@ fn main() {
                     "{tau_up:>5} {degree:>3} {leaves:>4} {rate:>14.0} {:>9.2}x",
                     rate / base
                 );
+                rows.push(format!(
+                    "      {{\"tau_up\": {tau_up}, \"degree\": {degree}, \"leaves\": {leaves}, \
+                     \"steps_per_sec\": {rate:.1}}}"
+                ));
                 if tau_up == 8 && degree == 4 {
                     verdict_col.push((leaves, rate));
                 }
@@ -111,4 +117,19 @@ fn main() {
              scaling beyond p≈{cores} plateaus by design)"
         );
     }
+
+    // Per-PR history, keyed by git SHA like BENCH_oracle.json.
+    let entry = format!(
+        "  {{\n    \"bench\": \"tree_threaded\",\n    \"sha\": \"{}\",\n    \"unix_time\": {},\n    \
+         \"quick\": {},\n    \"cores\": {},\n    \"unit\": \"steps_per_sec\",\n    \
+         \"results\": [\n{}\n    ]\n  }}",
+        git_sha(),
+        unix_time(),
+        quick,
+        cores,
+        rows.join(",\n")
+    );
+    let out = concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_tree_threaded.json");
+    append_history(out, &entry);
+    println!("appended history entry to {out}");
 }

@@ -91,16 +91,24 @@ impl CostModel {
     }
 }
 
-/// Table 4.4's three columns, accumulated per run.
+/// Table 4.4's three columns, accumulated per run, plus the process
+/// backend's measured decomposition of the comm column.
 #[derive(Clone, Copy, Debug, Default)]
 pub struct TimeBreakdown {
     pub compute: f64,
     pub data: f64,
     pub comm: f64,
+    /// Measured frame encode/decode seconds (process backend; a
+    /// sub-component of `comm`, not an additional column).
+    pub serialize: f64,
+    /// Measured socket write/read seconds (process backend; a
+    /// sub-component of `comm`, not an additional column).
+    pub transfer: f64,
 }
 
 impl TimeBreakdown {
     pub fn total(&self) -> f64 {
+        // serialize/transfer are "of which" sub-columns of comm.
         self.compute + self.data + self.comm
     }
 }
@@ -118,6 +126,20 @@ pub struct CurvePoint {
     pub test_error: f64,
 }
 
+/// Measured wire statistics (process backend only; `None` on the
+/// single-address-space backends, whose exchanges move no bytes).
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct WireStats {
+    /// Frames through the master's sockets (both directions).
+    pub frames: u64,
+    /// Payload bytes through the master's sockets (headers excluded —
+    /// the θ message size is what the thesis' cost model prices).
+    pub payload_bytes: u64,
+    /// Mean center-rounds of staleness a worker's exchange observed
+    /// (rounds applied by other workers since its previous exchange).
+    pub mean_staleness: f64,
+}
+
 /// Result of one distributed run.
 #[derive(Clone, Debug, Default)]
 pub struct RunResult {
@@ -133,6 +155,9 @@ pub struct RunResult {
     /// driver's for the decoupled methods (the sim keeps the zeroth
     /// round as part of its deterministic event schedule).
     pub rounds: u64,
+    /// Measured socket statistics (the process backend); `None` where
+    /// no bytes cross a process boundary.
+    pub wire: Option<WireStats>,
     pub diverged: bool,
 }
 
@@ -156,6 +181,27 @@ impl RunResult {
 
     pub fn final_train_loss(&self) -> f64 {
         self.curve.last().map(|p| p.train_loss).unwrap_or(f64::NAN)
+    }
+
+    /// First tracked point, `None` on an empty curve. Use this (or
+    /// [`RunResult::last_point`]) instead of `curve.first().unwrap()`:
+    /// a run whose horizon is shorter than its eval cadence can
+    /// legitimately record nothing, and an accessor panic turns that
+    /// configuration mistake into an opaque crash instead of the
+    /// descriptive config-time error `DriverConfig::validate` gives.
+    pub fn first_point(&self) -> Option<&CurvePoint> {
+        self.curve.first()
+    }
+
+    /// Last tracked point, `None` on an empty curve.
+    pub fn last_point(&self) -> Option<&CurvePoint> {
+        self.curve.last()
+    }
+
+    /// Train loss of the first tracked point (NaN on an empty curve,
+    /// mirroring [`RunResult::final_train_loss`]).
+    pub fn first_train_loss(&self) -> f64 {
+        self.curve.first().map(|p| p.train_loss).unwrap_or(f64::NAN)
     }
 }
 
@@ -216,5 +262,18 @@ mod tests {
         assert_eq!(r.time_to_error(0.35), Some(2.0));
         assert_eq!(r.time_to_error(0.1), None);
         assert!((r.best_test_error() - 0.2).abs() < 1e-12);
+    }
+
+    #[test]
+    fn empty_curve_accessors_do_not_panic() {
+        // Regression: `curve.first().unwrap()` panicked on runs whose
+        // horizon left the curve empty; every accessor must degrade.
+        let r = RunResult::default();
+        assert!(r.first_point().is_none());
+        assert!(r.last_point().is_none());
+        assert!(r.first_train_loss().is_nan());
+        assert!(r.final_train_loss().is_nan());
+        assert!(r.best_test_error().is_infinite());
+        assert_eq!(r.time_to_error(0.5), None);
     }
 }

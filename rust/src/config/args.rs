@@ -2,8 +2,15 @@
 //!
 //! Grammar: positional words first, then any number of `key=value`
 //! pairs; `--key=value` and `--flag` are also accepted.
+//!
+//! Typed getters are STRICT: an absent key yields the default, but a
+//! present-and-malformed value is a real error naming the key and the
+//! offending value. (They used to `unwrap_or(default)`, so `p=abc` ran
+//! the sweep at the default p and corrupted figure comparisons.)
 
+use crate::error::Result;
 use std::collections::BTreeMap;
+use std::str::FromStr;
 
 /// Parsed command line.
 #[derive(Clone, Debug, Default)]
@@ -36,30 +43,50 @@ impl Args {
         self.kv.get(key).map(|s| s.as_str())
     }
 
-    pub fn get_f64(&self, key: &str, default: f64) -> f64 {
-        self.get(key).and_then(|s| s.parse().ok()).unwrap_or(default)
+    /// Absent key ⇒ `Ok(default)`; malformed value ⇒ an error naming
+    /// the key and the offending value.
+    fn get_parsed<T: FromStr>(&self, key: &str, default: T, ty: &str) -> Result<T> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| crate::err!("invalid value for {key}: '{v}' (expected {ty})")),
+        }
     }
 
-    pub fn get_f32(&self, key: &str, default: f32) -> f32 {
-        self.get(key).and_then(|s| s.parse().ok()).unwrap_or(default)
+    pub fn get_f64(&self, key: &str, default: f64) -> Result<f64> {
+        self.get_parsed(key, default, "a number")
     }
 
-    pub fn get_usize(&self, key: &str, default: usize) -> usize {
-        self.get(key).and_then(|s| s.parse().ok()).unwrap_or(default)
+    pub fn get_f32(&self, key: &str, default: f32) -> Result<f32> {
+        self.get_parsed(key, default, "a number")
     }
 
-    pub fn get_u64(&self, key: &str, default: u64) -> u64 {
-        self.get(key).and_then(|s| s.parse().ok()).unwrap_or(default)
+    pub fn get_usize(&self, key: &str, default: usize) -> Result<usize> {
+        self.get_parsed(key, default, "a non-negative integer")
     }
 
-    pub fn get_u32(&self, key: &str, default: u32) -> u32 {
-        self.get(key).and_then(|s| s.parse().ok()).unwrap_or(default)
+    pub fn get_u64(&self, key: &str, default: u64) -> Result<u64> {
+        self.get_parsed(key, default, "a non-negative integer")
     }
 
-    pub fn get_bool(&self, key: &str, default: bool) -> bool {
-        self.get(key)
-            .map(|s| matches!(s, "true" | "1" | "yes"))
-            .unwrap_or(default)
+    pub fn get_u32(&self, key: &str, default: u32) -> Result<u32> {
+        self.get_parsed(key, default, "a non-negative integer")
+    }
+
+    pub fn get_u16(&self, key: &str, default: u16) -> Result<u16> {
+        self.get_parsed(key, default, "a port number (0-65535)")
+    }
+
+    pub fn get_bool(&self, key: &str, default: bool) -> Result<bool> {
+        match self.get(key) {
+            None => Ok(default),
+            Some("true") | Some("1") | Some("yes") => Ok(true),
+            Some("false") | Some("0") | Some("no") => Ok(false),
+            Some(v) => Err(crate::err!(
+                "invalid value for {key}: '{v}' (expected true|false|1|0|yes|no)"
+            )),
+        }
     }
 
     pub fn get_str<'a>(&'a self, key: &str, default: &'a str) -> &'a str {
@@ -79,22 +106,37 @@ mod tests {
     fn positional_and_kv() {
         let a = parse(&["figure", "fig3.1", "p=16", "--eta=0.05", "--quick"]);
         assert_eq!(a.positional, vec!["figure", "fig3.1"]);
-        assert_eq!(a.get_usize("p", 1), 16);
-        assert!((a.get_f64("eta", 0.0) - 0.05).abs() < 1e-12);
-        assert!(a.get_bool("quick", false));
+        assert_eq!(a.get_usize("p", 1).unwrap(), 16);
+        assert!((a.get_f64("eta", 0.0).unwrap() - 0.05).abs() < 1e-12);
+        assert!(a.get_bool("quick", false).unwrap());
     }
 
     #[test]
     fn defaults_apply() {
         let a = parse(&[]);
-        assert_eq!(a.get_usize("p", 4), 4);
+        assert_eq!(a.get_usize("p", 4).unwrap(), 4);
         assert_eq!(a.get_str("method", "easgd"), "easgd");
-        assert!(!a.get_bool("quick", false));
+        assert!(!a.get_bool("quick", false).unwrap());
     }
 
     #[test]
-    fn malformed_values_fall_back() {
-        let a = parse(&["p=abc"]);
-        assert_eq!(a.get_usize("p", 7), 7);
+    fn malformed_values_are_rejected_naming_key_and_value() {
+        // The seed silently fell back to the default here — `p=abc`
+        // ran the sweep at the default p. Now it is a descriptive error.
+        let a = parse(&["p=abc", "eta=fast", "tau=0.5", "verbose=maybe"]);
+        let e = a.get_usize("p", 7).unwrap_err();
+        let msg = format!("{e}");
+        assert!(msg.contains("p") && msg.contains("abc"), "{msg}");
+        assert!(format!("{}", a.get_f32("eta", 0.1).unwrap_err()).contains("fast"));
+        assert!(format!("{}", a.get_u32("tau", 1).unwrap_err()).contains("0.5"));
+        assert!(format!("{}", a.get_bool("verbose", false).unwrap_err()).contains("maybe"));
+    }
+
+    #[test]
+    fn explicit_false_bools_parse() {
+        let a = parse(&["quick=false", "full=no", "deep=0"]);
+        assert!(!a.get_bool("quick", true).unwrap());
+        assert!(!a.get_bool("full", true).unwrap());
+        assert!(!a.get_bool("deep", true).unwrap());
     }
 }

@@ -5,7 +5,9 @@
 use super::args::Args;
 use crate::cluster::CostModel;
 use crate::coordinator::{Method, SeqMethod};
+use crate::error::Result;
 use std::collections::BTreeMap;
+use std::str::FromStr;
 
 /// Top-level experiment configuration.
 #[derive(Clone, Debug)]
@@ -54,55 +56,109 @@ impl Default for ExperimentConfig {
     }
 }
 
+/// Strict parse of one typed config value: the error names the key and
+/// the offending value (the seed's `unwrap_or(default)` silently ran
+/// experiments at the default — `tau=0.5` became τ=10).
+fn parse_kv<T: FromStr>(k: &str, v: &str, ty: &str) -> Result<T> {
+    v.parse()
+        .map_err(|_| crate::err!("invalid value for {k}: '{v}' (expected {ty})"))
+}
+
 impl ExperimentConfig {
     /// Parse a `key = value` file (unknown keys land in `extra`).
-    pub fn from_file(path: &str) -> std::io::Result<Self> {
-        let text = std::fs::read_to_string(path)?;
+    /// Malformed typed values are errors carrying the line number.
+    pub fn from_file(path: &str) -> Result<Self> {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| crate::err!("cannot read config file {path}: {e}"))?;
         let mut cfg = ExperimentConfig::default();
-        for line in text.lines() {
+        for (lineno, line) in text.lines().enumerate() {
             let line = line.split('#').next().unwrap().trim();
             if line.is_empty() {
                 continue;
             }
             if let Some((k, v)) = line.split_once('=') {
-                cfg.set(k.trim(), v.trim());
+                cfg.set(k.trim(), v.trim())
+                    .map_err(|e| crate::err!("{path}:{}: {e}", lineno + 1))?;
             }
         }
         Ok(cfg)
     }
 
-    /// Apply CLI overrides.
-    pub fn apply_args(&mut self, args: &Args) {
+    /// Apply CLI overrides; malformed values are errors, not silently
+    /// ignored defaults.
+    pub fn apply_args(&mut self, args: &Args) -> Result<()> {
         for (k, v) in &args.kv {
-            self.set(k, v);
+            self.set(k, v)?;
         }
+        Ok(())
     }
 
-    fn set(&mut self, k: &str, v: &str) {
+    pub fn set(&mut self, k: &str, v: &str) -> Result<()> {
         match k {
-            "p" => self.p = v.parse().unwrap_or(self.p),
-            "eta" => self.eta = v.parse().unwrap_or(self.eta),
-            "tau" => self.tau = v.parse().unwrap_or(self.tau),
-            "beta" => self.beta = v.parse().unwrap_or(self.beta),
-            "delta" => self.delta = v.parse().unwrap_or(self.delta),
+            "p" => self.p = parse_kv(k, v, "a positive integer")?,
+            "eta" => self.eta = parse_kv(k, v, "a number")?,
+            "tau" => self.tau = parse_kv(k, v, "a positive integer")?,
+            "beta" => self.beta = parse_kv(k, v, "a number")?,
+            "delta" => self.delta = parse_kv(k, v, "a number")?,
             "method" => self.method = v.to_string(),
             "cost" => self.cost_family = v.to_string(),
             "sharding" => self.sharding = v.to_string(),
             "model" => self.model = v.to_string(),
-            "horizon" => self.horizon = v.parse().unwrap_or(self.horizon),
-            "eval_every" => self.eval_every = v.parse().unwrap_or(self.eval_every),
-            "seed" => self.seed = v.parse().unwrap_or(self.seed),
-            "batch" => self.batch = v.parse().unwrap_or(self.batch),
+            "horizon" => self.horizon = parse_kv(k, v, "a number of seconds")?,
+            "eval_every" => self.eval_every = parse_kv(k, v, "a number of seconds")?,
+            "seed" => self.seed = parse_kv(k, v, "a non-negative integer")?,
+            "batch" => self.batch = parse_kv(k, v, "a positive integer")?,
             _ => {
                 self.extra.insert(k.to_string(), v.to_string());
             }
         }
+        Ok(())
     }
 
-    /// Resolve the parallel method named in `method`.
-    pub fn parallel_method(&self) -> Option<Method> {
+    /// Strictly-parsed `extra` key (mva_alpha, rho, gamma, …): absent ⇒
+    /// default, malformed ⇒ an error naming the key.
+    pub fn extra_f32(&self, k: &str, default: f32) -> Result<f32> {
+        match self.extra.get(k) {
+            None => Ok(default),
+            Some(v) => parse_kv(k, v, "a number"),
+        }
+    }
+
+    /// Config-time sanity checks on the time axis and grid shape —
+    /// catches the degenerate configurations that used to surface as
+    /// panics deep in a run (an empty curve from `horizon <= 0`,
+    /// a zero-period exchange from `tau = 0`).
+    pub fn validate(&self) -> Result<()> {
+        if self.p == 0 {
+            crate::bail!("p must be >= 1 (got 0)");
+        }
+        if self.batch == 0 {
+            crate::bail!("batch must be >= 1 (got 0)");
+        }
+        if self.tau == 0 {
+            crate::bail!("tau must be >= 1 (got 0): a zero communication period is undefined");
+        }
+        if !self.horizon.is_finite() || self.horizon <= 0.0 {
+            crate::bail!("horizon must be a positive number of seconds (got {})", self.horizon);
+        }
+        if !self.eval_every.is_finite() || self.eval_every <= 0.0 {
+            crate::bail!(
+                "eval_every must be a positive number of seconds (got {})",
+                self.eval_every
+            );
+        }
+        if !self.eta.is_finite() || self.eta <= 0.0 {
+            crate::bail!("eta must be a positive number (got {})", self.eta);
+        }
+        Ok(())
+    }
+
+    /// Resolve the parallel method named in `method`: `Ok(None)` when
+    /// the name is not a parallel method, `Err` when one of its
+    /// hyper-parameter keys is malformed.
+    pub fn parallel_method(&self) -> Result<Option<Method>> {
         let alpha = self.beta / self.p as f32;
-        Some(match self.method.as_str() {
+        Ok(Some(match self.method.as_str() {
             "easgd" => Method::Easgd { alpha, tau: self.tau },
             "eamsgd" => Method::Eamsgd { alpha, tau: self.tau, delta: self.delta },
             "downpour" => Method::Downpour { tau: self.tau },
@@ -110,39 +166,28 @@ impl ExperimentConfig {
             "adownpour" => Method::ADownpour { tau: self.tau },
             "mvadownpour" => Method::MvaDownpour {
                 tau: self.tau,
-                alpha: self
-                    .extra
-                    .get("mva_alpha")
-                    .and_then(|s| s.parse().ok())
-                    .unwrap_or(0.001),
+                alpha: self.extra_f32("mva_alpha", 0.001)?,
             },
             "admm" => Method::AdmmAsync {
-                rho: self
-                    .extra
-                    .get("rho")
-                    .and_then(|s| s.parse().ok())
-                    .unwrap_or(1.0),
+                rho: self.extra_f32("rho", 1.0)?,
                 tau: self.tau,
             },
-            _ => return None,
-        })
+            _ => return Ok(None),
+        }))
     }
 
-    /// Resolve a sequential method name.
-    pub fn sequential_method(&self) -> Option<SeqMethod> {
-        Some(match self.method.as_str() {
+    /// Resolve a sequential method name (same contract as
+    /// [`ExperimentConfig::parallel_method`]).
+    pub fn sequential_method(&self) -> Result<Option<SeqMethod>> {
+        Ok(Some(match self.method.as_str() {
             "sgd" => SeqMethod::Sgd,
             "msgd" => SeqMethod::Msgd { delta: self.delta },
             "asgd" => SeqMethod::Asgd,
             "mvasgd" => SeqMethod::Mvasgd {
-                alpha: self
-                    .extra
-                    .get("mva_alpha")
-                    .and_then(|s| s.parse().ok())
-                    .unwrap_or(0.001),
+                alpha: self.extra_f32("mva_alpha", 0.001)?,
             },
-            _ => return None,
-        })
+            _ => return Ok(None),
+        }))
     }
 
     /// Cost model for the chosen family at a given parameter count.
@@ -181,16 +226,79 @@ mod tests {
         assert!((cfg.eta - 0.1).abs() < 1e-7);
         assert_eq!(cfg.method, "downpour");
         let args = Args::parse(["p=16".to_string(), "rho=2.5".to_string()]);
-        cfg.apply_args(&args);
+        cfg.apply_args(&args).unwrap();
         assert_eq!(cfg.p, 16);
         assert_eq!(cfg.extra.get("rho").map(|s| s.as_str()), Some("2.5"));
+    }
+
+    #[test]
+    fn malformed_typed_values_are_rejected() {
+        // Regression: these used to be silently swallowed by
+        // `unwrap_or(default)` — `tau=0.5` ran at τ=10.
+        let mut cfg = ExperimentConfig::default();
+        for (k, v) in [("p", "abc"), ("tau", "0.5"), ("eta", "fast"), ("horizon", "1h")] {
+            let e = cfg.set(k, v).unwrap_err();
+            let msg = format!("{e}");
+            assert!(msg.contains(k) && msg.contains(v), "{msg}");
+        }
+        // The config is untouched by the failed sets.
+        assert_eq!(cfg.p, 4);
+        assert_eq!(cfg.tau, 10);
+    }
+
+    #[test]
+    fn from_file_reports_the_offending_line() {
+        let dir = std::env::temp_dir().join("et_cfg_badfile");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("bad.cfg");
+        std::fs::write(&path, "p = 8\ntau = 0.5\n").unwrap();
+        let e = ExperimentConfig::from_file(path.to_str().unwrap()).unwrap_err();
+        let msg = format!("{e}");
+        assert!(msg.contains(":2:") && msg.contains("tau") && msg.contains("0.5"), "{msg}");
+    }
+
+    #[test]
+    fn apply_args_rejects_malformed_overrides() {
+        let mut cfg = ExperimentConfig::default();
+        let args = Args::parse(["batch=many".to_string()]);
+        let e = cfg.apply_args(&args).unwrap_err();
+        assert!(format!("{e}").contains("batch"), "{e}");
+    }
+
+    #[test]
+    fn malformed_extra_hyperparams_are_rejected() {
+        let mut cfg = ExperimentConfig::default();
+        cfg.method = "admm".into();
+        cfg.extra.insert("rho".into(), "heavy".into());
+        let e = cfg.parallel_method().unwrap_err();
+        assert!(format!("{e}").contains("rho"), "{e}");
+        cfg.method = "mvasgd".into();
+        cfg.extra.insert("mva_alpha".into(), "x".into());
+        assert!(cfg.sequential_method().is_err());
+    }
+
+    #[test]
+    fn validate_catches_degenerate_time_axes() {
+        let mut cfg = ExperimentConfig::default();
+        cfg.validate().unwrap();
+        cfg.horizon = 0.0;
+        assert!(format!("{}", cfg.validate().unwrap_err()).contains("horizon"));
+        cfg.horizon = 60.0;
+        cfg.eval_every = f64::NAN;
+        assert!(format!("{}", cfg.validate().unwrap_err()).contains("eval_every"));
+        cfg.eval_every = 2.0;
+        cfg.tau = 0;
+        assert!(format!("{}", cfg.validate().unwrap_err()).contains("tau"));
+        cfg.tau = 1;
+        cfg.p = 0;
+        assert!(cfg.validate().is_err());
     }
 
     #[test]
     fn method_resolution() {
         let mut cfg = ExperimentConfig { p: 8, ..Default::default() };
         cfg.method = "easgd".into();
-        match cfg.parallel_method().unwrap() {
+        match cfg.parallel_method().unwrap().unwrap() {
             Method::Easgd { alpha, tau } => {
                 assert!((alpha - 0.9 / 8.0).abs() < 1e-7);
                 assert_eq!(tau, 10);
@@ -198,19 +306,22 @@ mod tests {
             _ => unreachable!(),
         }
         cfg.method = "msgd".into();
-        assert!(cfg.parallel_method().is_none());
-        assert!(matches!(cfg.sequential_method(), Some(SeqMethod::Msgd { .. })));
+        assert!(cfg.parallel_method().unwrap().is_none());
+        assert!(matches!(
+            cfg.sequential_method().unwrap(),
+            Some(SeqMethod::Msgd { .. })
+        ));
         cfg.method = "bogus".into();
-        assert!(cfg.sequential_method().is_none());
+        assert!(cfg.sequential_method().unwrap().is_none());
     }
 
     #[test]
     fn sharding_resolution() {
         let mut cfg = ExperimentConfig::default();
         assert_eq!(cfg.sharding_mode(), Some(crate::data::Sharding::Replicated));
-        cfg.set("sharding", "partitioned");
+        cfg.set("sharding", "partitioned").unwrap();
         assert_eq!(cfg.sharding_mode(), Some(crate::data::Sharding::Partitioned));
-        cfg.set("sharding", "bogus");
+        cfg.set("sharding", "bogus").unwrap();
         assert_eq!(cfg.sharding_mode(), None);
     }
 
@@ -218,9 +329,9 @@ mod tests {
     fn model_resolution() {
         let mut cfg = ExperimentConfig::default();
         assert_eq!(cfg.model_kind(), Some(crate::model::ModelKind::Mlp));
-        cfg.set("model", "conv");
+        cfg.set("model", "conv").unwrap();
         assert_eq!(cfg.model_kind(), Some(crate::model::ModelKind::Conv));
-        cfg.set("model", "bogus");
+        cfg.set("model", "bogus").unwrap();
         assert_eq!(cfg.model_kind(), None);
     }
 

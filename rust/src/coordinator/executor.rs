@@ -63,6 +63,29 @@ pub struct DriverConfig {
 }
 
 impl DriverConfig {
+    /// Reject degenerate time axes and hyperparameters at config time,
+    /// with errors naming the field — the alternative is an empty
+    /// curve, a zero-division, or a thread backend spinning its whole
+    /// step budget before anything notices.
+    pub fn validate(&self) -> Result<()> {
+        if !self.eta.is_finite() || self.eta <= 0.0 {
+            crate::bail!("eta must be a finite positive number, got {}", self.eta);
+        }
+        if !self.horizon.is_finite() || self.horizon <= 0.0 {
+            crate::bail!("horizon must be a finite positive number, got {}", self.horizon);
+        }
+        if !self.eval_every.is_finite() || self.eval_every <= 0.0 {
+            crate::bail!("eval_every must be a finite positive number, got {}", self.eval_every);
+        }
+        if self.max_steps == 0 {
+            crate::bail!("max_steps must be >= 1");
+        }
+        if !self.lr_decay_gamma.is_finite() || self.lr_decay_gamma < 0.0 {
+            crate::bail!("gamma (lr decay) must be finite and >= 0, got {}", self.lr_decay_gamma);
+        }
+        Ok(())
+    }
+
     #[inline]
     pub(crate) fn eta_at(&self, t_local: u64) -> f32 {
         if self.lr_decay_gamma == 0.0 {
@@ -255,18 +278,36 @@ pub(crate) fn tree_alpha(method: Method) -> Result<f32> {
 /// never a silent fallback — when it is not.
 pub fn check_supported(method: Method, backend: Backend, topo: &Topology) -> Result<()> {
     match topo {
-        // Every method runs on the star under BOTH backends: the sim
-        // driver inlines master-coupled updates, and the thread backend
-        // picks its center backend per method (sharded lock for the
-        // decoupled methods, the master actor for MDOWNPOUR / async
-        // ADMM) — see [`master_coupled`].
-        Topology::Star => {
-            let _ = (method, backend);
-            Ok(())
-        }
+        // Every method runs on the star under the sim and thread
+        // backends: the sim driver inlines master-coupled updates, and
+        // the thread backend picks its center backend per method
+        // (sharded lock for the decoupled methods, the master actor
+        // for MDOWNPOUR / async ADMM) — see [`master_coupled`]. The
+        // process backend serves the master-DEcoupled methods only:
+        // its parameter server applies whole-vector exchanges, and the
+        // master-coupled updates would need a per-local-step round
+        // trip nothing in the thesis' protocol asks for.
+        Topology::Star => match backend {
+            Backend::Sim | Backend::Thread => Ok(()),
+            Backend::Process if !master_coupled(method) => Ok(()),
+            Backend::Process => Err(crate::err!(
+                "{} is master-coupled (its master update belongs to every local step) and \
+                 is not implemented on backend=process — use backend=thread (master actor) \
+                 or backend=sim",
+                method.name()
+            )),
+        },
         Topology::Tree(spec) => {
             spec.validate()?;
-            // Both backends implement the tree for the elastic methods.
+            if backend == Backend::Process {
+                return Err(crate::err!(
+                    "backend=process implements the star topology only (one parameter \
+                     server, p socket workers) — use backend=sim or backend=thread for \
+                     topology=tree"
+                ));
+            }
+            // Sim and thread both implement the tree for the elastic
+            // methods.
             tree_alpha(method).map(|_| ())
         }
     }
@@ -281,11 +322,13 @@ pub fn check_supported(method: Method, backend: Backend, topo: &Topology) -> Res
 pub trait Executor {
     fn name(&self) -> &'static str;
 
-    /// Run on the flat star topology (the legacy single-topology
-    /// contract; infallible because every backend implements its
-    /// star — method gating happens in [`check_supported`] /
-    /// [`run_with_backend`]).
-    fn run<O: GradOracle + Send>(&self, oracles: &mut [O], cfg: &DriverConfig) -> RunResult;
+    /// Run on the flat star topology. Method gating happens in
+    /// [`check_supported`] / [`run_with_backend`]; the `Result` here
+    /// carries RUN failures — a worker thread dying mid-run surfaces
+    /// as a descriptive error naming the worker, never a panic that
+    /// poisons the center and hangs the survivors.
+    fn run<O: GradOracle + Send>(&self, oracles: &mut [O], cfg: &DriverConfig)
+        -> Result<RunResult>;
 
     /// Run on an explicit topology, gating unsupported
     /// method/backend/topology combinations with a descriptive error.
@@ -307,8 +350,12 @@ impl Executor for SimExecutor {
         "sim"
     }
 
-    fn run<O: GradOracle + Send>(&self, oracles: &mut [O], cfg: &DriverConfig) -> RunResult {
-        super::driver::run_parallel(oracles, cfg)
+    fn run<O: GradOracle + Send>(
+        &self,
+        oracles: &mut [O],
+        cfg: &DriverConfig,
+    ) -> Result<RunResult> {
+        Ok(super::driver::run_parallel(oracles, cfg))
     }
 
     fn run_topology<O: GradOracle + Send>(
@@ -318,6 +365,7 @@ impl Executor for SimExecutor {
         topo: &Topology,
     ) -> Result<RunResult> {
         check_supported(cfg.method, Backend::Sim, topo)?;
+        cfg.validate()?;
         match topo {
             Topology::Star => Ok(super::driver::run_parallel(oracles, cfg)),
             Topology::Tree(spec) => super::tree::run_tree_sim(oracles, cfg, spec),
@@ -349,7 +397,11 @@ impl Executor for ThreadExecutor {
         "thread"
     }
 
-    fn run<O: GradOracle + Send>(&self, oracles: &mut [O], cfg: &DriverConfig) -> RunResult {
+    fn run<O: GradOracle + Send>(
+        &self,
+        oracles: &mut [O],
+        cfg: &DriverConfig,
+    ) -> Result<RunResult> {
         super::threaded::run_threaded(oracles, cfg, self.shards)
     }
 
@@ -360,8 +412,9 @@ impl Executor for ThreadExecutor {
         topo: &Topology,
     ) -> Result<RunResult> {
         check_supported(cfg.method, Backend::Thread, topo)?;
+        cfg.validate()?;
         match topo {
-            Topology::Star => Ok(super::threaded::run_threaded(oracles, cfg, self.shards)),
+            Topology::Star => super::threaded::run_threaded(oracles, cfg, self.shards),
             Topology::Tree(spec) => super::tree_threaded::run_tree_threaded(oracles, cfg, spec),
         }
     }
@@ -372,6 +425,12 @@ impl Executor for ThreadExecutor {
 pub enum Backend {
     Sim,
     Thread,
+    /// Workers as separate OS processes over real sockets
+    /// ([`super::process::run_process`]). Selected here for gating and
+    /// CLI plumbing; dispatching a run needs a serializable
+    /// [`super::process::OracleSpec`] rather than live oracles, so
+    /// [`run_with_backend_topology`] refuses it with directions.
+    Process,
 }
 
 impl Backend {
@@ -379,6 +438,7 @@ impl Backend {
         match s {
             "sim" | "virtual" => Some(Backend::Sim),
             "thread" | "threads" | "threaded" => Some(Backend::Thread),
+            "process" | "proc" | "processes" => Some(Backend::Process),
             _ => None,
         }
     }
@@ -387,6 +447,7 @@ impl Backend {
         match self {
             Backend::Sim => "sim",
             Backend::Thread => "thread",
+            Backend::Process => "process",
         }
     }
 }
@@ -415,6 +476,16 @@ pub fn run_with_backend_topology<O: GradOracle + Send>(
     match backend {
         Backend::Sim => SimExecutor.run_topology(oracles, cfg, topo),
         Backend::Thread => ThreadExecutor::default().run_topology(oracles, cfg, topo),
+        // Live oracles cannot cross a process boundary; the process
+        // tier runs from a serializable oracle recipe instead. Callers
+        // that can build one (the `train` CLI, the ch4 sweeps, the
+        // process bench) dispatch there before reaching this generic
+        // entry point.
+        Backend::Process => Err(crate::err!(
+            "backend=process cannot run from live oracles — call \
+             coordinator::process::run_process with an OracleSpec (a serializable oracle \
+             recipe the self-exec'd workers rebuild)"
+        )),
     }
 }
 
@@ -427,9 +498,12 @@ mod tests {
         assert_eq!(Backend::parse("sim"), Some(Backend::Sim));
         assert_eq!(Backend::parse("thread"), Some(Backend::Thread));
         assert_eq!(Backend::parse("threaded"), Some(Backend::Thread));
+        assert_eq!(Backend::parse("process"), Some(Backend::Process));
+        assert_eq!(Backend::parse("proc"), Some(Backend::Process));
         assert_eq!(Backend::parse("gpu"), None);
         assert_eq!(Backend::Sim.name(), "sim");
         assert_eq!(Backend::Thread.name(), "thread");
+        assert_eq!(Backend::Process.name(), "process");
     }
 
     #[test]
@@ -496,6 +570,57 @@ mod tests {
         let skinny = Topology::Tree(TreeSpec::new(1, TreeScheme::UpDown { tau_up: 1, tau_down: 1 }));
         let e = check_supported(Method::easgd_default(4, 4), Backend::Sim, &skinny).unwrap_err();
         assert!(format!("{e}").contains("fan-out"), "{e}");
+        // Process: decoupled star methods only.
+        for m in [
+            Method::easgd_default(4, 4),
+            Method::eamsgd_default(4, 4),
+            Method::Downpour { tau: 1 },
+            Method::ADownpour { tau: 1 },
+            Method::MvaDownpour { tau: 1, alpha: 0.001 },
+        ] {
+            assert!(
+                check_supported(m, Backend::Process, &Topology::Star).is_ok(),
+                "{} on process",
+                m.name()
+            );
+        }
+        for m in [Method::MDownpour { delta: 0.9 }, Method::AdmmAsync { rho: 1.0, tau: 4 }] {
+            let e = check_supported(m, Backend::Process, &Topology::Star).unwrap_err();
+            assert!(format!("{e}").contains("master-coupled"), "{e}");
+        }
+        let e =
+            check_supported(Method::easgd_default(4, 4), Backend::Process, &tree).unwrap_err();
+        assert!(format!("{e}").contains("star topology only"), "{e}");
+    }
+
+    #[test]
+    fn validate_names_the_offending_field() {
+        let good = DriverConfig {
+            eta: 0.1,
+            method: Method::easgd_default(4, 4),
+            cost: CostModel::cifar_like(100),
+            horizon: 1.0,
+            eval_every: 0.5,
+            seed: 0,
+            max_steps: 100,
+            lr_decay_gamma: 0.0,
+        };
+        assert!(good.validate().is_ok());
+        for (field, mutate) in [
+            ("eta", Box::new(|c: &mut DriverConfig| c.eta = f32::NAN)
+                as Box<dyn Fn(&mut DriverConfig)>),
+            ("eta", Box::new(|c: &mut DriverConfig| c.eta = -0.1)),
+            ("horizon", Box::new(|c: &mut DriverConfig| c.horizon = 0.0)),
+            ("horizon", Box::new(|c: &mut DriverConfig| c.horizon = f64::INFINITY)),
+            ("eval_every", Box::new(|c: &mut DriverConfig| c.eval_every = -1.0)),
+            ("max_steps", Box::new(|c: &mut DriverConfig| c.max_steps = 0)),
+            ("gamma", Box::new(|c: &mut DriverConfig| c.lr_decay_gamma = f64::NAN)),
+        ] {
+            let mut bad = good.clone();
+            mutate(&mut bad);
+            let e = bad.validate().unwrap_err();
+            assert!(format!("{e}").contains(field), "expected '{field}' in: {e}");
+        }
     }
 
     #[test]

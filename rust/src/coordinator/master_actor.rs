@@ -44,7 +44,7 @@
 use super::executor::{DriverConfig, WorkerState};
 use super::method::Method;
 use super::oracle::GradOracle;
-use super::threaded::{CenterBackend, Shared};
+use super::threaded::{lock_recover, CenterBackend, Shared};
 use std::sync::atomic::Ordering;
 use std::sync::mpsc::{channel, Receiver, Sender};
 use std::sync::Mutex;
@@ -177,17 +177,17 @@ impl CenterBackend for ActorMaster {
     type Port = ActorPort;
 
     fn take_ports(&mut self, p: usize) -> Vec<ActorPort> {
-        let ports = self.ports.lock().unwrap().take().expect("ports already taken");
+        let ports = lock_recover(&self.ports).take().expect("ports already taken");
         assert_eq!(ports.len(), p);
         ports
     }
 
     fn snapshot(&self) -> Vec<f32> {
-        self.state.lock().unwrap().center.clone()
+        lock_recover(&self.state).center.clone()
     }
 
     fn rounds(&self) -> u64 {
-        self.state.lock().unwrap().clock
+        lock_recover(&self.state).clock
     }
 
     /// The master thread: wake on each arrival, then drain the inbox
@@ -195,9 +195,9 @@ impl CenterBackend for ActorMaster {
     /// the serialized Gauss–Seidel absorb. Returns when every worker
     /// port has been dropped.
     fn serve(&self) {
-        let rx = self.rx.lock().unwrap();
+        let rx = lock_recover(&self.rx);
         while let Ok(msg) = rx.recv() {
-            let mut st = self.state.lock().unwrap();
+            let mut st = lock_recover(&self.state);
             st.apply(msg);
             while let Ok(m) = rx.try_recv() {
                 st.apply(m);
@@ -290,14 +290,14 @@ mod tests {
         let init = vec![1.0f32; 8];
         let m = ActorMaster::new(Method::MDownpour { delta: 0.9 }, &init, 3);
         {
-            let st = m.state.lock().unwrap();
+            let st = lock_recover(&m.state);
             assert!(st.mv.is_some() && st.contrib.is_none());
             assert_eq!(st.reply_tx.len(), 3);
         }
         assert_eq!(m.snapshot(), init);
         assert_eq!(m.rounds(), 0);
         let m = ActorMaster::new(Method::AdmmAsync { rho: 1.0, tau: 4 }, &init, 4);
-        let st = m.state.lock().unwrap();
+        let st = lock_recover(&m.state);
         assert!(st.mv.is_none());
         assert_eq!(st.contrib.as_ref().unwrap().len(), 4);
     }
@@ -308,7 +308,7 @@ mod tests {
         let mut m = ActorMaster::new(Method::MDownpour { delta: 0.5 }, &init, 1);
         let ports = m.take_ports(1);
         {
-            let mut st = m.state.lock().unwrap();
+            let mut st = lock_recover(&m.state);
             st.apply(ToMaster::Grad { wid: 0, eta: 0.1, grad: vec![1.0; 4] });
             // v = 0.5·0 − 0.1·1 = −0.1 ; x̃ = −0.1.
             assert!(st.center.iter().all(|c| (c + 0.1).abs() < 1e-7));
@@ -325,7 +325,7 @@ mod tests {
         let mut m = ActorMaster::new(Method::AdmmAsync { rho: 1.0, tau: 1 }, &init, 2);
         let ports = m.take_ports(2);
         {
-            let mut st = m.state.lock().unwrap();
+            let mut st = lock_recover(&m.state);
             st.apply(ToMaster::Contrib { wid: 1, contrib: vec![2.0, 4.0] });
         }
         // Worker 0's stored contribution is still the init (0,0):

@@ -25,6 +25,12 @@
 //!   thread absorbing worker messages over `mpsc` channels with
 //!   serialized Gauss–Seidel application, running the master-coupled
 //!   methods (MDOWNPOUR, async ADMM) on real threads.
+//! - [`wire`] — the process backend's wire format: length-prefixed
+//!   flat-θ frames over TCP/Unix sockets, with measured
+//!   serialize/transfer accounting. No serde, no new dependencies.
+//! - [`process`] — the multi-process star backend: a parameter-server
+//!   master, workers as self-exec'd OS processes exchanging frames
+//!   over real sockets (`backend=process`).
 //! - [`sequential`] — the p = 1 baselines: SGD, MSGD, ASGD, MVASGD.
 //! - [`tree`] — EASGD Tree (Alg. 6), virtual-time backend: fully-async
 //!   messaging on the shared worker/step machinery.
@@ -39,11 +45,13 @@ pub mod gauss_seidel;
 pub mod master_actor;
 pub mod method;
 pub mod oracle;
+pub mod process;
 pub mod sequential;
 pub mod threaded;
 pub mod topology;
 pub mod tree;
 pub mod tree_threaded;
+pub mod wire;
 
 pub use driver::{run_parallel, DriverConfig};
 pub use executor::{
@@ -52,6 +60,7 @@ pub use executor::{
 };
 pub use method::Method;
 pub use oracle::{ConvOracle, EvalStats, GradOracle, MlpOracle, NativeOracle, QuadraticOracle};
+pub use process::{process_worker_main, run_process, OracleSpec, ProcessOpts};
 pub use sequential::{run_sequential, SeqMethod};
 pub use threaded::run_threaded;
 pub use topology::{node_taus, Topology, TreeLayout, TreeScheme, TreeSpec};

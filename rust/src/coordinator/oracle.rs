@@ -40,6 +40,27 @@ pub trait GradOracle {
     fn eval(&mut self, theta: &[f32]) -> EvalStats;
 }
 
+/// Boxed oracles are oracles: the process backend rebuilds workers
+/// from a serialized [`super::process::OracleSpec`], whose `build`
+/// necessarily returns `Box<dyn GradOracle + Send>`.
+impl<O: GradOracle + ?Sized> GradOracle for Box<O> {
+    fn n_params(&self) -> usize {
+        (**self).n_params()
+    }
+
+    fn init_params(&self) -> Vec<f32> {
+        (**self).init_params()
+    }
+
+    fn grad(&mut self, theta: &[f32], rng: &mut Rng, out: &mut [f32]) -> f32 {
+        (**self).grad(theta, rng, out)
+    }
+
+    fn eval(&mut self, theta: &[f32]) -> EvalStats {
+        (**self).eval(theta)
+    }
+}
+
 /// Native oracle over the blob dataset, generic over the
 /// [`BatchModel`] (MLP or conv net), fed through the §4.1 prefetch
 /// pipeline. Whole mini-batches flow through the model's batch-major

@@ -1,0 +1,799 @@
+//! The multi-process star backend (`backend=process`): a parameter
+//! server owning the center variable, with workers as separate OS
+//! processes exchanging flat-θ frames over real sockets
+//! ([`super::wire`]).
+//!
+//! This is the tier every single-address-space backend only models: a
+//! "round trip" here is a serialize → socket write → master update →
+//! socket read → deserialize chain, so the communication period τ, the
+//! message size, and the staleness a worker sees are MEASURED physical
+//! quantities (the thesis ran EASGD/DOWNPOUR on a real cluster; the
+//! Elastic Consistency framework of 2001.05918 bounds exactly these).
+//!
+//! Topology of one run:
+//! * [`run_process`] (the master) binds a TCP or Unix-domain listener,
+//!   spawns `p` copies of its own executable with the hidden
+//!   `--process-worker` subcommand, and serves one handler thread per
+//!   worker connection. Handlers share the center state behind a
+//!   poison-recovering mutex and apply each arriving exchange
+//!   atomically (whole-vector — the 1-shard regime of the thread
+//!   backend's sharded lock).
+//! * The worker ([`process_worker_main`]) rebuilds its oracle and RNG
+//!   stream deterministically from CLI arguments (an [`OracleSpec`] is
+//!   the serializable recipe — live oracles cannot cross a process
+//!   boundary), dials the master, and runs the standard decoupled
+//!   local-step loop, exchanging every τ steps.
+//!
+//! Protocol (all frames [`super::wire::Frame`]):
+//! `Hello(wid)` → `Init(θ₀)` · then per round `Push(payload)` →
+//! `Center(reply)` (or `Stop(reply)` once the master's horizon is
+//! reached) · finally `Done(steps, [compute_s, comm_s, serialize_s,
+//! transfer_s])`, or `Diverged` on a non-finite local loss.
+//!
+//! Failure semantics are deliberately loud: a worker process dying
+//! mid-run surfaces as a descriptive `Err` (its socket closes before
+//! `Done`) and stops the remaining workers promptly, a worker that
+//! never dials trips the accept timeout, and a nonzero worker exit
+//! status fails the run even when its socket lifecycle looked clean.
+//!
+//! Method support: the master-DEcoupled methods (EASGD / EAMSGD,
+//! DOWNPOUR / ADOWNPOUR / MVADOWNPOUR) on the star topology —
+//! [`super::executor::check_supported`] gates the rest with
+//! descriptive errors.
+
+use super::executor::{eval_point, DriverConfig, WorkerState};
+use super::method::Method;
+use super::oracle::GradOracle;
+use super::threaded::lock_recover;
+use super::wire::{
+    recv_frame, send_frame, Frame, FrameKind, WireAddr, WireClock, WireListener, WireStream,
+};
+use crate::cluster::{RunResult, TimeBreakdown, WireStats};
+use crate::config::Args;
+use crate::error::Result;
+use crate::model::flat;
+use crate::rng::Rng;
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::Mutex;
+use std::time::{Duration, Instant};
+
+/// How the master reaches its workers.
+#[derive(Clone, Debug)]
+pub struct ProcessOpts {
+    /// Listener address. TCP port 0 binds an ephemeral port; the
+    /// actual address is passed to the spawned workers.
+    pub addr: WireAddr,
+    /// Worker executable; defaults to `std::env::current_exe()` (the
+    /// self-exec contract). Tests and benches override it with
+    /// `env!("CARGO_BIN_EXE_repro")`.
+    pub exe: Option<PathBuf>,
+}
+
+impl Default for ProcessOpts {
+    fn default() -> Self {
+        ProcessOpts { addr: WireAddr::Tcp("127.0.0.1:0".into()), exe: None }
+    }
+}
+
+static SOCK_COUNTER: AtomicU64 = AtomicU64::new(0);
+
+impl ProcessOpts {
+    /// Parse the `transport=tcp|unix`, `host=`, `port=` knobs.
+    pub fn from_args(args: &Args) -> Result<ProcessOpts> {
+        let addr = match args.get_str("transport", "tcp") {
+            "tcp" => {
+                let host = args.get_str("host", "127.0.0.1");
+                let port = args.get_u16("port", 0)?;
+                WireAddr::Tcp(format!("{host}:{port}"))
+            }
+            "unix" => Self::unix_addr()?,
+            other => crate::bail!("unknown transport '{other}' (tcp|unix)"),
+        };
+        Ok(ProcessOpts { addr, exe: None })
+    }
+
+    /// A fresh Unix-domain socket path in the temp dir (pid + counter,
+    /// so concurrent runs in one process don't collide).
+    pub fn unix_addr() -> Result<WireAddr> {
+        #[cfg(unix)]
+        {
+            let k = SOCK_COUNTER.fetch_add(1, Ordering::Relaxed);
+            Ok(WireAddr::Unix(std::env::temp_dir().join(format!(
+                "elastic_train_{}_{k}.sock",
+                std::process::id()
+            ))))
+        }
+        #[cfg(not(unix))]
+        {
+            Err(crate::err!("unix-domain sockets are not available on this platform"))
+        }
+    }
+}
+
+/// A serializable oracle recipe: what a worker process needs to
+/// rebuild its [`GradOracle`] bit-identically to the master's
+/// evaluator. (Live oracles hold data pools and scratch panels; only
+/// the recipe crosses the process boundary.)
+#[derive(Clone, Debug, PartialEq)]
+pub enum OracleSpec {
+    /// The deterministic quadratic (equivalence tests, bench grids).
+    Quadratic { n: usize, h: f32, x0: f32, target: f32, noise: f32 },
+    /// The ch4 sweep workload: blob dataset + MLP/conv model through
+    /// the §4.1 prefetch pipeline. `seed` is the sweep seed — data is
+    /// `sweep_data(seed + 1)`, worker i's pool seed is `40_000 + i`
+    /// (the `family_sharded` layout of [`super::oracle::NativeOracle`]).
+    Sweep {
+        model: crate::model::ModelKind,
+        sharding: crate::data::Sharding,
+        batch: usize,
+        seed: u64,
+    },
+}
+
+impl OracleSpec {
+    /// Build worker `wid`'s oracle (wid 0 doubles as the evaluator).
+    pub fn build(&self, wid: usize) -> Box<dyn GradOracle + Send> {
+        match *self {
+            OracleSpec::Quadratic { n, h, x0, target, noise } => {
+                Box::new(super::oracle::QuadraticOracle::new(n, h, x0, target, noise))
+            }
+            OracleSpec::Sweep { model, sharding, batch, seed } => {
+                // The canonical sweep constructors live in the figure
+                // harness; reusing them here is what guarantees a
+                // worker process rebuilds the exact master-side
+                // workload from the seed alone.
+                let data = crate::figures::ch4::sweep_data(seed + 1);
+                let pool_seed = 40_000 + wid as u64;
+                match model {
+                    crate::model::ModelKind::Mlp => Box::new(super::oracle::MlpOracle::new_sharded(
+                        data,
+                        crate::figures::ch4::sweep_mlp(),
+                        batch,
+                        pool_seed,
+                        sharding,
+                    )),
+                    crate::model::ModelKind::Conv => {
+                        Box::new(super::oracle::ConvOracle::new_sharded(
+                            data,
+                            crate::figures::ch4::sweep_conv(),
+                            batch,
+                            pool_seed,
+                            sharding,
+                        ))
+                    }
+                }
+            }
+        }
+    }
+
+    fn to_args(&self) -> Vec<String> {
+        match self {
+            OracleSpec::Quadratic { n, h, x0, target, noise } => vec![
+                "oracle=quad".into(),
+                format!("qn={n}"),
+                format!("qh={h}"),
+                format!("qx0={x0}"),
+                format!("qtarget={target}"),
+                format!("qnoise={noise}"),
+            ],
+            OracleSpec::Sweep { model, sharding, batch, seed } => vec![
+                "oracle=sweep".into(),
+                format!("model={}", model.name()),
+                format!("sharding={}", sharding.name()),
+                format!("batch={batch}"),
+                format!("oseed={seed}"),
+            ],
+        }
+    }
+
+    fn from_args(args: &Args) -> Result<OracleSpec> {
+        match args.get_str("oracle", "") {
+            "quad" => Ok(OracleSpec::Quadratic {
+                n: args.get_usize("qn", 0)?,
+                h: args.get_f32("qh", 1.0)?,
+                x0: args.get_f32("qx0", 0.0)?,
+                target: args.get_f32("qtarget", 0.0)?,
+                noise: args.get_f32("qnoise", 0.0)?,
+            }),
+            "sweep" => {
+                let ms = args.get_str("model", "mlp");
+                let model = crate::model::ModelKind::parse(ms)
+                    .ok_or_else(|| crate::err!("unknown model '{ms}' (mlp|conv)"))?;
+                let ss = args.get_str("sharding", "replicated");
+                let sharding = crate::data::Sharding::parse(ss)
+                    .ok_or_else(|| crate::err!("unknown sharding '{ss}'"))?;
+                Ok(OracleSpec::Sweep {
+                    model,
+                    sharding,
+                    batch: args.get_usize("batch", 32)?,
+                    seed: args.get_u64("oseed", 0)?,
+                })
+            }
+            other => Err(crate::err!("unknown oracle spec '{other}' (quad|sweep)")),
+        }
+    }
+}
+
+/// Method → worker CLI arguments (the process-gated subset of methods).
+fn method_to_args(m: Method) -> Result<Vec<String>> {
+    Ok(match m {
+        Method::Easgd { alpha, tau } => {
+            vec!["method=easgd".into(), format!("alpha={alpha}"), format!("tau={tau}")]
+        }
+        Method::Eamsgd { alpha, tau, delta } => vec![
+            "method=eamsgd".into(),
+            format!("alpha={alpha}"),
+            format!("tau={tau}"),
+            format!("delta={delta}"),
+        ],
+        Method::Downpour { tau } => vec!["method=downpour".into(), format!("tau={tau}")],
+        Method::ADownpour { tau } => vec!["method=adownpour".into(), format!("tau={tau}")],
+        Method::MvaDownpour { tau, alpha } => vec![
+            "method=mvadownpour".into(),
+            format!("tau={tau}"),
+            format!("mva_alpha={alpha}"),
+        ],
+        Method::MDownpour { .. } | Method::AdmmAsync { .. } => {
+            return Err(crate::err!(
+                "{} is master-coupled and not implemented on backend=process; \
+                 use backend=thread (master actor) or backend=sim",
+                m.name()
+            ))
+        }
+    })
+}
+
+fn method_from_args(args: &Args) -> Result<Method> {
+    let tau = args.get_u32("tau", 1)?;
+    let alpha = args.get_f32("alpha", 0.0)?;
+    Ok(match args.get_str("method", "") {
+        "easgd" => Method::Easgd { alpha, tau },
+        "eamsgd" => Method::Eamsgd { alpha, tau, delta: args.get_f32("delta", 0.99)? },
+        "downpour" => Method::Downpour { tau },
+        "adownpour" => Method::ADownpour { tau },
+        "mvadownpour" => Method::MvaDownpour { tau, alpha: args.get_f32("mva_alpha", 0.001)? },
+        other => return Err(crate::err!("unknown process-worker method '{other}'")),
+    })
+}
+
+/// Master-side center state, shared by the handler threads behind one
+/// poison-recovering mutex (whole-vector atomic exchanges).
+struct CenterState {
+    center: Vec<f32>,
+    /// Averaged center (ADOWNPOUR / MVADOWNPOUR).
+    z: Option<Vec<f32>>,
+    /// Master clock: center-update rounds applied.
+    clock: u64,
+    /// Master clock at each worker's previous exchange (staleness).
+    last_round: Vec<u64>,
+    stale_sum: u64,
+    stale_rounds: u64,
+}
+
+impl CenterState {
+    /// Apply one worker push and build the reply payload.
+    fn apply(&mut self, method: Method, wid: usize, payload: &[f32]) -> Result<Vec<f32>> {
+        if payload.len() != self.center.len() {
+            return Err(crate::err!(
+                "worker {wid} pushed {} f32s, center has {} — mismatched oracle specs?",
+                payload.len(),
+                self.center.len()
+            ));
+        }
+        let reply = match method {
+            Method::Easgd { alpha, .. } | Method::Eamsgd { alpha, .. } => {
+                // Elastic exchange against the atomic whole-vector
+                // center: θ' = θ − α(θ − c), c += α(θ − c).
+                let mut reply = payload.to_vec();
+                flat::elastic_exchange(&mut reply, &mut self.center, alpha);
+                reply
+            }
+            Method::Downpour { .. } | Method::ADownpour { .. } | Method::MvaDownpour { .. } => {
+                // Alg. 3: absorb the accumulated update, reply with
+                // the fresh center.
+                flat::accumulate(&mut self.center, payload);
+                self.center.clone()
+            }
+            Method::MDownpour { .. } | Method::AdmmAsync { .. } => {
+                return Err(crate::err!(
+                    "master-coupled method on the process master — check_supported should \
+                     have refused this run"
+                ))
+            }
+        };
+        self.clock += 1;
+        match method {
+            Method::ADownpour { .. } => {
+                let a = 1.0 / (self.clock as f32);
+                flat::moving_average(self.z.as_mut().unwrap(), &self.center, a);
+            }
+            Method::MvaDownpour { alpha, .. } => {
+                flat::moving_average(self.z.as_mut().unwrap(), &self.center, alpha);
+            }
+            _ => {}
+        }
+        // Staleness: center rounds applied by OTHER workers since this
+        // worker's previous exchange (its own just-applied round is
+        // excluded by measuring against the pre-update clock).
+        let st = (self.clock - 1).saturating_sub(self.last_round[wid]);
+        self.stale_sum += st;
+        self.stale_rounds += 1;
+        self.last_round[wid] = self.clock;
+        Ok(reply)
+    }
+
+    fn snapshot(&self) -> Vec<f32> {
+        self.z.as_ref().unwrap_or(&self.center).clone()
+    }
+}
+
+/// What one handler thread learned from its worker's `Done` frame.
+struct WorkerReport {
+    steps: u64,
+    compute_s: f64,
+    comm_s: f64,
+    serialize_s: f64,
+    transfer_s: f64,
+    /// Master-side wire accounting for this connection.
+    wire: WireClock,
+}
+
+/// Serve one worker connection: handshake (the `Hello` names the
+/// worker — accept order is racy), then rounds until `Done`. Any
+/// socket error before `Done` means the worker process died — a loud,
+/// descriptive failure that also stops the surviving workers.
+fn serve_worker(
+    mut conn: WireStream,
+    method: Method,
+    init: &[f32],
+    state: &Mutex<CenterState>,
+    stop: &AtomicBool,
+    diverged: &AtomicBool,
+) -> Result<WorkerReport> {
+    let mut ck = WireClock::default();
+    let hello = recv_frame(&mut conn, &mut ck)
+        .map_err(|e| crate::err!("a worker connected but sent no Hello frame: {e}"))?;
+    if hello.kind != FrameKind::Hello {
+        return Err(crate::err!("expected a Hello frame, got {:?}", hello.kind));
+    }
+    let wid = hello.wid as usize;
+    send_frame(&mut conn, &Frame::new(FrameKind::Init, 0, 0, init.to_vec()), &mut ck)?;
+    loop {
+        let frame = recv_frame(&mut conn, &mut ck).map_err(|e| {
+            // The loudest failure in the protocol: a worker process
+            // died mid-run. Stop the rest so the error surfaces now,
+            // not after the surviving workers burn the whole budget.
+            stop.store(true, Ordering::Relaxed);
+            crate::err!("worker {wid} died (socket closed before its Done frame): {e}")
+        })?;
+        match frame.kind {
+            FrameKind::Push => {
+                let reply = {
+                    let mut st = lock_recover(state);
+                    st.apply(method, wid, &frame.payload)?
+                };
+                let kind =
+                    if stop.load(Ordering::Relaxed) { FrameKind::Stop } else { FrameKind::Center };
+                send_frame(&mut conn, &Frame::new(kind, 0, frame.clock, reply), &mut ck)?;
+            }
+            FrameKind::Diverged => {
+                diverged.store(true, Ordering::Relaxed);
+                stop.store(true, Ordering::Relaxed);
+            }
+            FrameKind::Done => {
+                let p = &frame.payload;
+                if p.len() != 4 {
+                    return Err(crate::err!(
+                        "worker {wid}: malformed Done stats (got {} fields, expected 4)",
+                        p.len()
+                    ));
+                }
+                return Ok(WorkerReport {
+                    steps: frame.clock,
+                    compute_s: p[0] as f64,
+                    comm_s: p[1] as f64,
+                    serialize_s: p[2] as f64,
+                    transfer_s: p[3] as f64,
+                    wire: ck,
+                });
+            }
+            other => return Err(crate::err!("worker {wid}: unexpected {other:?} frame mid-run")),
+        }
+    }
+}
+
+/// Run one distributed experiment with workers as separate OS
+/// processes over real sockets (the star topology's `backend=process`).
+///
+/// `spec` must describe the same oracle family on both sides; the
+/// master builds `spec.build(0)` as the post-run evaluator, worker `i`
+/// rebuilds `spec.build(i)` after self-exec. Timing semantics match
+/// the thread backend (real seconds, measured columns), with
+/// `breakdown.serialize` / `breakdown.transfer` additionally reporting
+/// the measured wire costs and [`RunResult::wire`] the frame / byte /
+/// staleness counters.
+pub fn run_process(
+    spec: &OracleSpec,
+    p: usize,
+    cfg: &DriverConfig,
+    opts: &ProcessOpts,
+) -> Result<RunResult> {
+    if p == 0 {
+        crate::bail!("p must be >= 1");
+    }
+    cfg.validate()?;
+    super::executor::check_supported(
+        cfg.method,
+        super::executor::Backend::Process,
+        &super::topology::Topology::Star,
+    )?;
+
+    let mut eval_oracle = spec.build(0);
+    let init = eval_oracle.init_params();
+    let (listener, actual) = WireListener::bind(&opts.addr)?;
+
+    let exe = match &opts.exe {
+        Some(e) => e.clone(),
+        None => std::env::current_exe()
+            .map_err(|e| crate::err!("cannot resolve current executable for self-exec: {e}"))?,
+    };
+    // Per-worker budget: the thread backend's global atomic budget has
+    // no cross-process analogue, so the cap is split evenly.
+    let max_local = (cfg.max_steps / p as u64).max(1);
+
+    let mut children = Vec::with_capacity(p);
+    for wid in 0..p {
+        let mut cmd = std::process::Command::new(&exe);
+        cmd.arg("--process-worker")
+            .arg(format!("addr={}", actual.to_arg()))
+            .arg(format!("wid={wid}"))
+            .arg(format!("eta={}", cfg.eta))
+            .arg(format!("gamma={}", cfg.lr_decay_gamma))
+            .arg(format!("seed={}", cfg.seed))
+            .arg(format!("max_local={max_local}"))
+            .arg(format!("horizon={}", cfg.horizon))
+            .args(method_to_args(cfg.method)?)
+            .args(spec.to_args())
+            .stdin(std::process::Stdio::null())
+            .stdout(std::process::Stdio::inherit())
+            .stderr(std::process::Stdio::inherit());
+        match cmd.spawn() {
+            Ok(child) => children.push(child),
+            Err(e) => {
+                kill_children(&mut children);
+                return Err(crate::err!("cannot spawn worker {wid} ({}): {e}", exe.display()));
+            }
+        }
+    }
+
+    let averaged = matches!(cfg.method, Method::ADownpour { .. } | Method::MvaDownpour { .. });
+    let state = Mutex::new(CenterState {
+        center: init.clone(),
+        z: if averaged { Some(init.clone()) } else { None },
+        clock: 0,
+        last_round: vec![0; p],
+        stale_sum: 0,
+        stale_rounds: 0,
+    });
+    let stop = AtomicBool::new(false);
+    let diverged = AtomicBool::new(false);
+
+    // Accept every worker BEFORE serving any: the Init replies then go
+    // out together, so workers start their clocks roughly in step.
+    let mut conns = Vec::with_capacity(p);
+    for _ in 0..p {
+        match listener.accept_timeout(Duration::from_secs(60)) {
+            Ok(conn) => conns.push(conn),
+            Err(e) => {
+                kill_children(&mut children);
+                return Err(e);
+            }
+        }
+    }
+
+    let mut snaps: Vec<(f64, Vec<f32>)> = Vec::new();
+    let mut reports: Vec<Result<WorkerReport>> = Vec::new();
+    let t0 = Instant::now();
+    std::thread::scope(|s| {
+        let handles: Vec<_> = conns
+            .into_iter()
+            .map(|conn| {
+                let (state, stop, diverged, init) = (&state, &stop, &diverged, &init);
+                s.spawn(move || serve_worker(conn, cfg.method, init, state, stop, diverged))
+            })
+            .collect();
+        let cadence = cfg.eval_every.max(1e-3);
+        let mut next_eval = 0.0f64;
+        loop {
+            let el = t0.elapsed().as_secs_f64();
+            if el >= next_eval {
+                snaps.push((el, lock_recover(&state).snapshot()));
+                next_eval += cadence;
+            }
+            if el > cfg.horizon {
+                stop.store(true, Ordering::Relaxed);
+            }
+            if handles.iter().all(|h| h.is_finished()) {
+                break;
+            }
+            std::thread::sleep(Duration::from_micros(200));
+        }
+        for h in handles {
+            reports.push(
+                h.join().unwrap_or_else(|_| Err(crate::err!("a master handler thread panicked"))),
+            );
+        }
+    });
+    snaps.push((t0.elapsed().as_secs_f64(), lock_recover(&state).snapshot()));
+
+    // Reap the children; a nonzero exit is a loud failure even when
+    // the socket lifecycle looked clean.
+    let mut exit_err: Option<crate::error::Error> = None;
+    for (wid, child) in children.iter_mut().enumerate() {
+        match child.wait() {
+            Ok(status) if !status.success() && exit_err.is_none() => {
+                exit_err = Some(crate::err!("worker {wid} exited with {status}"));
+            }
+            Err(e) if exit_err.is_none() => {
+                exit_err = Some(crate::err!("cannot reap worker {wid}: {e}"));
+            }
+            _ => {}
+        }
+    }
+    cleanup_unix_socket(&actual);
+
+    let mut ok_reports = Vec::with_capacity(p);
+    for r in reports {
+        ok_reports.push(r?);
+    }
+    if let Some(e) = exit_err {
+        return Err(e);
+    }
+
+    let mut result = RunResult::default();
+    let mut div = diverged.load(Ordering::Relaxed);
+    for (t, theta) in &snaps {
+        if !eval_point(&mut eval_oracle, theta, *t, &mut result.curve) {
+            div = true;
+        }
+    }
+    let st = lock_recover(&state);
+    result.total_steps = ok_reports.iter().map(|r| r.steps).sum();
+    result.rounds = st.clock;
+    result.wire = Some(WireStats {
+        frames: ok_reports.iter().map(|r| r.wire.frames).sum(),
+        payload_bytes: ok_reports.iter().map(|r| r.wire.payload_bytes).sum(),
+        mean_staleness: if st.stale_rounds == 0 {
+            0.0
+        } else {
+            st.stale_sum as f64 / st.stale_rounds as f64
+        },
+    });
+    result.breakdown = TimeBreakdown {
+        compute: ok_reports.iter().map(|r| r.compute_s).sum(),
+        data: 0.0,
+        comm: ok_reports.iter().map(|r| r.comm_s).sum(),
+        serialize: ok_reports.iter().map(|r| r.serialize_s).sum(),
+        transfer: ok_reports.iter().map(|r| r.transfer_s).sum(),
+    };
+    result.diverged = div;
+    Ok(result)
+}
+
+fn kill_children(children: &mut [std::process::Child]) {
+    for c in children.iter_mut() {
+        let _ = c.kill();
+        let _ = c.wait();
+    }
+}
+
+fn cleanup_unix_socket(addr: &WireAddr) {
+    #[cfg(unix)]
+    if let WireAddr::Unix(p) = addr {
+        let _ = std::fs::remove_file(p);
+    }
+    #[cfg(not(unix))]
+    let _ = addr;
+}
+
+/// The hidden `--process-worker` entry point: rebuild the oracle and
+/// RNG stream from CLI args, dial the master, run the decoupled local
+/// loop, exchange every τ steps, report measured stats in `Done`.
+pub fn process_worker_main(args: &Args) -> Result<()> {
+    let addr = WireAddr::parse(args.get_str("addr", ""))?;
+    let wid = args.get_usize("wid", 0)?;
+    let method = method_from_args(args)?;
+    let spec = OracleSpec::from_args(args)?;
+    let seed = args.get_u64("seed", 0)?;
+    let max_local = args.get_u64("max_local", u64::MAX / 2)?;
+    let horizon = args.get_f64("horizon", f64::INFINITY)?;
+    let cfg = DriverConfig {
+        eta: args.get_f32("eta", 0.05)?,
+        method,
+        cost: crate::cluster::CostModel::cifar_like(1),
+        horizon,
+        eval_every: horizon,
+        seed,
+        max_steps: max_local,
+        lr_decay_gamma: args.get_f64("gamma", 0.0)?,
+    };
+
+    let mut oracle = spec.build(wid);
+
+    let mut conn = WireStream::connect(&addr)?;
+    let mut ck = WireClock::default();
+    send_frame(&mut conn, &Frame::new(FrameKind::Hello, wid as u32, 0, vec![]), &mut ck)?;
+    let init_frame = recv_frame(&mut conn, &mut ck)
+        .map_err(|e| crate::err!("worker {wid}: master sent no Init: {e}"))?;
+    if init_frame.kind != FrameKind::Init {
+        crate::bail!("worker {wid}: expected Init, got {:?}", init_frame.kind);
+    }
+    if init_frame.payload.len() != oracle.n_params() {
+        crate::bail!(
+            "worker {wid}: Init carries {} params, local oracle has {} — mismatched specs",
+            init_frame.payload.len(),
+            oracle.n_params()
+        );
+    }
+
+    // Reproduce worker `wid`'s RNG stream exactly as
+    // `WorkerState::family` mints it: `Rng::split` advances the root,
+    // so the splits must be replayed in worker order.
+    let mut root = Rng::new(seed);
+    let mut workers = WorkerState::family(&init_frame.payload, wid + 1, &mut root);
+    let mut w = workers.pop().expect("family(wid+1) has wid+1 entries");
+
+    let tau = method.tau().max(1) as u64;
+    let mut compute_ns = 0u64;
+    let mut comm_ns = 0u64;
+    let t_start = Instant::now();
+
+    loop {
+        if w.t_local >= max_local || t_start.elapsed().as_secs_f64() > horizon {
+            break;
+        }
+        // No round at t_local == 0, matching the thread backend.
+        if w.t_local > 0 && w.t_local % tau == 0 {
+            // One communication round: the whole serialize → transfer
+            // → master-update → transfer → deserialize chain is comm
+            // time; `ck` attributes the serialize/transfer shares.
+            let tc = Instant::now();
+            let payload = match method {
+                Method::Easgd { .. } | Method::Eamsgd { .. } => w.theta.clone(),
+                _ => w.aux.clone(),
+            };
+            send_frame(
+                &mut conn,
+                &Frame::new(FrameKind::Push, wid as u32, w.t_local, payload),
+                &mut ck,
+            )?;
+            let reply = recv_frame(&mut conn, &mut ck)
+                .map_err(|e| crate::err!("worker {wid}: master vanished mid-round: {e}"))?;
+            let stop = match reply.kind {
+                FrameKind::Center | FrameKind::Stop => {
+                    w.theta = reply.payload;
+                    if !matches!(method, Method::Easgd { .. } | Method::Eamsgd { .. }) {
+                        w.aux.iter_mut().for_each(|a| *a = 0.0);
+                    }
+                    reply.kind == FrameKind::Stop
+                }
+                other => crate::bail!("worker {wid}: unexpected {other:?} reply"),
+            };
+            comm_ns += tc.elapsed().as_nanos() as u64;
+            if stop {
+                break;
+            }
+        }
+        let t0 = Instant::now();
+        let loss = super::executor::local_step_decoupled(&cfg, &mut w, &mut oracle);
+        compute_ns += t0.elapsed().as_nanos() as u64;
+        if !loss.is_finite() || flat::norm2(&w.theta) > 1e8 {
+            send_frame(
+                &mut conn,
+                &Frame::new(FrameKind::Diverged, wid as u32, w.t_local, vec![]),
+                &mut ck,
+            )?;
+            break;
+        }
+    }
+
+    let stats = vec![
+        (compute_ns as f64 * 1e-9) as f32,
+        (comm_ns as f64 * 1e-9) as f32,
+        ck.serialize_s() as f32,
+        ck.transfer_s() as f32,
+    ];
+    send_frame(&mut conn, &Frame::new(FrameKind::Done, wid as u32, w.t_local, stats), &mut ck)?;
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn oracle_spec_roundtrips_through_args() {
+        let specs = [
+            OracleSpec::Quadratic { n: 512, h: 1.0, x0: 0.0, target: 1.0, noise: 0.25 },
+            OracleSpec::Sweep {
+                model: crate::model::ModelKind::Conv,
+                sharding: crate::data::Sharding::Partitioned,
+                batch: 64,
+                seed: 9,
+            },
+        ];
+        for spec in specs {
+            let args = Args::parse(spec.to_args());
+            assert_eq!(OracleSpec::from_args(&args).unwrap(), spec);
+        }
+    }
+
+    #[test]
+    fn method_roundtrips_through_args() {
+        let methods = [
+            Method::Easgd { alpha: 0.225, tau: 4 },
+            Method::Eamsgd { alpha: 0.1, tau: 8, delta: 0.9 },
+            Method::Downpour { tau: 2 },
+            Method::ADownpour { tau: 3 },
+            Method::MvaDownpour { tau: 5, alpha: 0.01 },
+        ];
+        for m in methods {
+            let args = Args::parse(method_to_args(m).unwrap());
+            assert_eq!(method_from_args(&args).unwrap(), m);
+        }
+    }
+
+    #[test]
+    fn master_coupled_methods_refuse_process_serialization() {
+        let e = method_to_args(Method::MDownpour { delta: 0.9 }).unwrap_err();
+        assert!(format!("{e}").contains("master-coupled"), "{e}");
+        assert!(method_to_args(Method::AdmmAsync { rho: 1.0, tau: 4 }).is_err());
+    }
+
+    #[test]
+    fn quadratic_spec_builds_identical_oracles_across_wids() {
+        let spec = OracleSpec::Quadratic { n: 8, h: 2.0, x0: 0.5, target: 1.0, noise: 0.0 };
+        let a = spec.build(0);
+        let b = spec.build(3);
+        assert_eq!(a.init_params(), b.init_params());
+        assert_eq!(a.n_params(), 8);
+    }
+
+    #[test]
+    fn center_apply_matches_single_shard_elastic_semantics() {
+        let mut st = CenterState {
+            center: vec![0.0; 4],
+            z: None,
+            clock: 0,
+            last_round: vec![0; 2],
+            stale_sum: 0,
+            stale_rounds: 0,
+        };
+        let m = Method::Easgd { alpha: 0.5, tau: 1 };
+        let reply = st.apply(m, 0, &[2.0, 2.0, 2.0, 2.0]).unwrap();
+        // θ' = 2 − 0.5·2 = 1 ; c = 0 + 0.5·2 = 1.
+        assert_eq!(reply, vec![1.0; 4]);
+        assert_eq!(st.center, vec![1.0; 4]);
+        assert_eq!(st.clock, 1);
+        // The second worker's first push sees one stale round (worker
+        // 0's) applied since its baseline.
+        let _ = st.apply(m, 1, &[1.0, 1.0, 1.0, 1.0]).unwrap();
+        assert_eq!(st.stale_sum, 1);
+        assert_eq!(st.last_round, vec![1, 2]);
+    }
+
+    #[test]
+    fn center_apply_rejects_length_mismatch() {
+        let mut st = CenterState {
+            center: vec![0.0; 4],
+            z: None,
+            clock: 0,
+            last_round: vec![0],
+            stale_sum: 0,
+            stale_rounds: 0,
+        };
+        let e = st.apply(Method::Downpour { tau: 1 }, 0, &[1.0]).unwrap_err();
+        assert!(format!("{e}").contains("mismatched"), "{e}");
+    }
+}

@@ -50,12 +50,25 @@ use super::executor::{
 use super::method::Method;
 use super::oracle::GradOracle;
 use crate::cluster::{RunResult, TimeBreakdown};
+use crate::error::Result;
 use crate::model::flat;
 use crate::rng::Rng;
 use std::ops::Range;
+use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::Mutex;
 use std::time::{Duration, Instant};
+
+/// Lock a mutex, recovering the guard from a poisoned lock. Poison
+/// means some thread panicked while holding the guard — the panic
+/// itself is surfaced as a descriptive run error by [`run_with_center`]
+/// (and the center data, scalar writes of f32/u64, is never left
+/// torn), so propagating the secondary `PoisonError` panic out of
+/// every OTHER thread would only bury the real failure. Shared by the
+/// sharded center, the master actor, and the process master.
+pub(crate) fn lock_recover<T>(m: &Mutex<T>) -> std::sync::MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(|poisoned| poisoned.into_inner())
+}
 
 /// Cross-thread run state (borrowed by every worker).
 pub(crate) struct Shared {
@@ -64,6 +77,11 @@ pub(crate) struct Shared {
     pub(crate) diverged: AtomicBool,
     pub(crate) compute_ns: AtomicU64,
     pub(crate) comm_ns: AtomicU64,
+    /// First worker panic `(wid, message)` — the loud, descriptive
+    /// account of a worker death that [`run_with_center`] turns into
+    /// an `Err` instead of resuming the unwind into a mutex-poisoning
+    /// cascade.
+    pub(crate) failure: Mutex<Option<(usize, String)>>,
 }
 
 /// The center variable's concurrency backend for the star thread
@@ -146,14 +164,14 @@ impl ShardedMaster {
         match cfg.method {
             Method::Easgd { alpha, .. } | Method::Eamsgd { alpha, .. } => {
                 for (sh, r) in self.shards.iter().zip(&self.bounds) {
-                    let mut sh = sh.lock().unwrap();
+                    let mut sh = lock_recover(sh);
                     flat::elastic_exchange(&mut w.theta[r.clone()], &mut sh.center, alpha);
                     sh.clock += 1;
                 }
             }
             Method::Downpour { .. } | Method::ADownpour { .. } | Method::MvaDownpour { .. } => {
                 for (sh, r) in self.shards.iter().zip(&self.bounds) {
-                    let mut guard = sh.lock().unwrap();
+                    let mut guard = lock_recover(sh);
                     let sh = &mut *guard;
                     // Alg. 3 on this slice: push accumulated update, pull.
                     flat::accumulate(&mut sh.center, &w.aux[r.clone()]);
@@ -190,7 +208,7 @@ impl CenterBackend for ShardedMaster {
         let n = self.bounds.last().map(|r| r.end).unwrap_or(0);
         let mut out = Vec::with_capacity(n);
         for sh in &self.shards {
-            let sh = sh.lock().unwrap();
+            let sh = lock_recover(sh);
             out.extend_from_slice(sh.z.as_deref().unwrap_or(&sh.center));
         }
         out
@@ -199,7 +217,7 @@ impl CenterBackend for ShardedMaster {
     fn rounds(&self) -> u64 {
         // Every exchange walks every shard exactly once, so any one
         // shard's clock is the round count.
-        self.shards.first().map_or(0, |sh| sh.lock().unwrap().clock)
+        self.shards.first().map_or(0, |sh| lock_recover(sh).clock)
     }
 
     fn step<O: GradOracle>(
@@ -228,6 +246,7 @@ impl CenterBackend for ShardedMaster {
 
 fn worker_loop<O: GradOracle, C: CenterBackend>(
     cfg: &DriverConfig,
+    wid: usize,
     center: &C,
     mut port: C::Port,
     w: &mut WorkerState,
@@ -245,7 +264,27 @@ fn worker_loop<O: GradOracle, C: CenterBackend>(
             sh.stop.store(true, Ordering::Relaxed);
             break;
         }
-        let loss = center.step(cfg, &mut port, w, oracle, sh);
+        // A panicking oracle (or exchange) must not kill the run by
+        // stealth: uncaught, the unwind would poison the center locks,
+        // leave the stop flag unset — so the SURVIVING workers burn
+        // the entire remaining step budget before anyone notices — and
+        // finally resurface as an opaque resume_unwind. Catch it,
+        // record who and why, stop everyone now.
+        let stepped = catch_unwind(AssertUnwindSafe(|| {
+            center.step(cfg, &mut port, w, oracle, sh)
+        }));
+        let loss = match stepped {
+            Ok(loss) => loss,
+            Err(payload) => {
+                let msg = panic_message(&payload);
+                let mut failure = lock_recover(&sh.failure);
+                failure.get_or_insert((wid, msg));
+                sh.stop.store(true, Ordering::Relaxed);
+                // The claimed step never happened.
+                sh.steps.fetch_sub(1, Ordering::Relaxed);
+                break;
+            }
+        };
         if !loss.is_finite() || flat::norm2(&w.theta) > 1e8 {
             sh.diverged.store(true, Ordering::Relaxed);
             sh.stop.store(true, Ordering::Relaxed);
@@ -257,6 +296,18 @@ fn worker_loop<O: GradOracle, C: CenterBackend>(
     // disconnects and `serve` returns.
 }
 
+/// Extract a human-readable message from a panic payload (`&str` and
+/// `String` cover what `panic!` produces).
+fn panic_message(payload: &(dyn std::any::Any + Send)) -> String {
+    if let Some(s) = payload.downcast_ref::<&str>() {
+        (*s).to_string()
+    } else if let Some(s) = payload.downcast_ref::<String>() {
+        s.clone()
+    } else {
+        "panic with a non-string payload".to_string()
+    }
+}
+
 /// The shared star driver: spawn the backend's server (if any) and one
 /// worker thread per oracle, snapshot the eval target at the cadence,
 /// join, score.
@@ -265,7 +316,7 @@ pub(crate) fn run_with_center<O: GradOracle + Send, C: CenterBackend>(
     cfg: &DriverConfig,
     init: Vec<f32>,
     mut center: C,
-) -> RunResult {
+) -> Result<RunResult> {
     let p = oracles.len();
     let mut root_rng = Rng::new(cfg.seed);
     let mut workers = WorkerState::family(&init, p, &mut root_rng);
@@ -278,20 +329,23 @@ pub(crate) fn run_with_center<O: GradOracle + Send, C: CenterBackend>(
         diverged: AtomicBool::new(false),
         compute_ns: AtomicU64::new(0),
         comm_ns: AtomicU64::new(0),
+        failure: Mutex::new(None),
     };
 
     // (real seconds, eval-target snapshot) pairs, scored after the join.
     let mut snaps: Vec<(f64, Vec<f32>)> = Vec::new();
     let t0 = Instant::now();
+    let mut server_panicked = false;
     std::thread::scope(|s| {
         let server = s.spawn(move || center.serve());
         let handles: Vec<_> = workers
             .iter_mut()
             .zip(oracles.iter_mut())
             .zip(ports)
-            .map(|((w, o), port)| {
+            .enumerate()
+            .map(|(wid, ((w, o), port))| {
                 let shared = &shared;
-                s.spawn(move || worker_loop(cfg, center, port, w, o, shared))
+                s.spawn(move || worker_loop(cfg, wid, center, port, w, o, shared))
             })
             .collect();
         let cadence = cfg.eval_every.max(1e-3);
@@ -310,18 +364,27 @@ pub(crate) fn run_with_center<O: GradOracle + Send, C: CenterBackend>(
             }
             std::thread::sleep(Duration::from_micros(200));
         }
-        // Scope joins on exit; propagate panics eagerly. Workers first
-        // (dropping their ports), then the server, whose receive loop
-        // disconnects once the last port is gone.
+        // Workers join first (dropping their ports), then the server,
+        // whose receive loop disconnects once the last port is gone.
+        // worker_loop catches its own panics into `shared.failure`, so
+        // a join error here cannot happen short of a harness bug; the
+        // server's serve loop owns no oracle code but is recorded too.
         for h in handles {
-            if let Err(e) = h.join() {
-                std::panic::resume_unwind(e);
-            }
+            let _ = h.join();
         }
-        if let Err(e) = server.join() {
-            std::panic::resume_unwind(e);
+        if server.join().is_err() {
+            server_panicked = true;
         }
     });
+    if let Some((wid, msg)) = lock_recover(&shared.failure).take() {
+        return Err(crate::err!(
+            "worker {wid} died mid-run: {msg} (the run was stopped; the center state was \
+             recovered, not trusted)"
+        ));
+    }
+    if server_panicked {
+        return Err(crate::err!("the center's master thread panicked mid-run"));
+    }
     snaps.push((t0.elapsed().as_secs_f64(), center.snapshot()));
 
     let mut result = RunResult::default();
@@ -337,21 +400,25 @@ pub(crate) fn run_with_center<O: GradOracle + Send, C: CenterBackend>(
         compute: shared.compute_ns.load(Ordering::Relaxed) as f64 * 1e-9,
         data: 0.0,
         comm: shared.comm_ns.load(Ordering::Relaxed) as f64 * 1e-9,
+        serialize: 0.0,
+        transfer: 0.0,
     };
     result.diverged = diverged;
-    result
+    Ok(result)
 }
 
 /// Run one distributed experiment on real threads. `oracles[i]` is
 /// worker i's gradient computer; `oracles[0]` doubles as the (post-run)
 /// evaluator. `n_shards` is the center lock granularity for the
 /// sharded backend (master-coupled methods serialize through the actor
-/// instead and ignore it).
+/// instead and ignore it). A worker dying mid-run (a panicking oracle)
+/// returns a descriptive `Err` naming the worker — promptly, without
+/// letting the survivors burn the remaining step budget.
 pub fn run_threaded<O: GradOracle + Send>(
     oracles: &mut [O],
     cfg: &DriverConfig,
     n_shards: usize,
-) -> RunResult {
+) -> Result<RunResult> {
     let p = oracles.len();
     assert!(p >= 1);
     let init = oracles[0].init_params();
@@ -394,7 +461,7 @@ mod tests {
         let data = Arc::new(BlobDataset::generate(8, 4, 1024, 256, 0.8, 1));
         let mcfg = MlpConfig::new(&[8, 16, 4], 1e-4);
         let mut oracles = MlpOracle::family(data, &mcfg, 32, 4);
-        let r = run_threaded(&mut oracles, &cfg(Method::easgd_default(4, 4), 2000), 8);
+        let r = run_threaded(&mut oracles, &cfg(Method::easgd_default(4, 4), 2000), 8).unwrap();
         assert!(!r.diverged);
         assert_eq!(r.total_steps, 2000);
         let first = r.curve.first().unwrap().train_loss;
@@ -405,7 +472,7 @@ mod tests {
     #[test]
     fn threaded_respects_step_budget_and_counts() {
         let mut oracles = QuadraticOracle::family(64, 1.0, 0.0, 1.0, 0.0, 3);
-        let r = run_threaded(&mut oracles, &cfg(Method::easgd_default(3, 2), 500), 4);
+        let r = run_threaded(&mut oracles, &cfg(Method::easgd_default(3, 2), 500), 4).unwrap();
         assert_eq!(r.total_steps, 500);
         assert!(!r.diverged);
         assert!(r.curve.len() >= 2); // initial + final snapshot
@@ -422,7 +489,7 @@ mod tests {
             let mut oracles = QuadraticOracle::family(64, 1.0, 0.0, 1.0, 0.0, 2);
             let mut c = cfg(method, 2000);
             c.eta = 0.05;
-            let r = run_threaded(&mut oracles, &c, 4);
+            let r = run_threaded(&mut oracles, &c, 4).unwrap();
             assert!(!r.diverged, "{}", method.name());
             let last = r.curve.last().unwrap().train_loss;
             assert!(last < 0.1, "{}: final loss {last}", method.name());
@@ -434,7 +501,7 @@ mod tests {
         let mut oracles = QuadraticOracle::family(7, 2.0, 0.0, 1.0, 0.0, 1);
         let mut c = cfg(Method::easgd_default(1, 1), 800);
         c.eta = 0.1;
-        let r = run_threaded(&mut oracles, &c, 1);
+        let r = run_threaded(&mut oracles, &c, 1).unwrap();
         assert!(!r.diverged);
         assert!(r.curve.last().unwrap().train_loss < 1e-3);
     }
@@ -447,7 +514,7 @@ mod tests {
         let mut oracles = QuadraticOracle::family(16, 1.0, 0.0, 1.0, 0.0, 1);
         let mut c = cfg(Method::ADownpour { tau: 1 }, 400);
         c.eta = 0.05;
-        let r = run_threaded(&mut oracles, &c, 4);
+        let r = run_threaded(&mut oracles, &c, 4).unwrap();
         assert!(!r.diverged);
         assert_eq!(r.total_steps, 400);
         assert_eq!(r.rounds, 399);
@@ -458,7 +525,7 @@ mod tests {
         let mut oracles = QuadraticOracle::family(32, 1.0, 0.0, 1.0, 0.0, 2);
         let mut c = cfg(Method::MDownpour { delta: 0.9 }, 4000);
         c.eta = 0.01;
-        let r = run_threaded(&mut oracles, &c, 4);
+        let r = run_threaded(&mut oracles, &c, 4).unwrap();
         assert!(!r.diverged);
         assert_eq!(r.total_steps, 4000);
         // Master momentum pushes the center all the way to the target.
@@ -472,7 +539,7 @@ mod tests {
         let mut oracles = QuadraticOracle::family(32, 1.0, 0.0, 1.0, 0.0, 2);
         let mut c = cfg(Method::AdmmAsync { rho: 1.0, tau: 4 }, 8000);
         c.eta = 0.05;
-        let r = run_threaded(&mut oracles, &c, 4);
+        let r = run_threaded(&mut oracles, &c, 4).unwrap();
         assert!(!r.diverged);
         assert_eq!(r.total_steps, 8000);
         assert!(r.curve.last().unwrap().train_loss < 1e-4);

@@ -361,6 +361,8 @@ pub fn run_tree_threaded<O: GradOracle + Send>(
         compute: shared.compute_ns.load(Ordering::Relaxed) as f64 * 1e-9,
         data: 0.0,
         comm: shared.comm_ns.load(Ordering::Relaxed) as f64 * 1e-9,
+        serialize: 0.0,
+        transfer: 0.0,
     };
     result.diverged = diverged;
     Ok(result)

@@ -1,0 +1,499 @@
+//! The process backend's wire format: length-prefixed flat-θ frames
+//! over TCP or Unix-domain sockets (`super::process`).
+//!
+//! One frame is a fixed little-endian header followed by an f32
+//! payload:
+//!
+//! ```text
+//! magic   u32   0x45545746 ("ETWF")
+//! version u16   1
+//! kind    u8    FrameKind discriminant
+//! wid     u32   sender worker id (0 on master->worker frames)
+//! clock   u64   sender's local clock (t_local / step count)
+//! n       u32   payload length in f32 elements
+//! payload n×f32
+//! ```
+//!
+//! Hand-rolled on `std::io` — no serde, no new dependencies — because
+//! the point of the process tier is that serialize/deserialize and
+//! socket transfer are REAL measured costs: [`send_frame`] /
+//! [`recv_frame`] time the encode/decode separately from the socket
+//! write/read and accumulate both into a [`WireClock`], which the
+//! process backend feeds into the run's comm-time breakdown
+//! (`TimeBreakdown::serialize` / `TimeBreakdown::transfer`).
+//!
+//! Failures are loud by construction: a bad magic, an unknown version,
+//! an unknown frame kind, or an oversized length prefix each produce a
+//! descriptive error instead of a silent desync, and an EOF mid-frame
+//! names how far the frame got.
+
+use crate::error::Result;
+use std::io::{Read, Write};
+use std::time::Instant;
+
+pub const MAGIC: u32 = 0x4554_5746; // "ETWF"
+pub const VERSION: u16 = 1;
+/// Frame header bytes: magic + version + kind + wid + clock + n.
+pub const HEADER_BYTES: usize = 4 + 2 + 1 + 4 + 8 + 4;
+/// Refuse length prefixes above this many f32s (1 GiB of payload) —
+/// a corrupt or misaligned stream fails here instead of allocating.
+const MAX_PAYLOAD: u32 = 1 << 28;
+
+/// Frame discriminants of the master⇄worker protocol.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+#[repr(u8)]
+pub enum FrameKind {
+    /// Worker's first frame: announces `wid`, empty payload.
+    Hello = 0,
+    /// Master's reply to Hello: the shared init θ.
+    Init = 1,
+    /// Worker → master exchange payload (θ for the elastic methods,
+    /// the accumulated update for the DOWNPOUR family).
+    Push = 2,
+    /// Master → worker exchange reply (the worker's next read of the
+    /// center / its updated θ).
+    Center = 3,
+    /// Master → worker: horizon reached, finish up. Payload like
+    /// `Center` so the worker's last exchange still applies.
+    Stop = 4,
+    /// Worker's final frame: `clock` = local steps taken, payload =
+    /// measured [compute_s, comm_s, serialize_s, transfer_s].
+    Done = 5,
+    /// Worker → master: local divergence (non-finite loss / exploding
+    /// θ). Empty payload.
+    Diverged = 6,
+}
+
+impl FrameKind {
+    fn from_u8(b: u8) -> Result<FrameKind> {
+        Ok(match b {
+            0 => FrameKind::Hello,
+            1 => FrameKind::Init,
+            2 => FrameKind::Push,
+            3 => FrameKind::Center,
+            4 => FrameKind::Stop,
+            5 => FrameKind::Done,
+            6 => FrameKind::Diverged,
+            other => return Err(crate::err!("unknown wire frame kind {other}")),
+        })
+    }
+}
+
+/// One protocol frame.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Frame {
+    pub kind: FrameKind,
+    pub wid: u32,
+    pub clock: u64,
+    pub payload: Vec<f32>,
+}
+
+impl Frame {
+    pub fn new(kind: FrameKind, wid: u32, clock: u64, payload: Vec<f32>) -> Frame {
+        Frame { kind, wid, clock, payload }
+    }
+}
+
+/// Per-endpoint accumulator of measured wire costs.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct WireClock {
+    /// Nanoseconds spent encoding/decoding frames (f32 ⇄ bytes).
+    pub serialize_ns: u64,
+    /// Nanoseconds spent in socket write/flush/read calls.
+    pub transfer_ns: u64,
+    /// Frames sent + received.
+    pub frames: u64,
+    /// Payload bytes sent + received (header excluded: the interesting
+    /// quantity is the θ message size the thesis' cost model prices).
+    pub payload_bytes: u64,
+}
+
+impl WireClock {
+    pub fn serialize_s(&self) -> f64 {
+        self.serialize_ns as f64 * 1e-9
+    }
+
+    pub fn transfer_s(&self) -> f64 {
+        self.transfer_ns as f64 * 1e-9
+    }
+}
+
+/// Encode and write one frame; encode time lands in
+/// `clock.serialize_ns`, the socket write in `clock.transfer_ns`.
+pub fn send_frame<W: Write>(w: &mut W, frame: &Frame, clock: &mut WireClock) -> Result<()> {
+    let t0 = Instant::now();
+    let mut buf = Vec::with_capacity(HEADER_BYTES + frame.payload.len() * 4);
+    buf.extend_from_slice(&MAGIC.to_le_bytes());
+    buf.extend_from_slice(&VERSION.to_le_bytes());
+    buf.push(frame.kind as u8);
+    buf.extend_from_slice(&frame.wid.to_le_bytes());
+    buf.extend_from_slice(&frame.clock.to_le_bytes());
+    buf.extend_from_slice(&(frame.payload.len() as u32).to_le_bytes());
+    for &x in &frame.payload {
+        buf.extend_from_slice(&x.to_le_bytes());
+    }
+    clock.serialize_ns += t0.elapsed().as_nanos() as u64;
+
+    let t1 = Instant::now();
+    w.write_all(&buf)
+        .map_err(|e| crate::err!("socket write failed ({:?} frame): {e}", frame.kind))?;
+    w.flush()
+        .map_err(|e| crate::err!("socket flush failed ({:?} frame): {e}", frame.kind))?;
+    clock.transfer_ns += t1.elapsed().as_nanos() as u64;
+    clock.frames += 1;
+    clock.payload_bytes += (frame.payload.len() * 4) as u64;
+    Ok(())
+}
+
+/// Read and decode one frame; the socket reads land in
+/// `clock.transfer_ns`, the decode in `clock.serialize_ns`.
+pub fn recv_frame<R: Read>(r: &mut R, clock: &mut WireClock) -> Result<Frame> {
+    let mut header = [0u8; HEADER_BYTES];
+    let t0 = Instant::now();
+    r.read_exact(&mut header)
+        .map_err(|e| crate::err!("socket closed mid-stream (reading frame header): {e}"))?;
+    clock.transfer_ns += t0.elapsed().as_nanos() as u64;
+
+    let t1 = Instant::now();
+    let magic = u32::from_le_bytes(header[0..4].try_into().unwrap());
+    if magic != MAGIC {
+        return Err(crate::err!(
+            "bad frame magic 0x{magic:08x} (expected 0x{MAGIC:08x}) — stream desynced or not a wire peer"
+        ));
+    }
+    let version = u16::from_le_bytes(header[4..6].try_into().unwrap());
+    if version != VERSION {
+        return Err(crate::err!(
+            "wire version mismatch: peer speaks v{version}, this binary speaks v{VERSION}"
+        ));
+    }
+    let kind = FrameKind::from_u8(header[6])?;
+    let wid = u32::from_le_bytes(header[7..11].try_into().unwrap());
+    let fclock = u64::from_le_bytes(header[11..19].try_into().unwrap());
+    let n = u32::from_le_bytes(header[19..23].try_into().unwrap());
+    if n > MAX_PAYLOAD {
+        return Err(crate::err!(
+            "frame length prefix {n} f32s exceeds the {MAX_PAYLOAD} cap — corrupt stream?"
+        ));
+    }
+    clock.serialize_ns += t1.elapsed().as_nanos() as u64;
+
+    let mut bytes = vec![0u8; n as usize * 4];
+    let t2 = Instant::now();
+    r.read_exact(&mut bytes).map_err(|e| {
+        crate::err!("socket closed mid-stream (reading {n}-f32 {kind:?} payload): {e}")
+    })?;
+    clock.transfer_ns += t2.elapsed().as_nanos() as u64;
+
+    let t3 = Instant::now();
+    let payload: Vec<f32> = bytes
+        .chunks_exact(4)
+        .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
+        .collect();
+    clock.serialize_ns += t3.elapsed().as_nanos() as u64;
+    clock.frames += 1;
+    clock.payload_bytes += (n as usize * 4) as u64;
+    Ok(Frame { kind, wid, clock: fclock, payload })
+}
+
+/// The transport address the master binds and workers dial, chosen by
+/// the `transport=tcp|unix` knob. Round-trips through a CLI argument
+/// (`addr=`) so the self-exec'd worker reconnects to the same endpoint.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum WireAddr {
+    /// `host:port`; port 0 means "bind ephemeral" (the master passes
+    /// the actual bound address to the workers).
+    Tcp(String),
+    #[cfg(unix)]
+    Unix(std::path::PathBuf),
+}
+
+impl WireAddr {
+    /// The `addr=` argument value: `tcp:host:port` or `unix:/path`.
+    pub fn to_arg(&self) -> String {
+        match self {
+            WireAddr::Tcp(hp) => format!("tcp:{hp}"),
+            #[cfg(unix)]
+            WireAddr::Unix(p) => format!("unix:{}", p.display()),
+        }
+    }
+
+    pub fn parse(s: &str) -> Result<WireAddr> {
+        if let Some(hp) = s.strip_prefix("tcp:") {
+            Ok(WireAddr::Tcp(hp.to_string()))
+        } else if let Some(path) = s.strip_prefix("unix:") {
+            #[cfg(unix)]
+            {
+                Ok(WireAddr::Unix(std::path::PathBuf::from(path)))
+            }
+            #[cfg(not(unix))]
+            {
+                let _ = path;
+                Err(crate::err!("unix-domain sockets are not available on this platform"))
+            }
+        } else {
+            Err(crate::err!(
+                "invalid wire address '{s}' (expected tcp:host:port or unix:/path)"
+            ))
+        }
+    }
+}
+
+/// A connected stream of either transport.
+pub enum WireStream {
+    Tcp(std::net::TcpStream),
+    #[cfg(unix)]
+    Unix(std::os::unix::net::UnixStream),
+}
+
+impl Read for WireStream {
+    fn read(&mut self, buf: &mut [u8]) -> std::io::Result<usize> {
+        match self {
+            WireStream::Tcp(s) => s.read(buf),
+            #[cfg(unix)]
+            WireStream::Unix(s) => s.read(buf),
+        }
+    }
+}
+
+impl Write for WireStream {
+    fn write(&mut self, buf: &[u8]) -> std::io::Result<usize> {
+        match self {
+            WireStream::Tcp(s) => s.write(buf),
+            #[cfg(unix)]
+            WireStream::Unix(s) => s.write(buf),
+        }
+    }
+
+    fn flush(&mut self) -> std::io::Result<()> {
+        match self {
+            WireStream::Tcp(s) => s.flush(),
+            #[cfg(unix)]
+            WireStream::Unix(s) => s.flush(),
+        }
+    }
+}
+
+impl WireStream {
+    /// Dial the master, retrying briefly (the worker process can win
+    /// the race against the master's accept loop, never its bind —
+    /// the listener exists before the worker is spawned).
+    pub fn connect(addr: &WireAddr) -> Result<WireStream> {
+        let deadline = Instant::now() + std::time::Duration::from_secs(10);
+        loop {
+            let attempt = match addr {
+                WireAddr::Tcp(hp) => std::net::TcpStream::connect(hp).map(WireStream::Tcp),
+                #[cfg(unix)]
+                WireAddr::Unix(p) => {
+                    std::os::unix::net::UnixStream::connect(p).map(WireStream::Unix)
+                }
+            };
+            match attempt {
+                Ok(s) => {
+                    if let WireStream::Tcp(t) = &s {
+                        // θ frames are latency-bound round trips.
+                        let _ = t.set_nodelay(true);
+                    }
+                    return Ok(s);
+                }
+                Err(e) if Instant::now() < deadline => {
+                    let _ = e;
+                    std::thread::sleep(std::time::Duration::from_millis(20));
+                }
+                Err(e) => {
+                    return Err(crate::err!("cannot connect to master at {}: {e}", addr.to_arg()))
+                }
+            }
+        }
+    }
+}
+
+/// A bound listener of either transport.
+pub enum WireListener {
+    Tcp(std::net::TcpListener),
+    #[cfg(unix)]
+    Unix(std::os::unix::net::UnixListener),
+}
+
+impl WireListener {
+    /// Bind `addr`; returns the listener and the ACTUAL address (TCP
+    /// port 0 resolves to the ephemeral port the workers must dial).
+    pub fn bind(addr: &WireAddr) -> Result<(WireListener, WireAddr)> {
+        match addr {
+            WireAddr::Tcp(hp) => {
+                let l = std::net::TcpListener::bind(hp)
+                    .map_err(|e| crate::err!("cannot bind tcp listener on {hp}: {e}"))?;
+                let actual = l
+                    .local_addr()
+                    .map_err(|e| crate::err!("cannot resolve bound tcp address: {e}"))?;
+                Ok((WireListener::Tcp(l), WireAddr::Tcp(actual.to_string())))
+            }
+            #[cfg(unix)]
+            WireAddr::Unix(p) => {
+                // A stale socket file from a killed run blocks bind.
+                let _ = std::fs::remove_file(p);
+                let l = std::os::unix::net::UnixListener::bind(p)
+                    .map_err(|e| crate::err!("cannot bind unix listener at {}: {e}", p.display()))?;
+                Ok((WireListener::Unix(l), WireAddr::Unix(p.clone())))
+            }
+        }
+    }
+
+    /// Accept one worker connection, or error after `timeout` —
+    /// a worker that died before dialing must fail the run loudly, not
+    /// hang the master's accept loop forever.
+    pub fn accept_timeout(&self, timeout: std::time::Duration) -> Result<WireStream> {
+        let deadline = Instant::now() + timeout;
+        self.set_nonblocking(true)?;
+        let out = loop {
+            let attempt = match self {
+                WireListener::Tcp(l) => l.accept().map(|(s, _)| WireStream::Tcp(s)),
+                #[cfg(unix)]
+                WireListener::Unix(l) => l.accept().map(|(s, _)| WireStream::Unix(s)),
+            };
+            match attempt {
+                Ok(s) => break s,
+                Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                    if Instant::now() >= deadline {
+                        return Err(crate::err!(
+                            "no worker connected within {:.0?} — did a worker process die on startup?",
+                            timeout
+                        ));
+                    }
+                    std::thread::sleep(std::time::Duration::from_millis(5));
+                }
+                Err(e) => return Err(crate::err!("accept failed: {e}")),
+            }
+        };
+        self.set_nonblocking(false)?;
+        if let WireStream::Tcp(t) = &out {
+            let _ = t.set_nodelay(true);
+        }
+        Ok(out)
+    }
+
+    fn set_nonblocking(&self, nb: bool) -> Result<()> {
+        match self {
+            WireListener::Tcp(l) => l.set_nonblocking(nb),
+            #[cfg(unix)]
+            WireListener::Unix(l) => l.set_nonblocking(nb),
+        }
+        .map_err(|e| crate::err!("set_nonblocking({nb}) failed: {e}"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn frame_roundtrip_preserves_everything() {
+        let f = Frame::new(FrameKind::Push, 3, 41, vec![1.0, -2.5, 0.0, f32::MIN_POSITIVE]);
+        let mut buf = Vec::new();
+        let mut ck = WireClock::default();
+        send_frame(&mut buf, &f, &mut ck).unwrap();
+        assert_eq!(buf.len(), HEADER_BYTES + 16);
+        let g = recv_frame(&mut buf.as_slice(), &mut ck).unwrap();
+        assert_eq!(f, g);
+        assert_eq!(ck.frames, 2);
+        assert_eq!(ck.payload_bytes, 32);
+        assert!(ck.serialize_ns > 0);
+    }
+
+    #[test]
+    fn empty_payload_frames_work() {
+        let f = Frame::new(FrameKind::Hello, 7, 0, vec![]);
+        let mut buf = Vec::new();
+        let mut ck = WireClock::default();
+        send_frame(&mut buf, &f, &mut ck).unwrap();
+        let g = recv_frame(&mut buf.as_slice(), &mut ck).unwrap();
+        assert_eq!(g.kind, FrameKind::Hello);
+        assert_eq!(g.wid, 7);
+        assert!(g.payload.is_empty());
+    }
+
+    #[test]
+    fn bad_magic_is_a_descriptive_error() {
+        let mut buf = vec![0xDEu8; HEADER_BYTES];
+        let e = recv_frame(&mut buf.as_slice(), &mut WireClock::default()).unwrap_err();
+        assert!(format!("{e}").contains("magic"), "{e}");
+    }
+
+    #[test]
+    fn version_mismatch_is_a_descriptive_error() {
+        let f = Frame::new(FrameKind::Init, 0, 0, vec![1.0]);
+        let mut buf = Vec::new();
+        send_frame(&mut buf, &f, &mut WireClock::default()).unwrap();
+        buf[4] = 99; // stomp the version field
+        let e = recv_frame(&mut buf.as_slice(), &mut WireClock::default()).unwrap_err();
+        assert!(format!("{e}").contains("version"), "{e}");
+    }
+
+    #[test]
+    fn unknown_kind_and_oversized_length_are_rejected() {
+        let f = Frame::new(FrameKind::Init, 0, 0, vec![]);
+        let mut buf = Vec::new();
+        send_frame(&mut buf, &f, &mut WireClock::default()).unwrap();
+        let mut bad_kind = buf.clone();
+        bad_kind[6] = 42;
+        let e = recv_frame(&mut bad_kind.as_slice(), &mut WireClock::default()).unwrap_err();
+        assert!(format!("{e}").contains("kind"), "{e}");
+        let mut bad_len = buf;
+        bad_len[19..23].copy_from_slice(&u32::MAX.to_le_bytes());
+        let e = recv_frame(&mut bad_len.as_slice(), &mut WireClock::default()).unwrap_err();
+        assert!(format!("{e}").contains("cap"), "{e}");
+    }
+
+    #[test]
+    fn truncated_stream_names_the_failure_point() {
+        let f = Frame::new(FrameKind::Center, 1, 5, vec![1.0, 2.0, 3.0]);
+        let mut buf = Vec::new();
+        send_frame(&mut buf, &f, &mut WireClock::default()).unwrap();
+        buf.truncate(HEADER_BYTES + 4); // header + 1 of 3 payload f32s
+        let e = recv_frame(&mut buf.as_slice(), &mut WireClock::default()).unwrap_err();
+        assert!(format!("{e}").contains("payload"), "{e}");
+        let mut short = vec![0u8; 3];
+        short.copy_from_slice(&MAGIC.to_le_bytes()[..3]);
+        let e = recv_frame(&mut short.as_slice(), &mut WireClock::default()).unwrap_err();
+        assert!(format!("{e}").contains("header"), "{e}");
+    }
+
+    #[test]
+    fn addr_arg_roundtrip() {
+        let a = WireAddr::Tcp("127.0.0.1:4477".into());
+        assert_eq!(WireAddr::parse(&a.to_arg()).unwrap(), a);
+        #[cfg(unix)]
+        {
+            let u = WireAddr::Unix(std::path::PathBuf::from("/tmp/et.sock"));
+            assert_eq!(WireAddr::parse(&u.to_arg()).unwrap(), u);
+        }
+        assert!(WireAddr::parse("carrier-pigeon:coop").is_err());
+    }
+
+    #[test]
+    fn tcp_listener_roundtrip_one_frame() {
+        let (l, actual) = WireListener::bind(&WireAddr::Tcp("127.0.0.1:0".into())).unwrap();
+        let dial = actual.clone();
+        let t = std::thread::spawn(move || {
+            let mut s = WireStream::connect(&dial).unwrap();
+            let mut ck = WireClock::default();
+            send_frame(&mut s, &Frame::new(FrameKind::Hello, 9, 0, vec![]), &mut ck).unwrap();
+            let reply = recv_frame(&mut s, &mut ck).unwrap();
+            (reply, ck)
+        });
+        let mut conn = l.accept_timeout(std::time::Duration::from_secs(5)).unwrap();
+        let mut ck = WireClock::default();
+        let hello = recv_frame(&mut conn, &mut ck).unwrap();
+        assert_eq!(hello.kind, FrameKind::Hello);
+        assert_eq!(hello.wid, 9);
+        send_frame(
+            &mut conn,
+            &Frame::new(FrameKind::Init, 0, 0, vec![0.5; 64]),
+            &mut ck,
+        )
+        .unwrap();
+        let (reply, worker_ck) = t.join().unwrap();
+        assert_eq!(reply.payload, vec![0.5; 64]);
+        assert!(worker_ck.transfer_ns > 0, "socket time must be measured");
+    }
+}

@@ -59,6 +59,49 @@ pub fn bench<F: FnMut()>(name: &str, target_ms: f64, batches: usize, mut f: F) -
     s
 }
 
+/// Short git SHA of HEAD (the bench-history key); "unknown" outside a
+/// git checkout.
+pub fn git_sha() -> String {
+    std::process::Command::new("git")
+        .args(["rev-parse", "--short=12", "HEAD"])
+        .current_dir(env!("CARGO_MANIFEST_DIR"))
+        .output()
+        .ok()
+        .filter(|o| o.status.success())
+        .and_then(|o| String::from_utf8(o.stdout).ok())
+        .map(|s| s.trim().to_string())
+        .filter(|s| !s.is_empty())
+        .unwrap_or_else(|| "unknown".to_string())
+}
+
+/// Seconds since the Unix epoch (history-entry timestamp).
+pub fn unix_time() -> u64 {
+    std::time::SystemTime::now()
+        .duration_since(std::time::UNIX_EPOCH)
+        .map(|d| d.as_secs())
+        .unwrap_or(0)
+}
+
+/// Append `entry` (one JSON object, pre-indented) to the history array
+/// at `path`. The file is a JSON array of per-run entries; a legacy
+/// single-object file (the pre-history format) or a missing/corrupt
+/// file starts a fresh array.
+pub fn append_history(path: &str, entry: &str) {
+    let existing = std::fs::read_to_string(path).unwrap_or_default();
+    let trimmed = existing.trim();
+    let body = if trimmed.starts_with('[') && trimmed.ends_with(']') {
+        let inner = trimmed[1..trimmed.len() - 1].trim_end();
+        if inner.trim().is_empty() {
+            format!("[\n{entry}\n]\n")
+        } else {
+            format!("[{inner},\n{entry}\n]\n")
+        }
+    } else {
+        format!("[\n{entry}\n]\n")
+    };
+    std::fs::write(path, body).unwrap_or_else(|e| panic!("write {path}: {e}"));
+}
+
 /// Pretty time for summaries.
 pub fn fmt_ns(ns: f64) -> String {
     if ns < 1e3 {
@@ -84,6 +127,23 @@ mod tests {
         });
         assert!(s.median_ns > 0.0 && s.median_ns < 1e6);
         assert!(s.iters >= 1);
+    }
+
+    #[test]
+    fn append_history_grows_an_array_and_recovers_from_junk() {
+        let path = std::env::temp_dir().join(format!("et_hist_{}.json", std::process::id()));
+        let p = path.to_str().unwrap();
+        let _ = std::fs::remove_file(p);
+        append_history(p, "  {\"a\": 1}");
+        append_history(p, "  {\"b\": 2}");
+        let s = std::fs::read_to_string(p).unwrap();
+        assert!(s.trim_start().starts_with('['), "{s}");
+        assert!(s.contains("\"a\"") && s.contains("\"b\""), "{s}");
+        std::fs::write(p, "not json").unwrap();
+        append_history(p, "  {\"c\": 3}");
+        let s = std::fs::read_to_string(p).unwrap();
+        assert!(s.contains("\"c\"") && !s.contains("not json"), "{s}");
+        let _ = std::fs::remove_file(p);
     }
 
     #[test]

@@ -107,6 +107,18 @@ impl Sweep {
             max_steps: 40_000_000,
             lr_decay_gamma: gamma,
         };
+        if self.backend == Backend::Process {
+            // Workers are separate OS processes; they rebuild this
+            // sweep's oracle from the serializable spec.
+            let spec = crate::coordinator::OracleSpec::Sweep {
+                model: self.model,
+                sharding: self.sharding,
+                batch: 32,
+                seed: self.seed,
+            };
+            let opts = crate::coordinator::ProcessOpts::default();
+            return crate::coordinator::run_process(&spec, p, &cfg, &opts);
+        }
         match self.model {
             ModelKind::Mlp => {
                 let mut oracles =

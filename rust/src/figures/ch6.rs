@@ -33,7 +33,10 @@ fn tree_time(opts: &FigOpts) -> (f64, f64) {
                 (45.0, 2.5)
             }
         }
-        Backend::Thread => {
+        // Trees don't run on the process backend (star only); if a
+        // caller tries anyway, `check_supported` refuses downstream —
+        // use the wall-clock horizons so the refusal is immediate.
+        Backend::Thread | Backend::Process => {
             if opts.full {
                 (60.0, 2.5)
             } else {

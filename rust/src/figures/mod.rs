@@ -57,8 +57,8 @@ impl FigOpts {
         };
         Ok(FigOpts {
             out_dir: args.get_str("out-dir", "out").to_string(),
-            full: args.get_bool("full", false),
-            seed: args.get_u64("seed", 0),
+            full: args.get_bool("full", false)?,
+            seed: args.get_u64("seed", 0)?,
             backend,
             model,
         })

@@ -6,11 +6,13 @@
 //!   repro train [method=easgd|eamsgd|downpour|...] [p=4] [tau=10]
 //!               [eta=0.05] [horizon=60] [cost=cifar|imagenet]
 //!               [sharding=replicated|partitioned] [model=mlp|conv]
-//!               [backend=sim|thread] [topology=star|tree] ...
+//!               [backend=sim|thread|process] [topology=star|tree] ...
 //!       One distributed run on the native-MLP sweep workload; prints
 //!       the tracked-variable curve. Every parallel method runs on
-//!       both backends (the thread backend serializes MDOWNPOUR and
-//!       async ADMM through a master-actor thread). With
+//!       the sim and thread backends (the thread backend serializes
+//!       MDOWNPOUR and async ADMM through a master-actor thread); the
+//!       process backend runs the master-decoupled star methods over
+//!       real sockets with workers as separate OS processes. With
 //!       topology=tree, p counts the LEAVES and
 //!       degree=/scheme=/tau1=/tau2=/tau_up=/tau_down= shape the
 //!       d-ary tree (thesis Ch. 6).
@@ -22,8 +24,9 @@
 use elastic_train::bail;
 use elastic_train::config::{Args, ExperimentConfig};
 use elastic_train::coordinator::{
-    run_sequential, run_with_backend_topology, Backend, ConvOracle, DriverConfig, Method,
-    MlpOracle, Topology, TreeScheme, TreeSpec,
+    process_worker_main, run_process, run_sequential, run_with_backend_topology, Backend,
+    ConvOracle, DriverConfig, Method, MlpOracle, OracleSpec, ProcessOpts, Topology, TreeScheme,
+    TreeSpec,
 };
 use elastic_train::error::Result;
 use elastic_train::figures::{self, FigOpts};
@@ -44,6 +47,11 @@ fn main() {
 
 fn run() -> Result<()> {
     let args = Args::from_env();
+    // Hidden entry point: `repro --process-worker addr=... wid=...`.
+    // The process backend self-execs this binary for each worker.
+    if args.get("process-worker").is_some() {
+        return process_worker_main(&args);
+    }
     match args.positional.first().map(|s| s.as_str()) {
         Some("figure") => cmd_figure(&args),
         Some("train") => cmd_train(&args),
@@ -53,7 +61,7 @@ fn run() -> Result<()> {
             eprintln!(
                 "usage: repro <figure|train|train-pjrt|inspect> [key=value ...]\n\
                  figures:  repro figure list\n\
-                 backend:  train/figure accept backend=sim|thread\n\
+                 backend:  train/figure accept backend=sim|thread|process\n\
                  model:    train/figure accept model=mlp|conv (native oracle)\n\
                  data:     train accepts sharding=replicated|partitioned (§4.1)\n\
                  topology: train accepts topology=star|tree; with tree:\n\
@@ -82,15 +90,15 @@ fn topology_from_args(args: &Args) -> Result<Topology> {
     match args.get_str("topology", "star") {
         "star" => Ok(Topology::Star),
         "tree" => {
-            let degree = args.get_usize("degree", 4);
+            let degree = args.get_usize("degree", 4)?;
             let scheme = match args.get_str("scheme", "multiscale") {
                 "multiscale" | "1" => TreeScheme::MultiScale {
-                    tau1: args.get_u32("tau1", 10),
-                    tau2: args.get_u32("tau2", 100),
+                    tau1: args.get_u32("tau1", 10)?,
+                    tau2: args.get_u32("tau2", 100)?,
                 },
                 "updown" | "2" => TreeScheme::UpDown {
-                    tau_up: args.get_u32("tau_up", 1),
-                    tau_down: args.get_u32("tau_down", 10),
+                    tau_up: args.get_u32("tau_up", 1)?,
+                    tau_down: args.get_u32("tau_down", 10)?,
                 },
                 other => bail!("unknown scheme '{other}' (multiscale|updown)"),
             };
@@ -105,7 +113,8 @@ fn cmd_train(args: &Args) -> Result<()> {
     if let Some(path) = args.get("config") {
         cfg = ExperimentConfig::from_file(path)?;
     }
-    cfg.apply_args(args);
+    cfg.apply_args(args)?;
+    cfg.validate()?;
 
     let data = elastic_train::figures::ch4::sweep_data(cfg.seed + 1);
     let mcfg = elastic_train::figures::ch4::sweep_mlp();
@@ -114,7 +123,7 @@ fn cmd_train(args: &Args) -> Result<()> {
     let backend_str = args.get_str("backend", "sim");
     let backend = match Backend::parse(backend_str) {
         Some(b) => b,
-        None => bail!("unknown backend '{backend_str}' (sim|thread)"),
+        None => bail!("unknown backend '{backend_str}' (sim|thread|process)"),
     };
 
     let topo = topology_from_args(args)?;
@@ -135,7 +144,7 @@ fn cmd_train(args: &Args) -> Result<()> {
         ModelKind::Conv => ccfg.n_params(),
     });
 
-    if let Some(mut m) = cfg.parallel_method() {
+    if let Some(mut m) = cfg.parallel_method()? {
         // Tree runs use the thesis rate α = β/(d+1) — a node talks to
         // at most d+1 neighbors — instead of the star's β/p.
         if let Topology::Tree(spec) = &topo {
@@ -167,26 +176,36 @@ fn cmd_train(args: &Args) -> Result<()> {
             eval_every: cfg.eval_every,
             seed: cfg.seed,
             max_steps: u64::MAX / 2,
-            lr_decay_gamma: cfg
-                .extra
-                .get("gamma")
-                .and_then(|s| s.parse().ok())
-                .unwrap_or(0.0),
+            lr_decay_gamma: cfg.extra_f32("gamma", 0.0)? as f64,
         };
-        let r = match model {
-            ModelKind::Mlp => {
-                let mut oracles =
-                    MlpOracle::family_sharded(data, &mcfg, cfg.batch, cfg.p, sharding);
-                run_with_backend_topology(backend, &mut oracles, &dc, &topo)?
-            }
-            ModelKind::Conv => {
-                let mut oracles =
-                    ConvOracle::family_sharded(data, &ccfg, cfg.batch, cfg.p, sharding);
-                run_with_backend_topology(backend, &mut oracles, &dc, &topo)?
+        let r = if backend == Backend::Process {
+            // Workers are separate OS processes: they rebuild the
+            // oracle from a serializable spec instead of sharing ours.
+            elastic_train::coordinator::check_supported(m, backend, &topo)?;
+            let spec = OracleSpec::Sweep {
+                model,
+                sharding,
+                batch: cfg.batch,
+                seed: cfg.seed,
+            };
+            let opts = ProcessOpts::from_args(args)?;
+            run_process(&spec, cfg.p, &dc, &opts)?
+        } else {
+            match model {
+                ModelKind::Mlp => {
+                    let mut oracles =
+                        MlpOracle::family_sharded(data, &mcfg, cfg.batch, cfg.p, sharding);
+                    run_with_backend_topology(backend, &mut oracles, &dc, &topo)?
+                }
+                ModelKind::Conv => {
+                    let mut oracles =
+                        ConvOracle::family_sharded(data, &ccfg, cfg.batch, cfg.p, sharding);
+                    run_with_backend_topology(backend, &mut oracles, &dc, &topo)?
+                }
             }
         };
         print_curve(&r);
-    } else if let Some(m) = cfg.sequential_method() {
+    } else if let Some(m) = cfg.sequential_method()? {
         if topo != Topology::Star {
             bail!(
                 "{} is a sequential (p=1) method; topology={} does not apply",
@@ -228,11 +247,11 @@ fn cmd_train_pjrt(_args: &Args) -> Result<()> {
 
 #[cfg(feature = "pjrt")]
 fn cmd_train_pjrt(args: &Args) -> Result<()> {
-    let p = args.get_usize("p", 2);
-    let steps = args.get_u64("steps", 200);
-    let eta = args.get_f32("eta", 0.3);
-    let tau = args.get_u32("tau", 4);
-    let delta = args.get_f32("delta", 0.0);
+    let p = args.get_usize("p", 2)?;
+    let steps = args.get_u64("steps", 200)?;
+    let eta = args.get_f32("eta", 0.3)?;
+    let tau = args.get_u32("tau", 4)?;
+    let delta = args.get_f32("delta", 0.0)?;
     let dir = std::path::PathBuf::from(args.get_str("artifacts", "artifacts"));
 
     let model = Rc::new(PjrtModel::load(&dir)?);
@@ -262,7 +281,7 @@ fn cmd_train_pjrt(args: &Args) -> Result<()> {
         cost,
         horizon: steps as f64 * 2.4e-3 / p as f64,
         eval_every: steps as f64 * 2.4e-3 / p as f64 / 10.0,
-        seed: args.get_u64("seed", 0),
+        seed: args.get_u64("seed", 0)?,
         max_steps: steps,
         lr_decay_gamma: 0.0,
     };
@@ -304,13 +323,23 @@ fn print_curve(r: &elastic_train::cluster::RunResult) {
         );
     }
     println!(
-        "steps={} rounds={} diverged={} best_test_err={:.4} | breakdown compute/data/comm = {:.1}/{:.1}/{:.1}s",
+        "steps={} rounds={} diverged={} best_test_err={:.4} | breakdown compute/data/comm = {:.1}/{:.1}/{:.1}s (serialize {:.3}s, transfer {:.3}s)",
         r.total_steps,
         r.rounds,
         r.diverged,
         r.best_test_error(),
         r.breakdown.compute,
         r.breakdown.data,
-        r.breakdown.comm
+        r.breakdown.comm,
+        r.breakdown.serialize,
+        r.breakdown.transfer
     );
+    if let Some(w) = &r.wire {
+        println!(
+            "wire: {} frames, {:.2} MB on the socket, mean staleness {:.2} rounds",
+            w.frames,
+            w.payload_bytes as f64 * 1e-6,
+            w.mean_staleness
+        );
+    }
 }

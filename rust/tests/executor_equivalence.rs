@@ -45,14 +45,14 @@ fn thread_matches_sim_on_quadratic_easgd() {
         max_steps: steps,
         lr_decay_gamma: 0.0,
     };
-    let sim = SimExecutor.run(&mut sim_oracles, &sim_cfg);
+    let sim = SimExecutor.run(&mut sim_oracles, &sim_cfg).unwrap();
 
     let mut thr_oracles = QuadraticOracle::family(n, 1.0, 0.0, 1.0, 0.0, p);
     let thr_cfg = DriverConfig {
         horizon: 60.0, // REAL seconds safety net; steps bound first
         ..sim_cfg.clone()
     };
-    let thr = ThreadExecutor::default().run(&mut thr_oracles, &thr_cfg);
+    let thr = ThreadExecutor::default().run(&mut thr_oracles, &thr_cfg).unwrap();
 
     assert!(!sim.diverged && !thr.diverged);
     assert_eq!(sim.total_steps, steps);
@@ -85,9 +85,9 @@ fn thread_matches_sim_on_noisy_quadratic_within_noise_floor() {
         max_steps: steps,
         lr_decay_gamma: 0.0,
     };
-    let sim = SimExecutor.run(&mut mk(), &cfg);
+    let sim = SimExecutor.run(&mut mk(), &cfg).unwrap();
     let thr_cfg = DriverConfig { horizon: 60.0, ..cfg.clone() };
-    let thr = ThreadExecutor::default().run(&mut mk(), &thr_cfg);
+    let thr = ThreadExecutor::default().run(&mut mk(), &thr_cfg).unwrap();
 
     assert!(!sim.diverged && !thr.diverged);
     let ls = sim.curve.last().unwrap().train_loss;
@@ -119,9 +119,9 @@ fn thread_matches_sim_on_quadratic_mdownpour() {
         max_steps: steps,
         lr_decay_gamma: 0.0,
     };
-    let sim = SimExecutor.run(&mut mk(), &cfg);
+    let sim = SimExecutor.run(&mut mk(), &cfg).unwrap();
     let thr_cfg = DriverConfig { horizon: 60.0, ..cfg.clone() };
-    let thr = ThreadExecutor::default().run(&mut mk(), &thr_cfg);
+    let thr = ThreadExecutor::default().run(&mut mk(), &thr_cfg).unwrap();
 
     assert!(!sim.diverged && !thr.diverged);
     assert_eq!(sim.total_steps, steps);
@@ -155,9 +155,9 @@ fn thread_matches_sim_on_quadratic_admm() {
         max_steps: steps,
         lr_decay_gamma: 0.0,
     };
-    let sim = SimExecutor.run(&mut mk(), &cfg);
+    let sim = SimExecutor.run(&mut mk(), &cfg).unwrap();
     let thr_cfg = DriverConfig { horizon: 60.0, ..cfg.clone() };
-    let thr = ThreadExecutor::default().run(&mut mk(), &thr_cfg);
+    let thr = ThreadExecutor::default().run(&mut mk(), &thr_cfg).unwrap();
 
     assert!(!sim.diverged && !thr.diverged);
     assert_eq!(sim.total_steps, steps);
@@ -191,7 +191,7 @@ fn adownpour_thread_clock_has_no_spurious_zeroth_rounds() {
     };
     // p = 1: exact pin.
     let mut one = QuadraticOracle::family(64, 1.0, 0.0, 1.0, 0.0, 1);
-    let r = ThreadExecutor::default().run(&mut one, &cfg);
+    let r = ThreadExecutor::default().run(&mut one, &cfg).unwrap();
     assert!(!r.diverged);
     assert_eq!(r.total_steps, steps);
     assert_eq!(r.rounds, steps - 1);
@@ -199,7 +199,7 @@ fn adownpour_thread_clock_has_no_spurious_zeroth_rounds() {
     // scheduler never started before the budget ran out skips none).
     let p = 3u64;
     let mut fam = QuadraticOracle::family(64, 1.0, 0.0, 1.0, 0.0, p as usize);
-    let r = ThreadExecutor::default().run(&mut fam, &cfg);
+    let r = ThreadExecutor::default().run(&mut fam, &cfg).unwrap();
     assert_eq!(r.total_steps, steps);
     assert!(
         r.rounds >= steps - p && r.rounds < steps,
@@ -235,7 +235,7 @@ fn sim_executor_is_bitwise_deterministic() {
             max_steps: 1_000_000,
             lr_decay_gamma: 0.0,
         };
-        SimExecutor.run(&mut oracles, &cfg)
+        SimExecutor.run(&mut oracles, &cfg).unwrap()
     };
     let (a, b) = (run(), run());
     assert_eq!(a.total_steps, b.total_steps);

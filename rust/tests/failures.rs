@@ -1,0 +1,182 @@
+//! Loud-failure suite: the failure modes that used to be silent (a
+//! panicking worker poisoning the center locks while the survivors
+//! burned the step budget, `unwrap_or(default)` config parsing, empty
+//! curves panicking in accessors) must now surface as prompt,
+//! descriptive errors.
+
+use elastic_train::cluster::{CostModel, RunResult};
+use elastic_train::config::{Args, ExperimentConfig};
+use elastic_train::coordinator::{
+    run_threaded, run_with_backend_topology, Backend, DriverConfig, EvalStats, GradOracle,
+    Method, QuadraticOracle, Topology,
+};
+use elastic_train::rng::Rng;
+use std::time::Instant;
+
+/// A quadratic-like oracle that panics after `panic_after` gradient
+/// calls (None = never) — the synthetic stand-in for a worker dying
+/// mid-run (OOM, a bug in the model code, a poisoned batch).
+struct PanickingOracle {
+    n: usize,
+    calls: u64,
+    panic_after: Option<u64>,
+}
+
+impl PanickingOracle {
+    fn family(n: usize, p: usize, victim: usize, after: u64) -> Vec<PanickingOracle> {
+        (0..p)
+            .map(|i| PanickingOracle {
+                n,
+                calls: 0,
+                panic_after: (i == victim).then_some(after),
+            })
+            .collect()
+    }
+}
+
+impl GradOracle for PanickingOracle {
+    fn n_params(&self) -> usize {
+        self.n
+    }
+
+    fn init_params(&self) -> Vec<f32> {
+        vec![0.0; self.n]
+    }
+
+    fn grad(&mut self, theta: &[f32], _rng: &mut Rng, out: &mut [f32]) -> f32 {
+        self.calls += 1;
+        if let Some(k) = self.panic_after {
+            if self.calls > k {
+                panic!("synthetic oracle failure after {k} calls");
+            }
+        }
+        let mut loss = 0.0f32;
+        for (o, t) in out.iter_mut().zip(theta) {
+            let d = t - 1.0;
+            *o = d;
+            loss += 0.5 * d * d;
+        }
+        loss / self.n as f32
+    }
+
+    fn eval(&mut self, theta: &[f32]) -> EvalStats {
+        let loss = theta.iter().map(|t| 0.5 * (t - 1.0) as f64 * (t - 1.0) as f64).sum::<f64>()
+            / self.n as f64;
+        EvalStats { train_loss: loss, test_loss: loss, test_error: 0.0 }
+    }
+}
+
+fn cfg(method: Method, max_steps: u64) -> DriverConfig {
+    DriverConfig {
+        eta: 0.05,
+        method,
+        cost: CostModel::cifar_like(64),
+        horizon: 30.0, // the pre-fix failure mode ran to THIS wall
+        eval_every: 1e6,
+        seed: 7,
+        max_steps,
+        lr_decay_gamma: 0.0,
+    }
+}
+
+/// A worker panicking on the sharded-lock backend (EASGD) surfaces as
+/// a descriptive error naming the worker and the panic message — and
+/// returns promptly, instead of letting the survivors burn the whole
+/// step budget against poisoned center locks.
+#[test]
+fn panicking_worker_on_sharded_center_is_a_prompt_named_error() {
+    let mut oracles = PanickingOracle::family(64, 3, 1, 10);
+    let t0 = Instant::now();
+    let e = run_threaded(&mut oracles, &cfg(Method::easgd_default(3, 2), u64::MAX / 2), 4)
+        .unwrap_err();
+    let elapsed = t0.elapsed().as_secs_f64();
+    let msg = format!("{e}");
+    assert!(msg.contains("worker 1 died mid-run"), "{msg}");
+    assert!(msg.contains("synthetic oracle failure"), "{msg}");
+    // Prompt: nowhere near the 30 s horizon the survivors used to burn.
+    assert!(elapsed < 15.0, "took {elapsed:.1}s to report a dead worker");
+}
+
+/// Same contract on the master-actor backend (MDOWNPOUR): the panic is
+/// caught in the worker, the actor's receive loop drains cleanly, and
+/// the run reports the worker death instead of hanging or resuming the
+/// unwind.
+#[test]
+fn panicking_worker_on_master_actor_is_a_prompt_named_error() {
+    let mut oracles = PanickingOracle::family(64, 3, 2, 10);
+    let mut c = cfg(Method::MDownpour { delta: 0.9 }, u64::MAX / 2);
+    c.eta = 0.01;
+    let t0 = Instant::now();
+    let e = run_threaded(&mut oracles, &c, 4).unwrap_err();
+    let elapsed = t0.elapsed().as_secs_f64();
+    let msg = format!("{e}");
+    assert!(msg.contains("worker 2 died mid-run"), "{msg}");
+    assert!(msg.contains("synthetic oracle failure"), "{msg}");
+    assert!(elapsed < 15.0, "took {elapsed:.1}s to report a dead worker");
+}
+
+/// A run where NO worker panics still succeeds through the same
+/// machinery (the catch_unwind wrapper is transparent on the happy
+/// path).
+#[test]
+fn non_panicking_run_is_unaffected_by_the_panic_guard() {
+    let mut oracles = PanickingOracle::family(64, 3, 0, u64::MAX);
+    let r = run_threaded(&mut oracles, &cfg(Method::easgd_default(3, 2), 600), 4).unwrap();
+    assert!(!r.diverged);
+    assert_eq!(r.total_steps, 600);
+    assert!(r.last_point().unwrap().train_loss < r.first_point().unwrap().train_loss);
+}
+
+/// Strict config parsing end to end: a malformed CLI override is a
+/// named error at both the `Args` getter and `ExperimentConfig` layers
+/// (it used to be silently replaced by the default).
+#[test]
+fn malformed_cli_values_are_named_errors_not_silent_defaults() {
+    let args = Args::parse(["tau=0.5".to_string(), "p=abc".to_string()]);
+    assert!(args.get_u32("tau", 1).is_err());
+    assert!(args.get_usize("p", 4).is_err());
+
+    let mut cfg = ExperimentConfig::default();
+    let e = cfg.apply_args(&args).unwrap_err();
+    let msg = format!("{e}");
+    // BTreeMap order: "p" applies (and fails) before "tau".
+    assert!(msg.contains('p') && msg.contains("abc"), "{msg}");
+    // The failed overrides left the config untouched.
+    assert_eq!(cfg.tau, 10);
+    assert_eq!(cfg.p, 4);
+}
+
+/// Degenerate time axes are config-time errors naming the field — on
+/// every backend path through `run_with_backend_topology` — instead of
+/// empty-curve panics deep in a run.
+#[test]
+fn degenerate_driver_configs_are_validated_before_running() {
+    for backend in [Backend::Sim, Backend::Thread] {
+        let mut bad = cfg(Method::easgd_default(2, 1), 100);
+        bad.horizon = f64::INFINITY;
+        let mut oracles = QuadraticOracle::family(16, 1.0, 0.0, 1.0, 0.0, 2);
+        let e = run_with_backend_topology(backend, &mut oracles, &bad, &Topology::Star)
+            .unwrap_err();
+        assert!(format!("{e}").contains("horizon"), "{backend:?}: {e}");
+
+        let mut bad = cfg(Method::easgd_default(2, 1), 100);
+        bad.eval_every = 0.0;
+        let mut oracles = QuadraticOracle::family(16, 1.0, 0.0, 1.0, 0.0, 2);
+        let e = run_with_backend_topology(backend, &mut oracles, &bad, &Topology::Star)
+            .unwrap_err();
+        assert!(format!("{e}").contains("eval_every"), "{backend:?}: {e}");
+    }
+}
+
+/// Empty-curve regression: every `RunResult` accessor is total — the
+/// figure harness used to `curve.first().unwrap()` and crash on runs
+/// whose horizon produced no snapshots.
+#[test]
+fn empty_curve_accessors_are_total() {
+    let r = RunResult::default();
+    assert!(r.first_point().is_none());
+    assert!(r.last_point().is_none());
+    assert!(r.first_train_loss().is_nan());
+    assert!(r.final_train_loss().is_nan());
+    assert!(r.best_test_error().is_infinite());
+}

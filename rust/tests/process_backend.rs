@@ -1,0 +1,161 @@
+//! Process-backend equivalence suite: workers as separate OS processes
+//! exchanging flat-θ frames over real sockets must land where the
+//! virtual-time simulator and the thread backend land on the same
+//! deterministic objective — and must report real, nonzero wire costs.
+//!
+//! These tests self-exec the `repro` binary (Cargo builds it for
+//! integration tests and exports its path via `CARGO_BIN_EXE_repro`),
+//! so the hidden `--process-worker` entry point is exercised end to
+//! end: spawn → Hello/Init → Push/Center rounds → Done.
+
+use elastic_train::cluster::CostModel;
+use elastic_train::coordinator::{
+    run_process, run_threaded, DriverConfig, Executor, Method, OracleSpec, ProcessOpts,
+    QuadraticOracle, SimExecutor,
+};
+
+fn fast_cost(n_params: usize) -> CostModel {
+    CostModel {
+        t_grad: 1e-3,
+        jitter: 0.0,
+        t_data: 0.0,
+        latency: 1e-5,
+        bandwidth: 1e12,
+        param_bytes: (n_params * 4) as f64,
+    }
+}
+
+fn repro_exe() -> std::path::PathBuf {
+    std::path::PathBuf::from(env!("CARGO_BIN_EXE_repro"))
+}
+
+fn quad_spec(n: usize) -> OracleSpec {
+    OracleSpec::Quadratic { n, h: 1.0, x0: 0.0, target: 1.0, noise: 0.0 }
+}
+
+fn cfg(n: usize, method: Method, eta: f32, steps: u64) -> DriverConfig {
+    DriverConfig {
+        eta,
+        method,
+        cost: fast_cost(n),
+        horizon: 60.0, // REAL seconds safety net; steps bound first
+        eval_every: 1e6,
+        seed: 11,
+        max_steps: steps,
+        lr_decay_gamma: 0.0,
+    }
+}
+
+/// EASGD on the deterministic quadratic: sim, thread, and process all
+/// contract to the same fixed point (workers = center = target). The
+/// process run must also report nonzero serialize/transfer time and
+/// wire statistics — the whole point of measuring on real sockets.
+#[test]
+fn process_matches_thread_and_sim_on_quadratic_easgd() {
+    let (n, p, steps) = (512usize, 4usize, 8_000u64);
+    let method = Method::easgd_default(p, 4);
+
+    let sim_cfg = DriverConfig { horizon: 1e6, ..cfg(n, method, 0.1, steps) };
+    let mut sim_oracles = QuadraticOracle::family(n, 1.0, 0.0, 1.0, 0.0, p);
+    let sim = SimExecutor.run(&mut sim_oracles, &sim_cfg).unwrap();
+
+    let thr_cfg = cfg(n, method, 0.1, steps);
+    let mut thr_oracles = QuadraticOracle::family(n, 1.0, 0.0, 1.0, 0.0, p);
+    let thr = run_threaded(&mut thr_oracles, &thr_cfg, 16).unwrap();
+
+    let opts = ProcessOpts { exe: Some(repro_exe()), ..ProcessOpts::default() };
+    let prc = run_process(&quad_spec(n), p, &thr_cfg, &opts).unwrap();
+
+    assert!(!sim.diverged && !thr.diverged && !prc.diverged);
+    let ls = sim.curve.last().unwrap().train_loss;
+    let lt = thr.curve.last().unwrap().train_loss;
+    let lp = prc.curve.last().unwrap().train_loss;
+    // All three at the optimum (loss 0 for ½(θ−1)² from θ=0)...
+    assert!(ls < 1e-6, "sim final loss {ls}");
+    assert!(lt < 1e-6, "thread final loss {lt}");
+    assert!(lp < 1e-6, "process final loss {lp}");
+    // ...and within the required tolerance of each other.
+    assert!((lp - ls).abs() < 1e-4, "process {lp} vs sim {ls}");
+    assert!((lp - lt).abs() < 1e-4, "process {lp} vs thread {lt}");
+
+    // The run crossed a real socket: frames flowed, bytes moved, and
+    // the measured serialize/transfer shares are nonzero.
+    assert!(prc.total_steps > 0);
+    assert!(prc.rounds > 0, "no communication rounds over the socket");
+    let wire = prc.wire.expect("process runs report wire stats");
+    assert!(wire.frames > 0);
+    assert!(wire.payload_bytes >= wire.frames * 4, "payload bytes {}", wire.payload_bytes);
+    assert!(prc.breakdown.serialize > 0.0, "serialize time not measured");
+    assert!(prc.breakdown.transfer > 0.0, "transfer time not measured");
+    // Sim and thread runs don't fabricate wire stats.
+    assert!(sim.wire.is_none() && thr.wire.is_none());
+}
+
+/// DOWNPOUR over sockets: accumulated-update pushes instead of elastic
+/// θ exchanges. Same quadratic, same fixed point across backends.
+#[test]
+fn process_matches_thread_and_sim_on_quadratic_downpour() {
+    let (n, p, steps) = (256usize, 4usize, 8_000u64);
+    let method = Method::Downpour { tau: 2 };
+
+    let sim_cfg = DriverConfig { horizon: 1e6, ..cfg(n, method, 0.05, steps) };
+    let mut sim_oracles = QuadraticOracle::family(n, 1.0, 0.0, 1.0, 0.0, p);
+    let sim = SimExecutor.run(&mut sim_oracles, &sim_cfg).unwrap();
+
+    let thr_cfg = cfg(n, method, 0.05, steps);
+    let mut thr_oracles = QuadraticOracle::family(n, 1.0, 0.0, 1.0, 0.0, p);
+    let thr = run_threaded(&mut thr_oracles, &thr_cfg, 16).unwrap();
+
+    let opts = ProcessOpts { exe: Some(repro_exe()), ..ProcessOpts::default() };
+    let prc = run_process(&quad_spec(n), p, &thr_cfg, &opts).unwrap();
+
+    assert!(!sim.diverged && !thr.diverged && !prc.diverged);
+    let ls = sim.curve.last().unwrap().train_loss;
+    let lt = thr.curve.last().unwrap().train_loss;
+    let lp = prc.curve.last().unwrap().train_loss;
+    assert!(ls < 1e-6, "sim final loss {ls}");
+    assert!(lt < 1e-6, "thread final loss {lt}");
+    assert!(lp < 1e-6, "process final loss {lp}");
+    assert!((lp - ls).abs() < 1e-4, "process {lp} vs sim {ls}");
+    assert!((lp - lt).abs() < 1e-4, "process {lp} vs thread {lt}");
+}
+
+/// Unix-domain transport carries the same run as TCP (the default).
+#[cfg(unix)]
+#[test]
+fn process_backend_runs_over_unix_sockets() {
+    let (n, p, steps) = (128usize, 2usize, 2_000u64);
+    let method = Method::easgd_default(p, 4);
+    let opts = ProcessOpts {
+        addr: ProcessOpts::unix_addr().unwrap(),
+        exe: Some(repro_exe()),
+    };
+    let r = run_process(&quad_spec(n), p, &cfg(n, method, 0.1, steps), &opts).unwrap();
+    assert!(!r.diverged);
+    assert!(r.curve.last().unwrap().train_loss < 1e-5);
+    assert!(r.wire.unwrap().frames > 0);
+}
+
+/// The support matrix gates master-coupled methods off the process
+/// backend with a descriptive error — no half-run, no panic.
+#[test]
+fn process_backend_refuses_master_coupled_methods() {
+    let n = 32usize;
+    let method = Method::MDownpour { delta: 0.9 };
+    let opts = ProcessOpts { exe: Some(repro_exe()), ..ProcessOpts::default() };
+    let e = run_process(&quad_spec(n), 2, &cfg(n, method, 0.01, 100), &opts).unwrap_err();
+    assert!(format!("{e}").contains("master-coupled"), "{e}");
+}
+
+/// Config validation fires before any process is spawned: a
+/// non-finite horizon is a named config error, not a hung run.
+#[test]
+fn process_backend_validates_config_before_spawning() {
+    let n = 32usize;
+    let method = Method::easgd_default(2, 1);
+    let mut bad = cfg(n, method, 0.1, 100);
+    bad.horizon = f64::INFINITY;
+    let opts = ProcessOpts { exe: Some(repro_exe()), ..ProcessOpts::default() };
+    let e = run_process(&quad_spec(n), 2, &bad, &opts).unwrap_err();
+    assert!(format!("{e}").contains("horizon"), "{e}");
+}
