@@ -19,6 +19,11 @@
 //! every Chapter-4/6 figure sweep and both real-thread backends, whose
 //! wall clock is exactly this gradient step.
 //!
+//! Hybrid-parallelism grid — the batched path at GEMM threads ∈
+//! {1, 2, 4} (sweep MLP + wide conv, batch=128), gated on the threaded
+//! gradient being bitwise-identical to single-thread; the conv-wide
+//! panel is expected to reach ≥ 1.6× at threads=4.
+//!
 //!     cargo bench --bench bench_oracle            # full grid
 //!     cargo bench --bench bench_oracle -- --quick # smoke (CI)
 //!
@@ -306,10 +311,32 @@ fn conv_json_row(c: &ConvCell) -> String {
 }
 
 use elastic_train::figures::benchkit::{append_history, git_sha, unix_time};
+use elastic_train::linalg::pool;
+
+/// One hybrid-parallelism grid cell: the batched path at a given GEMM
+/// thread count (same fixed minibatch as the main grids).
+struct ThreadCell {
+    model: &'static str,
+    threads: usize,
+    batch: usize,
+    batched_sps: f64,
+}
+
+fn thread_json_row(c: &ThreadCell) -> String {
+    format!(
+        "      {{\"model\": \"{}\", \"grid\": \"threads\", \"threads\": {}, \"batch\": {}, \
+         \"batched_sps\": {:.1}}}",
+        c.model, c.threads, c.batch, c.batched_sps
+    )
+}
 
 fn main() {
     let quick = std::env::args().any(|a| a == "--quick" || a == "quick");
     let (target_ms, batches) = if quick { (8.0, 3) } else { (50.0, 7) };
+    // Respect an inherited ELASTIC_TRAIN_THREADS (CI runs this bench at
+    // threads=2) for the main grids; the threads grid below sets its
+    // own count per cell and restores this afterwards.
+    let base_threads = pool::configured_threads();
 
     // The sweep-default model every figure uses, plus a wider net where
     // the GEMM panels are large enough for the register tiles to run
@@ -373,14 +400,113 @@ fn main() {
         if speedup >= 3.0 { "OK, >= 3x" } else { "BELOW 3x target" }
     );
 
+    // ---- Hybrid-parallelism grid: the batched path at threads ∈
+    // {1, 2, 4} on the two panels the thread pool targets (sweep MLP
+    // and the wide conv net, both at batch=128). Gate first: the
+    // threaded gradient must be BITWISE equal to the single-thread one
+    // before any speedup is worth reporting.
+    {
+        let mut mlp = Mlp::new(sweep_cfg.clone());
+        let mut rng = Rng::new(1234);
+        let theta = mlp.init_params(&mut rng);
+        let samples: Vec<(Vec<f32>, usize)> = sweep_data.train[..128].to_vec();
+        let mut g1 = vec![0.0f32; theta.len()];
+        let mut g4 = vec![0.0f32; theta.len()];
+        pool::configure_threads(1);
+        let l1 = mlp.batch_grad(&theta, &samples, &mut g1);
+        pool::configure_threads(4);
+        let l4 = mlp.batch_grad(&theta, &samples, &mut g4);
+        assert!(
+            g1 == g4 && l1 == l4,
+            "threaded MLP batch_grad is not bitwise-identical to single-thread"
+        );
+
+        let mut net = ConvNet::new(conv_wide_cfg.clone());
+        let ctheta = net.init_params(&mut rng);
+        let csamples: Vec<(Vec<f32>, usize)> = wide_data.train[..128].to_vec();
+        let mut cg1 = vec![0.0f32; ctheta.len()];
+        let mut cg4 = vec![0.0f32; ctheta.len()];
+        pool::configure_threads(1);
+        let cl1 = net.batch_grad(&ctheta, &csamples, &mut cg1);
+        pool::configure_threads(4);
+        let cl4 = net.batch_grad(&ctheta, &csamples, &mut cg4);
+        assert!(
+            cg1 == cg4 && cl1 == cl4,
+            "threaded conv batch_grad is not bitwise-identical to single-thread"
+        );
+        println!("threaded gradients bitwise-identical to single-thread: OK\n");
+    }
+
+    println!("hybrid-parallelism grid (batched samples/sec vs GEMM threads, batch=128):");
+    let mut thread_cells = Vec::new();
+    for t in [1usize, 2, 4] {
+        pool::configure_threads(t);
+        {
+            let mut mlp = Mlp::new(sweep_cfg.clone());
+            let mut rng = Rng::new(1234);
+            let theta = mlp.init_params(&mut rng);
+            let mut grad = vec![0.0f32; theta.len()];
+            let samples: Vec<(Vec<f32>, usize)> = sweep_data.train[..128].to_vec();
+            let mut sink = 0.0f32;
+            let s = benchkit::bench(&format!("sweep/b128/t{t}/batched"), target_ms, batches, || {
+                sink += mlp.batch_grad(black_box(&theta), &samples, &mut grad);
+            });
+            black_box(sink);
+            thread_cells.push(ThreadCell {
+                model: "sweep",
+                threads: t,
+                batch: 128,
+                batched_sps: s.throughput(128.0),
+            });
+        }
+        {
+            let mut net = ConvNet::new(conv_wide_cfg.clone());
+            let mut rng = Rng::new(1234);
+            let theta = net.init_params(&mut rng);
+            let mut grad = vec![0.0f32; theta.len()];
+            let samples: Vec<(Vec<f32>, usize)> = wide_data.train[..128].to_vec();
+            let mut sink = 0.0f32;
+            let s =
+                benchkit::bench(&format!("conv-wide/b128/t{t}/batched"), target_ms, batches, || {
+                    sink += net.batch_grad(black_box(&theta), &samples, &mut grad);
+                });
+            black_box(sink);
+            thread_cells.push(ThreadCell {
+                model: "conv-wide",
+                threads: t,
+                batch: 128,
+                batched_sps: s.throughput(128.0),
+            });
+        }
+    }
+    pool::configure_threads(base_threads);
+    let sps_at = |model: &str, t: usize| {
+        thread_cells
+            .iter()
+            .find(|c| c.model == model && c.threads == t)
+            .map(|c| c.batched_sps)
+            .unwrap()
+    };
+    let conv_scaling = sps_at("conv-wide", 4) / sps_at("conv-wide", 1);
+    let mlp_scaling = sps_at("sweep", 4) / sps_at("sweep", 1);
+    println!(
+        "  threads=4 vs threads=1: conv-wide {conv_scaling:.2}x, sweep {mlp_scaling:.2}x ({})\n",
+        if conv_scaling >= 1.6 { "OK, >= 1.6x" } else { "BELOW 1.6x target" }
+    );
+
     let mut rows: Vec<String> = cells.iter().map(json_row).collect();
     rows.extend(conv_cells.iter().map(conv_json_row));
+    rows.extend(thread_cells.iter().map(thread_json_row));
     let entry = format!(
         "  {{\n    \"bench\": \"oracle\",\n    \"sha\": \"{}\",\n    \"unix_time\": {},\n    \
-         \"quick\": {},\n    \"unit\": \"samples_per_sec\",\n    \"results\": [\n{}\n    ]\n  }}",
+         \"quick\": {},\n    \"cores\": {},\n    \"p\": 1,\n    \"threads\": {},\n    \
+         \"threads_grid\": [1, 2, 4],\n    \"unit\": \"samples_per_sec\",\n    \
+         \"results\": [\n{}\n    ]\n  }}",
         git_sha(),
         unix_time(),
         quick,
+        pool::available_cores(),
+        base_threads,
         rows.join(",\n")
     );
     // Anchor at the repository root (cargo runs benches with cwd at the

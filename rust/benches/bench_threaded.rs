@@ -5,7 +5,10 @@
 //! executor — thread scheduling + sharded-lock center — not the model),
 //! plus a master-actor grid for the master-coupled methods (MDOWNPOUR,
 //! async ADMM), where every round is a serialized channel round trip
-//! through the dedicated master thread.
+//! through the dedicated master thread, plus a hybrid p × c grid
+//! (p workers × c GEMM threads each, EASGD on the real sweep-MLP
+//! oracle) measuring how the data-parallel and intra-worker
+//! tensor-parallel axes compose.
 //!
 //!     cargo bench --bench bench_threaded            # full grid
 //!     cargo bench --bench bench_threaded -- --quick # smoke (CI)
@@ -19,8 +22,10 @@
 //! serializes one master update per worker step by construction.
 
 use elastic_train::cluster::CostModel;
-use elastic_train::coordinator::{run_threaded, DriverConfig, Method, QuadraticOracle};
+use elastic_train::coordinator::{run_threaded, DriverConfig, Method, MlpOracle, QuadraticOracle};
 use elastic_train::figures::benchkit::{append_history, git_sha, unix_time};
+use elastic_train::figures::ch4;
+use elastic_train::linalg::pool;
 use std::time::Instant;
 
 /// Per-step gradient size: big enough that one step (~tens of µs)
@@ -113,6 +118,53 @@ fn main() {
         println!();
     }
 
+    // ---- Hybrid p × c grid: EASGD on the real GEMM MLP oracle (the
+    // quadratic's gradient is one streamed axpy — nothing for a GEMM
+    // pool to split), p workers each running their local steps on c
+    // GEMM threads. The per-cell clamp mirrors the train CLI: a p × c
+    // product over the visible cores is pulled back with the
+    // hybrid-oversubscription warning rather than thrashing.
+    let hybrid_steps: u64 = if quick { 400 } else { 2_000 };
+    let mlp_cfg = ch4::sweep_mlp();
+    let mlp_data = ch4::sweep_data(3);
+    println!(
+        "hybrid grid: EASGD τ=16 on the sweep MLP (batch=128), {hybrid_steps} steps/cell, \
+         p workers × c GEMM threads:\n\n{:>4} {:>8} {:>14} {:>10}",
+        "p", "threads", "steps/sec", "vs c=1"
+    );
+    for &p in &[1usize, 2, 4, 8] {
+        let mut base = 0.0f64;
+        for &c in &[1usize, 2, 4] {
+            let eff = pool::clamp_oversubscription(c, p);
+            pool::configure_threads(eff);
+            let mut oracles = MlpOracle::family(mlp_data.clone(), &mlp_cfg, 128, p);
+            let cfg = DriverConfig {
+                eta: 0.05,
+                method: Method::easgd_default(p, 16),
+                cost: CostModel::cifar_like(mlp_cfg.n_params()), // unused by the thread backend
+                horizon: 120.0,
+                eval_every: 1e6,
+                seed: 9,
+                max_steps: hybrid_steps,
+                lr_decay_gamma: 0.0,
+            };
+            let t0 = Instant::now();
+            let r = run_threaded(&mut oracles, &cfg, 16).expect("hybrid bench run");
+            assert!(!r.diverged, "hybrid p={p} c={c} diverged");
+            let rate = r.total_steps as f64 / t0.elapsed().as_secs_f64();
+            if c == 1 {
+                base = rate;
+            }
+            println!("{p:>4} {eff:>8} {rate:>14.0} {:>9.2}x", rate / base);
+            rows.push(format!(
+                "      {{\"grid\": \"hybrid\", \"model\": \"mlp\", \"p\": {p}, \"threads\": {eff}, \
+                 \"steps_per_sec\": {rate:.1}}}"
+            ));
+        }
+        println!();
+    }
+    pool::configure_threads(1);
+
     // Acceptance shape: at τ=16 steps/sec is monotone non-degrading
     // from p=1 to p=4 (5% slack for scheduler noise).
     let upto4: Vec<&(usize, f64)> = tau16.iter().filter(|(p, _)| *p <= 4).collect();
@@ -133,7 +185,8 @@ fn main() {
     // Per-PR history, keyed by git SHA like BENCH_oracle.json.
     let entry = format!(
         "  {{\n    \"bench\": \"threaded\",\n    \"sha\": \"{}\",\n    \"unix_time\": {},\n    \
-         \"quick\": {},\n    \"cores\": {},\n    \"unit\": \"steps_per_sec\",\n    \
+         \"quick\": {},\n    \"cores\": {},\n    \"p_grid\": [1, 2, 4, 8],\n    \
+         \"threads_grid\": [1, 2, 4],\n    \"unit\": \"steps_per_sec\",\n    \
          \"results\": [\n{}\n    ]\n  }}",
         git_sha(),
         unix_time(),

@@ -89,6 +89,20 @@ impl CostModel {
     pub fn one_way_time_scaled(&self, scale: f64) -> f64 {
         self.one_way_time() * scale
     }
+
+    /// Scale the local-step time by a *measured* hybrid-GEMM speedup
+    /// (see `linalg::pool::measured_speedup`): with `threads = c` per
+    /// worker the real backends run each gradient step ~`speedup`×
+    /// faster, so the virtual-time sim must price it the same way or
+    /// its τ trade-off figures stop matching the thread/process tiers.
+    /// A speedup of 1.0 (the `threads = 1` default) is an exact no-op;
+    /// non-finite or non-positive values are ignored.
+    pub fn with_thread_speedup(mut self, speedup: f64) -> Self {
+        if speedup.is_finite() && speedup > 0.0 {
+            self.t_grad /= speedup;
+        }
+        self
+    }
 }
 
 /// Table 4.4's three columns, accumulated per run, plus the process
@@ -222,6 +236,18 @@ mod tests {
         assert!((cm.exchange_time() - (1.0 + 4.0)).abs() < 1e-12);
         assert!((cm.one_way_time() - 2.5).abs() < 1e-12);
         assert!((cm.one_way_time_scaled(0.2) - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn thread_speedup_scales_only_the_local_step() {
+        let cm = CostModel::cifar_like(1000);
+        let fast = cm.with_thread_speedup(2.0);
+        assert!((fast.t_grad - cm.t_grad / 2.0).abs() < 1e-12);
+        assert!((fast.exchange_time() - cm.exchange_time()).abs() < 1e-12);
+        // Identity and garbage inputs leave the model untouched.
+        assert_eq!(cm.with_thread_speedup(1.0).t_grad, cm.t_grad);
+        assert_eq!(cm.with_thread_speedup(f64::NAN).t_grad, cm.t_grad);
+        assert_eq!(cm.with_thread_speedup(0.0).t_grad, cm.t_grad);
     }
 
     #[test]

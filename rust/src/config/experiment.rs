@@ -31,6 +31,10 @@ pub struct ExperimentConfig {
     pub eval_every: f64,
     pub seed: u64,
     pub batch: usize,
+    /// Hybrid-parallelism knob: GEMM threads *per worker* (p workers ×
+    /// `threads` helper threads). 1 (the default) is byte-for-byte the
+    /// single-threaded compute path.
+    pub threads: usize,
     /// Extra free-form keys (forwarded to specific figures).
     pub extra: BTreeMap<String, String>,
 }
@@ -51,6 +55,7 @@ impl Default for ExperimentConfig {
             eval_every: 2.0,
             seed: 0,
             batch: 32,
+            threads: 1,
             extra: BTreeMap::new(),
         }
     }
@@ -108,6 +113,7 @@ impl ExperimentConfig {
             "eval_every" => self.eval_every = parse_kv(k, v, "a number of seconds")?,
             "seed" => self.seed = parse_kv(k, v, "a non-negative integer")?,
             "batch" => self.batch = parse_kv(k, v, "a positive integer")?,
+            "threads" => self.threads = parse_kv(k, v, "a positive integer")?,
             _ => {
                 self.extra.insert(k.to_string(), v.to_string());
             }
@@ -134,6 +140,9 @@ impl ExperimentConfig {
         }
         if self.batch == 0 {
             crate::bail!("batch must be >= 1 (got 0)");
+        }
+        if self.threads == 0 {
+            crate::bail!("threads must be >= 1 (got 0): 1 means no intra-worker parallelism");
         }
         if self.tau == 0 {
             crate::bail!("tau must be >= 1 (got 0): a zero communication period is undefined");
@@ -313,6 +322,18 @@ mod tests {
         ));
         cfg.method = "bogus".into();
         assert!(cfg.sequential_method().unwrap().is_none());
+    }
+
+    #[test]
+    fn threads_knob_is_strict() {
+        let mut cfg = ExperimentConfig::default();
+        assert_eq!(cfg.threads, 1, "default must be the serial path");
+        cfg.set("threads", "4").unwrap();
+        assert_eq!(cfg.threads, 4);
+        let e = cfg.set("threads", "two").unwrap_err();
+        assert!(format!("{e}").contains("threads"), "{e}");
+        cfg.set("threads", "0").unwrap();
+        assert!(format!("{}", cfg.validate().unwrap_err()).contains("threads"));
     }
 
     #[test]

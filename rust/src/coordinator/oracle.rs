@@ -229,14 +229,20 @@ impl<M: BatchModel> GradOracle for NativeOracle<M> {
     }
 
     fn eval(&mut self, theta: &[f32]) -> EvalStats {
-        // Batched eval in fixed-size panels; the O(n_params) l2 scan
-        // runs ONCE per θ and is shared across every sample (the seed
-        // recomputed it inside each `loss` call).
-        const CHUNK: usize = 128;
+        // Batched eval in fixed 128-row panels; the O(n_params) l2
+        // scan runs ONCE per θ and is shared across every sample (the
+        // seed recomputed it inside each `loss` call). The panel size
+        // is deliberately NOT scaled with the `threads=` knob: the
+        // GEMMs inside a 128-row panel already clear the pool's
+        // work threshold, so they split across the hybrid helpers
+        // (bitwise-identically), while the fixed panel keeps the f64
+        // nll accumulation grouping — and hence every reported loss —
+        // byte-for-byte independent of the thread count.
+        let panel = 128;
         let l2 = self.model.l2_penalty(theta) as f64;
         let data = &self.data;
         let mut train_nll = 0.0f64;
-        for chunk in self.probe.chunks(CHUNK) {
+        for chunk in self.probe.chunks(panel) {
             let (nll, _) = self.model.eval_batch(
                 theta,
                 chunk.iter().map(|&i| {
@@ -248,7 +254,7 @@ impl<M: BatchModel> GradOracle for NativeOracle<M> {
         }
         let mut test_nll = 0.0f64;
         let mut wrong = 0usize;
-        for chunk in data.test.chunks(CHUNK) {
+        for chunk in data.test.chunks(panel) {
             let (nll, w) = self
                 .model
                 .eval_batch(theta, chunk.iter().map(|(x, y)| (x.as_slice(), *y)));

@@ -68,11 +68,15 @@ pub struct ProcessOpts {
     /// self-exec contract). Tests and benches override it with
     /// `env!("CARGO_BIN_EXE_repro")`.
     pub exe: Option<PathBuf>,
+    /// GEMM threads per spawned worker process (forwarded on each
+    /// worker's command line; the caller is expected to have clamped
+    /// p × threads against the visible cores already).
+    pub threads: usize,
 }
 
 impl Default for ProcessOpts {
     fn default() -> Self {
-        ProcessOpts { addr: WireAddr::Tcp("127.0.0.1:0".into()), exe: None }
+        ProcessOpts { addr: WireAddr::Tcp("127.0.0.1:0".into()), exe: None, threads: 1 }
     }
 }
 
@@ -90,7 +94,7 @@ impl ProcessOpts {
             "unix" => Self::unix_addr()?,
             other => crate::bail!("unknown transport '{other}' (tcp|unix)"),
         };
-        Ok(ProcessOpts { addr, exe: None })
+        Ok(ProcessOpts { addr, exe: None, threads: 1 })
     }
 
     /// A fresh Unix-domain socket path in the temp dir (pid + counter,
@@ -453,6 +457,7 @@ pub fn run_process(
             .arg(format!("seed={}", cfg.seed))
             .arg(format!("max_local={max_local}"))
             .arg(format!("horizon={}", cfg.horizon))
+            .arg(format!("threads={}", opts.threads))
             .args(method_to_args(cfg.method)?)
             .args(spec.to_args())
             .stdin(std::process::Stdio::null())
@@ -608,6 +613,10 @@ pub fn process_worker_main(args: &Args) -> Result<()> {
     let seed = args.get_u64("seed", 0)?;
     let max_local = args.get_u64("max_local", u64::MAX / 2)?;
     let horizon = args.get_f64("horizon", f64::INFINITY)?;
+    // Hybrid parallelism: this process IS one worker, so the forwarded
+    // `threads=` is its whole GEMM pool budget (the master clamped the
+    // p × threads product before spawning).
+    crate::linalg::pool::configure_threads(args.get_usize("threads", 1)?);
     let cfg = DriverConfig {
         eta: args.get_f32("eta", 0.05)?,
         method,

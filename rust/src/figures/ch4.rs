@@ -50,6 +50,11 @@ pub struct Sweep {
     /// Gradient model every oracle family in this sweep runs
     /// (`model=mlp` historical stand-in; `model=conv` im2col conv net).
     pub model: ModelKind,
+    /// GEMM threads per worker (the hybrid-parallelism knob): real
+    /// backends run their local steps on this many threads; the sim
+    /// backend prices the measured speedup into its cost model so the
+    /// τ trade-off figures stay honest across backends.
+    pub threads: usize,
 }
 
 impl Sweep {
@@ -66,6 +71,7 @@ impl Sweep {
             backend: opts.backend,
             sharding: Sharding::Replicated,
             model: opts.model,
+            threads: opts.threads,
         }
     }
 
@@ -79,9 +85,14 @@ impl Sweep {
     }
 
     pub fn cost(&self, family: &str) -> CostModel {
-        match family {
+        let base = match family {
             "imagenet" => CostModel::imagenet_like(self.n_params()),
             _ => CostModel::cifar_like(self.n_params()),
+        };
+        if self.threads > 1 {
+            base.with_thread_speedup(crate::linalg::pool::measured_speedup())
+        } else {
+            base
         }
     }
 
@@ -116,7 +127,10 @@ impl Sweep {
                 batch: 32,
                 seed: self.seed,
             };
-            let opts = crate::coordinator::ProcessOpts::default();
+            let opts = crate::coordinator::ProcessOpts {
+                threads: self.threads,
+                ..Default::default()
+            };
             return crate::coordinator::run_process(&spec, p, &cfg, &opts);
         }
         match self.model {
@@ -604,6 +618,7 @@ mod tests {
             seed: 0,
             backend,
             model,
+            threads: 1,
         }
     }
 

@@ -469,6 +469,7 @@ mod tests {
             seed: 0,
             backend: crate::coordinator::Backend::Sim,
             model: crate::model::ModelKind::Mlp,
+            threads: 1,
         }
     }
 

@@ -263,6 +263,7 @@ mod tests {
             seed: 0,
             backend: crate::coordinator::Backend::Sim,
             model: crate::model::ModelKind::Mlp,
+            threads: 1,
         };
         fig6_gs(&opts).unwrap();
     }

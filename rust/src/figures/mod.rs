@@ -37,6 +37,10 @@ pub struct FigOpts {
     /// historical stand-in; `model=conv` is the §4.1-faithful im2col
     /// conv net over the same blob data read as a 1×h×w image).
     pub model: ModelKind,
+    /// Hybrid-parallelism knob: GEMM threads per worker for the
+    /// native-oracle figures. 1 (the default) keeps every figure
+    /// byte-for-byte on the historical serial compute path.
+    pub threads: usize,
 }
 
 impl FigOpts {
@@ -55,12 +59,17 @@ impl FigOpts {
             Some(m) => m,
             None => bail!("unknown model '{model_str}' (mlp|conv)"),
         };
+        let threads = args.get_usize("threads", 1)?;
+        if threads == 0 {
+            bail!("threads must be >= 1 (got 0): 1 means no intra-worker parallelism");
+        }
         Ok(FigOpts {
             out_dir: args.get_str("out-dir", "out").to_string(),
             full: args.get_bool("full", false)?,
             seed: args.get_u64("seed", 0)?,
             backend,
             model,
+            threads,
         })
     }
 }
@@ -78,6 +87,7 @@ pub const ALL_FIGURES: &[&str] = &[
 /// Dispatch a figure id.
 pub fn run(id: &str, opts: &FigOpts) -> Result<()> {
     std::fs::create_dir_all(&opts.out_dir)?;
+    crate::linalg::pool::configure_threads(opts.threads);
     match id {
         "all" => {
             for f in ALL_FIGURES {
@@ -137,6 +147,7 @@ mod tests {
             seed: 0,
             backend: Backend::Sim,
             model: ModelKind::Mlp,
+            threads: 1,
         };
         // A fast, pure-math subset end-to-end:
         for id in ["fig5.9", "fig5.20", "fig5.13"] {
@@ -152,6 +163,16 @@ mod tests {
         assert!(format!("{e}").contains("unknown backend"), "{e}");
         let args = Args::parse(["backend=thread".to_string()]);
         assert_eq!(FigOpts::from_args(&args).unwrap().backend, Backend::Thread);
+    }
+
+    #[test]
+    fn from_args_parses_the_threads_knob() {
+        let args = Args::parse(["threads=4".to_string()]);
+        assert_eq!(FigOpts::from_args(&args).unwrap().threads, 4);
+        let args = Args::parse(Vec::<String>::new());
+        assert_eq!(FigOpts::from_args(&args).unwrap().threads, 1);
+        let args = Args::parse(["threads=0".to_string()]);
+        assert!(FigOpts::from_args(&args).is_err());
     }
 
     #[test]

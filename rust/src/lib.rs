@@ -16,7 +16,8 @@
 //! - [`rng`], [`linalg`] — numeric substrates (deterministic RNG;
 //!   dense eigenvalues for the stability figures; the
 //!   [`linalg::gemm`] register-blocked f32 micro-kernels under the
-//!   batched MLP oracle).
+//!   batched MLP oracle, threaded across per-worker [`linalg::pool`]
+//!   row panels when `threads= > 1`).
 //! - [`sim`] — the thesis' analysis chapters as executable models
 //!   (closed-form MSE, moment matrices, ADMM round-robin maps,
 //!   the non-convex double well).

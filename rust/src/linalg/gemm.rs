@@ -24,14 +24,129 @@
 //! - `A·Bᵀ` (input gradient): both operands are walked along their
 //!   contiguous k-axis, so each output is one vectorized dot product.
 //!
+//! **Hybrid parallelism:** every kernel takes an output *row range*
+//! `[i0, i1)` (with `i0` on an [`MR`] tile boundary), so a product can
+//! be split into contiguous row panels along M and dispatched on the
+//! per-worker [`super::pool`] — each row is computed whole, by one
+//! thread, in the serial inner-loop order, making the threaded result
+//! bitwise identical to single-thread. At `threads = 1` (the default)
+//! dispatch runs the full range `[0, m)` inline on the caller: the
+//! exact pre-pool code path.
+//!
 //! Not to be confused with [`super::Matrix`], the f64 substrate of the
 //! eigenvalue solver: that one optimizes for robustness on ≤ 20×20
 //! stability matrices, this one for throughput on batch × dim panels.
+
+use super::pool;
 
 /// Register-tile rows of the broadcast kernels.
 pub const MR: usize = 4;
 /// Register-tile columns (f32 lanes) of the broadcast kernels.
 pub const NR: usize = 16;
+
+/// Which kernel a dispatched [`Job`] runs over its row panel.
+#[derive(Clone, Copy)]
+pub(crate) enum JobKind {
+    /// Broadcast-form `C += op(A)·B` with `op(A)[i][p] = a[i*ars + p*acs]`.
+    Broadcast { ars: usize, acs: usize },
+    /// Dot-form `C += A·Bᵀ`.
+    Dot,
+    /// `C += Aᵀ·Bᵀ`.
+    BothT,
+    /// Fused overwrite `C = act(A·B + bias)`.
+    BiasAct { relu: bool },
+}
+
+/// A GEMM flight plan: raw operand pointers plus the full problem
+/// shape. `Copy` so dispatch publishes it to helpers by value — no
+/// allocation, no lifetime to thread through the pool.
+///
+/// Safety contract: a `Job` is only ever executed between its
+/// construction in [`dispatch`] and dispatch's return, while the
+/// borrows it was built from are live; helpers receive disjoint row
+/// ranges, so the `c` panels they materialize never alias.
+#[derive(Clone, Copy)]
+pub(crate) struct Job {
+    kind: JobKind,
+    m: usize,
+    n: usize,
+    k: usize,
+    a: *const f32,
+    b: *const f32,
+    /// Null-free only for `BiasAct`; unused otherwise.
+    bias: *const f32,
+    c: *mut f32,
+}
+
+// SAFETY: the pointers describe caller-owned slices that outlive the
+// dispatch (the dispatching thread blocks until all helpers finish),
+// and each helper writes a disjoint row panel of `c`.
+unsafe impl Send for Job {}
+
+impl Job {
+    /// Output rows (M) — what the pool splits into panels.
+    pub(crate) fn rows(&self) -> usize {
+        self.m
+    }
+}
+
+/// Run `job`'s kernel over output rows `[i0, i1)`. `i0` must be
+/// MR-aligned (or equal to `i1`); callers obtain ranges from
+/// [`pool::range_for`], which guarantees this.
+pub(crate) fn exec_rows(job: &Job, i0: usize, i1: usize) {
+    if i1 <= i0 {
+        return;
+    }
+    let (m, n, k) = (job.m, job.n, job.k);
+    // SAFETY: per the Job contract the pointers cover a.len() == m*k,
+    // b.len() == k*n, c.len() == m*n live caller borrows, and rows
+    // [i0, i1) of c are owned exclusively by this call.
+    let a = unsafe { std::slice::from_raw_parts(job.a, m * k) };
+    let b = unsafe { std::slice::from_raw_parts(job.b, k * n) };
+    let c = unsafe { std::slice::from_raw_parts_mut(job.c.add(i0 * n), (i1 - i0) * n) };
+    match job.kind {
+        JobKind::Broadcast { ars, acs } => kernel_broadcast(i0, i1, n, k, [ars, acs], a, b, c),
+        JobKind::Dot => kernel_dot(i0, i1, n, k, a, b, c),
+        JobKind::BothT => kernel_both_t(i0, i1, m, n, k, a, b, c),
+        JobKind::BiasAct { relu } => {
+            // SAFETY: BiasAct jobs are built from a live &[f32] of len n.
+            let bias = unsafe { std::slice::from_raw_parts(job.bias, n) };
+            kernel_bias_act(i0, i1, n, k, a, b, bias, relu, c);
+        }
+    }
+}
+
+/// Route a product to the caller's thread (full range) or the
+/// per-worker pool (MR-aligned row panels), per the configured
+/// `threads=` knob and the panel-size threshold.
+#[allow(clippy::too_many_arguments)]
+fn dispatch(
+    kind: JobKind,
+    m: usize,
+    n: usize,
+    k: usize,
+    a: &[f32],
+    b: &[f32],
+    bias: &[f32],
+    c: &mut [f32],
+) {
+    let job = Job {
+        kind,
+        m,
+        n,
+        k,
+        a: a.as_ptr(),
+        b: b.as_ptr(),
+        bias: bias.as_ptr(),
+        c: c.as_mut_ptr(),
+    };
+    let t = pool::threads_for(m, n, k);
+    if t <= 1 {
+        exec_rows(&job, 0, m);
+    } else {
+        pool::run(&job, t);
+    }
+}
 
 /// `C(m×n) += op(A)·op(B)`, accumulating into `C`.
 ///
@@ -52,14 +167,15 @@ pub fn sgemm(
     assert_eq!(a.len(), m * k, "A size");
     assert_eq!(b.len(), k * n, "B size");
     assert_eq!(c.len(), m * n, "C size");
-    match (ta, tb) {
+    let kind = match (ta, tb) {
         // op(A)[i][p] = a[i*ars + p*acs]; broadcast loads are scalar,
         // so runtime strides cost nothing in the vector lanes.
-        (false, false) => kernel_broadcast(m, n, k, [k, 1], a, b, c),
-        (true, false) => kernel_broadcast(m, n, k, [1, m], a, b, c),
-        (false, true) => kernel_dot(m, n, k, a, b, c),
-        (true, true) => kernel_both_t(m, n, k, a, b, c),
-    }
+        (false, false) => JobKind::Broadcast { ars: k, acs: 1 },
+        (true, false) => JobKind::Broadcast { ars: 1, acs: m },
+        (false, true) => JobKind::Dot,
+        (true, true) => JobKind::BothT,
+    };
+    dispatch(kind, m, n, k, a, b, &[], c);
 }
 
 /// Fused forward step: `C(m×n) = act(A(m×k)·B(k×n) + bias)`,
@@ -81,73 +197,12 @@ pub fn sgemm_bias_act(
     assert_eq!(b.len(), k * n, "B size");
     assert_eq!(bias.len(), n, "bias size");
     assert_eq!(c.len(), m * n, "C size");
-    let mut i = 0;
-    while i + MR <= m {
-        let mut j = 0;
-        while j + NR <= n {
-            let mut acc = [[0.0f32; NR]; MR];
-            for accr in acc.iter_mut() {
-                accr.copy_from_slice(&bias[j..j + NR]);
-            }
-            for p in 0..k {
-                let brow = &b[p * n + j..p * n + j + NR];
-                for (r, accr) in acc.iter_mut().enumerate() {
-                    let arp = a[(i + r) * k + p];
-                    for (av, &bv) in accr.iter_mut().zip(brow) {
-                        *av += arp * bv;
-                    }
-                }
-            }
-            for (r, accr) in acc.iter().enumerate() {
-                let crow = &mut c[(i + r) * n + j..(i + r) * n + j + NR];
-                for (cv, &av) in crow.iter_mut().zip(accr) {
-                    *cv = if relu { av.max(0.0) } else { av };
-                }
-            }
-            j += NR;
-        }
-        if j < n {
-            for r in 0..MR {
-                let row = i + r;
-                let crow = &mut c[row * n + j..(row + 1) * n];
-                crow.copy_from_slice(&bias[j..]);
-                for p in 0..k {
-                    let arp = a[row * k + p];
-                    let brow = &b[p * n + j..(p + 1) * n];
-                    for (cv, &bv) in crow.iter_mut().zip(brow) {
-                        *cv += arp * bv;
-                    }
-                }
-                if relu {
-                    for cv in crow.iter_mut() {
-                        *cv = cv.max(0.0);
-                    }
-                }
-            }
-        }
-        i += MR;
-    }
-    while i < m {
-        let crow = &mut c[i * n..(i + 1) * n];
-        crow.copy_from_slice(bias);
-        for p in 0..k {
-            let aip = a[i * k + p];
-            let brow = &b[p * n..(p + 1) * n];
-            for (cv, &bv) in crow.iter_mut().zip(brow) {
-                *cv += aip * bv;
-            }
-        }
-        if relu {
-            for cv in crow.iter_mut() {
-                *cv = cv.max(0.0);
-            }
-        }
-        i += 1;
-    }
+    dispatch(JobKind::BiasAct { relu }, m, n, k, a, b, bias, c);
 }
 
 /// `out[j] += Σ_i a[i][j]` over an `m×n` row-major panel — the bias
-/// gradient's column reduction, batched.
+/// gradient's column reduction, batched. Stays serial: it is O(m·n)
+/// with no k-axis to amortize a dispatch over.
 pub fn col_sums_accum(m: usize, n: usize, a: &[f32], out: &mut [f32]) {
     assert_eq!(a.len(), m * n, "A size");
     assert_eq!(out.len(), n, "out size");
@@ -178,12 +233,98 @@ pub fn dot(x: &[f32], y: &[f32]) -> f32 {
     s
 }
 
-/// Broadcast-form kernel: `C += op(A)·B` with `op(A)[i][p] =
-/// a[i*strides[0] + p*strides[1]]` and `B` stored `k×n` row-major.
-/// Covers the no-transpose and A-transposed cases; the inner loop
-/// streams `B` and `C` rows while `op(A)` supplies scalar broadcasts.
+/// Fused bias+activation kernel over rows `[i0, i1)`; `c` holds only
+/// that panel (`(i1-i0) × n`), `a` is the full `m×k` operand indexed by
+/// global row. The loop structure is the pre-pool serial body with the
+/// row counter started at `i0`.
+#[allow(clippy::too_many_arguments)]
+fn kernel_bias_act(
+    i0: usize,
+    i1: usize,
+    n: usize,
+    k: usize,
+    a: &[f32],
+    b: &[f32],
+    bias: &[f32],
+    relu: bool,
+    c: &mut [f32],
+) {
+    let crow_at = move |i: usize| (i - i0) * n;
+    let mut i = i0;
+    while i + MR <= i1 {
+        let mut j = 0;
+        while j + NR <= n {
+            let mut acc = [[0.0f32; NR]; MR];
+            for accr in acc.iter_mut() {
+                accr.copy_from_slice(&bias[j..j + NR]);
+            }
+            for p in 0..k {
+                let brow = &b[p * n + j..p * n + j + NR];
+                for (r, accr) in acc.iter_mut().enumerate() {
+                    let arp = a[(i + r) * k + p];
+                    for (av, &bv) in accr.iter_mut().zip(brow) {
+                        *av += arp * bv;
+                    }
+                }
+            }
+            for (r, accr) in acc.iter().enumerate() {
+                let base = crow_at(i + r) + j;
+                let crow = &mut c[base..base + NR];
+                for (cv, &av) in crow.iter_mut().zip(accr) {
+                    *cv = if relu { av.max(0.0) } else { av };
+                }
+            }
+            j += NR;
+        }
+        if j < n {
+            for r in 0..MR {
+                let row = i + r;
+                let crow = &mut c[crow_at(row) + j..crow_at(row) + n];
+                crow.copy_from_slice(&bias[j..]);
+                for p in 0..k {
+                    let arp = a[row * k + p];
+                    let brow = &b[p * n + j..(p + 1) * n];
+                    for (cv, &bv) in crow.iter_mut().zip(brow) {
+                        *cv += arp * bv;
+                    }
+                }
+                if relu {
+                    for cv in crow.iter_mut() {
+                        *cv = cv.max(0.0);
+                    }
+                }
+            }
+        }
+        i += MR;
+    }
+    while i < i1 {
+        let crow = &mut c[crow_at(i)..crow_at(i) + n];
+        crow.copy_from_slice(bias);
+        for p in 0..k {
+            let aip = a[i * k + p];
+            let brow = &b[p * n..(p + 1) * n];
+            for (cv, &bv) in crow.iter_mut().zip(brow) {
+                *cv += aip * bv;
+            }
+        }
+        if relu {
+            for cv in crow.iter_mut() {
+                *cv = cv.max(0.0);
+            }
+        }
+        i += 1;
+    }
+}
+
+/// Broadcast-form kernel over rows `[i0, i1)`: `C += op(A)·B` with
+/// `op(A)[i][p] = a[i*strides[0] + p*strides[1]]` (global row index)
+/// and `B` stored `k×n` row-major; `c` holds only the panel. Covers
+/// the no-transpose and A-transposed cases; the inner loop streams
+/// `B` and `C` rows while `op(A)` supplies scalar broadcasts.
+#[allow(clippy::too_many_arguments)]
 fn kernel_broadcast(
-    m: usize,
+    i0: usize,
+    i1: usize,
     n: usize,
     k: usize,
     strides: [usize; 2],
@@ -192,8 +333,9 @@ fn kernel_broadcast(
     c: &mut [f32],
 ) {
     let [ars, acs] = strides;
-    let mut i = 0;
-    while i + MR <= m {
+    let crow_at = move |i: usize| (i - i0) * n;
+    let mut i = i0;
+    while i + MR <= i1 {
         let mut j = 0;
         while j + NR <= n {
             let mut acc = [[0.0f32; NR]; MR];
@@ -207,7 +349,8 @@ fn kernel_broadcast(
                 }
             }
             for (r, accr) in acc.iter().enumerate() {
-                let crow = &mut c[(i + r) * n + j..(i + r) * n + j + NR];
+                let base = crow_at(i + r) + j;
+                let crow = &mut c[base..base + NR];
                 for (cv, &av) in crow.iter_mut().zip(accr) {
                     *cv += av;
                 }
@@ -219,7 +362,7 @@ fn kernel_broadcast(
                 let brow = &b[p * n + j..(p + 1) * n];
                 for r in 0..MR {
                     let arp = a[(i + r) * ars + p * acs];
-                    let crow = &mut c[(i + r) * n + j..(i + r + 1) * n];
+                    let crow = &mut c[crow_at(i + r) + j..crow_at(i + r) + n];
                     for (cv, &bv) in crow.iter_mut().zip(brow) {
                         *cv += arp * bv;
                     }
@@ -228,11 +371,11 @@ fn kernel_broadcast(
         }
         i += MR;
     }
-    while i < m {
+    while i < i1 {
         for p in 0..k {
             let aip = a[i * ars + p * acs];
             let brow = &b[p * n..(p + 1) * n];
-            let crow = &mut c[i * n..(i + 1) * n];
+            let crow = &mut c[crow_at(i)..crow_at(i) + n];
             for (cv, &bv) in crow.iter_mut().zip(brow) {
                 *cv += aip * bv;
             }
@@ -241,29 +384,40 @@ fn kernel_broadcast(
     }
 }
 
-/// Dot-form kernel: `C += A·Bᵀ` with `A` stored `m×k` and `B` stored
-/// `n×k` — both operands contiguous along `k`, so every output element
-/// is one vectorized [`dot`].
-fn kernel_dot(m: usize, n: usize, k: usize, a: &[f32], b: &[f32], c: &mut [f32]) {
-    for i in 0..m {
+/// Dot-form kernel over rows `[i0, i1)`: `C += A·Bᵀ` with `A` stored
+/// `m×k` and `B` stored `n×k` — both operands contiguous along `k`, so
+/// every output element is one vectorized [`dot`].
+fn kernel_dot(i0: usize, i1: usize, n: usize, k: usize, a: &[f32], b: &[f32], c: &mut [f32]) {
+    for i in i0..i1 {
         let arow = &a[i * k..(i + 1) * k];
-        let crow = &mut c[i * n..(i + 1) * n];
+        let crow = &mut c[(i - i0) * n..(i - i0 + 1) * n];
         for (j, cv) in crow.iter_mut().enumerate() {
             *cv += dot(arow, &b[j * k..(j + 1) * k]);
         }
     }
 }
 
-/// `C += Aᵀ·Bᵀ` — not on any hot path (kept for completeness of the
-/// flag matrix); plain triple loop.
-fn kernel_both_t(m: usize, n: usize, k: usize, a: &[f32], b: &[f32], c: &mut [f32]) {
-    for i in 0..m {
+/// `C += Aᵀ·Bᵀ` over rows `[i0, i1)` — not on any hot path (kept for
+/// completeness of the flag matrix); plain triple loop. Needs the full
+/// `m` because `Aᵀ` is indexed `a[p*m + i]`.
+#[allow(clippy::too_many_arguments)]
+fn kernel_both_t(
+    i0: usize,
+    i1: usize,
+    m: usize,
+    n: usize,
+    k: usize,
+    a: &[f32],
+    b: &[f32],
+    c: &mut [f32],
+) {
+    for i in i0..i1 {
         for j in 0..n {
             let mut s = 0.0f32;
             for p in 0..k {
                 s += a[p * m + i] * b[j * k + p];
             }
-            c[i * n + j] += s;
+            c[(i - i0) * n + j] += s;
         }
     }
 }
@@ -359,6 +513,55 @@ mod tests {
                 close(&c, &want);
             }
         }
+    }
+
+    #[test]
+    fn threaded_kernels_are_bitwise_identical_to_serial() {
+        // Shapes stressing tile tails (67 = 16·4+3 rows), M < MR·c
+        // (surplus threads own empty panels), single-tile M, and an
+        // empty product; all above and below the parallel threshold.
+        let shapes = [
+            (67usize, 33usize, 40usize),
+            (9, 1024, 8),
+            (5, 2048, 16),
+            (128, 100, 33),
+            (256, 64, 64),
+            (0, 64, 64),
+        ];
+        let mut rng = Rng::new(1234);
+        for &(m, n, k) in &shapes {
+            let a = fill(&mut rng, m * k);
+            let b = fill(&mut rng, k * n);
+            let bias = fill(&mut rng, n);
+            let seed = fill(&mut rng, m * n);
+            for ta in [false, true] {
+                for tb in [false, true] {
+                    pool::configure_threads(1);
+                    let mut serial = seed.clone();
+                    sgemm(ta, tb, m, n, k, &a, &b, &mut serial);
+                    pool::configure_threads(4);
+                    let mut threaded = seed.clone();
+                    sgemm(ta, tb, m, n, k, &a, &b, &mut threaded);
+                    assert!(
+                        serial == threaded,
+                        "sgemm ta={ta} tb={tb} m={m} n={n} k={k}: threaded != serial bitwise"
+                    );
+                }
+            }
+            for relu in [false, true] {
+                pool::configure_threads(1);
+                let mut serial = vec![-1.0f32; m * n];
+                sgemm_bias_act(m, n, k, &a, &b, &bias, relu, &mut serial);
+                pool::configure_threads(4);
+                let mut threaded = vec![-1.0f32; m * n];
+                sgemm_bias_act(m, n, k, &a, &b, &bias, relu, &mut threaded);
+                assert!(
+                    serial == threaded,
+                    "sgemm_bias_act relu={relu} m={m} n={n} k={k}: threaded != serial bitwise"
+                );
+            }
+        }
+        pool::configure_threads(1);
     }
 
     #[test]

@@ -13,12 +13,17 @@
 //!   micro-kernels ([`gemm::sgemm`] with transpose flags, the fused
 //!   [`gemm::sgemm_bias_act`] bias+ReLU epilogue) under the batched
 //!   MLP oracle's forward/backward — the wall clock of every
-//!   Chapter-4/6 sweep and both real-thread backends.
+//!   Chapter-4/6 sweep and both real-thread backends. The [`pool`]
+//!   module parallelizes these kernels across a per-worker helper
+//!   thread pool (MR-aligned row panels, bitwise-identical to serial)
+//!   behind the `threads=` knob — the hybrid p workers × c threads
+//!   layout.
 
 mod complex;
 mod eig;
 pub mod gemm;
 mod matrix;
+pub mod pool;
 
 pub use complex::Complex;
 pub use eig::{eigenvalues, spectral_radius};

@@ -1,0 +1,459 @@
+//! Hybrid parallelism: the per-worker GEMM thread pool.
+//!
+//! Today's executors parallelize across workers (p threads or
+//! processes); this module parallelizes *inside* each worker's
+//! gradient step, so p workers × c threads compose — the hybrid
+//! data-parallel × tensor-parallel layout. [`super::gemm::sgemm`] and
+//! [`super::gemm::sgemm_bias_act`] split their output into contiguous
+//! row panels along M, each panel aligned to the [`super::gemm::MR`]
+//! register-tile boundary, and hand panels 1.. to parked helper
+//! threads while the calling thread computes panel 0. Every output row
+//! is produced whole, by exactly one thread, with the serial kernels'
+//! inner-loop order — so the threaded result is **bitwise identical**
+//! to the single-thread one, and `threads=1` (the default) bypasses
+//! this module entirely.
+//!
+//! Design constraints, in order:
+//!
+//! - **No new deps, no work stealing.** One `Mutex<Ctrl>` + two
+//!   `Condvar`s (job start, job done) park the helpers; a job is a
+//!   `Copy` descriptor of raw panel pointers. On Linux both primitives
+//!   are futex-backed, so a steady-state dispatch performs **zero heap
+//!   allocations** (`tests/alloc_free.rs` enforces this after pool
+//!   warm-up).
+//! - **One pool per OS thread** (`thread_local!`): the thread backend's
+//!   p workers each own their helpers, which is exactly the
+//!   "threads-per-worker" meaning of the `threads=` knob. Helpers spawn
+//!   lazily on first threaded dispatch ("spawn-once") and are joined
+//!   when the owning worker thread exits.
+//! - **Process-global target** ([`configure_threads`], seeded from the
+//!   `ELASTIC_TRAIN_THREADS` environment variable when unset): models
+//!   call the free `gemm` functions with no handle to thread a count
+//!   through, and a freshly spawned worker thread must inherit the
+//!   run's setting without plumbing.
+//!
+//! The per-thread scratch of this decomposition is each helper's
+//! MR×NR accumulator tile — panels write disjoint C rows, so no
+//! reduction buffer exists to race on.
+
+use super::gemm::{exec_rows, Job, MR};
+use std::cell::RefCell;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex, MutexGuard, PoisonError};
+use std::time::Instant;
+
+/// Hard cap on threads-per-worker (a sanity bound, not a tuning
+/// target; the oversubscription clamp keeps real runs far below it).
+pub const MAX_THREADS: usize = 64;
+
+/// Minimum `m·n·max(k,1)` below which a GEMM runs serially even at
+/// `threads > 1`: a dispatch round-trip costs ~µs, which only pays for
+/// itself on panels of tens of thousands of multiply-adds. Either path
+/// yields bitwise-identical output, so this is purely a latency knob.
+const PAR_MIN_WORK: usize = 32 * 1024;
+
+/// Configured threads-per-worker. 0 = not yet configured: the first
+/// reader seeds it from `ELASTIC_TRAIN_THREADS` (default 1).
+static TARGET: AtomicUsize = AtomicUsize::new(0);
+
+/// Detected core count, cached (reading `/proc` on every GEMM dispatch
+/// would both cost time and allocate).
+static CORES: AtomicUsize = AtomicUsize::new(0);
+
+/// Cached `(thread_count, speedup)` of the last calibration run.
+static SPEEDUP: Mutex<Option<(usize, f64)>> = Mutex::new(None);
+
+/// Detected available cores (cached after the first call).
+pub fn available_cores() -> usize {
+    let c = CORES.load(Ordering::Relaxed);
+    if c != 0 {
+        return c;
+    }
+    let n = std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(1);
+    CORES.store(n, Ordering::Relaxed);
+    n
+}
+
+fn clamp_threads(req: usize) -> usize {
+    req.clamp(1, MAX_THREADS)
+}
+
+/// Set the process-global threads-per-worker target; returns the
+/// effective (clamped to `1..=MAX_THREADS`) value. `1` restores the
+/// byte-for-byte serial path.
+pub fn configure_threads(req: usize) -> usize {
+    let t = clamp_threads(req);
+    TARGET.store(t, Ordering::Relaxed);
+    t
+}
+
+/// Current threads-per-worker target. On the very first call of the
+/// process (nothing configured yet) this reads `ELASTIC_TRAIN_THREADS`;
+/// a malformed value is a loud panic, not a silent default — the same
+/// no-silent-fallback contract as the config parser.
+pub fn configured_threads() -> usize {
+    match TARGET.load(Ordering::Relaxed) {
+        0 => {
+            let t = match std::env::var("ELASTIC_TRAIN_THREADS") {
+                Ok(v) => match v.parse::<usize>() {
+                    Ok(n) if n >= 1 => clamp_threads(n),
+                    _ => panic!("ELASTIC_TRAIN_THREADS must be a positive integer, got '{v}'"),
+                },
+                Err(_) => 1,
+            };
+            TARGET.store(t, Ordering::Relaxed);
+            t
+        }
+        t => t,
+    }
+}
+
+/// Clamp a threads-per-worker request against the visible cores for a
+/// run with `workers` concurrently-computing workers, printing the loud
+/// `hybrid-oversubscription` warning when it lowers the request.
+/// `workers` alone exceeding the cores is not this knob's concern (the
+/// thesis deliberately oversubscribes p at times); only the *product*
+/// p × c is clamped.
+pub fn clamp_oversubscription(threads: usize, workers: usize) -> usize {
+    let threads = clamp_threads(threads);
+    let workers = workers.max(1);
+    let cores = available_cores();
+    if threads.saturating_mul(workers) <= cores {
+        return threads;
+    }
+    let clamped = (cores / workers).max(1);
+    if clamped < threads {
+        eprintln!(
+            "warning[hybrid-oversubscription]: {workers} workers × threads={threads} would \
+             oversubscribe the {cores} visible cores; clamping to threads={clamped} per worker"
+        );
+    }
+    clamped
+}
+
+/// Thread count a GEMM of shape `m × n × k` should dispatch at: the
+/// configured target, clamped by the MR-tile count of M (a thread
+/// needs at least one whole tile) and floored to 1 below the
+/// [`PAR_MIN_WORK`] threshold.
+pub(crate) fn threads_for(m: usize, n: usize, k: usize) -> usize {
+    let t = configured_threads();
+    if t <= 1 || m < 2 * MR {
+        return 1;
+    }
+    if m.saturating_mul(n).saturating_mul(k.max(1)) < PAR_MIN_WORK {
+        return 1;
+    }
+    t.min(tiles(m))
+}
+
+fn tiles(m: usize) -> usize {
+    m.div_ceil(MR)
+}
+
+/// Row range `[i0, i1)` of C owned by `idx` (0 = the dispatching
+/// thread) when `m` rows are split over `t` threads. Ranges are
+/// contiguous, MR-tile-aligned at the start, and partition `[0, m)`;
+/// the last non-empty range absorbs the sub-MR tail so the serial
+/// kernels' tail loop runs exactly where it would single-threaded.
+pub(crate) fn range_for(m: usize, t: usize, idx: usize) -> (usize, usize) {
+    let tiles = tiles(m);
+    let (q, r) = (tiles / t, tiles % t);
+    let t0 = idx * q + idx.min(r);
+    let t1 = t0 + q + usize::from(idx < r);
+    ((t0 * MR).min(m), (t1 * MR).min(m))
+}
+
+struct Ctrl {
+    /// Bumped once per dispatched job; helpers wake on a change.
+    epoch: u64,
+    /// The active job (valid while `remaining > 0`).
+    job: Option<Job>,
+    /// Threads participating in the active job (incl. the dispatcher).
+    t_eff: usize,
+    /// Helpers that have not yet finished the active job.
+    remaining: usize,
+    shutdown: bool,
+}
+
+struct Shared {
+    ctrl: Mutex<Ctrl>,
+    start: Condvar,
+    done: Condvar,
+}
+
+fn lock_ctrl(shared: &Shared) -> MutexGuard<'_, Ctrl> {
+    shared.ctrl.lock().unwrap_or_else(PoisonError::into_inner)
+}
+
+/// A spawn-once helper-thread pool owned by one dispatching thread.
+/// Helpers park on a condvar between jobs; a job hands each
+/// participant one MR-aligned row panel of the output.
+pub struct GemmPool {
+    shared: Arc<Shared>,
+    helpers: Vec<std::thread::JoinHandle<()>>,
+}
+
+impl Default for GemmPool {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl GemmPool {
+    pub fn new() -> Self {
+        GemmPool {
+            shared: Arc::new(Shared {
+                ctrl: Mutex::new(Ctrl {
+                    epoch: 0,
+                    job: None,
+                    t_eff: 1,
+                    remaining: 0,
+                    shutdown: false,
+                }),
+                start: Condvar::new(),
+                done: Condvar::new(),
+            }),
+            helpers: Vec::new(),
+        }
+    }
+
+    /// Grow to at least `want` helpers (spawn-once: existing helpers
+    /// are reused across jobs and across thread-count changes).
+    fn ensure_helpers(&mut self, want: usize) {
+        while self.helpers.len() < want {
+            // Helper slots are 1-based: slot 0 is the dispatcher.
+            let slot = self.helpers.len() + 1;
+            let shared = Arc::clone(&self.shared);
+            // A helper spawned between jobs must not treat the *current*
+            // epoch as new work: seed its last-seen epoch under the lock.
+            let seen = lock_ctrl(&shared).epoch;
+            let handle = std::thread::Builder::new()
+                .name(format!("gemm-pool-{slot}"))
+                .spawn(move || helper_loop(shared, slot, seen))
+                .expect("spawn gemm pool helper");
+            self.helpers.push(handle);
+        }
+    }
+
+    /// Run `job` across `t` threads (the caller plus `t − 1` helpers).
+    /// The caller computes panel 0 in place of parking.
+    ///
+    /// Correctness rests on two invariants: `range_for` hands each
+    /// participant a disjoint row range, and this method does not
+    /// return until every helper has finished — so the raw panel
+    /// pointers inside `job` never outlive the caller's borrows.
+    pub(crate) fn run(&mut self, job: &Job, t: usize) {
+        let m = job.rows();
+        let t_eff = t.min(tiles(m)).max(1);
+        if t_eff <= 1 {
+            exec_rows(job, 0, m);
+            return;
+        }
+        self.ensure_helpers(t_eff - 1);
+        {
+            let mut c = lock_ctrl(&self.shared);
+            c.job = Some(*job);
+            c.t_eff = t_eff;
+            c.remaining = t_eff - 1;
+            c.epoch = c.epoch.wrapping_add(1);
+            self.shared.start.notify_all();
+        }
+        let (i0, i1) = range_for(m, t_eff, 0);
+        exec_rows(job, i0, i1);
+        let mut c = lock_ctrl(&self.shared);
+        while c.remaining > 0 {
+            c = self
+                .shared
+                .done
+                .wait(c)
+                .unwrap_or_else(PoisonError::into_inner);
+        }
+        c.job = None;
+    }
+}
+
+impl Drop for GemmPool {
+    fn drop(&mut self) {
+        {
+            let mut c = lock_ctrl(&self.shared);
+            c.shutdown = true;
+            self.shared.start.notify_all();
+        }
+        for h in self.helpers.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+fn helper_loop(shared: Arc<Shared>, slot: usize, mut seen: u64) {
+    loop {
+        let (job, t_eff);
+        {
+            let mut c = lock_ctrl(&shared);
+            loop {
+                if c.shutdown {
+                    return;
+                }
+                if c.epoch != seen {
+                    break;
+                }
+                c = shared.start.wait(c).unwrap_or_else(PoisonError::into_inner);
+            }
+            seen = c.epoch;
+            if slot >= c.t_eff {
+                // Not a participant this job (the pool once grew larger
+                // than the current thread count); park again.
+                continue;
+            }
+            job = c.job.expect("an active epoch always carries a job");
+            t_eff = c.t_eff;
+        }
+        let (i0, i1) = range_for(job.rows(), t_eff, slot);
+        exec_rows(&job, i0, i1);
+        {
+            let mut c = lock_ctrl(&shared);
+            c.remaining -= 1;
+            if c.remaining == 0 {
+                shared.done.notify_one();
+            }
+        }
+    }
+}
+
+thread_local! {
+    /// This thread's pool. Each executor worker thread (and the main
+    /// thread) lazily owns its own helpers; they are joined when the
+    /// owning thread exits.
+    static POOL: RefCell<GemmPool> = RefCell::new(GemmPool::new());
+}
+
+/// Dispatch `job` on the calling thread's pool at `t` threads.
+pub(crate) fn run(job: &Job, t: usize) {
+    POOL.with(|p| p.borrow_mut().run(job, t));
+}
+
+/// Measured speedup of the threaded GEMM at the *configured* thread
+/// count, from a quick (~tens of ms, once per process per setting)
+/// calibration on a representative fused forward panel. 1.0 at
+/// `threads = 1` without measuring. The sim backend divides the cost
+/// model's local-step time by this, so virtual-time sweeps price the
+/// c-thread local step the way the real backends experience it.
+pub fn measured_speedup() -> f64 {
+    let t = configured_threads();
+    if t <= 1 {
+        return 1.0;
+    }
+    let mut cache = SPEEDUP.lock().unwrap_or_else(PoisonError::into_inner);
+    if let Some((ct, s)) = *cache {
+        if ct == t {
+            return s;
+        }
+    }
+    let s = calibrate(t);
+    *cache = Some((t, s));
+    s
+}
+
+fn calibrate(t: usize) -> f64 {
+    // A mid-size fused forward panel: comfortably above PAR_MIN_WORK,
+    // small enough that best-of-5 × 4 reps × 2 settings stays in the
+    // tens of milliseconds.
+    let (m, n, k) = (256usize, 64, 128);
+    let a = vec![0.5f32; m * k];
+    let b = vec![0.25f32; k * n];
+    let bias = vec![0.1f32; n];
+    let mut c = vec![0.0f32; m * n];
+    let mut best_of = |c: &mut [f32]| {
+        let mut best = f64::INFINITY;
+        for _ in 0..5 {
+            let t0 = Instant::now();
+            for _ in 0..4 {
+                super::gemm::sgemm_bias_act(m, n, k, &a, &b, &bias, true, c);
+            }
+            best = best.min(t0.elapsed().as_secs_f64() / 4.0);
+        }
+        best
+    };
+    // Both paths produce bitwise-identical output, so briefly flipping
+    // the global target only changes *speed* for any concurrent
+    // dispatcher, never results.
+    TARGET.store(1, Ordering::Relaxed);
+    let serial = best_of(&mut c);
+    TARGET.store(t, Ordering::Relaxed);
+    let threaded = best_of(&mut c);
+    std::hint::black_box(&c);
+    let s = serial / threaded.max(1e-12);
+    if s.is_finite() && s > 0.0 {
+        s
+    } else {
+        1.0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ranges_partition_all_rows_mr_aligned() {
+        for &m in &[0usize, 1, 3, 4, 5, 8, 9, 31, 64, 67, 129] {
+            for &t in &[1usize, 2, 3, 4, 7] {
+                let mut next = 0;
+                for idx in 0..t {
+                    let (i0, i1) = range_for(m, t, idx);
+                    assert_eq!(i0, next, "m={m} t={t} idx={idx}: ranges must be contiguous");
+                    assert!(
+                        i0 % MR == 0 || i0 == m,
+                        "m={m} t={t} idx={idx}: panel start {i0} breaks an MR tile"
+                    );
+                    assert!(i0 <= i1 && i1 <= m);
+                    next = i1;
+                }
+                assert_eq!(next, m, "m={m} t={t}: ranges must cover every row");
+            }
+        }
+    }
+
+    #[test]
+    fn small_m_gives_fewer_threads_than_requested() {
+        // 2 tiles can feed at most 2 threads; the rest get empty ranges.
+        let m = 5; // tiles = 2
+        let (a0, a1) = range_for(m, 4, 0);
+        let (b0, b1) = range_for(m, 4, 1);
+        let (c0, c1) = range_for(m, 4, 2);
+        assert_eq!((a0, a1), (0, 4));
+        assert_eq!((b0, b1), (4, 5));
+        assert_eq!((c0, c1), (5, 5), "surplus threads own empty panels");
+    }
+
+    #[test]
+    fn configure_threads_clamps_and_reports() {
+        assert_eq!(configure_threads(0), 1);
+        assert_eq!(configure_threads(MAX_THREADS + 100), MAX_THREADS);
+        assert_eq!(configure_threads(3), 3);
+        configure_threads(1);
+    }
+
+    #[test]
+    fn oversubscription_clamps_the_product_not_p() {
+        let cores = available_cores();
+        assert!(cores >= 1);
+        // p alone exceeding the cores is untouched at threads=1.
+        assert_eq!(clamp_oversubscription(1, cores * 8), 1);
+        // A huge product is pulled back under the core count (or to 1).
+        let c = clamp_oversubscription(MAX_THREADS, 2);
+        assert!(c == 1 || c * 2 <= cores.max(2), "clamped to {c} on {cores} cores");
+    }
+
+    #[test]
+    fn measured_speedup_is_identity_at_one_thread_and_finite_above() {
+        configure_threads(1);
+        assert_eq!(measured_speedup(), 1.0);
+        configure_threads(2);
+        let s = measured_speedup();
+        assert!(s.is_finite() && s > 0.0, "speedup {s}");
+        configure_threads(1);
+    }
+}

@@ -145,6 +145,16 @@ fn cmd_train(args: &Args) -> Result<()> {
     });
 
     if let Some(mut m) = cfg.parallel_method()? {
+        // Hybrid parallelism: p workers × `threads` GEMM helpers each.
+        // The sim backend computes gradients on one thread regardless
+        // of p (virtual time), so only the real backends multiply.
+        let workers = if backend == Backend::Sim { 1 } else { cfg.p };
+        let threads = elastic_train::linalg::pool::clamp_oversubscription(cfg.threads, workers);
+        elastic_train::linalg::pool::configure_threads(threads);
+        // Price the measured c-thread local-step speedup into the cost
+        // model so virtual-time τ trade-offs match the real backends
+        // (exact no-op at threads=1).
+        let cost = cost.with_thread_speedup(elastic_train::linalg::pool::measured_speedup());
         // Tree runs use the thesis rate α = β/(d+1) — a node talks to
         // at most d+1 neighbors — instead of the star's β/p.
         if let Topology::Tree(spec) = &topo {
@@ -156,9 +166,10 @@ fn cmd_train(args: &Args) -> Result<()> {
             };
         }
         println!(
-            "train: {} p={} τ={} η={} horizon={}s ({} cost model, {} sharding, {} model, {} backend, {} topology)",
+            "train: {} p={} threads={} τ={} η={} horizon={}s ({} cost model, {} sharding, {} model, {} backend, {} topology)",
             m.name(),
             cfg.p,
+            threads,
             cfg.tau,
             cfg.eta,
             cfg.horizon,
@@ -188,7 +199,8 @@ fn cmd_train(args: &Args) -> Result<()> {
                 batch: cfg.batch,
                 seed: cfg.seed,
             };
-            let opts = ProcessOpts::from_args(args)?;
+            let mut opts = ProcessOpts::from_args(args)?;
+            opts.threads = threads;
             run_process(&spec, cfg.p, &dc, &opts)?
         } else {
             match model {
@@ -206,6 +218,11 @@ fn cmd_train(args: &Args) -> Result<()> {
         };
         print_curve(&r);
     } else if let Some(m) = cfg.sequential_method()? {
+        // Sequential runs have exactly one computing worker.
+        elastic_train::linalg::pool::configure_threads(
+            elastic_train::linalg::pool::clamp_oversubscription(cfg.threads, 1),
+        );
+        let cost = cost.with_thread_speedup(elastic_train::linalg::pool::measured_speedup());
         if topo != Topology::Star {
             bail!(
                 "{} is a sequential (p=1) method; topology={} does not apply",

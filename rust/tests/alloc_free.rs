@@ -115,4 +115,30 @@ fn grad_batch_steady_state_does_not_allocate() {
     let after = ALLOC_CALLS.load(Ordering::SeqCst);
     assert!(sink.is_finite());
     assert_eq!(after - before, 0, "smaller conv batches must reuse the panels");
+
+    // Hybrid parallelism holds the same contract: with `threads=2`
+    // GEMM helpers the dispatch path is a stack-copied job descriptor
+    // plus futex-backed Condvar signaling — once the pool's helper
+    // threads exist (warm-up below is allowed to spawn them and seed
+    // the thread-local registry), a steady-state parallel grad_batch
+    // never touches the allocator either.
+    elastic_train::linalg::pool::configure_threads(2);
+    for _ in 0..3 {
+        mlp.batch_grad(&theta, &batch, &mut grad);
+        conv.batch_grad(&ctheta, &batch, &mut cgrad);
+    }
+    let before = ALLOC_CALLS.load(Ordering::SeqCst);
+    for _ in 0..10 {
+        sink += mlp.batch_grad(&theta, &batch, &mut grad);
+        sink += conv.batch_grad(&ctheta, &batch, &mut cgrad);
+    }
+    let after = ALLOC_CALLS.load(Ordering::SeqCst);
+    assert!(sink.is_finite());
+    assert_eq!(
+        after - before,
+        0,
+        "threaded grad_batch allocated {} times across 10 steady-state calls",
+        after - before
+    );
+    elastic_train::linalg::pool::configure_threads(1);
 }

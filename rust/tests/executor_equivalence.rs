@@ -6,7 +6,8 @@
 
 use elastic_train::cluster::CostModel;
 use elastic_train::coordinator::{
-    DriverConfig, Executor, Method, MlpOracle, QuadraticOracle, SimExecutor, ThreadExecutor,
+    run_process, DriverConfig, Executor, Method, MlpOracle, OracleSpec, ProcessOpts,
+    QuadraticOracle, SimExecutor, ThreadExecutor,
 };
 use elastic_train::data::BlobDataset;
 use elastic_train::model::{flat, MlpConfig};
@@ -64,6 +65,88 @@ fn thread_matches_sim_on_quadratic_easgd() {
     assert!(lt < 1e-6, "thread final loss {lt}");
     // ...and within the required tolerance of each other.
     assert!((ls - lt).abs() < 1e-4, "sim {ls} vs thread {lt}");
+}
+
+/// Hybrid parallelism pin: with `threads=2` GEMM helpers per worker,
+/// ALL THREE backends (virtual-time sim, real threads, real processes
+/// over sockets) still agree on the EASGD final loss. The threaded
+/// kernels are bitwise-identical to serial by construction (MR-aligned
+/// row panels, same accumulation order), so enabling the pool must not
+/// move any backend; the process leg additionally exercises the
+/// `threads=` forwarding through the worker CLI. The knob is
+/// process-global, which is safe to flip here precisely BECAUSE of
+/// that bitwise identity: concurrently running tests see identical
+/// numerics either way.
+#[test]
+fn backends_agree_with_hybrid_threads_enabled() {
+    elastic_train::linalg::pool::configure_threads(2);
+
+    let (n, p, steps) = (512usize, 4usize, 8_000u64);
+    let method = Method::easgd_default(p, 4);
+    let sim_cfg = DriverConfig {
+        eta: 0.1,
+        method,
+        cost: fast_cost(n),
+        horizon: 1e6, // steps bound first
+        eval_every: 1e6,
+        seed: 43,
+        max_steps: steps,
+        lr_decay_gamma: 0.0,
+    };
+    let mk = || QuadraticOracle::family(n, 1.0, 0.0, 1.0, 0.0, p);
+    let sim = SimExecutor.run(&mut mk(), &sim_cfg).unwrap();
+
+    let thr_cfg = DriverConfig { horizon: 60.0, ..sim_cfg.clone() };
+    let thr = ThreadExecutor::default().run(&mut mk(), &thr_cfg).unwrap();
+
+    // Process leg: real worker processes, each told `threads=2` on its
+    // command line (the same plumbing `repro train backend=process`
+    // uses), rebuilding the oracle from the spec.
+    let spec = OracleSpec::Quadratic { n, h: 1.0, x0: 0.0, target: 1.0, noise: 0.0 };
+    let opts = ProcessOpts {
+        exe: Some(std::path::PathBuf::from(env!("CARGO_BIN_EXE_repro"))),
+        threads: 2,
+        ..ProcessOpts::default()
+    };
+    let prc = run_process(&spec, p, &thr_cfg, &opts).unwrap();
+
+    assert!(!sim.diverged && !thr.diverged && !prc.diverged);
+    assert_eq!(sim.total_steps, steps);
+    assert_eq!(thr.total_steps, steps);
+    assert_eq!(prc.total_steps, steps);
+    let ls = sim.curve.last().unwrap().train_loss;
+    let lt = thr.curve.last().unwrap().train_loss;
+    let lp = prc.curve.last().unwrap().train_loss;
+    assert!(ls < 1e-6, "sim final loss {ls}");
+    assert!(lt < 1e-6, "thread final loss {lt}");
+    assert!(lp < 1e-6, "process final loss {lp}");
+    assert!((ls - lt).abs() < 1e-4, "sim {ls} vs thread {lt}");
+    assert!((ls - lp).abs() < 1e-4, "sim {ls} vs process {lp}");
+
+    // Also run the REAL GEMM model through the thread backend with the
+    // pool live: p worker threads each lazily build their own 2-helper
+    // pool (thread-local), and the run must converge exactly as a
+    // serial run would (bitwise-identical gradients).
+    let data = Arc::new(BlobDataset::generate(32, 10, 1024, 128, 0.8, 7));
+    let mcfg = MlpConfig::new(&[32, 64, 10], 1e-4);
+    let mlp_cfg = DriverConfig {
+        eta: 0.05,
+        method: Method::easgd_default(p, 4),
+        cost: fast_cost(mcfg.n_params()),
+        horizon: 60.0,
+        eval_every: 1e6,
+        seed: 43,
+        max_steps: 1_200,
+        lr_decay_gamma: 0.0,
+    };
+    let mut oracles = MlpOracle::family(data, &mcfg, 128, p);
+    let mlp = ThreadExecutor::default().run(&mut oracles, &mlp_cfg).unwrap();
+    assert!(!mlp.diverged);
+    assert_eq!(mlp.total_steps, 1_200);
+    let lm = mlp.curve.last().unwrap().train_loss;
+    assert!(lm.is_finite() && lm < 2.5, "threaded-GEMM MLP loss {lm}");
+
+    elastic_train::linalg::pool::configure_threads(1);
 }
 
 /// Same equivalence on a *noisy* quadratic: the stationary center MSE
