@@ -116,25 +116,25 @@ pub fn run_parallel<O: GradOracle>(oracles: &mut [O], cfg: &DriverConfig) -> Run
                     match cfg.method {
                         Method::ADownpour { .. } => {
                             let a = 1.0 / (master.clock as f32);
-                            flat::moving_average(
-                                master.z.as_mut().unwrap(),
-                                &master.center,
-                                a,
-                            );
+                            let z = master
+                                .z
+                                .as_mut()
+                                .expect("averaged methods allocate z at init");
+                            flat::moving_average(z, &master.center, a);
                         }
                         Method::MvaDownpour { alpha, .. } => {
-                            flat::moving_average(
-                                master.z.as_mut().unwrap(),
-                                &master.center,
-                                alpha,
-                            );
+                            let z = master
+                                .z
+                                .as_mut()
+                                .expect("averaged methods allocate z at init");
+                            flat::moving_average(z, &master.center, alpha);
                         }
                         _ => {}
                     }
                 }
                 Method::MDownpour { delta } => {
                     // Worker reads the lookahead x̃ + δv (Alg. 4).
-                    let mv = master.mv.as_ref().unwrap();
+                    let mv = master.mv.as_ref().expect("MDOWNPOUR allocates mv at init");
                     for (t, (c, v)) in w.theta.iter_mut().zip(master.center.iter().zip(mv)) {
                         *t = c + delta * v;
                     }
@@ -143,7 +143,7 @@ pub fn run_parallel<O: GradOracle>(oracles: &mut [O], cfg: &DriverConfig) -> Run
                     // Dual ascent: λⁱ ← λⁱ − (xⁱ − x̃); then master
                     // refreshes its stored contribution (xⁱ − λⁱ) and
                     // recomputes the center as the mean.
-                    let contribs = master.contrib.as_mut().unwrap();
+                    let contribs = master.contrib.as_mut().expect("ADMM allocates contrib at init");
                     for j in 0..n {
                         w.aux[j] -= w.theta[j] - master.center[j];
                         contribs[wi][j] = w.theta[j] - w.aux[j];
@@ -183,7 +183,7 @@ pub fn run_parallel<O: GradOracle>(oracles: &mut [O], cfg: &DriverConfig) -> Run
                     // Nesterov (Alg. 5) immediately (async push).
                     let eta_t = cfg.eta_at(w.t_local);
                     loss = oracles[wi].grad(&w.theta, &mut w.rng, &mut w.grad);
-                    let mv = master.mv.as_mut().unwrap();
+                    let mv = master.mv.as_mut().expect("MDOWNPOUR allocates mv at init");
                     for j in 0..n {
                         mv[j] = delta * mv[j] - eta_t * w.grad[j];
                         master.center[j] += mv[j];

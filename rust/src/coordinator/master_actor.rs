@@ -45,9 +45,9 @@ use super::executor::{DriverConfig, WorkerState};
 use super::method::Method;
 use super::oracle::GradOracle;
 use super::threaded::{lock_recover, CenterBackend, Shared};
-use std::sync::atomic::Ordering;
-use std::sync::mpsc::{channel, Receiver, Sender};
-use std::sync::Mutex;
+use crate::sync::atomic::Ordering;
+use crate::sync::mpsc::{channel, Receiver, Sender};
+use crate::sync::Mutex;
 use std::time::Instant;
 
 /// A worker message to the master actor.
@@ -92,7 +92,7 @@ impl ActorState {
                     Method::MDownpour { delta } => delta,
                     _ => unreachable!("Grad messages are MDOWNPOUR-only"),
                 };
-                let mv = self.mv.as_mut().unwrap();
+                let mv = self.mv.as_mut().expect("MDOWNPOUR allocates mv at init");
                 // Alg. 5: v ← δv − η_t g ; x̃ ← x̃ + v.
                 for (c, (v, g)) in self.center.iter_mut().zip(mv.iter_mut().zip(&grad)) {
                     *v = delta * *v - eta * g;
@@ -109,7 +109,7 @@ impl ActorState {
                 let _ = self.reply_tx[wid].send(look);
             }
             ToMaster::Contrib { wid, contrib } => {
-                let contribs = self.contrib.as_mut().unwrap();
+                let contribs = self.contrib.as_mut().expect("ADMM allocates contrib at init");
                 contribs[wid] = contrib;
                 // Consensus step: center = mean of stored contributions,
                 // recomputed in full like the sim driver.

@@ -12,8 +12,8 @@ use crate::data::prefetch::{PrefetchPool, Sharding};
 use crate::data::BlobDataset;
 use crate::model::{BatchModel, ConvNet, ConvNetConfig, Mlp, MlpConfig};
 use crate::rng::Rng;
+use crate::sync::Arc;
 use std::collections::VecDeque;
-use std::sync::Arc;
 
 /// Evaluation summary for the center variable.
 #[derive(Clone, Copy, Debug)]

@@ -53,9 +53,9 @@ use crate::config::Args;
 use crate::error::Result;
 use crate::model::flat;
 use crate::rng::Rng;
+use crate::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use crate::sync::{thread, Mutex};
 use std::path::PathBuf;
-use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
-use std::sync::Mutex;
 use std::time::{Duration, Instant};
 
 /// How the master reaches its workers.
@@ -310,10 +310,16 @@ impl CenterState {
         match method {
             Method::ADownpour { .. } => {
                 let a = 1.0 / (self.clock as f32);
-                flat::moving_average(self.z.as_mut().unwrap(), &self.center, a);
+                match self.z.as_mut() {
+                    Some(z) => flat::moving_average(z, &self.center, a),
+                    None => return Err(missing_z(method)),
+                }
             }
             Method::MvaDownpour { alpha, .. } => {
-                flat::moving_average(self.z.as_mut().unwrap(), &self.center, alpha);
+                match self.z.as_mut() {
+                    Some(z) => flat::moving_average(z, &self.center, alpha),
+                    None => return Err(missing_z(method)),
+                }
             }
             _ => {}
         }
@@ -330,6 +336,13 @@ impl CenterState {
     fn snapshot(&self) -> Vec<f32> {
         self.z.as_ref().unwrap_or(&self.center).clone()
     }
+}
+
+/// The averaged-center buffer `z` is allocated at init iff the method
+/// is averaged; reaching an averaged update without it is an init bug
+/// in [`run_process`], surfaced as a typed error rather than a panic.
+fn missing_z(method: Method) -> crate::error::Error {
+    crate::err!("{} master has no averaged center z — init/method mismatch", method.name())
 }
 
 /// What one handler thread learned from its worker's `Done` frame.
@@ -500,7 +513,7 @@ pub fn run_process(
     let mut snaps: Vec<(f64, Vec<f32>)> = Vec::new();
     let mut reports: Vec<Result<WorkerReport>> = Vec::new();
     let t0 = Instant::now();
-    std::thread::scope(|s| {
+    thread::scope(|s| {
         let handles: Vec<_> = conns
             .into_iter()
             .map(|conn| {
@@ -522,7 +535,7 @@ pub fn run_process(
             if handles.iter().all(|h| h.is_finished()) {
                 break;
             }
-            std::thread::sleep(Duration::from_micros(200));
+            thread::sleep(Duration::from_micros(200));
         }
         for h in handles {
             reports.push(

@@ -53,10 +53,10 @@ use crate::cluster::{RunResult, TimeBreakdown};
 use crate::error::Result;
 use crate::model::flat;
 use crate::rng::Rng;
+use crate::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use crate::sync::{thread, Mutex, MutexGuard};
 use std::ops::Range;
 use std::panic::{catch_unwind, AssertUnwindSafe};
-use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
-use std::sync::Mutex;
 use std::time::{Duration, Instant};
 
 /// Lock a mutex, recovering the guard from a poisoned lock. Poison
@@ -66,7 +66,7 @@ use std::time::{Duration, Instant};
 /// torn), so propagating the secondary `PoisonError` panic out of
 /// every OTHER thread would only bury the real failure. Shared by the
 /// sharded center, the master actor, and the process master.
-pub(crate) fn lock_recover<T>(m: &Mutex<T>) -> std::sync::MutexGuard<'_, T> {
+pub(crate) fn lock_recover<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
     m.lock().unwrap_or_else(|poisoned| poisoned.into_inner())
 }
 
@@ -178,13 +178,19 @@ impl ShardedMaster {
                     w.theta[r.clone()].copy_from_slice(&sh.center);
                     w.aux[r.clone()].iter_mut().for_each(|a| *a = 0.0);
                     sh.clock += 1;
+                    // The averaged-center slice exists by construction
+                    // for these two methods (`run_threaded` passes
+                    // `averaged = true`); `expect` documents that
+                    // invariant instead of an anonymous unwrap.
                     match cfg.method {
                         Method::ADownpour { .. } => {
                             let a = 1.0 / (sh.clock as f32);
-                            flat::moving_average(sh.z.as_mut().unwrap(), &sh.center, a);
+                            let z = sh.z.as_mut().expect("averaged methods allocate z at init");
+                            flat::moving_average(z, &sh.center, a);
                         }
                         Method::MvaDownpour { alpha, .. } => {
-                            flat::moving_average(sh.z.as_mut().unwrap(), &sh.center, alpha);
+                            let z = sh.z.as_mut().expect("averaged methods allocate z at init");
+                            flat::moving_average(z, &sh.center, alpha);
                         }
                         _ => {}
                     }
@@ -336,7 +342,7 @@ pub(crate) fn run_with_center<O: GradOracle + Send, C: CenterBackend>(
     let mut snaps: Vec<(f64, Vec<f32>)> = Vec::new();
     let t0 = Instant::now();
     let mut server_panicked = false;
-    std::thread::scope(|s| {
+    thread::scope(|s| {
         let server = s.spawn(move || center.serve());
         let handles: Vec<_> = workers
             .iter_mut()
@@ -362,7 +368,7 @@ pub(crate) fn run_with_center<O: GradOracle + Send, C: CenterBackend>(
             if handles.iter().all(|h| h.is_finished()) {
                 break;
             }
-            std::thread::sleep(Duration::from_micros(200));
+            thread::sleep(Duration::from_micros(200));
         }
         // Workers join first (dropping their ports), then the server,
         // whose receive loop disconnects once the last port is gone.
@@ -532,6 +538,88 @@ mod tests {
         assert!(r.curve.last().unwrap().train_loss < 1e-4);
         // Every local step is one serialized master round (τ = 1).
         assert_eq!(r.rounds, 4000);
+    }
+
+    /// Regression coverage for the poison-recovery branches: a worker
+    /// dying *while it holds a center shard lock* (the only way a lock
+    /// becomes poisoned) must surface as the named "worker N died
+    /// mid-run" error, promptly, with the survivors — including the
+    /// main thread's snapshot cadence — recovering the poisoned shard
+    /// through `lock_recover` instead of deadlocking or cascading.
+    struct PoisonInjector {
+        inner: ShardedMaster,
+        victim: usize,
+        after: u64,
+    }
+
+    impl CenterBackend for PoisonInjector {
+        type Port = usize;
+
+        fn take_ports(&mut self, p: usize) -> Vec<usize> {
+            (0..p).collect()
+        }
+
+        fn snapshot(&self) -> Vec<f32> {
+            self.inner.snapshot()
+        }
+
+        fn rounds(&self) -> u64 {
+            self.inner.rounds()
+        }
+
+        fn step<O: GradOracle>(
+            &self,
+            cfg: &DriverConfig,
+            port: &mut usize,
+            w: &mut WorkerState,
+            oracle: &mut O,
+            sh: &Shared,
+        ) -> f32 {
+            if *port == self.victim && w.t_local >= self.after {
+                let _guard = lock_recover(&self.inner.shards[0]);
+                panic!("injected death while holding center shard 0");
+            }
+            self.inner.step(cfg, &mut (), w, oracle, sh)
+        }
+    }
+
+    #[test]
+    fn worker_dying_while_holding_a_shard_fails_loud_and_prompt() {
+        let mut oracles = QuadraticOracle::family(64, 1.0, 0.0, 1.0, 0.0, 3);
+        let init = oracles[0].init_params();
+        let inner = ShardedMaster::new(&init, 4, false);
+        let center = PoisonInjector {
+            inner,
+            victim: 1,
+            after: 3,
+        };
+        // A step budget the survivors could not burn for minutes: the
+        // promptness bound below proves the stop flag, not budget
+        // exhaustion, ended the run.
+        let mut c = cfg(Method::easgd_default(3, 1), u64::MAX / 2);
+        c.eta = 0.05;
+        let t0 = Instant::now();
+        let err = run_with_center(&mut oracles, &c, init, center).unwrap_err();
+        let msg = format!("{err}");
+        assert!(msg.contains("worker 1 died mid-run"), "{msg}");
+        assert!(msg.contains("injected death while holding center shard 0"), "{msg}");
+        assert!(
+            t0.elapsed() < Duration::from_secs(10),
+            "survivors must stop promptly, not burn the step budget"
+        );
+    }
+
+    #[test]
+    fn poisoned_shard_is_recovered_by_snapshot_and_rounds() {
+        let master = ShardedMaster::new(&[1.0f32; 8], 2, false);
+        let died = catch_unwind(AssertUnwindSafe(|| {
+            let _g = lock_recover(&master.shards[0]);
+            panic!("poison shard 0");
+        }));
+        assert!(died.is_err());
+        // Both read paths must recover the poisoned guard, not cascade.
+        assert_eq!(master.snapshot(), vec![1.0f32; 8]);
+        assert_eq!(master.rounds(), 0);
     }
 
     #[test]

@@ -125,10 +125,11 @@ impl TreeLayout {
     /// size ⌈leaves/d^k⌉ from root down.
     pub fn dary(degree: usize, leaves: usize) -> TreeLayout {
         assert!(degree >= 2 && leaves >= 1);
-        // Level sizes from the leaf level up.
+        // Level sizes from the leaf level up. `sizes` and `offs` are
+        // non-empty by construction, so `last()` always holds a value.
         let mut sizes = vec![leaves];
-        while *sizes.last().unwrap() > 1 {
-            let s = sizes.last().unwrap().div_ceil(degree);
+        while *sizes.last().expect("sizes starts non-empty") > 1 {
+            let s = sizes.last().expect("sizes starts non-empty").div_ceil(degree);
             sizes.push(s);
         }
         sizes.reverse(); // root first
@@ -138,7 +139,7 @@ impl TreeLayout {
         // Offsets of each level.
         let mut offs = vec![0usize];
         for s in &sizes {
-            offs.push(offs.last().unwrap() + s);
+            offs.push(offs.last().expect("offs starts non-empty") + s);
         }
         for lvl in 1..sizes.len() {
             for j in 0..sizes[lvl] {

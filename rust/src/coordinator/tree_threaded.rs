@@ -45,11 +45,12 @@ use super::oracle::GradOracle;
 use super::topology::{node_taus, TreeLayout, TreeSpec};
 use crate::cluster::{RunResult, TimeBreakdown};
 use crate::error::Result;
+use super::threaded::lock_recover;
 use crate::model::flat;
 use crate::rng::Rng;
-use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
-use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender};
-use std::sync::Mutex;
+use crate::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use crate::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender};
+use crate::sync::{thread, Mutex, PoisonError};
 use std::time::{Duration, Instant};
 
 /// A parameter snapshot in flight.
@@ -109,7 +110,7 @@ impl RootSnaps {
     fn maybe_publish(&self, theta: &[f32], next_pub: &mut f64) {
         let el = self.t0.elapsed().as_secs_f64();
         if el >= *next_pub {
-            self.snaps.lock().unwrap().push((el, theta.to_vec()));
+            lock_recover(&self.snaps).push((el, theta.to_vec()));
             while *next_pub <= el {
                 *next_pub += self.cadence;
             }
@@ -118,7 +119,7 @@ impl RootSnaps {
 
     fn publish_final(&self, theta: &[f32]) {
         let el = self.t0.elapsed().as_secs_f64();
-        self.snaps.lock().unwrap().push((el, theta.to_vec()));
+        lock_recover(&self.snaps).push((el, theta.to_vec()));
     }
 }
 
@@ -223,7 +224,7 @@ fn interior_loop(
             Err(RecvTimeoutError::Timeout) => {}
             // Cannot happen while the run holds the sender set; avoid a
             // busy spin if it ever does.
-            Err(RecvTimeoutError::Disconnected) => std::thread::sleep(INTERIOR_TICK),
+            Err(RecvTimeoutError::Disconnected) => thread::sleep(INTERIOR_TICK),
         }
         clock += 1;
         if ch.tau_up != u64::MAX && clock % ch.tau_up == 0 {
@@ -312,7 +313,7 @@ pub fn run_tree_threaded<O: GradOracle + Send>(
         cadence: cfg.eval_every.max(1e-3),
     };
 
-    std::thread::scope(|s| {
+    thread::scope(|s| {
         let mut leaf_handles = Vec::new();
         let mut interior_handles = Vec::new();
         let mut leaf_iter = workers.iter_mut().zip(oracles.iter_mut());
@@ -324,7 +325,9 @@ pub fn run_tree_threaded<O: GradOracle + Send>(
                 interior_handles
                     .push(s.spawn(move || interior_loop(alpha, ch, theta, shared, root)));
             } else {
-                let (w, o) = leaf_iter.next().unwrap();
+                let (w, o) = leaf_iter
+                    .next()
+                    .expect("TreeLayout mints exactly `leaves` leaf slots");
                 leaf_handles.push(s.spawn(move || leaf_loop(cfg, alpha, ch, w, o, shared, root)));
             }
         }
@@ -337,7 +340,7 @@ pub fn run_tree_threaded<O: GradOracle + Send>(
             if leaves_done && interior_handles.iter().all(|h| h.is_finished()) {
                 break;
             }
-            std::thread::sleep(Duration::from_micros(200));
+            thread::sleep(Duration::from_micros(200));
         }
         // Scope joins on exit; propagate worker panics eagerly.
         for h in leaf_handles.into_iter().chain(interior_handles) {
@@ -350,7 +353,10 @@ pub fn run_tree_threaded<O: GradOracle + Send>(
 
     let mut result = RunResult::default();
     let mut diverged = shared.diverged.load(Ordering::Relaxed);
-    let snaps = root_snaps.snaps.into_inner().unwrap();
+    // Same recovery contract as lock_recover: all writers joined above,
+    // and a panicking node already resumed its unwind, so a poisoned
+    // flag here carries no information the join didn't.
+    let snaps = root_snaps.snaps.into_inner().unwrap_or_else(PoisonError::into_inner);
     for (t, theta) in &snaps {
         if !eval_point(&mut oracles[0], theta, *t, &mut result.curve) {
             diverged = true;

@@ -28,6 +28,7 @@
 //! names how far the frame got.
 
 use crate::error::Result;
+use crate::sync::thread;
 use std::io::{Read, Write};
 use std::time::Instant;
 
@@ -298,7 +299,7 @@ impl WireStream {
                 }
                 Err(e) if Instant::now() < deadline => {
                     let _ = e;
-                    std::thread::sleep(std::time::Duration::from_millis(20));
+                    thread::sleep(std::time::Duration::from_millis(20));
                 }
                 Err(e) => {
                     return Err(crate::err!("cannot connect to master at {}: {e}", addr.to_arg()))
@@ -360,7 +361,7 @@ impl WireListener {
                             timeout
                         ));
                     }
-                    std::thread::sleep(std::time::Duration::from_millis(5));
+                    thread::sleep(std::time::Duration::from_millis(5));
                 }
                 Err(e) => return Err(crate::err!("accept failed: {e}")),
             }
@@ -471,6 +472,7 @@ mod tests {
     }
 
     #[test]
+    #[cfg_attr(miri, ignore = "Miri's interpreter has no socket support")]
     fn tcp_listener_roundtrip_one_frame() {
         let (l, actual) = WireListener::bind(&WireAddr::Tcp("127.0.0.1:0".into())).unwrap();
         let dial = actual.clone();

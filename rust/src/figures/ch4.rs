@@ -14,7 +14,7 @@ use crate::csv_row;
 use crate::data::{BlobDataset, Sharding};
 use crate::error::Result;
 use crate::model::{ConvNetConfig, MlpConfig, ModelKind};
-use std::sync::Arc;
+use crate::sync::Arc;
 
 pub fn sweep_data(seed: u64) -> Arc<BlobDataset> {
     Arc::new(BlobDataset::generate(32, 10, 4096, 512, 2.2, seed))

@@ -49,6 +49,11 @@
 //! - [`config`] — the key=value config system; [`figures`] — one
 //!   generator per thesis table/figure, backend-selectable via
 //!   `backend=sim|thread`.
+//! - [`sync`] — the synchronization shim every concurrent module
+//!   imports instead of `std::sync`/`std::thread` (enforced by
+//!   `tests/repo_lint.rs`): `std` re-exports normally, loom's
+//!   instrumented equivalents under `RUSTFLAGS="--cfg loom"` so
+//!   `tests/loom_models.rs` can model-check the hand-rolled protocols.
 
 pub mod cluster;
 pub mod config;
@@ -61,3 +66,4 @@ pub mod model;
 pub mod rng;
 pub mod runtime;
 pub mod sim;
+pub mod sync;

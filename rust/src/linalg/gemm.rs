@@ -38,6 +38,7 @@
 //! stability matrices, this one for throughput on batch × dim panels.
 
 use super::pool;
+use std::ptr::NonNull;
 
 /// Register-tile rows of the broadcast kernels.
 pub const MR: usize = 4;
@@ -61,10 +62,27 @@ pub(crate) enum JobKind {
 /// shape. `Copy` so dispatch publishes it to helpers by value — no
 /// allocation, no lifetime to thread through the pool.
 ///
-/// Safety contract: a `Job` is only ever executed between its
-/// construction in [`dispatch`] and dispatch's return, while the
-/// borrows it was built from are live; helpers receive disjoint row
-/// ranges, so the `c` panels they materialize never alias.
+/// # Aliasing invariants (the whole safety story, in one place)
+///
+/// 1. **Lifetime**: a `Job` is built in [`dispatch`] from live slice
+///    borrows (`a: &[f32]`, `b: &[f32]`, optional `bias: &[f32]`,
+///    `c: &mut [f32]`) and is only executed between construction and
+///    dispatch's return — [`pool::GemmPool::run`] blocks until every
+///    helper has finished its panel, so the pointers never outlive the
+///    borrows they were derived from.
+/// 2. **Sizes**: the public entry points assert `a.len() == m·k`,
+///    `b.len() == k·n`, `bias.len() == n`, `c.len() == m·n` before a
+///    `Job` exists, so every in-range reconstruction in [`exec_rows`]
+///    stays inside the original allocations.
+/// 3. **Disjoint writes**: concurrent executors receive row ranges
+///    from [`pool::range_for`], which partitions `[0, m)` — the `&mut`
+///    panels `c[i0·n .. i1·n]` they materialize are pairwise disjoint,
+///    so no two live `&mut` ever overlap. `a`, `b`, and `bias` are
+///    reconstructed only as shared `&[f32]`, which may alias freely.
+/// 4. **Provenance**: `bias` is `Option<NonNull<f32>>` — present iff
+///    the job is `BiasAct` (checked at construction from a real slice,
+///    never a dangling sentinel), so Miri's provenance tracking sees
+///    either a valid derived pointer or no pointer at all.
 #[derive(Clone, Copy)]
 pub(crate) struct Job {
     kind: JobKind,
@@ -73,14 +91,16 @@ pub(crate) struct Job {
     k: usize,
     a: *const f32,
     b: *const f32,
-    /// Null-free only for `BiasAct`; unused otherwise.
-    bias: *const f32,
+    /// `Some` iff `kind` is [`JobKind::BiasAct`]; points at the bias
+    /// slice (length `n`) the job was constructed from.
+    bias: Option<NonNull<f32>>,
     c: *mut f32,
 }
 
-// SAFETY: the pointers describe caller-owned slices that outlive the
-// dispatch (the dispatching thread blocks until all helpers finish),
-// and each helper writes a disjoint row panel of `c`.
+// SAFETY: per the aliasing invariants above — the pointers describe
+// caller-owned slices that outlive the dispatch (the dispatching
+// thread blocks until all helpers finish), and each helper writes a
+// disjoint row panel of `c`.
 unsafe impl Send for Job {}
 
 impl Job {
@@ -98,19 +118,23 @@ pub(crate) fn exec_rows(job: &Job, i0: usize, i1: usize) {
         return;
     }
     let (m, n, k) = (job.m, job.n, job.k);
-    // SAFETY: per the Job contract the pointers cover a.len() == m*k,
-    // b.len() == k*n, c.len() == m*n live caller borrows, and rows
-    // [i0, i1) of c are owned exclusively by this call.
+    // SAFETY: Job invariants 1–2 — the pointers cover a.len() == m*k,
+    // b.len() == k*n live caller borrows, reconstructed shared-only.
     let a = unsafe { std::slice::from_raw_parts(job.a, m * k) };
     let b = unsafe { std::slice::from_raw_parts(job.b, k * n) };
+    // SAFETY: Job invariant 3 — rows [i0, i1) of c are owned
+    // exclusively by this call (pool::range_for partitions [0, m)), so
+    // this is the only live &mut over c[i0*n .. i1*n].
     let c = unsafe { std::slice::from_raw_parts_mut(job.c.add(i0 * n), (i1 - i0) * n) };
     match job.kind {
         JobKind::Broadcast { ars, acs } => kernel_broadcast(i0, i1, n, k, [ars, acs], a, b, c),
         JobKind::Dot => kernel_dot(i0, i1, n, k, a, b, c),
         JobKind::BothT => kernel_both_t(i0, i1, m, n, k, a, b, c),
         JobKind::BiasAct { relu } => {
-            // SAFETY: BiasAct jobs are built from a live &[f32] of len n.
-            let bias = unsafe { std::slice::from_raw_parts(job.bias, n) };
+            let bias = job.bias.expect("BiasAct jobs always carry a bias pointer");
+            // SAFETY: Job invariant 4 — a Some bias was derived from a
+            // live &[f32] of len n at construction.
+            let bias = unsafe { std::slice::from_raw_parts(bias.as_ptr(), n) };
             kernel_bias_act(i0, i1, n, k, a, b, bias, relu, c);
         }
     }
@@ -127,9 +151,14 @@ fn dispatch(
     k: usize,
     a: &[f32],
     b: &[f32],
-    bias: &[f32],
+    bias: Option<&[f32]>,
     c: &mut [f32],
 ) {
+    debug_assert_eq!(
+        bias.is_some(),
+        matches!(kind, JobKind::BiasAct { .. }),
+        "bias operand iff BiasAct"
+    );
     let job = Job {
         kind,
         m,
@@ -137,7 +166,9 @@ fn dispatch(
         k,
         a: a.as_ptr(),
         b: b.as_ptr(),
-        bias: bias.as_ptr(),
+        // NonNull::from(slice).cast() keeps the slice's provenance and
+        // can never smuggle in a null/dangling sentinel.
+        bias: bias.map(|s| NonNull::from(s).cast::<f32>()),
         c: c.as_mut_ptr(),
     };
     let t = pool::threads_for(m, n, k);
@@ -175,7 +206,7 @@ pub fn sgemm(
         (false, true) => JobKind::Dot,
         (true, true) => JobKind::BothT,
     };
-    dispatch(kind, m, n, k, a, b, &[], c);
+    dispatch(kind, m, n, k, a, b, None, c);
 }
 
 /// Fused forward step: `C(m×n) = act(A(m×k)·B(k×n) + bias)`,
@@ -197,7 +228,7 @@ pub fn sgemm_bias_act(
     assert_eq!(b.len(), k * n, "B size");
     assert_eq!(bias.len(), n, "bias size");
     assert_eq!(c.len(), m * n, "C size");
-    dispatch(JobKind::BiasAct { relu }, m, n, k, a, b, bias, c);
+    dispatch(JobKind::BiasAct { relu }, m, n, k, a, b, Some(bias), c);
 }
 
 /// `out[j] += Σ_i a[i][j]` over an `m×n` row-major panel — the bias
@@ -457,10 +488,16 @@ mod tests {
     #[test]
     fn all_transpose_flags_match_naive_reference() {
         // Sizes chosen to hit the blocked body, the n-tail, the m-tail,
-        // and the degenerate single-row/column cases.
-        let shapes = [(1, 1, 1), (3, 5, 7), (4, 16, 8), (9, 33, 17), (128, 10, 32), (2, 64, 1)];
+        // and the degenerate single-row/column cases. Miri interprets
+        // every multiply-add, so it keeps the structural shapes and
+        // drops the throughput-sized ones.
+        let shapes: &[(usize, usize, usize)] = if cfg!(miri) {
+            &[(1, 1, 1), (3, 5, 7), (4, 16, 8), (9, 33, 17)]
+        } else {
+            &[(1, 1, 1), (3, 5, 7), (4, 16, 8), (9, 33, 17), (128, 10, 32), (2, 64, 1)]
+        };
         let mut rng = Rng::new(42);
-        for &(m, n, k) in &shapes {
+        for &(m, n, k) in shapes {
             let a = fill(&mut rng, m * k);
             let b = fill(&mut rng, k * n);
             for ta in [false, true] {
@@ -490,7 +527,12 @@ mod tests {
     #[test]
     fn fused_bias_act_matches_unfused() {
         let mut rng = Rng::new(9);
-        for &(m, n, k) in &[(1, 10, 32), (6, 16, 4), (7, 33, 13), (128, 10, 64)] {
+        let shapes: &[(usize, usize, usize)] = if cfg!(miri) {
+            &[(1, 10, 32), (6, 16, 4), (7, 33, 13)]
+        } else {
+            &[(1, 10, 32), (6, 16, 4), (7, 33, 13), (128, 10, 64)]
+        };
+        for &(m, n, k) in shapes {
             let a = fill(&mut rng, m * k);
             let b = fill(&mut rng, k * n);
             let bias = fill(&mut rng, n);
@@ -520,16 +562,23 @@ mod tests {
         // Shapes stressing tile tails (67 = 16·4+3 rows), M < MR·c
         // (surplus threads own empty panels), single-tile M, and an
         // empty product; all above and below the parallel threshold.
-        let shapes = [
-            (67usize, 33usize, 40usize),
-            (9, 1024, 8),
-            (5, 2048, 16),
-            (128, 100, 33),
-            (256, 64, 64),
-            (0, 64, 64),
-        ];
+        // Under Miri only the first above-threshold shape and the empty
+        // product run — that is the cross-thread `Job` aliasing case
+        // Miri exists to vet, at interpretable cost.
+        let shapes: &[(usize, usize, usize)] = if cfg!(miri) {
+            &[(67, 33, 40), (0, 64, 64)]
+        } else {
+            &[
+                (67, 33, 40),
+                (9, 1024, 8),
+                (5, 2048, 16),
+                (128, 100, 33),
+                (256, 64, 64),
+                (0, 64, 64),
+            ]
+        };
         let mut rng = Rng::new(1234);
-        for &(m, n, k) in &shapes {
+        for &(m, n, k) in shapes {
             let a = fill(&mut rng, m * k);
             let b = fill(&mut rng, k * n);
             let bias = fill(&mut rng, n);

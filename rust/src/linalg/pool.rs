@@ -37,9 +37,9 @@
 //! reduction buffer exists to race on.
 
 use super::gemm::{exec_rows, Job, MR};
+use crate::sync::atomic::{AtomicUsize, Ordering};
+use crate::sync::{thread, Arc, Condvar, Mutex, MutexGuard, PoisonError};
 use std::cell::RefCell;
-use std::sync::atomic::{AtomicUsize, Ordering};
-use std::sync::{Arc, Condvar, Mutex, MutexGuard, PoisonError};
 use std::time::Instant;
 
 /// Hard cap on threads-per-worker (a sanity bound, not a tuning
@@ -69,9 +69,7 @@ pub fn available_cores() -> usize {
     if c != 0 {
         return c;
     }
-    let n = std::thread::available_parallelism()
-        .map(|n| n.get())
-        .unwrap_or(1);
+    let n = thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
     CORES.store(n, Ordering::Relaxed);
     n
 }
@@ -192,7 +190,7 @@ fn lock_ctrl(shared: &Shared) -> MutexGuard<'_, Ctrl> {
 /// participant one MR-aligned row panel of the output.
 pub struct GemmPool {
     shared: Arc<Shared>,
-    helpers: Vec<std::thread::JoinHandle<()>>,
+    helpers: Vec<thread::JoinHandle<()>>,
 }
 
 impl Default for GemmPool {
@@ -229,7 +227,7 @@ impl GemmPool {
             // A helper spawned between jobs must not treat the *current*
             // epoch as new work: seed its last-seen epoch under the lock.
             let seen = lock_ctrl(&shared).epoch;
-            let handle = std::thread::Builder::new()
+            let handle = thread::Builder::new()
                 .name(format!("gemm-pool-{slot}"))
                 .spawn(move || helper_loop(shared, slot, seen))
                 .expect("spawn gemm pool helper");
@@ -314,8 +312,16 @@ fn helper_loop(shared: Arc<Shared>, slot: usize, mut seen: u64) {
         exec_rows(&job, i0, i1);
         {
             let mut c = lock_ctrl(&shared);
+            // Underflow here would mean a helper executed the same
+            // epoch twice; debug builds (all test lanes) panic on it.
             c.remaining -= 1;
             if c.remaining == 0 {
+                // The last finisher wakes the dispatcher. Dropping this
+                // notify is the canonical lost-wakeup bug; CI compiles
+                // with `--cfg loom_mutate_lost_notify` to prove the
+                // loom GemmPool model catches it (the dispatcher hangs
+                // in `done.wait` and the model watchdog fires).
+                #[cfg(not(loom_mutate_lost_notify))]
                 shared.done.notify_one();
             }
         }
@@ -323,15 +329,35 @@ fn helper_loop(shared: Arc<Shared>, slot: usize, mut seen: u64) {
 }
 
 thread_local! {
-    /// This thread's pool. Each executor worker thread (and the main
-    /// thread) lazily owns its own helpers; they are joined when the
-    /// owning thread exits.
+    /// This thread's pool. Each executor worker thread lazily owns its
+    /// own helpers; the `thread_local!` destructor drops the pool (and
+    /// so joins the helpers — see [`GemmPool::drop`]) when the owning
+    /// thread exits. Between jobs helpers *park* on the `start` condvar
+    /// (futex wait — zero CPU), never spin. The one gap is the process'
+    /// main thread, whose TLS destructors are not guaranteed to run at
+    /// exit: call [`shutdown_local_pool`] there (tests and sanitizer
+    /// lanes do) instead of relying on process teardown.
     static POOL: RefCell<GemmPool> = RefCell::new(GemmPool::new());
 }
 
 /// Dispatch `job` on the calling thread's pool at `t` threads.
 pub(crate) fn run(job: &Job, t: usize) {
     POOL.with(|p| p.borrow_mut().run(job, t));
+}
+
+/// Join the calling thread's helper threads now, instead of at thread
+/// exit. The pool is reset to an empty one, so later threaded dispatch
+/// from this thread transparently respawns helpers; the call is cheap
+/// when no helpers were ever spawned. TSan/loom/Miri lanes call this so
+/// a test never ends with detached helpers still parked.
+pub fn shutdown_local_pool() {
+    POOL.with(|p| {
+        // Swap first, drop outside the borrow: the old pool's Drop
+        // joins helpers, and a helper could (in principle) re-enter
+        // POOL via a nested dispatch.
+        let old = std::mem::take(&mut *p.borrow_mut());
+        drop(old);
+    });
 }
 
 /// Measured speedup of the threaded GEMM at the *configured* thread
@@ -448,6 +474,28 @@ mod tests {
     }
 
     #[test]
+    fn shutdown_local_pool_joins_and_respawns_cleanly() {
+        let before = configured_threads();
+        configure_threads(3);
+        let (m, n, k) = (64usize, 32, 32);
+        let a = vec![1.0f32; m * k];
+        let b = vec![0.5f32; k * n];
+        let mut c1 = vec![0.0f32; m * n];
+        let mut c2 = vec![0.0f32; m * n];
+        crate::linalg::gemm::sgemm(false, false, m, n, k, &a, &b, &mut c1);
+        // Helpers are parked now; shutting down must join them and a
+        // later dispatch must respawn a working pool.
+        shutdown_local_pool();
+        crate::linalg::gemm::sgemm(false, false, m, n, k, &a, &b, &mut c2);
+        assert_eq!(c1, c2, "pool must survive a shutdown/respawn cycle");
+        shutdown_local_pool();
+        // Idempotent on an empty pool.
+        shutdown_local_pool();
+        configure_threads(before);
+    }
+
+    #[test]
+    #[cfg_attr(miri, ignore = "timing calibration is meaningless and slow under Miri")]
     fn measured_speedup_is_identity_at_one_thread_and_finite_above() {
         configure_threads(1);
         assert_eq!(measured_speedup(), 1.0);

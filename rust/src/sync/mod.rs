@@ -1,0 +1,54 @@
+//! The repo-wide synchronization shim.
+//!
+//! Every concurrent module (`linalg::pool`, `coordinator::threaded`,
+//! `master_actor`, `tree_threaded`, `process`) imports its primitives
+//! from here instead of `std::sync` / `std::thread` — `tests/repo_lint.rs`
+//! enforces that. Under a normal build this module is a zero-cost
+//! re-export of `std`; under `RUSTFLAGS="--cfg loom"` it re-exports the
+//! model checker's instrumented equivalents (the `loom` path dependency
+//! in `rust/vendor/loom`), so `tests/loom_models.rs` can drive the
+//! hand-rolled protocols — GemmPool epoch dispatch, sharded-center
+//! push/pull, actor shutdown — through perturbed schedules with
+//! deadlock/lost-wakeup detection. One import root, two engines.
+//!
+//! What deliberately stays on `std` even under `cfg(loom)`: panicking
+//! (`std::panic::catch_unwind` — poison semantics are identical in both
+//! engines), time, env, filesystem, and sockets (the process backend's
+//! wire layer is exercised by Miri and the real-socket tests instead).
+
+#[cfg(not(loom))]
+pub use std::sync::{
+    Arc, Condvar, LockResult, Mutex, MutexGuard, PoisonError, RwLock, TryLockError, TryLockResult,
+};
+
+#[cfg(loom)]
+pub use loom::sync::{
+    Arc, Condvar, LockResult, Mutex, MutexGuard, PoisonError, RwLock, TryLockError, TryLockResult,
+};
+
+/// `std::sync::atomic` (or loom's instrumented atomics under `cfg(loom)`).
+pub mod atomic {
+    #[cfg(not(loom))]
+    pub use std::sync::atomic::*;
+
+    #[cfg(loom)]
+    pub use loom::sync::atomic::*;
+}
+
+/// `std::sync::mpsc` (or loom's channels under `cfg(loom)`).
+pub mod mpsc {
+    #[cfg(not(loom))]
+    pub use std::sync::mpsc::*;
+
+    #[cfg(loom)]
+    pub use loom::sync::mpsc::*;
+}
+
+/// `std::thread` (or loom's scheduler-aware threads under `cfg(loom)`).
+pub mod thread {
+    #[cfg(not(loom))]
+    pub use std::thread::*;
+
+    #[cfg(loom)]
+    pub use loom::thread::*;
+}

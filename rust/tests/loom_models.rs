@@ -1,0 +1,208 @@
+//! Loom models of the repo's three hand-rolled synchronization
+//! protocols. This file is EMPTY under a normal build (the `#![cfg]`
+//! below); compile and run it with
+//!
+//! ```text
+//! RUSTFLAGS="--cfg loom" cargo test --test loom_models
+//! ```
+//!
+//! Under `--cfg loom` the whole crate's [`elastic_train::sync`] shim
+//! re-exports the vendored loom engine (`rust/vendor/loom`): every
+//! `lock` and `notify` perturbs the schedule (seeded yields and short
+//! sleeps) and ticks a global progress counter, and `loom::model`
+//! reruns each closure `LOOM_ITERS` times (default 32) under a
+//! watchdog that fails the iteration when the body stops making
+//! synchronization progress (`LOOM_DEADLOCK_MS`, default 5000).
+//! Condvar *waits* deliberately do not tick, so a lost wakeup reads as
+//! a stall — that is exactly how the `loom_mutate_lost_notify` CI
+//! mutation (dropping the GemmPool `done` notify) is caught: the
+//! dispatcher hangs in `done.wait`, the counter stops, the watchdog
+//! panics.
+//!
+//! The three protocols under model:
+//!
+//! 1. **GemmPool dispatch** (`linalg/pool.rs`): epoch/Condvar job
+//!    hand-off. No lost wakeup (watchdog), each helper executes each
+//!    epoch exactly once (`remaining` would underflow and panic in
+//!    these debug builds otherwise), and `done` never signals before
+//!    every panel is complete (the threaded product would differ from
+//!    the serial one).
+//! 2. **Sharded center push/pull** (`coordinator/threaded.rs`): a
+//!    worker dying mid-`center.step` surfaces as the named "worker N
+//!    died mid-run" error while the survivors — who keep exchanging
+//!    against the same shard mutexes via `lock_recover` — terminate
+//!    instead of deadlocking. (The companion unit tests in
+//!    `threaded.rs` poison a shard *while the lock is held*; this
+//!    model drives the public `run_threaded` entry under perturbed
+//!    schedules.)
+//! 3. **Actor shutdown / bottom-up flush** (`master_actor.rs`,
+//!    `tree_threaded.rs`): every message sent before shutdown is
+//!    applied — the master's round clock equals the exact step budget,
+//!    so nothing is reordered past the stop — and the tree's bottom-up
+//!    flush joins without deadlock at the exact leaf-step budget.
+#![cfg(loom)]
+
+use elastic_train::cluster::CostModel;
+use elastic_train::coordinator::{
+    run_threaded, run_tree_threaded, DriverConfig, EvalStats, GradOracle, Method, TreeSpec,
+};
+use elastic_train::linalg::gemm::{sgemm, sgemm_bias_act};
+use elastic_train::linalg::pool::{configure_threads, shutdown_local_pool};
+use elastic_train::rng::Rng;
+
+fn cfg(method: Method, max_steps: u64) -> DriverConfig {
+    DriverConfig {
+        eta: 0.05,
+        method,
+        cost: CostModel::cifar_like(1),
+        horizon: 30.0, // real-seconds safety net; the step budget binds first
+        eval_every: 1e6,
+        seed: 11,
+        max_steps,
+        lr_decay_gamma: 0.0,
+    }
+}
+
+/// Model 1 — GemmPool dispatch. Each iteration runs on a fresh model
+/// thread, so the `thread_local!` pool is brand new: the spawn path,
+/// the parked-helper hand-off, and the explicit shutdown/join are all
+/// exercised every iteration, under perturbed lock/notify timing.
+#[test]
+fn gemm_pool_dispatch_has_no_lost_wakeups_and_exact_panels() {
+    loom::model(|| {
+        let (m, n, k) = (64usize, 32, 32);
+        let a: Vec<f32> = (0..m * k).map(|i| (i % 13) as f32 * 0.25 - 1.0).collect();
+        let b: Vec<f32> = (0..k * n).map(|i| (i % 7) as f32 * 0.5 - 1.5).collect();
+        let bias: Vec<f32> = (0..n).map(|j| j as f32 * 0.1).collect();
+
+        // Serial reference first (threads = 1 bypasses the pool).
+        configure_threads(1);
+        let mut c_serial = vec![0.0f32; m * n];
+        let mut f_serial = vec![0.0f32; m * n];
+        sgemm(false, false, m, n, k, &a, &b, &mut c_serial);
+        sgemm_bias_act(m, n, k, &a, &b, &bias, true, &mut f_serial);
+
+        // Threaded: several dispatches reuse the parked helpers, so
+        // the epoch counter advances across jobs (the exactly-one-
+        // epoch-per-helper invariant is live, not vacuous).
+        configure_threads(3);
+        for _ in 0..3 {
+            let mut c = vec![0.0f32; m * n];
+            let mut f = vec![0.0f32; m * n];
+            sgemm(false, false, m, n, k, &a, &b, &mut c);
+            sgemm_bias_act(m, n, k, &a, &b, &bias, true, &mut f);
+            // `done` signalling before every panel completed would
+            // surface here as a partially-written product.
+            assert_eq!(c, c_serial, "threaded GEMM diverged from serial");
+            assert_eq!(f, f_serial, "threaded fused GEMM diverged from serial");
+        }
+        // Join the helpers inside the model: a shutdown hang (lost
+        // start-notify) is a watchdog failure, and no iteration leaks
+        // parked threads.
+        shutdown_local_pool();
+        configure_threads(1);
+    });
+}
+
+/// A tiny quadratic oracle (∇ = θ − 1) whose designated victim panics
+/// on its `die_after`-th gradient call — from inside `center.step`,
+/// where the worker loop's `catch_unwind` must turn it into the named
+/// run error while the surviving workers keep the center usable.
+struct FragileQuadratic {
+    n: usize,
+    calls: u64,
+    die_after: u64,
+}
+
+impl FragileQuadratic {
+    fn family(n: usize, p: usize, victim: usize, die_after: u64) -> Vec<FragileQuadratic> {
+        (0..p)
+            .map(|i| FragileQuadratic {
+                n,
+                calls: 0,
+                die_after: if i == victim { die_after } else { u64::MAX },
+            })
+            .collect()
+    }
+
+    fn loss_at(&self, theta: &[f32]) -> f64 {
+        theta.iter().map(|&t| 0.5 * ((t - 1.0) as f64).powi(2)).sum()
+    }
+}
+
+impl GradOracle for FragileQuadratic {
+    fn n_params(&self) -> usize {
+        self.n
+    }
+
+    fn init_params(&self) -> Vec<f32> {
+        vec![0.0; self.n]
+    }
+
+    fn grad(&mut self, theta: &[f32], _rng: &mut Rng, out: &mut [f32]) -> f32 {
+        self.calls += 1;
+        if self.calls > self.die_after {
+            panic!("injected worker death in the sharded-center loom model");
+        }
+        for (o, &t) in out.iter_mut().zip(theta) {
+            *o = t - 1.0;
+        }
+        self.loss_at(theta) as f32
+    }
+
+    fn eval(&mut self, theta: &[f32]) -> EvalStats {
+        let loss = self.loss_at(theta);
+        EvalStats { train_loss: loss, test_loss: loss, test_error: 0.0 }
+    }
+}
+
+/// Model 2 — sharded center push/pull with a worker dying mid-run.
+/// The run must return the named error (not hang, not resume the
+/// unwind, not burn the full step budget) no matter how the schedule
+/// interleaves the death with the survivors' exchanges.
+#[test]
+fn sharded_center_survives_a_worker_death_without_deadlock() {
+    loom::model(|| {
+        let mut oracles = FragileQuadratic::family(8, 3, 1, 3);
+        let c = cfg(Method::easgd_default(3, 1), 100_000);
+        let e = run_threaded(&mut oracles, &c, 4).unwrap_err();
+        let msg = format!("{e}");
+        assert!(msg.contains("worker 1 died mid-run"), "unexpected error: {msg}");
+        assert!(msg.contains("injected worker death"), "unexpected error: {msg}");
+    });
+}
+
+/// Model 3a — master-actor shutdown. MDOWNPOUR serializes one master
+/// round per local step through the actor's mpsc loop; an exact round
+/// count at the exact step budget means no message was dropped or
+/// reordered past the stop, and returning at all means the
+/// drain-until-disconnect shutdown has no deadlock.
+#[test]
+fn actor_master_flushes_every_message_at_shutdown() {
+    loom::model(|| {
+        let mut oracles = FragileQuadratic::family(16, 3, 0, u64::MAX);
+        let mut c = cfg(Method::MDownpour { delta: 0.9 }, 90);
+        c.eta = 0.01;
+        let r = run_threaded(&mut oracles, &c, 1).unwrap();
+        assert!(!r.diverged);
+        assert_eq!(r.total_steps, 90, "actor run must consume the exact budget");
+        assert_eq!(r.rounds, 90, "every step is one serialized master round");
+    });
+}
+
+/// Model 3b — tree bottom-up flush. The threaded tree joins leaf
+/// actors upward at shutdown; finishing at the exact leaf-step budget
+/// under perturbed channel/lock timing means the flush ordering has no
+/// deadlock and the root's final snapshot is published.
+#[test]
+fn tree_actors_flush_bottom_up_without_deadlock() {
+    loom::model(|| {
+        let mut oracles = FragileQuadratic::family(8, 4, 0, u64::MAX);
+        let c = cfg(Method::easgd_default(4, 2), 120);
+        let spec = TreeSpec::thesis_default();
+        let r = run_tree_threaded(&mut oracles, &c, &spec).unwrap();
+        assert!(!r.diverged);
+        assert_eq!(r.total_steps, 120, "tree run must consume the exact leaf budget");
+        assert!(!r.curve.is_empty(), "the root must publish its final snapshot");
+    });
+}

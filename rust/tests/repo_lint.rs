@@ -1,0 +1,275 @@
+//! Hand-rolled repo-invariant lint: a tier-1 `#[test]` (no new
+//! dependencies, plain `std::fs`) that walks `rust/src` and enforces
+//! the concurrency-correctness conventions the `crate::sync` shim and
+//! the loom/Miri/TSan lanes rely on:
+//!
+//! | rule | invariant |
+//! |------|-----------|
+//! | R1 | no `std::sync` / `std::thread` outside `sync/mod.rs` — all concurrent code imports through the shim, so `--cfg loom` instruments every lock, notify, and spawn |
+//! | R2 | no `unsafe` outside the committed allowlist (`linalg/gemm.rs`, whose Job aliasing invariants are documented at the type) |
+//! | R3 | any file using `catch_unwind` also uses `lock_recover` — catching a panic without recovering poisoned locks deadlocks the survivors |
+//! | R4 | `.unwrap()` / `.expect(` in `coordinator/*` non-test code stays at or below the committed per-file ceiling — the count can only shrink |
+//!
+//! Scope: non-test code only. Each source file's `#[cfg(test)] mod`
+//! sits at the bottom (repo convention), so the lint truncates the
+//! stripped source at the first `#[cfg(test)]`. Comments and string
+//! literals are stripped first, so prose mentioning `std::thread` or
+//! an error message quoting `unsafe` never trips a rule. The vendored
+//! crates (`rust/vendor/*`) are outside `src/` and deliberately exempt
+//! (the loom stub IS an instrumented `std::sync`).
+
+use std::fs;
+use std::path::{Path, PathBuf};
+
+/// Files allowed to name `std::sync` / `std::thread` directly: the
+/// shim itself (its whole job is re-exporting them).
+const SYNC_IMPORT_ALLOWLIST: &[&str] = &["sync/mod.rs"];
+
+/// The entire committed `unsafe` surface, per file. Growing a count
+/// here must come with the same scrutiny as `gemm.rs`'s Job aliasing
+/// invariants; everything not listed is `unsafe`-free.
+const UNSAFE_ALLOWLIST: &[(&str, usize)] = &[
+    // 1 `unsafe impl Send for Job` + 4 slice reconstructions in
+    // `exec_rows`, each annotated with the invariant it leans on.
+    ("linalg/gemm.rs", 5),
+];
+
+/// Per-file ceilings on `.unwrap()` + `.expect(` in non-test
+/// `coordinator/*` code. Every remaining site is a documented
+/// structural invariant (e.g. "averaged methods allocate z at init")
+/// or an infallible conversion (wire.rs's fixed-width `try_into`s);
+/// anything fallible returns a typed `crate::error::Error` instead.
+/// Lower a ceiling when you remove a site; never raise one without a
+/// matching invariant comment at the call site.
+const UNWRAP_CEILINGS: &[(&str, usize)] = &[
+    ("coordinator/driver.rs", 5),
+    ("coordinator/master_actor.rs", 3),
+    ("coordinator/process.rs", 1),
+    ("coordinator/threaded.rs", 2),
+    ("coordinator/topology.rs", 3),
+    ("coordinator/tree_threaded.rs", 1),
+    ("coordinator/wire.rs", 6),
+];
+
+fn collect_rs(dir: &Path, out: &mut Vec<PathBuf>) {
+    let entries = fs::read_dir(dir).unwrap_or_else(|e| panic!("read_dir {dir:?}: {e}"));
+    for entry in entries {
+        let path = entry.expect("readable directory entry").path();
+        if path.is_dir() {
+            collect_rs(&path, out);
+        } else if path.extension() == Some(std::ffi::OsStr::new("rs")) {
+            out.push(path);
+        }
+    }
+}
+
+/// Strip comments and string literals (newlines preserved so reported
+/// line numbers stay true), then truncate at the first `#[cfg(test)]`
+/// — the bottom-of-file tests module, per repo convention.
+fn lintable_source(raw: &str) -> String {
+    let bytes = raw.as_bytes();
+    let mut out = String::with_capacity(raw.len());
+    let mut i = 0;
+    while i < bytes.len() {
+        match bytes[i] {
+            b'/' if bytes.get(i + 1) == Some(&b'/') => {
+                while i < bytes.len() && bytes[i] != b'\n' {
+                    i += 1;
+                }
+            }
+            b'/' if bytes.get(i + 1) == Some(&b'*') => {
+                let mut depth = 1usize;
+                i += 2;
+                while i < bytes.len() && depth > 0 {
+                    if bytes[i] == b'/' && bytes.get(i + 1) == Some(&b'*') {
+                        depth += 1;
+                        i += 2;
+                    } else if bytes[i] == b'*' && bytes.get(i + 1) == Some(&b'/') {
+                        depth -= 1;
+                        i += 2;
+                    } else {
+                        if bytes[i] == b'\n' {
+                            out.push('\n');
+                        }
+                        i += 1;
+                    }
+                }
+            }
+            b'"' => {
+                i += 1;
+                while i < bytes.len() {
+                    match bytes[i] {
+                        b'\\' => i += 2,
+                        b'"' => {
+                            i += 1;
+                            break;
+                        }
+                        b'\n' => {
+                            out.push('\n');
+                            i += 1;
+                        }
+                        _ => i += 1,
+                    }
+                }
+            }
+            c => {
+                out.push(c as char);
+                i += 1;
+            }
+        }
+    }
+    if let Some(pos) = out.find("#[cfg(test)]") {
+        out.truncate(pos);
+    }
+    out
+}
+
+/// Load every `src/**/*.rs` as `(path relative to src/, stripped
+/// non-test source)`.
+fn sources() -> Vec<(String, String)> {
+    let src = Path::new(env!("CARGO_MANIFEST_DIR")).join("src");
+    let mut files = Vec::new();
+    collect_rs(&src, &mut files);
+    files.sort();
+    assert!(files.len() >= 20, "walked only {} files — wrong root?", files.len());
+    files
+        .into_iter()
+        .map(|p| {
+            let rel = p
+                .strip_prefix(&src)
+                .expect("collected under src/")
+                .to_string_lossy()
+                .replace('\\', "/");
+            let raw = fs::read_to_string(&p).unwrap_or_else(|e| panic!("read {p:?}: {e}"));
+            (rel, lintable_source(&raw))
+        })
+        .collect()
+}
+
+/// 1-based line number of byte offset `pos`.
+fn line_of(text: &str, pos: usize) -> usize {
+    text[..pos].bytes().filter(|&b| b == b'\n').count() + 1
+}
+
+/// Occurrences of `needle` with identifier boundaries on both sides
+/// (so `unsafe` never matches inside a longer word).
+fn count_word(text: &str, needle: &str) -> usize {
+    let is_ident = |b: u8| b == b'_' || b.is_ascii_alphanumeric();
+    let mut n = 0;
+    let mut from = 0;
+    while let Some(off) = text[from..].find(needle) {
+        let start = from + off;
+        let end = start + needle.len();
+        let left_ok = start == 0 || !is_ident(text.as_bytes()[start - 1]);
+        let right_ok = end >= text.len() || !is_ident(text.as_bytes()[end]);
+        if left_ok && right_ok {
+            n += 1;
+        }
+        from = start + 1;
+    }
+    n
+}
+
+fn count_substr(text: &str, needle: &str) -> usize {
+    let mut n = 0;
+    let mut from = 0;
+    while let Some(off) = text[from..].find(needle) {
+        n += 1;
+        from += off + 1;
+    }
+    n
+}
+
+#[test]
+fn r1_no_std_sync_or_thread_outside_the_shim() {
+    let mut violations = Vec::new();
+    for (rel, text) in sources() {
+        if SYNC_IMPORT_ALLOWLIST.contains(&rel.as_str()) {
+            continue;
+        }
+        for needle in ["std::sync", "std::thread"] {
+            let mut from = 0;
+            while let Some(off) = text[from..].find(needle) {
+                let pos = from + off;
+                violations.push(format!(
+                    "{rel}:{}: `{needle}` outside sync/mod.rs — import through \
+                     `crate::sync` so `--cfg loom` instruments it",
+                    line_of(&text, pos)
+                ));
+                from = pos + 1;
+            }
+        }
+    }
+    assert!(violations.is_empty(), "R1 violations:\n{}", violations.join("\n"));
+}
+
+#[test]
+fn r2_unsafe_stays_inside_the_allowlist() {
+    let mut violations = Vec::new();
+    for (rel, text) in sources() {
+        let n = count_word(&text, "unsafe");
+        let cap = UNSAFE_ALLOWLIST
+            .iter()
+            .find(|(f, _)| *f == rel)
+            .map_or(0, |(_, c)| *c);
+        if n > cap {
+            violations.push(format!(
+                "{rel}: {n} `unsafe` occurrence(s), allowlist permits {cap} — document \
+                 the aliasing invariants and extend UNSAFE_ALLOWLIST deliberately"
+            ));
+        }
+    }
+    assert!(violations.is_empty(), "R2 violations:\n{}", violations.join("\n"));
+}
+
+#[test]
+fn r3_catch_unwind_is_paired_with_lock_recover() {
+    let mut violations = Vec::new();
+    for (rel, text) in sources() {
+        if text.contains("catch_unwind") && !text.contains("lock_recover") {
+            violations.push(format!(
+                "{rel}: uses `catch_unwind` without `lock_recover` — a caught panic \
+                 leaves poisoned locks that every surviving thread must recover"
+            ));
+        }
+    }
+    assert!(violations.is_empty(), "R3 violations:\n{}", violations.join("\n"));
+}
+
+#[test]
+fn r4_coordinator_unwrap_count_only_shrinks() {
+    let mut violations = Vec::new();
+    for (rel, text) in sources() {
+        if !rel.starts_with("coordinator/") {
+            continue;
+        }
+        let n = count_substr(&text, ".unwrap()") + count_substr(&text, ".expect(");
+        let cap = UNWRAP_CEILINGS
+            .iter()
+            .find(|(f, _)| *f == rel)
+            .map_or(0, |(_, c)| *c);
+        if n > cap {
+            violations.push(format!(
+                "{rel}: {n} `.unwrap()`/`.expect(` site(s) in non-test code, ceiling is \
+                 {cap} — return a typed `crate::error::Error` instead (or, for a true \
+                 structural invariant, document it at the call site and raise the \
+                 ceiling in the same change)"
+            ));
+        }
+    }
+    assert!(violations.is_empty(), "R4 violations:\n{}", violations.join("\n"));
+}
+
+/// The ceilings themselves must stay honest: a stale entry (file
+/// removed or renamed) would silently allowlist a future file of the
+/// same name.
+#[test]
+fn lint_tables_reference_existing_files() {
+    let files: Vec<String> = sources().into_iter().map(|(rel, _)| rel).collect();
+    for (f, _) in UNSAFE_ALLOWLIST.iter().chain(UNWRAP_CEILINGS) {
+        assert!(files.iter().any(|r| r == f), "lint table references missing file {f}");
+    }
+    for f in SYNC_IMPORT_ALLOWLIST {
+        assert!(files.iter().any(|r| r == f), "lint table references missing file {f}");
+    }
+}

@@ -1,0 +1,262 @@
+//! Vendored, dependency-free stand-in for the `loom` model checker.
+//!
+//! The real loom exhaustively enumerates thread interleavings; this
+//! container builds offline, so this crate keeps loom's **API** while
+//! backing it with instrumented `std::sync` primitives:
+//!
+//! - every lock acquisition and condvar notify bumps a global progress
+//!   counter and may inject a randomized yield/short sleep (re-seeded
+//!   per model iteration), shaking out interleavings that a quiet
+//!   machine would never schedule;
+//! - [`model`] runs the closure `LOOM_ITERS` times (default 32), each
+//!   iteration on a fresh thread, under a watchdog that panics if no
+//!   instrumented synchronization event happens for `LOOM_DEADLOCK_MS`
+//!   (default 5000) — so deadlocks and **lost wakeups** fail loudly
+//!   instead of hanging the test binary.
+//!
+//! This is a bounded stress-tester with deadlock detection, not an
+//! exhaustive checker. The API is source-compatible with the subset of
+//! loom this repo uses (`loom::model`, `loom::sync::{Mutex, Condvar,
+//! RwLock, Arc, mpsc, atomic}`, `loom::thread`), so pointing the
+//! `cfg(loom)` dependency at crates.io swaps the real engine in.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::PoisonError;
+use std::time::{Duration, Instant};
+
+/// Global count of instrumented synchronization events. The model
+/// watchdog declares a deadlock when this stops advancing while the
+/// model body is still running.
+static EVENTS: AtomicU64 = AtomicU64::new(0);
+
+/// Scheduling-perturbation RNG state (splitmix-style, lock-free).
+static SEED: AtomicU64 = AtomicU64::new(0x9E3779B97F4A7C15);
+
+/// One model body at a time: the watchdog reads the *global* event
+/// counter, so concurrently-running models (cargo test's default
+/// parallelism) would mask each other's stalls.
+static MODEL_LOCK: std::sync::Mutex<()> = std::sync::Mutex::new(());
+
+pub(crate) fn tick() {
+    EVENTS.fetch_add(1, Ordering::Relaxed);
+}
+
+/// Maybe yield or briefly sleep, to perturb the schedule at a
+/// synchronization point. Cheap (one atomic + a few ALU ops) when it
+/// decides not to.
+pub(crate) fn perturb() {
+    let s = SEED.fetch_add(0x9E37_79B9_7F4A_7C15, Ordering::Relaxed);
+    let mut x = s ^ (s >> 31);
+    x = x.wrapping_mul(0xD6E8_FEB8_6659_FD93);
+    x ^= x >> 32;
+    match x % 61 {
+        0..=3 => std::thread::yield_now(),
+        4 => std::thread::sleep(Duration::from_micros((x >> 8) % 50)),
+        _ => {}
+    }
+}
+
+fn env_u64(key: &str, default: u64) -> u64 {
+    match std::env::var(key) {
+        Ok(v) => v
+            .parse::<u64>()
+            .unwrap_or_else(|_| panic!("{key} must be a non-negative integer, got '{v}'")),
+        Err(_) => default,
+    }
+}
+
+/// Run `f` repeatedly under schedule perturbation and a deadlock
+/// watchdog. Panics (failing the enclosing test) if any iteration
+/// panics, or if an iteration stops making synchronization progress
+/// for `LOOM_DEADLOCK_MS` milliseconds — the signature of a deadlock
+/// or a lost condvar wakeup.
+pub fn model<F>(f: F)
+where
+    F: Fn() + Send + Sync + 'static,
+{
+    let _serial = MODEL_LOCK.lock().unwrap_or_else(PoisonError::into_inner);
+    let iters = env_u64("LOOM_ITERS", 32).max(1);
+    let deadlock = Duration::from_millis(env_u64("LOOM_DEADLOCK_MS", 5000).max(100));
+    let f = std::sync::Arc::new(f);
+    for iter in 0..iters {
+        SEED.store(
+            0x853C_49E6_748F_EA9B_u64.wrapping_mul(iter + 1),
+            Ordering::Relaxed,
+        );
+        run_one(std::sync::Arc::clone(&f), iter, deadlock);
+    }
+}
+
+fn run_one<F>(f: std::sync::Arc<F>, iter: u64, deadlock: Duration)
+where
+    F: Fn() + Send + Sync + 'static,
+{
+    // Each iteration gets a fresh thread so thread-local state inside
+    // the model body (e.g. a per-thread pool) is rebuilt and torn down
+    // every time — spawn and shutdown paths are part of the model.
+    let body = std::thread::Builder::new()
+        .name(format!("loom-model-{iter}"))
+        .spawn(move || f())
+        .expect("spawn loom model body");
+    let mut last_events = EVENTS.load(Ordering::Relaxed);
+    let mut last_change = Instant::now();
+    while !body.is_finished() {
+        std::thread::sleep(Duration::from_millis(1));
+        let e = EVENTS.load(Ordering::Relaxed);
+        if e != last_events {
+            last_events = e;
+            last_change = Instant::now();
+        } else if last_change.elapsed() > deadlock {
+            // The body (and whatever threads it spawned) is stuck; it
+            // cannot be killed, but panicking here fails the test and
+            // the harness exits the process regardless of leaked
+            // threads.
+            panic!(
+                "loom (vendored): model iteration {iter} made no synchronization progress \
+                 for {deadlock:?} — deadlock or lost wakeup"
+            );
+        }
+    }
+    if let Err(payload) = body.join() {
+        std::panic::resume_unwind(payload);
+    }
+}
+
+pub mod sync {
+    //! Instrumented drop-ins for `std::sync`.
+    //!
+    //! [`Mutex`] and [`Condvar`] are thin newtype wrappers that bump the
+    //! model's progress counter and inject schedule perturbation; their
+    //! guards and poison semantics are exactly `std`'s (a guard dropped
+    //! during unwind poisons the lock), so poison-recovery code paths
+    //! behave identically under the model. Everything else re-exports
+    //! `std` directly.
+
+    use std::fmt;
+    pub use std::sync::{
+        Arc, LockResult, MutexGuard, PoisonError, RwLock, TryLockError, TryLockResult,
+        WaitTimeoutResult,
+    };
+
+    pub mod atomic {
+        pub use std::sync::atomic::*;
+    }
+
+    pub mod mpsc {
+        pub use std::sync::mpsc::*;
+    }
+
+    /// `std::sync::Mutex` plus progress ticks and schedule perturbation
+    /// on every acquisition. `const`-constructible (a superset of the
+    /// real loom, whose `Mutex::new` is not const).
+    pub struct Mutex<T: ?Sized> {
+        inner: std::sync::Mutex<T>,
+    }
+
+    impl<T> Mutex<T> {
+        pub const fn new(t: T) -> Self {
+            Mutex {
+                inner: std::sync::Mutex::new(t),
+            }
+        }
+
+        pub fn into_inner(self) -> LockResult<T> {
+            self.inner.into_inner()
+        }
+    }
+
+    impl<T: ?Sized> Mutex<T> {
+        pub fn lock(&self) -> LockResult<MutexGuard<'_, T>> {
+            crate::perturb();
+            let r = self.inner.lock();
+            crate::tick();
+            r
+        }
+
+        pub fn try_lock(&self) -> TryLockResult<MutexGuard<'_, T>> {
+            let r = self.inner.try_lock();
+            if r.is_ok() {
+                crate::tick();
+            }
+            r
+        }
+
+        pub fn get_mut(&mut self) -> LockResult<&mut T> {
+            self.inner.get_mut()
+        }
+    }
+
+    impl<T: Default> Default for Mutex<T> {
+        fn default() -> Self {
+            Mutex::new(T::default())
+        }
+    }
+
+    impl<T: ?Sized + fmt::Debug> fmt::Debug for Mutex<T> {
+        fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+            fmt::Debug::fmt(&self.inner, f)
+        }
+    }
+
+    /// `std::sync::Condvar` plus progress ticks on notify (the
+    /// productive side of a handoff; waits deliberately do not tick, so
+    /// a waiter whose wakeup was lost reads as *no progress* to the
+    /// model watchdog instead of masking the bug).
+    pub struct Condvar {
+        inner: std::sync::Condvar,
+    }
+
+    impl Condvar {
+        pub const fn new() -> Self {
+            Condvar {
+                inner: std::sync::Condvar::new(),
+            }
+        }
+
+        pub fn wait<'a, T>(&self, guard: MutexGuard<'a, T>) -> LockResult<MutexGuard<'a, T>> {
+            self.inner.wait(guard)
+        }
+
+        pub fn wait_timeout<'a, T>(
+            &self,
+            guard: MutexGuard<'a, T>,
+            dur: std::time::Duration,
+        ) -> LockResult<(MutexGuard<'a, T>, WaitTimeoutResult)> {
+            self.inner.wait_timeout(guard, dur)
+        }
+
+        pub fn notify_one(&self) {
+            crate::perturb();
+            crate::tick();
+            self.inner.notify_one();
+        }
+
+        pub fn notify_all(&self) {
+            crate::perturb();
+            crate::tick();
+            self.inner.notify_all();
+        }
+    }
+
+    impl Default for Condvar {
+        fn default() -> Self {
+            Condvar::new()
+        }
+    }
+
+    impl fmt::Debug for Condvar {
+        fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+            fmt::Debug::fmt(&self.inner, f)
+        }
+    }
+}
+
+pub mod thread {
+    //! Re-export of `std::thread`: the vendored engine perturbs
+    //! schedules at synchronization points rather than wrapping spawn.
+    pub use std::thread::*;
+}
+
+pub mod hint {
+    pub use std::hint::*;
+}
