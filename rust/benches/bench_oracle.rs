@@ -24,6 +24,15 @@
 //! gradient being bitwise-identical to single-thread; the conv-wide
 //! panel is expected to reach ≥ 1.6× at threads=4.
 //!
+//! Kernel-tier grid — the batched path at scalar vs the detected SIMD
+//! tier (`linalg::simd`), threads ∈ {1, 4}, same two panels at
+//! batch=128. Compiled without `--features simd` (or on a host with no
+//! SIMD tier) the grid degenerates to scalar-only and says so; with a
+//! tier available, SIMD at threads=1 is expected to reach ≥ 1.5× the
+//! scalar kernels on both panels. The entry records the resolved tier
+//! and the detected CPU features so historical rows stay comparable
+//! across machines.
+//!
 //!     cargo bench --bench bench_oracle            # full grid
 //!     cargo bench --bench bench_oracle -- --quick # smoke (CI)
 //!
@@ -311,7 +320,7 @@ fn conv_json_row(c: &ConvCell) -> String {
 }
 
 use elastic_train::figures::benchkit::{append_history, git_sha, unix_time};
-use elastic_train::linalg::pool;
+use elastic_train::linalg::{pool, simd};
 
 /// One hybrid-parallelism grid cell: the batched path at a given GEMM
 /// thread count (same fixed minibatch as the main grids).
@@ -327,6 +336,24 @@ fn thread_json_row(c: &ThreadCell) -> String {
         "      {{\"model\": \"{}\", \"grid\": \"threads\", \"threads\": {}, \"batch\": {}, \
          \"batched_sps\": {:.1}}}",
         c.model, c.threads, c.batch, c.batched_sps
+    )
+}
+
+/// One kernel-tier grid cell: the batched path on a given SIMD tier at
+/// a given GEMM thread count.
+struct TierCell {
+    model: &'static str,
+    tier: &'static str,
+    threads: usize,
+    batch: usize,
+    batched_sps: f64,
+}
+
+fn tier_json_row(c: &TierCell) -> String {
+    format!(
+        "      {{\"model\": \"{}\", \"grid\": \"simd\", \"simd\": \"{}\", \"threads\": {}, \
+         \"batch\": {}, \"batched_sps\": {:.1}}}",
+        c.model, c.tier, c.threads, c.batch, c.batched_sps
     )
 }
 
@@ -494,19 +521,110 @@ fn main() {
         if conv_scaling >= 1.6 { "OK, >= 1.6x" } else { "BELOW 1.6x target" }
     );
 
+    // ---- Kernel-tier grid: scalar vs the detected SIMD tier at
+    // threads ∈ {1, 4} on the same two panels. `detect_best()` is
+    // Scalar when the crate is built without `--features simd` or the
+    // host CPU has neither AVX2+FMA nor NEON, so the grid is always
+    // well-defined; it just collapses to one tier.
+    let best = simd::detect_best();
+    let tiers: Vec<&'static str> = if best == simd::Tier::Scalar {
+        println!("kernel-tier grid: no SIMD tier (cpu: {}) — scalar only", simd::cpu_features());
+        vec!["scalar"]
+    } else {
+        println!(
+            "kernel-tier grid (batched samples/sec, batch=128, cpu: {}):",
+            simd::cpu_features()
+        );
+        vec!["scalar", best.name()]
+    };
+    let mut tier_cells = Vec::new();
+    for &tier in &tiers {
+        simd::configure(tier).expect("grid tiers come from detect_best, always available");
+        for t in [1usize, 4] {
+            pool::configure_threads(t);
+            {
+                let mut mlp = Mlp::new(sweep_cfg.clone());
+                let mut rng = Rng::new(1234);
+                let theta = mlp.init_params(&mut rng);
+                let mut grad = vec![0.0f32; theta.len()];
+                let samples: Vec<(Vec<f32>, usize)> = sweep_data.train[..128].to_vec();
+                let mut sink = 0.0f32;
+                let s =
+                    benchkit::bench(&format!("sweep/b128/{tier}/t{t}"), target_ms, batches, || {
+                        sink += mlp.batch_grad(black_box(&theta), &samples, &mut grad);
+                    });
+                black_box(sink);
+                tier_cells.push(TierCell {
+                    model: "sweep",
+                    tier,
+                    threads: t,
+                    batch: 128,
+                    batched_sps: s.throughput(128.0),
+                });
+            }
+            {
+                let mut net = ConvNet::new(conv_wide_cfg.clone());
+                let mut rng = Rng::new(1234);
+                let theta = net.init_params(&mut rng);
+                let mut grad = vec![0.0f32; theta.len()];
+                let samples: Vec<(Vec<f32>, usize)> = wide_data.train[..128].to_vec();
+                let mut sink = 0.0f32;
+                let s = benchkit::bench(
+                    &format!("conv-wide/b128/{tier}/t{t}"),
+                    target_ms,
+                    batches,
+                    || {
+                        sink += net.batch_grad(black_box(&theta), &samples, &mut grad);
+                    },
+                );
+                black_box(sink);
+                tier_cells.push(TierCell {
+                    model: "conv-wide",
+                    tier,
+                    threads: t,
+                    batch: 128,
+                    batched_sps: s.throughput(128.0),
+                });
+            }
+        }
+    }
+    pool::configure_threads(base_threads);
+    simd::configure("auto").expect("auto is always available");
+    let resolved_tier = simd::active_tier().name();
+    if tiers.len() > 1 {
+        let tier_sps = |model: &str, tier: &str, t: usize| {
+            tier_cells
+                .iter()
+                .find(|c| c.model == model && c.tier == tier && c.threads == t)
+                .map(|c| c.batched_sps)
+                .unwrap()
+        };
+        let best_name = best.name();
+        let mlp_gain = tier_sps("sweep", best_name, 1) / tier_sps("sweep", "scalar", 1);
+        let conv_gain = tier_sps("conv-wide", best_name, 1) / tier_sps("conv-wide", "scalar", 1);
+        println!(
+            "  {best_name} vs scalar at threads=1: sweep {mlp_gain:.2}x, conv-wide \
+             {conv_gain:.2}x ({})\n",
+            if mlp_gain >= 1.5 && conv_gain >= 1.5 { "OK, >= 1.5x" } else { "BELOW 1.5x target" }
+        );
+    }
+
     let mut rows: Vec<String> = cells.iter().map(json_row).collect();
     rows.extend(conv_cells.iter().map(conv_json_row));
     rows.extend(thread_cells.iter().map(thread_json_row));
+    rows.extend(tier_cells.iter().map(tier_json_row));
     let entry = format!(
         "  {{\n    \"bench\": \"oracle\",\n    \"sha\": \"{}\",\n    \"unix_time\": {},\n    \
          \"quick\": {},\n    \"cores\": {},\n    \"p\": 1,\n    \"threads\": {},\n    \
-         \"threads_grid\": [1, 2, 4],\n    \"unit\": \"samples_per_sec\",\n    \
-         \"results\": [\n{}\n    ]\n  }}",
+         \"threads_grid\": [1, 2, 4],\n    \"simd\": \"{}\",\n    \"cpu_features\": \"{}\",\n    \
+         \"unit\": \"samples_per_sec\",\n    \"results\": [\n{}\n    ]\n  }}",
         git_sha(),
         unix_time(),
         quick,
         pool::available_cores(),
         base_threads,
+        resolved_tier,
+        simd::cpu_features(),
         rows.join(",\n")
     );
     // Anchor at the repository root (cargo runs benches with cwd at the

@@ -35,6 +35,12 @@ pub struct ExperimentConfig {
     /// `threads` helper threads). 1 (the default) is byte-for-byte the
     /// single-threaded compute path.
     pub threads: usize,
+    /// Kernel-tier knob: `auto` (default; runtime detection), `avx2`,
+    /// `neon`, or `scalar`. Names are validated at parse time;
+    /// *availability* (feature gate, architecture, CPU) is checked at
+    /// run start by `linalg::simd::configure`, which errors loudly
+    /// instead of silently degrading.
+    pub simd: String,
     /// Extra free-form keys (forwarded to specific figures).
     pub extra: BTreeMap<String, String>,
 }
@@ -56,6 +62,7 @@ impl Default for ExperimentConfig {
             seed: 0,
             batch: 32,
             threads: 1,
+            simd: "auto".into(),
             extra: BTreeMap::new(),
         }
     }
@@ -114,6 +121,12 @@ impl ExperimentConfig {
             "seed" => self.seed = parse_kv(k, v, "a non-negative integer")?,
             "batch" => self.batch = parse_kv(k, v, "a positive integer")?,
             "threads" => self.threads = parse_kv(k, v, "a positive integer")?,
+            "simd" => {
+                if !crate::linalg::simd::is_known_request(v) {
+                    crate::bail!("invalid value for simd: '{v}' (expected auto|avx2|neon|scalar)");
+                }
+                self.simd = v.to_string();
+            }
             _ => {
                 self.extra.insert(k.to_string(), v.to_string());
             }
@@ -334,6 +347,22 @@ mod tests {
         assert!(format!("{e}").contains("threads"), "{e}");
         cfg.set("threads", "0").unwrap();
         assert!(format!("{}", cfg.validate().unwrap_err()).contains("threads"));
+    }
+
+    #[test]
+    fn simd_knob_is_strict_on_names_but_lazy_on_availability() {
+        let mut cfg = ExperimentConfig::default();
+        assert_eq!(cfg.simd, "auto", "default must be runtime detection");
+        // A tier this build may not even compile still *parses*: the
+        // availability check belongs to run start, not config load.
+        for good in ["avx2", "neon", "scalar", "auto"] {
+            cfg.set("simd", good).unwrap();
+            assert_eq!(cfg.simd, good);
+        }
+        let e = cfg.set("simd", "sse42").unwrap_err();
+        let msg = format!("{e}");
+        assert!(msg.contains("simd") && msg.contains("sse42"), "{msg}");
+        assert_eq!(cfg.simd, "auto", "failed set must leave the config untouched");
     }
 
     #[test]

@@ -72,11 +72,21 @@ pub struct ProcessOpts {
     /// worker's command line; the caller is expected to have clamped
     /// p × threads against the visible cores already).
     pub threads: usize,
+    /// Kernel-tier knob (`simd=auto|avx2|neon|scalar`), forwarded on
+    /// each worker's command line so every process in a run computes
+    /// on the same tier; an unavailable tier fails the worker loudly
+    /// at startup.
+    pub simd: String,
 }
 
 impl Default for ProcessOpts {
     fn default() -> Self {
-        ProcessOpts { addr: WireAddr::Tcp("127.0.0.1:0".into()), exe: None, threads: 1 }
+        ProcessOpts {
+            addr: WireAddr::Tcp("127.0.0.1:0".into()),
+            exe: None,
+            threads: 1,
+            simd: "auto".into(),
+        }
     }
 }
 
@@ -94,7 +104,11 @@ impl ProcessOpts {
             "unix" => Self::unix_addr()?,
             other => crate::bail!("unknown transport '{other}' (tcp|unix)"),
         };
-        Ok(ProcessOpts { addr, exe: None, threads: 1 })
+        let simd = args.get_str("simd", "auto");
+        if !crate::linalg::simd::is_known_request(simd) {
+            crate::bail!("unknown simd tier '{simd}' (auto|avx2|neon|scalar)");
+        }
+        Ok(ProcessOpts { addr, exe: None, threads: 1, simd: simd.to_string() })
     }
 
     /// A fresh Unix-domain socket path in the temp dir (pid + counter,
@@ -471,6 +485,7 @@ pub fn run_process(
             .arg(format!("max_local={max_local}"))
             .arg(format!("horizon={}", cfg.horizon))
             .arg(format!("threads={}", opts.threads))
+            .arg(format!("simd={}", opts.simd))
             .args(method_to_args(cfg.method)?)
             .args(spec.to_args())
             .stdin(std::process::Stdio::null())
@@ -630,6 +645,10 @@ pub fn process_worker_main(args: &Args) -> Result<()> {
     // `threads=` is its whole GEMM pool budget (the master clamped the
     // p × threads product before spawning).
     crate::linalg::pool::configure_threads(args.get_usize("threads", 1)?);
+    // Kernel tier: resolved here, once, before any GEMM dispatch — an
+    // unavailable tier kills the worker with a named reason instead of
+    // letting processes in one run silently compute on different tiers.
+    crate::linalg::simd::configure(args.get_str("simd", "auto"))?;
     let cfg = DriverConfig {
         eta: args.get_f32("eta", 0.05)?,
         method,

@@ -156,6 +156,7 @@ mod tests {
             backend: crate::coordinator::Backend::Sim,
             model: crate::model::ModelKind::Mlp,
             threads: 1,
+            simd: "auto".into(),
         }
     }
 

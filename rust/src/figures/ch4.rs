@@ -55,6 +55,9 @@ pub struct Sweep {
     /// backend prices the measured speedup into its cost model so the
     /// τ trade-off figures stay honest across backends.
     pub threads: usize,
+    /// Kernel-tier knob (`simd=`), forwarded to spawned process-backend
+    /// workers so every process in a run computes on the same tier.
+    pub simd: String,
 }
 
 impl Sweep {
@@ -72,6 +75,7 @@ impl Sweep {
             sharding: Sharding::Replicated,
             model: opts.model,
             threads: opts.threads,
+            simd: opts.simd.clone(),
         }
     }
 
@@ -129,6 +133,7 @@ impl Sweep {
             };
             let opts = crate::coordinator::ProcessOpts {
                 threads: self.threads,
+                simd: self.simd.clone(),
                 ..Default::default()
             };
             return crate::coordinator::run_process(&spec, p, &cfg, &opts);
@@ -619,6 +624,7 @@ mod tests {
             backend,
             model,
             threads: 1,
+            simd: "auto".into(),
         }
     }
 

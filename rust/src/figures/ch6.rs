@@ -264,6 +264,7 @@ mod tests {
             backend: crate::coordinator::Backend::Sim,
             model: crate::model::ModelKind::Mlp,
             threads: 1,
+            simd: "auto".into(),
         };
         fig6_gs(&opts).unwrap();
     }

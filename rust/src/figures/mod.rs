@@ -41,6 +41,10 @@ pub struct FigOpts {
     /// native-oracle figures. 1 (the default) keeps every figure
     /// byte-for-byte on the historical serial compute path.
     pub threads: usize,
+    /// Kernel-tier knob (`simd=auto|avx2|neon|scalar`); resolved by
+    /// `linalg::simd::configure` at figure start — an unavailable tier
+    /// is a clean CLI error, never a silent fallback.
+    pub simd: String,
 }
 
 impl FigOpts {
@@ -63,6 +67,10 @@ impl FigOpts {
         if threads == 0 {
             bail!("threads must be >= 1 (got 0): 1 means no intra-worker parallelism");
         }
+        let simd = args.get_str("simd", "auto");
+        if !crate::linalg::simd::is_known_request(simd) {
+            bail!("unknown simd tier '{simd}' (auto|avx2|neon|scalar)");
+        }
         Ok(FigOpts {
             out_dir: args.get_str("out-dir", "out").to_string(),
             full: args.get_bool("full", false)?,
@@ -70,6 +78,7 @@ impl FigOpts {
             backend,
             model,
             threads,
+            simd: simd.to_string(),
         })
     }
 }
@@ -88,6 +97,7 @@ pub const ALL_FIGURES: &[&str] = &[
 pub fn run(id: &str, opts: &FigOpts) -> Result<()> {
     std::fs::create_dir_all(&opts.out_dir)?;
     crate::linalg::pool::configure_threads(opts.threads);
+    crate::linalg::simd::configure(&opts.simd)?;
     match id {
         "all" => {
             for f in ALL_FIGURES {
@@ -147,6 +157,10 @@ mod tests {
             seed: 0,
             backend: Backend::Sim,
             model: ModelKind::Mlp,
+            // "auto" resolves to the ambient detected tier, so running
+            // this figure does not flip the process-global tier under
+            // concurrently-running bitwise kernel tests.
+            simd: "auto".into(),
             threads: 1,
         };
         // A fast, pure-math subset end-to-end:
@@ -173,6 +187,17 @@ mod tests {
         assert_eq!(FigOpts::from_args(&args).unwrap().threads, 1);
         let args = Args::parse(["threads=0".to_string()]);
         assert!(FigOpts::from_args(&args).is_err());
+    }
+
+    #[test]
+    fn from_args_parses_the_simd_knob() {
+        let args = Args::parse(Vec::<String>::new());
+        assert_eq!(FigOpts::from_args(&args).unwrap().simd, "auto");
+        let args = Args::parse(["simd=scalar".to_string()]);
+        assert_eq!(FigOpts::from_args(&args).unwrap().simd, "scalar");
+        let args = Args::parse(["simd=sse42".to_string()]);
+        let e = FigOpts::from_args(&args).unwrap_err();
+        assert!(format!("{e}").contains("simd"), "{e}");
     }
 
     #[test]

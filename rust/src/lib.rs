@@ -16,8 +16,11 @@
 //! - [`rng`], [`linalg`] — numeric substrates (deterministic RNG;
 //!   dense eigenvalues for the stability figures; the
 //!   [`linalg::gemm`] register-blocked f32 micro-kernels under the
-//!   batched MLP oracle, threaded across per-worker [`linalg::pool`]
-//!   row panels when `threads= > 1`).
+//!   batched MLP oracle, with an explicit AVX2+FMA / NEON kernel tier
+//!   in [`linalg::simd`] behind the off-by-default `simd` feature and
+//!   the `simd=` knob, threaded across per-worker [`linalg::pool`]
+//!   MR-row — or, for short-m × wide-n shapes, NR-column — panels
+//!   when `threads= > 1`).
 //! - [`sim`] — the thesis' analysis chapters as executable models
 //!   (closed-form MSE, moment matrices, ADMM round-robin maps,
 //!   the non-convex double well).

@@ -8,8 +8,15 @@
 //! broadcast + optional ReLU applied while the accumulator tile is
 //! still in registers). The kernels are register-blocked — an
 //! [`MR`]×[`NR`] accumulator tile per iteration, streaming
-//! contiguously along the output row so the inner loops
-//! auto-vectorize — and never allocate: callers own every buffer.
+//! contiguously along the output row — and never allocate: callers own
+//! every buffer.
+//!
+//! **Kernel tiers:** the portable kernels below auto-vectorize; the
+//! [`super::simd`] module adds explicit AVX2+FMA / NEON
+//! implementations behind the off-by-default `simd` cargo feature.
+//! Every execution routes through `simd`'s dispatch wrappers, which
+//! collapse to the scalar kernels when the feature is off (or the tier
+//! is `scalar`) — so this file stays the reference semantics.
 //!
 //! Layout convention: everything is row-major and contiguous (leading
 //! dimension = column count), which is both how the model stores its
@@ -24,20 +31,25 @@
 //! - `A·Bᵀ` (input gradient): both operands are walked along their
 //!   contiguous k-axis, so each output is one vectorized dot product.
 //!
-//! **Hybrid parallelism:** every kernel takes an output *row range*
-//! `[i0, i1)` (with `i0` on an [`MR`] tile boundary), so a product can
-//! be split into contiguous row panels along M and dispatched on the
-//! per-worker [`super::pool`] — each row is computed whole, by one
-//! thread, in the serial inner-loop order, making the threaded result
-//! bitwise identical to single-thread. At `threads = 1` (the default)
-//! dispatch runs the full range `[0, m)` inline on the caller: the
-//! exact pre-pool code path.
+//! **Hybrid parallelism:** every kernel takes an output *span* — rows
+//! `[i0, i1)` × columns `[j0, j1)` — so a product can be split into
+//! contiguous MR-aligned row panels (the default) or, when M is too
+//! short to feed the helpers and N is wide, NR-aligned column panels
+//! (see [`pool::plan_for`]), and dispatched on the per-worker
+//! [`super::pool`]. Each output element is computed whole, by one
+//! thread, in the serial inner-loop order — panel starts sit on tile
+//! boundaries, so every element takes the same full-block or tail code
+//! path it would serially, making the threaded result **bitwise
+//! identical** to single-thread *within a kernel tier*. At
+//! `threads = 1` (the default) dispatch runs the full span `[0, m) ×
+//! [0, n)` inline on the caller: the exact pre-pool code path.
 //!
 //! Not to be confused with [`super::Matrix`], the f64 substrate of the
 //! eigenvalue solver: that one optimizes for robustness on ≤ 20×20
 //! stability matrices, this one for throughput on batch × dim panels.
 
-use super::pool;
+use super::pool::{self, Split};
+use super::simd;
 use std::ptr::NonNull;
 
 /// Register-tile rows of the broadcast kernels.
@@ -45,7 +57,7 @@ pub const MR: usize = 4;
 /// Register-tile columns (f32 lanes) of the broadcast kernels.
 pub const NR: usize = 16;
 
-/// Which kernel a dispatched [`Job`] runs over its row panel.
+/// Which kernel a dispatched [`Job`] runs over its span.
 #[derive(Clone, Copy)]
 pub(crate) enum JobKind {
     /// Broadcast-form `C += op(A)·B` with `op(A)[i][p] = a[i*ars + p*acs]`.
@@ -59,8 +71,9 @@ pub(crate) enum JobKind {
 }
 
 /// A GEMM flight plan: raw operand pointers plus the full problem
-/// shape. `Copy` so dispatch publishes it to helpers by value — no
-/// allocation, no lifetime to thread through the pool.
+/// shape and the split axis. `Copy` so dispatch publishes it to
+/// helpers by value — no allocation, no lifetime to thread through the
+/// pool.
 ///
 /// # Aliasing invariants (the whole safety story, in one place)
 ///
@@ -72,13 +85,15 @@ pub(crate) enum JobKind {
 ///    borrows they were derived from.
 /// 2. **Sizes**: the public entry points assert `a.len() == m·k`,
 ///    `b.len() == k·n`, `bias.len() == n`, `c.len() == m·n` before a
-///    `Job` exists, so every in-range reconstruction in [`exec_rows`]
+///    `Job` exists, so every in-range reconstruction in [`exec_span`]
 ///    stays inside the original allocations.
-/// 3. **Disjoint writes**: concurrent executors receive row ranges
-///    from [`pool::range_for`], which partitions `[0, m)` — the `&mut`
-///    panels `c[i0·n .. i1·n]` they materialize are pairwise disjoint,
-///    so no two live `&mut` ever overlap. `a`, `b`, and `bias` are
-///    reconstructed only as shared `&[f32]`, which may alias freely.
+/// 3. **Disjoint writes**: concurrent executors receive spans from
+///    [`pool::span_for`], which partitions `[0, m)` (row split) or
+///    `[0, n)` (column split) — the `&mut` row segments each span
+///    materializes through [`COut::row`] are pairwise disjoint across
+///    spans, so no two live `&mut` ever overlap. `a`, `b`, and `bias`
+///    are reconstructed only as shared `&[f32]`, which may alias
+///    freely.
 /// 4. **Provenance**: `bias` is `Option<NonNull<f32>>` — present iff
 ///    the job is `BiasAct` (checked at construction from a real slice,
 ///    never a dangling sentinel), so Miri's provenance tracking sees
@@ -86,6 +101,7 @@ pub(crate) enum JobKind {
 #[derive(Clone, Copy)]
 pub(crate) struct Job {
     kind: JobKind,
+    split: Split,
     m: usize,
     n: usize,
     k: usize,
@@ -100,49 +116,89 @@ pub(crate) struct Job {
 // SAFETY: per the aliasing invariants above — the pointers describe
 // caller-owned slices that outlive the dispatch (the dispatching
 // thread blocks until all helpers finish), and each helper writes a
-// disjoint row panel of `c`.
+// disjoint span of `c`.
 unsafe impl Send for Job {}
 
 impl Job {
-    /// Output rows (M) — what the pool splits into panels.
+    /// Output rows (M) — what a row split partitions.
     pub(crate) fn rows(&self) -> usize {
         self.m
     }
+
+    /// Output columns (N) — what a column split partitions.
+    pub(crate) fn cols(&self) -> usize {
+        self.n
+    }
+
+    /// The axis this job is split along.
+    pub(crate) fn split(&self) -> Split {
+        self.split
+    }
 }
 
-/// Run `job`'s kernel over output rows `[i0, i1)`. `i0` must be
-/// MR-aligned (or equal to `i1`); callers obtain ranges from
-/// [`pool::range_for`], which guarantees this.
-pub(crate) fn exec_rows(job: &Job, i0: usize, i1: usize) {
-    if i1 <= i0 {
+/// Kernel-side view of the output matrix: base pointer + row stride.
+/// Kernels address C exclusively through [`COut::row`], which is the
+/// single place a `&mut` output segment is materialized — one accessor
+/// serves both split modes (a column-split span's rows interleave with
+/// its neighbors' in memory, so no contiguous `&mut` panel exists to
+/// hand out).
+pub(crate) struct COut {
+    ptr: *mut f32,
+    ldc: usize,
+}
+
+impl COut {
+    /// `&mut C[i][j0..j1]` — row `i` (global index), columns `[j0, j1)`.
+    #[inline(always)]
+    pub(crate) fn row(&mut self, i: usize, j0: usize, j1: usize) -> &mut [f32] {
+        debug_assert!(j0 <= j1 && j1 <= self.ldc);
+        // SAFETY: Job invariants 2–3 — the pointer covers the live
+        // `c.len() == m·n` borrow, `i*ldc + j1 <= m·n` for every row a
+        // span owns, and spans own disjoint (row, column-range) sets,
+        // so this is the only live &mut over these elements. Borrowing
+        // &mut self serializes rows *within* one span's kernel call.
+        unsafe { std::slice::from_raw_parts_mut(self.ptr.add(i * self.ldc + j0), j1 - j0) }
+    }
+}
+
+/// Run `job`'s kernel over its span `[s0, s1)` — row indices under a
+/// row split, column indices under a column split. Span starts must be
+/// tile-aligned (MR / NR) or equal to the end; callers obtain spans
+/// from [`pool::span_for`], which guarantees this.
+pub(crate) fn exec_span(job: &Job, s0: usize, s1: usize) {
+    if s1 <= s0 {
         return;
     }
     let (m, n, k) = (job.m, job.n, job.k);
+    let (i0, i1, j0, j1) = match job.split {
+        Split::Rows => (s0, s1, 0, n),
+        Split::Cols => (0, m, s0, s1),
+    };
     // SAFETY: Job invariants 1–2 — the pointers cover a.len() == m*k,
     // b.len() == k*n live caller borrows, reconstructed shared-only.
     let a = unsafe { std::slice::from_raw_parts(job.a, m * k) };
     let b = unsafe { std::slice::from_raw_parts(job.b, k * n) };
-    // SAFETY: Job invariant 3 — rows [i0, i1) of c are owned
-    // exclusively by this call (pool::range_for partitions [0, m)), so
-    // this is the only live &mut over c[i0*n .. i1*n].
-    let c = unsafe { std::slice::from_raw_parts_mut(job.c.add(i0 * n), (i1 - i0) * n) };
+    let mut c = COut { ptr: job.c, ldc: n };
     match job.kind {
-        JobKind::Broadcast { ars, acs } => kernel_broadcast(i0, i1, n, k, [ars, acs], a, b, c),
-        JobKind::Dot => kernel_dot(i0, i1, n, k, a, b, c),
-        JobKind::BothT => kernel_both_t(i0, i1, m, n, k, a, b, c),
+        JobKind::Broadcast { ars, acs } => {
+            simd::broadcast(i0, i1, j0, j1, n, k, [ars, acs], a, b, &mut c)
+        }
+        JobKind::Dot => simd::dot(i0, i1, j0, j1, k, a, b, &mut c),
+        JobKind::BothT => simd::both_t(i0, i1, j0, j1, m, k, a, b, &mut c),
         JobKind::BiasAct { relu } => {
             let bias = job.bias.expect("BiasAct jobs always carry a bias pointer");
             // SAFETY: Job invariant 4 — a Some bias was derived from a
             // live &[f32] of len n at construction.
             let bias = unsafe { std::slice::from_raw_parts(bias.as_ptr(), n) };
-            kernel_bias_act(i0, i1, n, k, a, b, bias, relu, c);
+            simd::bias_act(i0, i1, j0, j1, n, k, a, b, bias, relu, &mut c);
         }
     }
 }
 
-/// Route a product to the caller's thread (full range) or the
-/// per-worker pool (MR-aligned row panels), per the configured
-/// `threads=` knob and the panel-size threshold.
+/// Route a product to the caller's thread (full span) or the
+/// per-worker pool (MR-aligned row panels, or NR-aligned column panels
+/// when M is short and N wide), per the configured `threads=` knob and
+/// the work threshold.
 #[allow(clippy::too_many_arguments)]
 fn dispatch(
     kind: JobKind,
@@ -159,8 +215,10 @@ fn dispatch(
         matches!(kind, JobKind::BiasAct { .. }),
         "bias operand iff BiasAct"
     );
+    let (t, split) = pool::plan_for(m, n, k);
     let job = Job {
         kind,
+        split,
         m,
         n,
         k,
@@ -171,9 +229,9 @@ fn dispatch(
         bias: bias.map(|s| NonNull::from(s).cast::<f32>()),
         c: c.as_mut_ptr(),
     };
-    let t = pool::threads_for(m, n, k);
     if t <= 1 {
-        exec_rows(&job, 0, m);
+        // Serial plans are always Split::Rows: the full row span.
+        exec_span(&job, 0, m);
     } else {
         pool::run(&job, t);
     }
@@ -264,27 +322,31 @@ pub fn dot(x: &[f32], y: &[f32]) -> f32 {
     s
 }
 
-/// Fused bias+activation kernel over rows `[i0, i1)`; `c` holds only
-/// that panel (`(i1-i0) × n`), `a` is the full `m×k` operand indexed by
-/// global row. The loop structure is the pre-pool serial body with the
-/// row counter started at `i0`.
+/// Fused bias+activation kernel over rows `[i0, i1)` × columns
+/// `[j0, j1)`; `c` addresses the full output through [`COut`], `a` is
+/// the full `m×k` operand indexed by global row. The loop structure is
+/// the pre-pool serial body with the row counter started at `i0` and
+/// the column loops bounded by `[j0, j1)` — `j0` is NR-aligned, so
+/// block starts (and therefore per-element code paths) match the
+/// serial schedule exactly.
 #[allow(clippy::too_many_arguments)]
-fn kernel_bias_act(
+pub(crate) fn kernel_bias_act(
     i0: usize,
     i1: usize,
+    j0: usize,
+    j1: usize,
     n: usize,
     k: usize,
     a: &[f32],
     b: &[f32],
     bias: &[f32],
     relu: bool,
-    c: &mut [f32],
+    c: &mut COut,
 ) {
-    let crow_at = move |i: usize| (i - i0) * n;
     let mut i = i0;
     while i + MR <= i1 {
-        let mut j = 0;
-        while j + NR <= n {
+        let mut j = j0;
+        while j + NR <= j1 {
             let mut acc = [[0.0f32; NR]; MR];
             for accr in acc.iter_mut() {
                 accr.copy_from_slice(&bias[j..j + NR]);
@@ -299,22 +361,21 @@ fn kernel_bias_act(
                 }
             }
             for (r, accr) in acc.iter().enumerate() {
-                let base = crow_at(i + r) + j;
-                let crow = &mut c[base..base + NR];
+                let crow = c.row(i + r, j, j + NR);
                 for (cv, &av) in crow.iter_mut().zip(accr) {
                     *cv = if relu { av.max(0.0) } else { av };
                 }
             }
             j += NR;
         }
-        if j < n {
+        if j < j1 {
             for r in 0..MR {
                 let row = i + r;
-                let crow = &mut c[crow_at(row) + j..crow_at(row) + n];
-                crow.copy_from_slice(&bias[j..]);
+                let crow = c.row(row, j, j1);
+                crow.copy_from_slice(&bias[j..j1]);
                 for p in 0..k {
                     let arp = a[row * k + p];
-                    let brow = &b[p * n + j..(p + 1) * n];
+                    let brow = &b[p * n + j..p * n + j1];
                     for (cv, &bv) in crow.iter_mut().zip(brow) {
                         *cv += arp * bv;
                     }
@@ -329,11 +390,11 @@ fn kernel_bias_act(
         i += MR;
     }
     while i < i1 {
-        let crow = &mut c[crow_at(i)..crow_at(i) + n];
-        crow.copy_from_slice(bias);
+        let crow = c.row(i, j0, j1);
+        crow.copy_from_slice(&bias[j0..j1]);
         for p in 0..k {
             let aip = a[i * k + p];
-            let brow = &b[p * n..(p + 1) * n];
+            let brow = &b[p * n + j0..p * n + j1];
             for (cv, &bv) in crow.iter_mut().zip(brow) {
                 *cv += aip * bv;
             }
@@ -347,28 +408,29 @@ fn kernel_bias_act(
     }
 }
 
-/// Broadcast-form kernel over rows `[i0, i1)`: `C += op(A)·B` with
-/// `op(A)[i][p] = a[i*strides[0] + p*strides[1]]` (global row index)
-/// and `B` stored `k×n` row-major; `c` holds only the panel. Covers
-/// the no-transpose and A-transposed cases; the inner loop streams
-/// `B` and `C` rows while `op(A)` supplies scalar broadcasts.
+/// Broadcast-form kernel over rows `[i0, i1)` × columns `[j0, j1)`:
+/// `C += op(A)·B` with `op(A)[i][p] = a[i*strides[0] + p*strides[1]]`
+/// (global row index) and `B` stored `k×n` row-major. Covers the
+/// no-transpose and A-transposed cases; the inner loop streams `B` and
+/// `C` rows while `op(A)` supplies scalar broadcasts.
 #[allow(clippy::too_many_arguments)]
-fn kernel_broadcast(
+pub(crate) fn kernel_broadcast(
     i0: usize,
     i1: usize,
+    j0: usize,
+    j1: usize,
     n: usize,
     k: usize,
     strides: [usize; 2],
     a: &[f32],
     b: &[f32],
-    c: &mut [f32],
+    c: &mut COut,
 ) {
     let [ars, acs] = strides;
-    let crow_at = move |i: usize| (i - i0) * n;
     let mut i = i0;
     while i + MR <= i1 {
-        let mut j = 0;
-        while j + NR <= n {
+        let mut j = j0;
+        while j + NR <= j1 {
             let mut acc = [[0.0f32; NR]; MR];
             for p in 0..k {
                 let brow = &b[p * n + j..p * n + j + NR];
@@ -380,20 +442,19 @@ fn kernel_broadcast(
                 }
             }
             for (r, accr) in acc.iter().enumerate() {
-                let base = crow_at(i + r) + j;
-                let crow = &mut c[base..base + NR];
+                let crow = c.row(i + r, j, j + NR);
                 for (cv, &av) in crow.iter_mut().zip(accr) {
                     *cv += av;
                 }
             }
             j += NR;
         }
-        if j < n {
+        if j < j1 {
             for p in 0..k {
-                let brow = &b[p * n + j..(p + 1) * n];
+                let brow = &b[p * n + j..p * n + j1];
                 for r in 0..MR {
                     let arp = a[(i + r) * ars + p * acs];
-                    let crow = &mut c[crow_at(i + r) + j..crow_at(i + r) + n];
+                    let crow = c.row(i + r, j, j1);
                     for (cv, &bv) in crow.iter_mut().zip(brow) {
                         *cv += arp * bv;
                     }
@@ -405,8 +466,8 @@ fn kernel_broadcast(
     while i < i1 {
         for p in 0..k {
             let aip = a[i * ars + p * acs];
-            let brow = &b[p * n..(p + 1) * n];
-            let crow = &mut c[crow_at(i)..crow_at(i) + n];
+            let brow = &b[p * n + j0..p * n + j1];
+            let crow = c.row(i, j0, j1);
             for (cv, &bv) in crow.iter_mut().zip(brow) {
                 *cv += aip * bv;
             }
@@ -415,40 +476,53 @@ fn kernel_broadcast(
     }
 }
 
-/// Dot-form kernel over rows `[i0, i1)`: `C += A·Bᵀ` with `A` stored
-/// `m×k` and `B` stored `n×k` — both operands contiguous along `k`, so
-/// every output element is one vectorized [`dot`].
-fn kernel_dot(i0: usize, i1: usize, n: usize, k: usize, a: &[f32], b: &[f32], c: &mut [f32]) {
+/// Dot-form kernel over rows `[i0, i1)` × columns `[j0, j1)`:
+/// `C += A·Bᵀ` with `A` stored `m×k` and `B` stored `n×k` — both
+/// operands contiguous along `k`, so every output element is one
+/// vectorized [`dot`].
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn kernel_dot(
+    i0: usize,
+    i1: usize,
+    j0: usize,
+    j1: usize,
+    k: usize,
+    a: &[f32],
+    b: &[f32],
+    c: &mut COut,
+) {
     for i in i0..i1 {
         let arow = &a[i * k..(i + 1) * k];
-        let crow = &mut c[(i - i0) * n..(i - i0 + 1) * n];
-        for (j, cv) in crow.iter_mut().enumerate() {
+        let crow = c.row(i, j0, j1);
+        for (j, cv) in (j0..j1).zip(crow.iter_mut()) {
             *cv += dot(arow, &b[j * k..(j + 1) * k]);
         }
     }
 }
 
-/// `C += Aᵀ·Bᵀ` over rows `[i0, i1)` — not on any hot path (kept for
-/// completeness of the flag matrix); plain triple loop. Needs the full
-/// `m` because `Aᵀ` is indexed `a[p*m + i]`.
+/// `C += Aᵀ·Bᵀ` over rows `[i0, i1)` × columns `[j0, j1)` — not on any
+/// hot path (kept for completeness of the flag matrix); plain triple
+/// loop. Needs the full `m` because `Aᵀ` is indexed `a[p*m + i]`.
 #[allow(clippy::too_many_arguments)]
-fn kernel_both_t(
+pub(crate) fn kernel_both_t(
     i0: usize,
     i1: usize,
+    j0: usize,
+    j1: usize,
     m: usize,
-    n: usize,
     k: usize,
     a: &[f32],
     b: &[f32],
-    c: &mut [f32],
+    c: &mut COut,
 ) {
     for i in i0..i1 {
-        for j in 0..n {
+        let crow = c.row(i, j0, j1);
+        for (j, cv) in (j0..j1).zip(crow.iter_mut()) {
             let mut s = 0.0f32;
             for p in 0..k {
                 s += a[p * m + i] * b[j * k + p];
             }
-            c[(i - i0) * n + j] += s;
+            *cv += s;
         }
     }
 }
@@ -560,11 +634,12 @@ mod tests {
     #[test]
     fn threaded_kernels_are_bitwise_identical_to_serial() {
         // Shapes stressing tile tails (67 = 16·4+3 rows), M < MR·c
-        // (surplus threads own empty panels), single-tile M, and an
-        // empty product; all above and below the parallel threshold.
-        // Under Miri only the first above-threshold shape and the empty
-        // product run — that is the cross-thread `Job` aliasing case
-        // Miri exists to vet, at interpretable cost.
+        // (the wide-n shapes now take the NR-aligned *column* split),
+        // single-tile M, and an empty product; all above and below the
+        // parallel threshold. Under Miri only the first above-threshold
+        // shape and the empty product run — that is the cross-thread
+        // `Job` aliasing case Miri exists to vet, at interpretable
+        // cost.
         let shapes: &[(usize, usize, usize)] = if cfg!(miri) {
             &[(67, 33, 40), (0, 64, 64)]
         } else {
@@ -572,6 +647,7 @@ mod tests {
                 (67, 33, 40),
                 (9, 1024, 8),
                 (5, 2048, 16),
+                (4, 4096, 32),
                 (128, 100, 33),
                 (256, 64, 64),
                 (0, 64, 64),

@@ -13,17 +13,22 @@
 //!   micro-kernels ([`gemm::sgemm`] with transpose flags, the fused
 //!   [`gemm::sgemm_bias_act`] bias+ReLU epilogue) under the batched
 //!   MLP oracle's forward/backward — the wall clock of every
-//!   Chapter-4/6 sweep and both real-thread backends. The [`pool`]
-//!   module parallelizes these kernels across a per-worker helper
-//!   thread pool (MR-aligned row panels, bitwise-identical to serial)
-//!   behind the `threads=` knob — the hybrid p workers × c threads
-//!   layout.
+//!   Chapter-4/6 sweep and both real-thread backends. Two orthogonal
+//!   accelerators compose under it: the [`simd`] module selects a
+//!   kernel *tier* (scalar / AVX2+FMA / NEON, behind the off-by-default
+//!   `simd` cargo feature and the `simd=` knob), and the [`pool`]
+//!   module parallelizes whichever tier is active across a per-worker
+//!   helper thread pool (MR-aligned row panels, or NR-aligned column
+//!   panels for short-m × wide-n shapes; bitwise-identical to serial
+//!   within a tier) behind the `threads=` knob — the hybrid p workers
+//!   × c threads layout.
 
 mod complex;
 mod eig;
 pub mod gemm;
 mod matrix;
 pub mod pool;
+pub mod simd;
 
 pub use complex::Complex;
 pub use eig::{eigenvalues, spectral_radius};

@@ -5,12 +5,15 @@
 //! gradient step, so p workers × c threads compose — the hybrid
 //! data-parallel × tensor-parallel layout. [`super::gemm::sgemm`] and
 //! [`super::gemm::sgemm_bias_act`] split their output into contiguous
-//! row panels along M, each panel aligned to the [`super::gemm::MR`]
-//! register-tile boundary, and hand panels 1.. to parked helper
-//! threads while the calling thread computes panel 0. Every output row
-//! is produced whole, by exactly one thread, with the serial kernels'
-//! inner-loop order — so the threaded result is **bitwise identical**
-//! to the single-thread one, and `threads=1` (the default) bypasses
+//! panels — row panels along M aligned to the [`super::gemm::MR`]
+//! register-tile boundary by default, or column panels along N aligned
+//! to [`super::gemm::NR`] when M is too short to feed every helper and
+//! N is wide ([`plan_for`] picks the axis) — and hand panels 1.. to
+//! parked helper threads while the calling thread computes panel 0.
+//! Every output element is produced whole, by exactly one thread, with
+//! the serial kernels' inner-loop order — so the threaded result is
+//! **bitwise identical** to the single-thread one *within a kernel
+//! tier* (see [`super::simd`]), and `threads=1` (the default) bypasses
 //! this module entirely.
 //!
 //! Design constraints, in order:
@@ -33,10 +36,11 @@
 //!   run's setting without plumbing.
 //!
 //! The per-thread scratch of this decomposition is each helper's
-//! MR×NR accumulator tile — panels write disjoint C rows, so no
+//! MR×NR accumulator tile — panels write disjoint C elements, so no
 //! reduction buffer exists to race on.
 
-use super::gemm::{exec_rows, Job, MR};
+use super::gemm::{exec_span, Job, MR, NR};
+use super::simd;
 use crate::sync::atomic::{AtomicUsize, Ordering};
 use crate::sync::{thread, Arc, Condvar, Mutex, MutexGuard, PoisonError};
 use std::cell::RefCell;
@@ -60,8 +64,23 @@ static TARGET: AtomicUsize = AtomicUsize::new(0);
 /// would both cost time and allocate).
 static CORES: AtomicUsize = AtomicUsize::new(0);
 
-/// Cached `(thread_count, speedup)` of the last calibration run.
-static SPEEDUP: Mutex<Option<(usize, f64)>> = Mutex::new(None);
+/// Cached `((thread_count, kernel_tier), speedup)` of the last
+/// calibration run. Keyed by tier as well as threads: SIMD kernels
+/// shift the compute/synchronization balance, so the same thread count
+/// calibrates differently per tier.
+static SPEEDUP: Mutex<Option<((usize, simd::Tier), f64)>> = Mutex::new(None);
+
+/// The axis a GEMM's output is partitioned along when dispatched on
+/// the pool. Rows is the default (whole cache-friendly C rows per
+/// panel); Cols is the wide-n fallback for short M, where row tiles
+/// would leave helpers idle.
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+pub(crate) enum Split {
+    /// MR-aligned row panels of `[0, m)`.
+    Rows,
+    /// NR-aligned column panels of `[0, n)`.
+    Cols,
+}
 
 /// Detected available cores (cached after the first call).
 pub fn available_cores() -> usize {
@@ -131,36 +150,82 @@ pub fn clamp_oversubscription(threads: usize, workers: usize) -> usize {
     clamped
 }
 
-/// Thread count a GEMM of shape `m × n × k` should dispatch at: the
-/// configured target, clamped by the MR-tile count of M (a thread
-/// needs at least one whole tile) and floored to 1 below the
-/// [`PAR_MIN_WORK`] threshold.
-pub(crate) fn threads_for(m: usize, n: usize, k: usize) -> usize {
-    let t = configured_threads();
-    if t <= 1 || m < 2 * MR {
-        return 1;
+/// Plan a GEMM of shape `m × n × k` at the configured target: the
+/// effective thread count plus the split axis. Serial (`(1, Rows)`)
+/// below the [`PAR_MIN_WORK`] threshold; rows when M has tiles enough,
+/// columns when M is short but N is wide.
+pub(crate) fn plan_for(m: usize, n: usize, k: usize) -> (usize, Split) {
+    plan_with(configured_threads(), m, n, k)
+}
+
+/// Pure planning core, factored out so tests pin the policy without
+/// touching the process-global thread target.
+fn plan_with(t: usize, m: usize, n: usize, k: usize) -> (usize, Split) {
+    if t <= 1 || m.saturating_mul(n).saturating_mul(k.max(1)) < PAR_MIN_WORK {
+        return (1, Split::Rows);
     }
-    if m.saturating_mul(n).saturating_mul(k.max(1)) < PAR_MIN_WORK {
-        return 1;
+    let row_tiles = tiles(m);
+    let col_tiles = n.div_ceil(NR);
+    // Rows win ties: whole output rows stream B and C contiguously per
+    // thread. Columns only when rows would leave helpers starved AND
+    // the column axis actually offers more panels.
+    let (split, avail) = if row_tiles >= t || row_tiles >= col_tiles {
+        (Split::Rows, row_tiles)
+    } else {
+        (Split::Cols, col_tiles)
+    };
+    let t_eff = t.min(avail);
+    if t_eff <= 1 {
+        (1, Split::Rows)
+    } else {
+        (t_eff, split)
     }
-    t.min(tiles(m))
 }
 
 fn tiles(m: usize) -> usize {
     m.div_ceil(MR)
 }
 
-/// Row range `[i0, i1)` of C owned by `idx` (0 = the dispatching
-/// thread) when `m` rows are split over `t` threads. Ranges are
-/// contiguous, MR-tile-aligned at the start, and partition `[0, m)`;
-/// the last non-empty range absorbs the sub-MR tail so the serial
+/// Tile-aligned contiguous partition of `[0, len)` into `t` ranges:
+/// range `idx`'s start sits on a `gran` boundary (or at `len`), and
+/// the last non-empty range absorbs the sub-tile tail so the serial
 /// kernels' tail loop runs exactly where it would single-threaded.
-pub(crate) fn range_for(m: usize, t: usize, idx: usize) -> (usize, usize) {
-    let tiles = tiles(m);
+fn split_range(len: usize, gran: usize, t: usize, idx: usize) -> (usize, usize) {
+    let tiles = len.div_ceil(gran);
     let (q, r) = (tiles / t, tiles % t);
     let t0 = idx * q + idx.min(r);
     let t1 = t0 + q + usize::from(idx < r);
-    ((t0 * MR).min(m), (t1 * MR).min(m))
+    ((t0 * gran).min(len), (t1 * gran).min(len))
+}
+
+/// Row range `[i0, i1)` of C owned by `idx` (0 = the dispatching
+/// thread) when `m` rows are split over `t` threads — MR-aligned.
+pub(crate) fn range_for(m: usize, t: usize, idx: usize) -> (usize, usize) {
+    split_range(m, MR, t, idx)
+}
+
+/// Column range `[j0, j1)` of C owned by `idx` when `n` columns are
+/// split over `t` threads — NR-aligned.
+pub(crate) fn col_range_for(n: usize, t: usize, idx: usize) -> (usize, usize) {
+    split_range(n, NR, t, idx)
+}
+
+/// The span of `job` owned by participant `idx`, on whichever axis the
+/// job is split along.
+pub(crate) fn span_for(job: &Job, t: usize, idx: usize) -> (usize, usize) {
+    match job.split() {
+        Split::Rows => range_for(job.rows(), t, idx),
+        Split::Cols => col_range_for(job.cols(), t, idx),
+    }
+}
+
+/// Panels available along `job`'s split axis (what caps `t_eff`), and
+/// the full span length (what a serial fallback must cover).
+fn split_extent(job: &Job) -> (usize, usize) {
+    match job.split() {
+        Split::Rows => (tiles(job.rows()), job.rows()),
+        Split::Cols => (job.cols().div_ceil(NR), job.cols()),
+    }
 }
 
 struct Ctrl {
@@ -187,7 +252,7 @@ fn lock_ctrl(shared: &Shared) -> MutexGuard<'_, Ctrl> {
 
 /// A spawn-once helper-thread pool owned by one dispatching thread.
 /// Helpers park on a condvar between jobs; a job hands each
-/// participant one MR-aligned row panel of the output.
+/// participant one tile-aligned panel of the output.
 pub struct GemmPool {
     shared: Arc<Shared>,
     helpers: Vec<thread::JoinHandle<()>>,
@@ -238,15 +303,15 @@ impl GemmPool {
     /// Run `job` across `t` threads (the caller plus `t − 1` helpers).
     /// The caller computes panel 0 in place of parking.
     ///
-    /// Correctness rests on two invariants: `range_for` hands each
-    /// participant a disjoint row range, and this method does not
-    /// return until every helper has finished — so the raw panel
-    /// pointers inside `job` never outlive the caller's borrows.
+    /// Correctness rests on two invariants: `span_for` hands each
+    /// participant a disjoint span, and this method does not return
+    /// until every helper has finished — so the raw panel pointers
+    /// inside `job` never outlive the caller's borrows.
     pub(crate) fn run(&mut self, job: &Job, t: usize) {
-        let m = job.rows();
-        let t_eff = t.min(tiles(m)).max(1);
+        let (avail, full) = split_extent(job);
+        let t_eff = t.min(avail).max(1);
         if t_eff <= 1 {
-            exec_rows(job, 0, m);
+            exec_span(job, 0, full);
             return;
         }
         self.ensure_helpers(t_eff - 1);
@@ -258,8 +323,8 @@ impl GemmPool {
             c.epoch = c.epoch.wrapping_add(1);
             self.shared.start.notify_all();
         }
-        let (i0, i1) = range_for(m, t_eff, 0);
-        exec_rows(job, i0, i1);
+        let (s0, s1) = span_for(job, t_eff, 0);
+        exec_span(job, s0, s1);
         let mut c = lock_ctrl(&self.shared);
         while c.remaining > 0 {
             c = self
@@ -308,8 +373,8 @@ fn helper_loop(shared: Arc<Shared>, slot: usize, mut seen: u64) {
             job = c.job.expect("an active epoch always carries a job");
             t_eff = c.t_eff;
         }
-        let (i0, i1) = range_for(job.rows(), t_eff, slot);
-        exec_rows(&job, i0, i1);
+        let (s0, s1) = span_for(&job, t_eff, slot);
+        exec_span(&job, s0, s1);
         {
             let mut c = lock_ctrl(&shared);
             // Underflow here would mean a helper executed the same
@@ -361,24 +426,27 @@ pub fn shutdown_local_pool() {
 }
 
 /// Measured speedup of the threaded GEMM at the *configured* thread
-/// count, from a quick (~tens of ms, once per process per setting)
-/// calibration on a representative fused forward panel. 1.0 at
-/// `threads = 1` without measuring. The sim backend divides the cost
-/// model's local-step time by this, so virtual-time sweeps price the
-/// c-thread local step the way the real backends experience it.
+/// count and the *active* kernel tier, from a quick (~tens of ms, once
+/// per process per setting) calibration on a representative fused
+/// forward panel. 1.0 at `threads = 1` without measuring. The sim
+/// backend divides the cost model's local-step time by this, so
+/// virtual-time sweeps price the c-thread local step the way the real
+/// backends experience it — including how much less a SIMD tier gains
+/// from extra threads.
 pub fn measured_speedup() -> f64 {
     let t = configured_threads();
     if t <= 1 {
         return 1.0;
     }
+    let tier = simd::active_tier();
     let mut cache = SPEEDUP.lock().unwrap_or_else(PoisonError::into_inner);
-    if let Some((ct, s)) = *cache {
-        if ct == t {
+    if let Some((key, s)) = *cache {
+        if key == (t, tier) {
             return s;
         }
     }
     let s = calibrate(t);
-    *cache = Some((t, s));
+    *cache = Some(((t, tier), s));
     s
 }
 
@@ -443,6 +511,26 @@ mod tests {
     }
 
     #[test]
+    fn col_ranges_partition_all_columns_nr_aligned() {
+        for &n in &[0usize, 1, 15, 16, 17, 64, 100, 1024, 4096] {
+            for &t in &[1usize, 2, 3, 4, 7] {
+                let mut next = 0;
+                for idx in 0..t {
+                    let (j0, j1) = col_range_for(n, t, idx);
+                    assert_eq!(j0, next, "n={n} t={t} idx={idx}: ranges must be contiguous");
+                    assert!(
+                        j0 % NR == 0 || j0 == n,
+                        "n={n} t={t} idx={idx}: panel start {j0} breaks an NR tile"
+                    );
+                    assert!(j0 <= j1 && j1 <= n);
+                    next = j1;
+                }
+                assert_eq!(next, n, "n={n} t={t}: ranges must cover every column");
+            }
+        }
+    }
+
+    #[test]
     fn small_m_gives_fewer_threads_than_requested() {
         // 2 tiles can feed at most 2 threads; the rest get empty ranges.
         let m = 5; // tiles = 2
@@ -452,6 +540,52 @@ mod tests {
         assert_eq!((a0, a1), (0, 4));
         assert_eq!((b0, b1), (4, 5));
         assert_eq!((c0, c1), (5, 5), "surplus threads own empty panels");
+    }
+
+    #[test]
+    fn plan_prefers_rows_and_falls_back_to_columns_when_rows_starve() {
+        // Plenty of row tiles: rows at full t.
+        assert_eq!(plan_with(4, 256, 64, 64), (4, Split::Rows));
+        // One row tile but a wide n: the column split keeps all 4
+        // threads fed (ROADMAP item 4's named remaining upside).
+        assert_eq!(plan_with(4, 4, 4096, 32), (4, Split::Cols));
+        // Short m AND narrow n: rows win the tie, clamped to the tiles.
+        assert_eq!(plan_with(4, 8, 32, 512), (2, Split::Rows));
+        // Below the work threshold: serial, regardless of shape.
+        assert_eq!(plan_with(4, 4, 4096, 0), (1, Split::Rows));
+        assert_eq!(plan_with(4, 16, 16, 16), (1, Split::Rows));
+        // threads=1 never plans a split.
+        assert_eq!(plan_with(1, 256, 4096, 64), (1, Split::Rows));
+        // Degenerate: an empty output is serial.
+        assert_eq!(plan_with(4, 0, 4096, 64), (1, Split::Rows));
+    }
+
+    #[test]
+    fn wide_n_column_split_is_bitwise_identical_to_serial() {
+        // The satellite shape: 4 × 4096 output (one MR tile, 256 NR
+        // tiles) — the row split would run this serially at t=4; the
+        // column split must keep helpers busy AND stay bitwise equal.
+        // Under Miri the shape shrinks to the smallest one that still
+        // clears PAR_MIN_WORK with a single row tile (so the column
+        // split still engages) — the interpreter is ~10⁴× slower.
+        let before = configured_threads();
+        let (m, n, k) = if cfg!(miri) { (4usize, 512, 16) } else { (4usize, 4096, 32) };
+        let a: Vec<f32> = (0..m * k).map(|i| (i % 97) as f32 * 0.0625 - 3.0).collect();
+        let b: Vec<f32> = (0..k * n).map(|i| (i % 89) as f32 * 0.03125 - 1.0).collect();
+        let bias: Vec<f32> = (0..n).map(|j| (j % 13) as f32 * 0.25 - 1.5).collect();
+        configure_threads(1);
+        let mut serial = vec![0.5f32; m * n];
+        crate::linalg::gemm::sgemm(false, false, m, n, k, &a, &b, &mut serial);
+        let mut serial_fused = vec![0.0f32; m * n];
+        crate::linalg::gemm::sgemm_bias_act(m, n, k, &a, &b, &bias, true, &mut serial_fused);
+        configure_threads(4);
+        let mut threaded = vec![0.5f32; m * n];
+        crate::linalg::gemm::sgemm(false, false, m, n, k, &a, &b, &mut threaded);
+        let mut threaded_fused = vec![0.0f32; m * n];
+        crate::linalg::gemm::sgemm_bias_act(m, n, k, &a, &b, &bias, true, &mut threaded_fused);
+        assert!(serial == threaded, "column-split sgemm != serial bitwise");
+        assert!(serial_fused == threaded_fused, "column-split fused != serial bitwise");
+        configure_threads(before.max(1));
     }
 
     #[test]

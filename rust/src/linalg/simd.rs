@@ -1,0 +1,1024 @@
+//! Explicit SIMD kernel tier for the GEMM substrate.
+//!
+//! [`super::gemm`]'s four micro-kernels (`Broadcast`, `Dot`, `BothT`,
+//! and the fused `BiasAct` epilogue) auto-vectorize well, but an
+//! explicit `core::arch` tier buys FMA contraction and wider effective
+//! issue on the batch × dim panels every sweep spends its wall clock
+//! in. This module owns the **kernel-tier dispatch table**: each
+//! `exec_span` call routes through [`broadcast`] / [`dot`] /
+//! [`both_t`] / [`bias_act`] below, which select the process-wide
+//! [`active_tier`] once per span (a relaxed atomic load) and jump to
+//! the matching implementation.
+//!
+//! Tier selection, strictest first:
+//!
+//! 1. `simd=` config/CLI knob → [`configure`] (same plumbing as
+//!    `threads=`);
+//! 2. `ELASTIC_SIMD=auto|avx2|neon|scalar` environment variable, read
+//!    on the first dispatch when nothing was configured — a malformed
+//!    or unsupported value is a loud panic, never a silent fallback
+//!    (the `ELASTIC_TRAIN_THREADS` contract);
+//! 3. `auto` (the default): runtime feature detection picks the best
+//!    supported tier — AVX2+FMA on x86_64, NEON on aarch64, scalar
+//!    otherwise.
+//!
+//! Guarantees, matching the repo's layered-equivalence story:
+//!
+//! - **`simd` feature off (the default): byte-identical behavior.**
+//!   The arch modules are not compiled, every request other than
+//!   `auto`/`scalar` is a typed error, and dispatch collapses to the
+//!   scalar kernels.
+//! - **Threaded ≡ serial stays bitwise *within* a tier**: the pool
+//!   hands out MR-row / NR-column panels and each output element is
+//!   produced by one thread in the tier's serial loop order.
+//! - **SIMD vs scalar is tolerance-level parity, not bitwise**: FMA
+//!   contracts the multiply-add rounding step, legitimately changing
+//!   low-order bits (`tests/simd_parity.rs` pins ≤ 1e-5 relative).
+//! - **Miri always runs the scalar tier** (`cfg(miri)` short-circuits
+//!   detection and rejects explicit SIMD requests): intrinsics are not
+//!   interpretable, and the aliasing story Miri vets is tier-agnostic.
+//!
+//! The `unsafe` surface here is exactly the `#[target_feature]` kernel
+//! bodies plus their call sites in the dispatch wrappers; the whole
+//! file is capped by the `tests/repo_lint.rs` R2 allowlist.
+
+use super::gemm::{self, COut};
+use crate::error::Result;
+use crate::sync::atomic::{AtomicUsize, Ordering};
+
+/// A kernel tier. `Scalar` is the auto-vectorized baseline the repo
+/// shipped with; the SIMD tiers exist only under the off-by-default
+/// `simd` cargo feature and on their own architecture.
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+pub enum Tier {
+    /// The portable register-blocked kernels in [`super::gemm`].
+    Scalar,
+    /// AVX2 + FMA (`core::arch::x86_64`), 2×8 f32 lanes per NR block.
+    Avx2,
+    /// NEON (`core::arch::aarch64`), 4×4 f32 lanes per NR block.
+    Neon,
+}
+
+impl Tier {
+    /// The knob spelling of this tier (`simd=<name>`).
+    pub fn name(&self) -> &'static str {
+        match self {
+            Tier::Scalar => "scalar",
+            Tier::Avx2 => "avx2",
+            Tier::Neon => "neon",
+        }
+    }
+}
+
+/// Selected tier + 1; 0 = not yet selected (first dispatch seeds from
+/// `ELASTIC_SIMD`, defaulting to `auto` detection).
+static ACTIVE: AtomicUsize = AtomicUsize::new(0);
+
+fn tier_from_code(code: usize) -> Tier {
+    match code {
+        0 => Tier::Scalar,
+        1 => Tier::Avx2,
+        _ => Tier::Neon,
+    }
+}
+
+fn tier_code(t: Tier) -> usize {
+    match t {
+        Tier::Scalar => 0,
+        Tier::Avx2 => 1,
+        Tier::Neon => 2,
+    }
+}
+
+/// The process-wide active kernel tier. First call seeds it from the
+/// `ELASTIC_SIMD` environment variable (absent = `auto`); a value that
+/// is malformed, or names a tier this build/CPU cannot run, panics
+/// loudly — the same no-silent-fallback contract as the config parser
+/// and `ELASTIC_TRAIN_THREADS`.
+pub fn active_tier() -> Tier {
+    match ACTIVE.load(Ordering::Relaxed) {
+        0 => {
+            let t = match std::env::var("ELASTIC_SIMD") {
+                Ok(v) => match resolve(&v) {
+                    Ok(t) => t,
+                    Err(e) => panic!("ELASTIC_SIMD='{v}' rejected: {e}"),
+                },
+                Err(_) => detect_best(),
+            };
+            ACTIVE.store(tier_code(t) + 1, Ordering::Relaxed);
+            t
+        }
+        code => tier_from_code(code - 1),
+    }
+}
+
+/// Select the kernel tier for this process from a knob value
+/// (`auto|avx2|neon|scalar`); returns the resolved tier. Requests the
+/// build or CPU cannot honor are typed errors naming the reason —
+/// callers surface them instead of silently degrading.
+pub fn configure(request: &str) -> Result<Tier> {
+    let t = resolve(request)?;
+    ACTIVE.store(tier_code(t) + 1, Ordering::Relaxed);
+    Ok(t)
+}
+
+/// Whether `s` is a syntactically valid `simd=` knob value. Config
+/// parsing validates the *name* eagerly (strict-parse contract) but
+/// defers availability to [`configure`] at run start, so a config file
+/// naming `avx2` parses on any machine and fails loudly only when the
+/// run actually asks for it.
+pub fn is_known_request(s: &str) -> bool {
+    matches!(s, "auto" | "avx2" | "neon" | "scalar")
+}
+
+/// Best tier this build + CPU supports: AVX2+FMA, else NEON, else
+/// scalar. Always scalar under Miri (intrinsics are not interpreted)
+/// and in builds without the `simd` cargo feature.
+pub fn detect_best() -> Tier {
+    if avx2_supported() {
+        return Tier::Avx2;
+    }
+    if neon_supported() {
+        return Tier::Neon;
+    }
+    Tier::Scalar
+}
+
+/// CPU capability string recorded in bench history entries, so a
+/// throughput regression can be traced to the host it ran on.
+pub fn cpu_features() -> &'static str {
+    if avx2_supported() {
+        return "avx2+fma";
+    }
+    if neon_supported() {
+        return "neon";
+    }
+    "none-detected"
+}
+
+fn avx2_supported() -> bool {
+    #[cfg(all(feature = "simd", target_arch = "x86_64"))]
+    {
+        return !cfg!(miri)
+            && std::arch::is_x86_feature_detected!("avx2")
+            && std::arch::is_x86_feature_detected!("fma");
+    }
+    #[cfg(not(all(feature = "simd", target_arch = "x86_64")))]
+    false
+}
+
+fn neon_supported() -> bool {
+    #[cfg(all(feature = "simd", target_arch = "aarch64"))]
+    {
+        return !cfg!(miri) && std::arch::is_aarch64_feature_detected!("neon");
+    }
+    #[cfg(not(all(feature = "simd", target_arch = "aarch64")))]
+    false
+}
+
+/// Why an explicit tier request cannot be honored, most-specific last:
+/// feature gate, then Miri, then architecture, then the CPU itself.
+fn unavailable_reason(tier: &str) -> &'static str {
+    if !cfg!(feature = "simd") {
+        return "this build has the `simd` cargo feature disabled (rebuild with --features simd)";
+    }
+    if cfg!(miri) {
+        return "SIMD intrinsics are not interpreted under Miri; use simd=scalar";
+    }
+    if tier == "avx2" && !cfg!(target_arch = "x86_64") {
+        return "avx2 requires an x86_64 target";
+    }
+    if tier == "neon" && !cfg!(target_arch = "aarch64") {
+        return "neon requires an aarch64 target";
+    }
+    "the CPU does not report the required features (avx2+fma / neon)"
+}
+
+fn resolve(request: &str) -> Result<Tier> {
+    match request {
+        "auto" => Ok(detect_best()),
+        "scalar" => Ok(Tier::Scalar),
+        "avx2" if avx2_supported() => Ok(Tier::Avx2),
+        "neon" if neon_supported() => Ok(Tier::Neon),
+        "avx2" | "neon" => {
+            crate::bail!("simd={request} unavailable: {}", unavailable_reason(request))
+        }
+        other => crate::bail!("unknown simd tier '{other}' (expected auto|avx2|neon|scalar)"),
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Dispatch wrappers — the one place kernels are selected. Each wrapper
+// is called once per dispatched span (serial: once per product), so
+// the tier load is a relaxed atomic read amortized over an entire
+// panel's worth of multiply-adds.
+// ---------------------------------------------------------------------------
+
+/// `C += op(A)·B` over rows `[i0, i1)` × columns `[j0, j1)` in the
+/// active tier (see [`gemm::kernel_broadcast`] for the contract).
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn broadcast(
+    i0: usize,
+    i1: usize,
+    j0: usize,
+    j1: usize,
+    n: usize,
+    k: usize,
+    strides: [usize; 2],
+    a: &[f32],
+    b: &[f32],
+    c: &mut COut,
+) {
+    match active_tier() {
+        Tier::Scalar => gemm::kernel_broadcast(i0, i1, j0, j1, n, k, strides, a, b, c),
+        #[cfg(all(feature = "simd", target_arch = "x86_64"))]
+        // SAFETY: Tier::Avx2 is only ever stored after avx2_supported()
+        // confirmed avx2+fma on this CPU (resolve/detect_best).
+        Tier::Avx2 => unsafe { avx2::broadcast(i0, i1, j0, j1, n, k, strides, a, b, c) },
+        #[cfg(all(feature = "simd", target_arch = "aarch64"))]
+        // SAFETY: Tier::Neon is only ever stored after neon_supported()
+        // confirmed NEON on this CPU (resolve/detect_best).
+        Tier::Neon => unsafe { neon::broadcast(i0, i1, j0, j1, n, k, strides, a, b, c) },
+        #[allow(unreachable_patterns)] // covers the cfg'd-out tiers
+        _ => gemm::kernel_broadcast(i0, i1, j0, j1, n, k, strides, a, b, c),
+    }
+}
+
+/// `C += A·Bᵀ` over rows `[i0, i1)` × columns `[j0, j1)` in the active
+/// tier (see [`gemm::kernel_dot`] for the contract).
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn dot(
+    i0: usize,
+    i1: usize,
+    j0: usize,
+    j1: usize,
+    k: usize,
+    a: &[f32],
+    b: &[f32],
+    c: &mut COut,
+) {
+    match active_tier() {
+        Tier::Scalar => gemm::kernel_dot(i0, i1, j0, j1, k, a, b, c),
+        #[cfg(all(feature = "simd", target_arch = "x86_64"))]
+        // SAFETY: Tier::Avx2 implies avx2+fma was detected (see above).
+        Tier::Avx2 => unsafe { avx2::dot(i0, i1, j0, j1, k, a, b, c) },
+        #[cfg(all(feature = "simd", target_arch = "aarch64"))]
+        // SAFETY: Tier::Neon implies NEON was detected (see above).
+        Tier::Neon => unsafe { neon::dot(i0, i1, j0, j1, k, a, b, c) },
+        #[allow(unreachable_patterns)] // covers the cfg'd-out tiers
+        _ => gemm::kernel_dot(i0, i1, j0, j1, k, a, b, c),
+    }
+}
+
+/// `C += Aᵀ·Bᵀ` over rows `[i0, i1)` × columns `[j0, j1)` in the
+/// active tier (see [`gemm::kernel_both_t`] for the contract).
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn both_t(
+    i0: usize,
+    i1: usize,
+    j0: usize,
+    j1: usize,
+    m: usize,
+    k: usize,
+    a: &[f32],
+    b: &[f32],
+    c: &mut COut,
+) {
+    match active_tier() {
+        Tier::Scalar => gemm::kernel_both_t(i0, i1, j0, j1, m, k, a, b, c),
+        #[cfg(all(feature = "simd", target_arch = "x86_64"))]
+        // SAFETY: Tier::Avx2 implies avx2+fma was detected (see above).
+        Tier::Avx2 => unsafe { avx2::both_t(i0, i1, j0, j1, m, k, a, b, c) },
+        #[cfg(all(feature = "simd", target_arch = "aarch64"))]
+        // SAFETY: Tier::Neon implies NEON was detected (see above).
+        Tier::Neon => unsafe { neon::both_t(i0, i1, j0, j1, m, k, a, b, c) },
+        #[allow(unreachable_patterns)] // covers the cfg'd-out tiers
+        _ => gemm::kernel_both_t(i0, i1, j0, j1, m, k, a, b, c),
+    }
+}
+
+/// Fused `C = act(A·B + bias)` over rows `[i0, i1)` × columns
+/// `[j0, j1)` in the active tier (see [`gemm::kernel_bias_act`]).
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn bias_act(
+    i0: usize,
+    i1: usize,
+    j0: usize,
+    j1: usize,
+    n: usize,
+    k: usize,
+    a: &[f32],
+    b: &[f32],
+    bias: &[f32],
+    relu: bool,
+    c: &mut COut,
+) {
+    match active_tier() {
+        Tier::Scalar => gemm::kernel_bias_act(i0, i1, j0, j1, n, k, a, b, bias, relu, c),
+        #[cfg(all(feature = "simd", target_arch = "x86_64"))]
+        // SAFETY: Tier::Avx2 implies avx2+fma was detected (see above).
+        Tier::Avx2 => unsafe { avx2::bias_act(i0, i1, j0, j1, n, k, a, b, bias, relu, c) },
+        #[cfg(all(feature = "simd", target_arch = "aarch64"))]
+        // SAFETY: Tier::Neon implies NEON was detected (see above).
+        Tier::Neon => unsafe { neon::bias_act(i0, i1, j0, j1, n, k, a, b, bias, relu, c) },
+        #[allow(unreachable_patterns)] // covers the cfg'd-out tiers
+        _ => gemm::kernel_bias_act(i0, i1, j0, j1, n, k, a, b, bias, relu, c),
+    }
+}
+
+/// AVX2 + FMA kernels. Same loop *structure* as the scalar kernels
+/// (MR-row blocks × NR-column blocks, column tail, then row tail) so
+/// the panel-boundary reasoning carries over verbatim; the NR block is
+/// two 8-lane registers per row and the k-loop contracts with
+/// `_mm256_fmadd_ps`. Every fn is `#[target_feature(enable = "avx2",
+/// enable = "fma")] unsafe`: callers (the dispatch wrappers above)
+/// guarantee the CPU reports both features before any call exists.
+/// Indexing stays within the same `a.len() == m·k` / `b.len() == k·n`
+/// bounds the scalar kernels assert via slice indexing; here the hot
+/// loops use unchecked loads, justified by the entry-point size
+/// asserts in `gemm.rs` (Job invariant 2).
+#[cfg(all(feature = "simd", target_arch = "x86_64"))]
+mod avx2 {
+    use crate::linalg::gemm::{COut, MR, NR};
+    use core::arch::x86_64::*;
+
+    /// Broadcast-form `C += op(A)·B`; see `gemm::kernel_broadcast`.
+    ///
+    /// # Safety
+    /// CPU must support avx2+fma; slice lengths per Job invariant 2.
+    #[allow(clippy::too_many_arguments)]
+    #[target_feature(enable = "avx2", enable = "fma")]
+    pub(super) unsafe fn broadcast(
+        i0: usize,
+        i1: usize,
+        j0: usize,
+        j1: usize,
+        n: usize,
+        k: usize,
+        strides: [usize; 2],
+        a: &[f32],
+        b: &[f32],
+        c: &mut COut,
+    ) {
+        let [ars, acs] = strides;
+        let bp = b.as_ptr();
+        let mut i = i0;
+        while i + MR <= i1 {
+            let mut j = j0;
+            while j + NR <= j1 {
+                let mut acc = [[_mm256_setzero_ps(); 2]; MR];
+                for p in 0..k {
+                    let b0 = _mm256_loadu_ps(bp.add(p * n + j));
+                    let b1 = _mm256_loadu_ps(bp.add(p * n + j + 8));
+                    for (r, accr) in acc.iter_mut().enumerate() {
+                        let arp = _mm256_set1_ps(*a.get_unchecked((i + r) * ars + p * acs));
+                        accr[0] = _mm256_fmadd_ps(arp, b0, accr[0]);
+                        accr[1] = _mm256_fmadd_ps(arp, b1, accr[1]);
+                    }
+                }
+                for (r, accr) in acc.iter().enumerate() {
+                    let cp = c.row(i + r, j, j + NR).as_mut_ptr();
+                    _mm256_storeu_ps(cp, _mm256_add_ps(_mm256_loadu_ps(cp), accr[0]));
+                    let cp8 = cp.add(8);
+                    _mm256_storeu_ps(cp8, _mm256_add_ps(_mm256_loadu_ps(cp8), accr[1]));
+                }
+                j += NR;
+            }
+            if j < j1 {
+                for r in 0..MR {
+                    row_accum(i + r, j, j1, n, k, ars, acs, a, b, c);
+                }
+            }
+            i += MR;
+        }
+        while i < i1 {
+            row_accum(i, j0, j1, n, k, ars, acs, a, b, c);
+            i += 1;
+        }
+    }
+
+    /// One output row of the broadcast form, columns `[j0, j1)`:
+    /// 8-lane blocks then a scalar tail. Shared by the column tail of
+    /// the MR block and the sub-MR row tail.
+    ///
+    /// # Safety
+    /// Same contract as [`broadcast`].
+    #[allow(clippy::too_many_arguments)]
+    #[target_feature(enable = "avx2", enable = "fma")]
+    unsafe fn row_accum(
+        i: usize,
+        j0: usize,
+        j1: usize,
+        n: usize,
+        k: usize,
+        ars: usize,
+        acs: usize,
+        a: &[f32],
+        b: &[f32],
+        c: &mut COut,
+    ) {
+        let bp = b.as_ptr();
+        let crow = c.row(i, j0, j1);
+        let w = j1 - j0;
+        let mut x = 0;
+        while x + 8 <= w {
+            let mut acc = _mm256_setzero_ps();
+            for p in 0..k {
+                let arp = _mm256_set1_ps(*a.get_unchecked(i * ars + p * acs));
+                acc = _mm256_fmadd_ps(arp, _mm256_loadu_ps(bp.add(p * n + j0 + x)), acc);
+            }
+            let cx = crow.as_mut_ptr().add(x);
+            _mm256_storeu_ps(cx, _mm256_add_ps(_mm256_loadu_ps(cx), acc));
+            x += 8;
+        }
+        while x < w {
+            let mut s = 0.0f32;
+            for p in 0..k {
+                s += *a.get_unchecked(i * ars + p * acs) * *b.get_unchecked(p * n + j0 + x);
+            }
+            *crow.get_unchecked_mut(x) += s;
+            x += 1;
+        }
+    }
+
+    /// Fused `C = act(A·B + bias)`; see `gemm::kernel_bias_act`.
+    ///
+    /// # Safety
+    /// Same contract as [`broadcast`]; `bias.len() == n`.
+    #[allow(clippy::too_many_arguments)]
+    #[target_feature(enable = "avx2", enable = "fma")]
+    pub(super) unsafe fn bias_act(
+        i0: usize,
+        i1: usize,
+        j0: usize,
+        j1: usize,
+        n: usize,
+        k: usize,
+        a: &[f32],
+        b: &[f32],
+        bias: &[f32],
+        relu: bool,
+        c: &mut COut,
+    ) {
+        let bp = b.as_ptr();
+        let mut i = i0;
+        while i + MR <= i1 {
+            let mut j = j0;
+            while j + NR <= j1 {
+                let bias0 = _mm256_loadu_ps(bias.as_ptr().add(j));
+                let bias1 = _mm256_loadu_ps(bias.as_ptr().add(j + 8));
+                let mut acc = [[bias0, bias1]; MR];
+                for p in 0..k {
+                    let b0 = _mm256_loadu_ps(bp.add(p * n + j));
+                    let b1 = _mm256_loadu_ps(bp.add(p * n + j + 8));
+                    for (r, accr) in acc.iter_mut().enumerate() {
+                        let arp = _mm256_set1_ps(*a.get_unchecked((i + r) * k + p));
+                        accr[0] = _mm256_fmadd_ps(arp, b0, accr[0]);
+                        accr[1] = _mm256_fmadd_ps(arp, b1, accr[1]);
+                    }
+                }
+                let zero = _mm256_setzero_ps();
+                for (r, accr) in acc.iter().enumerate() {
+                    let (mut v0, mut v1) = (accr[0], accr[1]);
+                    if relu {
+                        v0 = _mm256_max_ps(v0, zero);
+                        v1 = _mm256_max_ps(v1, zero);
+                    }
+                    let cp = c.row(i + r, j, j + NR).as_mut_ptr();
+                    _mm256_storeu_ps(cp, v0);
+                    _mm256_storeu_ps(cp.add(8), v1);
+                }
+                j += NR;
+            }
+            if j < j1 {
+                for r in 0..MR {
+                    row_bias_act(i + r, j, j1, n, k, a, b, bias, relu, c);
+                }
+            }
+            i += MR;
+        }
+        while i < i1 {
+            row_bias_act(i, j0, j1, n, k, a, b, bias, relu, c);
+            i += 1;
+        }
+    }
+
+    /// One output row of the fused form, columns `[j0, j1)`.
+    ///
+    /// # Safety
+    /// Same contract as [`bias_act`].
+    #[allow(clippy::too_many_arguments)]
+    #[target_feature(enable = "avx2", enable = "fma")]
+    unsafe fn row_bias_act(
+        i: usize,
+        j0: usize,
+        j1: usize,
+        n: usize,
+        k: usize,
+        a: &[f32],
+        b: &[f32],
+        bias: &[f32],
+        relu: bool,
+        c: &mut COut,
+    ) {
+        let bp = b.as_ptr();
+        let crow = c.row(i, j0, j1);
+        let w = j1 - j0;
+        let mut x = 0;
+        while x + 8 <= w {
+            let mut acc = _mm256_loadu_ps(bias.as_ptr().add(j0 + x));
+            for p in 0..k {
+                let arp = _mm256_set1_ps(*a.get_unchecked(i * k + p));
+                acc = _mm256_fmadd_ps(arp, _mm256_loadu_ps(bp.add(p * n + j0 + x)), acc);
+            }
+            if relu {
+                acc = _mm256_max_ps(acc, _mm256_setzero_ps());
+            }
+            _mm256_storeu_ps(crow.as_mut_ptr().add(x), acc);
+            x += 8;
+        }
+        while x < w {
+            let mut s = *bias.get_unchecked(j0 + x);
+            for p in 0..k {
+                s += *a.get_unchecked(i * k + p) * *b.get_unchecked(p * n + j0 + x);
+            }
+            *crow.get_unchecked_mut(x) = if relu { s.max(0.0) } else { s };
+            x += 1;
+        }
+    }
+
+    /// Dot-form `C += A·Bᵀ`; see `gemm::kernel_dot`.
+    ///
+    /// # Safety
+    /// Same contract as [`broadcast`] with `b.len() == n·k`.
+    #[allow(clippy::too_many_arguments)]
+    #[target_feature(enable = "avx2", enable = "fma")]
+    pub(super) unsafe fn dot(
+        i0: usize,
+        i1: usize,
+        j0: usize,
+        j1: usize,
+        k: usize,
+        a: &[f32],
+        b: &[f32],
+        c: &mut COut,
+    ) {
+        for i in i0..i1 {
+            let ap = a.as_ptr().add(i * k);
+            let crow = c.row(i, j0, j1);
+            for (j, cv) in (j0..j1).zip(crow.iter_mut()) {
+                *cv += dot1(ap, b.as_ptr().add(j * k), k);
+            }
+        }
+    }
+
+    /// `C += Aᵀ·Bᵀ`; see `gemm::kernel_both_t`. The strided `Aᵀ`
+    /// column is staged through a fixed stack buffer (64 elements — no
+    /// allocation) so the k-loop becomes contiguous [`dot1`] calls.
+    ///
+    /// # Safety
+    /// Same contract as [`broadcast`] with `a.len() == k·m`,
+    /// `b.len() == n·k`.
+    #[allow(clippy::too_many_arguments)]
+    #[target_feature(enable = "avx2", enable = "fma")]
+    pub(super) unsafe fn both_t(
+        i0: usize,
+        i1: usize,
+        j0: usize,
+        j1: usize,
+        m: usize,
+        k: usize,
+        a: &[f32],
+        b: &[f32],
+        c: &mut COut,
+    ) {
+        let mut buf = [0.0f32; 64];
+        for i in i0..i1 {
+            let crow = c.row(i, j0, j1);
+            let mut p0 = 0;
+            while p0 < k {
+                let pc = (k - p0).min(buf.len());
+                for (t, slot) in buf[..pc].iter_mut().enumerate() {
+                    *slot = *a.get_unchecked((p0 + t) * m + i);
+                }
+                for (j, cv) in (j0..j1).zip(crow.iter_mut()) {
+                    *cv += dot1(buf.as_ptr(), b.as_ptr().add(j * k + p0), pc);
+                }
+                p0 += pc;
+            }
+        }
+    }
+
+    /// Two-accumulator FMA dot product of length `k` at raw pointers.
+    ///
+    /// # Safety
+    /// `x` and `y` must be readable for `k` f32s; avx2+fma required.
+    #[target_feature(enable = "avx2", enable = "fma")]
+    unsafe fn dot1(x: *const f32, y: *const f32, k: usize) -> f32 {
+        let mut acc0 = _mm256_setzero_ps();
+        let mut acc1 = _mm256_setzero_ps();
+        let mut p = 0;
+        while p + 16 <= k {
+            acc0 = _mm256_fmadd_ps(_mm256_loadu_ps(x.add(p)), _mm256_loadu_ps(y.add(p)), acc0);
+            acc1 = _mm256_fmadd_ps(
+                _mm256_loadu_ps(x.add(p + 8)),
+                _mm256_loadu_ps(y.add(p + 8)),
+                acc1,
+            );
+            p += 16;
+        }
+        if p + 8 <= k {
+            acc0 = _mm256_fmadd_ps(_mm256_loadu_ps(x.add(p)), _mm256_loadu_ps(y.add(p)), acc0);
+            p += 8;
+        }
+        let mut s = hsum8(_mm256_add_ps(acc0, acc1));
+        while p < k {
+            s += *x.add(p) * *y.add(p);
+            p += 1;
+        }
+        s
+    }
+
+    /// Horizontal sum of 8 f32 lanes.
+    ///
+    /// # Safety
+    /// avx2 required.
+    #[target_feature(enable = "avx2")]
+    unsafe fn hsum8(v: __m256) -> f32 {
+        let q = _mm_add_ps(_mm256_castps256_ps128(v), _mm256_extractf128_ps::<1>(v));
+        let h = _mm_add_ps(q, _mm_movehl_ps(q, q));
+        let s = _mm_add_ss(h, _mm_shuffle_ps::<0x55>(h, h));
+        _mm_cvtss_f32(s)
+    }
+}
+
+/// NEON kernels (aarch64). Mirrors the AVX2 module with 4-lane
+/// `float32x4_t` registers — an NR block is four of them per row —
+/// and `vfmaq_f32` contraction. NEON is baseline on aarch64, but the
+/// fns stay `#[target_feature]`-gated and runtime-detected for
+/// uniformity with the x86 path.
+#[cfg(all(feature = "simd", target_arch = "aarch64"))]
+mod neon {
+    use crate::linalg::gemm::{COut, MR, NR};
+    use core::arch::aarch64::*;
+
+    /// Broadcast-form `C += op(A)·B`; see `gemm::kernel_broadcast`.
+    ///
+    /// # Safety
+    /// CPU must support neon; slice lengths per Job invariant 2.
+    #[allow(clippy::too_many_arguments)]
+    #[target_feature(enable = "neon")]
+    pub(super) unsafe fn broadcast(
+        i0: usize,
+        i1: usize,
+        j0: usize,
+        j1: usize,
+        n: usize,
+        k: usize,
+        strides: [usize; 2],
+        a: &[f32],
+        b: &[f32],
+        c: &mut COut,
+    ) {
+        let [ars, acs] = strides;
+        let bp = b.as_ptr();
+        let mut i = i0;
+        while i + MR <= i1 {
+            let mut j = j0;
+            while j + NR <= j1 {
+                let mut acc = [[vdupq_n_f32(0.0); 4]; MR];
+                for p in 0..k {
+                    let bv = [
+                        vld1q_f32(bp.add(p * n + j)),
+                        vld1q_f32(bp.add(p * n + j + 4)),
+                        vld1q_f32(bp.add(p * n + j + 8)),
+                        vld1q_f32(bp.add(p * n + j + 12)),
+                    ];
+                    for (r, accr) in acc.iter_mut().enumerate() {
+                        let arp = vdupq_n_f32(*a.get_unchecked((i + r) * ars + p * acs));
+                        for (av, &b4) in accr.iter_mut().zip(&bv) {
+                            *av = vfmaq_f32(*av, arp, b4);
+                        }
+                    }
+                }
+                for (r, accr) in acc.iter().enumerate() {
+                    let cp = c.row(i + r, j, j + NR).as_mut_ptr();
+                    for (q, &av) in accr.iter().enumerate() {
+                        let cq = cp.add(q * 4);
+                        vst1q_f32(cq, vaddq_f32(vld1q_f32(cq), av));
+                    }
+                }
+                j += NR;
+            }
+            if j < j1 {
+                for r in 0..MR {
+                    row_accum(i + r, j, j1, n, k, ars, acs, a, b, c);
+                }
+            }
+            i += MR;
+        }
+        while i < i1 {
+            row_accum(i, j0, j1, n, k, ars, acs, a, b, c);
+            i += 1;
+        }
+    }
+
+    /// One output row of the broadcast form, columns `[j0, j1)`.
+    ///
+    /// # Safety
+    /// Same contract as [`broadcast`].
+    #[allow(clippy::too_many_arguments)]
+    #[target_feature(enable = "neon")]
+    unsafe fn row_accum(
+        i: usize,
+        j0: usize,
+        j1: usize,
+        n: usize,
+        k: usize,
+        ars: usize,
+        acs: usize,
+        a: &[f32],
+        b: &[f32],
+        c: &mut COut,
+    ) {
+        let bp = b.as_ptr();
+        let crow = c.row(i, j0, j1);
+        let w = j1 - j0;
+        let mut x = 0;
+        while x + 4 <= w {
+            let mut acc = vdupq_n_f32(0.0);
+            for p in 0..k {
+                let arp = vdupq_n_f32(*a.get_unchecked(i * ars + p * acs));
+                acc = vfmaq_f32(acc, arp, vld1q_f32(bp.add(p * n + j0 + x)));
+            }
+            let cx = crow.as_mut_ptr().add(x);
+            vst1q_f32(cx, vaddq_f32(vld1q_f32(cx), acc));
+            x += 4;
+        }
+        while x < w {
+            let mut s = 0.0f32;
+            for p in 0..k {
+                s += *a.get_unchecked(i * ars + p * acs) * *b.get_unchecked(p * n + j0 + x);
+            }
+            *crow.get_unchecked_mut(x) += s;
+            x += 1;
+        }
+    }
+
+    /// Fused `C = act(A·B + bias)`; see `gemm::kernel_bias_act`.
+    ///
+    /// # Safety
+    /// Same contract as [`broadcast`]; `bias.len() == n`.
+    #[allow(clippy::too_many_arguments)]
+    #[target_feature(enable = "neon")]
+    pub(super) unsafe fn bias_act(
+        i0: usize,
+        i1: usize,
+        j0: usize,
+        j1: usize,
+        n: usize,
+        k: usize,
+        a: &[f32],
+        b: &[f32],
+        bias: &[f32],
+        relu: bool,
+        c: &mut COut,
+    ) {
+        let bp = b.as_ptr();
+        let mut i = i0;
+        while i + MR <= i1 {
+            let mut j = j0;
+            while j + NR <= j1 {
+                let binit = [
+                    vld1q_f32(bias.as_ptr().add(j)),
+                    vld1q_f32(bias.as_ptr().add(j + 4)),
+                    vld1q_f32(bias.as_ptr().add(j + 8)),
+                    vld1q_f32(bias.as_ptr().add(j + 12)),
+                ];
+                let mut acc = [binit; MR];
+                for p in 0..k {
+                    let bv = [
+                        vld1q_f32(bp.add(p * n + j)),
+                        vld1q_f32(bp.add(p * n + j + 4)),
+                        vld1q_f32(bp.add(p * n + j + 8)),
+                        vld1q_f32(bp.add(p * n + j + 12)),
+                    ];
+                    for (r, accr) in acc.iter_mut().enumerate() {
+                        let arp = vdupq_n_f32(*a.get_unchecked((i + r) * k + p));
+                        for (av, &b4) in accr.iter_mut().zip(&bv) {
+                            *av = vfmaq_f32(*av, arp, b4);
+                        }
+                    }
+                }
+                let zero = vdupq_n_f32(0.0);
+                for (r, accr) in acc.iter().enumerate() {
+                    let cp = c.row(i + r, j, j + NR).as_mut_ptr();
+                    for (q, &av) in accr.iter().enumerate() {
+                        let v = if relu { vmaxq_f32(av, zero) } else { av };
+                        vst1q_f32(cp.add(q * 4), v);
+                    }
+                }
+                j += NR;
+            }
+            if j < j1 {
+                for r in 0..MR {
+                    row_bias_act(i + r, j, j1, n, k, a, b, bias, relu, c);
+                }
+            }
+            i += MR;
+        }
+        while i < i1 {
+            row_bias_act(i, j0, j1, n, k, a, b, bias, relu, c);
+            i += 1;
+        }
+    }
+
+    /// One output row of the fused form, columns `[j0, j1)`.
+    ///
+    /// # Safety
+    /// Same contract as [`bias_act`].
+    #[allow(clippy::too_many_arguments)]
+    #[target_feature(enable = "neon")]
+    unsafe fn row_bias_act(
+        i: usize,
+        j0: usize,
+        j1: usize,
+        n: usize,
+        k: usize,
+        a: &[f32],
+        b: &[f32],
+        bias: &[f32],
+        relu: bool,
+        c: &mut COut,
+    ) {
+        let bp = b.as_ptr();
+        let crow = c.row(i, j0, j1);
+        let w = j1 - j0;
+        let mut x = 0;
+        while x + 4 <= w {
+            let mut acc = vld1q_f32(bias.as_ptr().add(j0 + x));
+            for p in 0..k {
+                let arp = vdupq_n_f32(*a.get_unchecked(i * k + p));
+                acc = vfmaq_f32(acc, arp, vld1q_f32(bp.add(p * n + j0 + x)));
+            }
+            if relu {
+                acc = vmaxq_f32(acc, vdupq_n_f32(0.0));
+            }
+            vst1q_f32(crow.as_mut_ptr().add(x), acc);
+            x += 4;
+        }
+        while x < w {
+            let mut s = *bias.get_unchecked(j0 + x);
+            for p in 0..k {
+                s += *a.get_unchecked(i * k + p) * *b.get_unchecked(p * n + j0 + x);
+            }
+            *crow.get_unchecked_mut(x) = if relu { s.max(0.0) } else { s };
+            x += 1;
+        }
+    }
+
+    /// Dot-form `C += A·Bᵀ`; see `gemm::kernel_dot`.
+    ///
+    /// # Safety
+    /// Same contract as [`broadcast`] with `b.len() == n·k`.
+    #[allow(clippy::too_many_arguments)]
+    #[target_feature(enable = "neon")]
+    pub(super) unsafe fn dot(
+        i0: usize,
+        i1: usize,
+        j0: usize,
+        j1: usize,
+        k: usize,
+        a: &[f32],
+        b: &[f32],
+        c: &mut COut,
+    ) {
+        for i in i0..i1 {
+            let ap = a.as_ptr().add(i * k);
+            let crow = c.row(i, j0, j1);
+            for (j, cv) in (j0..j1).zip(crow.iter_mut()) {
+                *cv += dot1(ap, b.as_ptr().add(j * k), k);
+            }
+        }
+    }
+
+    /// `C += Aᵀ·Bᵀ`; see `gemm::kernel_both_t` and the AVX2 twin for
+    /// the stack-staging rationale.
+    ///
+    /// # Safety
+    /// Same contract as [`broadcast`] with `a.len() == k·m`,
+    /// `b.len() == n·k`.
+    #[allow(clippy::too_many_arguments)]
+    #[target_feature(enable = "neon")]
+    pub(super) unsafe fn both_t(
+        i0: usize,
+        i1: usize,
+        j0: usize,
+        j1: usize,
+        m: usize,
+        k: usize,
+        a: &[f32],
+        b: &[f32],
+        c: &mut COut,
+    ) {
+        let mut buf = [0.0f32; 64];
+        for i in i0..i1 {
+            let crow = c.row(i, j0, j1);
+            let mut p0 = 0;
+            while p0 < k {
+                let pc = (k - p0).min(buf.len());
+                for (t, slot) in buf[..pc].iter_mut().enumerate() {
+                    *slot = *a.get_unchecked((p0 + t) * m + i);
+                }
+                for (j, cv) in (j0..j1).zip(crow.iter_mut()) {
+                    *cv += dot1(buf.as_ptr(), b.as_ptr().add(j * k + p0), pc);
+                }
+                p0 += pc;
+            }
+        }
+    }
+
+    /// Two-accumulator FMA dot product of length `k` at raw pointers.
+    ///
+    /// # Safety
+    /// `x` and `y` must be readable for `k` f32s; neon required.
+    #[target_feature(enable = "neon")]
+    unsafe fn dot1(x: *const f32, y: *const f32, k: usize) -> f32 {
+        let mut acc0 = vdupq_n_f32(0.0);
+        let mut acc1 = vdupq_n_f32(0.0);
+        let mut p = 0;
+        while p + 8 <= k {
+            acc0 = vfmaq_f32(acc0, vld1q_f32(x.add(p)), vld1q_f32(y.add(p)));
+            acc1 = vfmaq_f32(acc1, vld1q_f32(x.add(p + 4)), vld1q_f32(y.add(p + 4)));
+            p += 8;
+        }
+        if p + 4 <= k {
+            acc0 = vfmaq_f32(acc0, vld1q_f32(x.add(p)), vld1q_f32(y.add(p)));
+            p += 4;
+        }
+        let mut s = vaddvq_f32(vaddq_f32(acc0, acc1));
+        while p < k {
+            s += *x.add(p) * *y.add(p);
+            p += 1;
+        }
+        s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn request_names_are_validated() {
+        for good in ["auto", "avx2", "neon", "scalar"] {
+            assert!(is_known_request(good), "{good} must parse");
+        }
+        for bad in ["", "AVX2", "sse", "auto ", "simd"] {
+            assert!(!is_known_request(bad), "'{bad}' must be rejected");
+        }
+    }
+
+    #[test]
+    fn resolve_rejects_unknown_and_accepts_scalar() {
+        assert!(resolve("bogus").is_err());
+        let msg = format!("{}", resolve("bogus").unwrap_err());
+        assert!(msg.contains("bogus"), "error must name the value: {msg}");
+        assert_eq!(resolve("scalar").unwrap(), Tier::Scalar);
+        // `auto` always resolves — to the best available tier.
+        let best = resolve("auto").unwrap();
+        assert_eq!(best, detect_best());
+    }
+
+    #[test]
+    fn unavailable_tiers_error_with_a_reason() {
+        // Whichever of avx2/neon this build+host lacks must produce a
+        // typed error naming why (feature gate, arch, Miri, or CPU).
+        for tier in ["avx2", "neon"] {
+            match resolve(tier) {
+                Ok(t) => assert_eq!(t.name(), tier, "resolve must be faithful"),
+                Err(e) => {
+                    let msg = format!("{e}");
+                    assert!(msg.contains(tier), "error must name the tier: {msg}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn tier_names_round_trip() {
+        for t in [Tier::Scalar, Tier::Avx2, Tier::Neon] {
+            assert_eq!(tier_from_code(tier_code(t)), t);
+            assert!(is_known_request(t.name()));
+        }
+        assert!(!cpu_features().is_empty());
+    }
+
+    #[test]
+    fn detection_is_scalar_when_the_feature_is_off() {
+        if !cfg!(feature = "simd") || cfg!(miri) {
+            assert_eq!(detect_best(), Tier::Scalar);
+            assert!(resolve("avx2").is_err() && resolve("neon").is_err());
+        }
+    }
+}

@@ -116,6 +116,12 @@ fn cmd_train(args: &Args) -> Result<()> {
     cfg.apply_args(args)?;
     cfg.validate()?;
 
+    // Kernel tier: resolved once, up front, before any GEMM dispatch or
+    // speedup calibration — an unavailable tier (feature gate, arch,
+    // CPU) is a clean CLI error naming the reason, never a silent
+    // fallback to scalar.
+    let tier = elastic_train::linalg::simd::configure(&cfg.simd)?;
+
     let data = elastic_train::figures::ch4::sweep_data(cfg.seed + 1);
     let mcfg = elastic_train::figures::ch4::sweep_mlp();
     let ccfg = elastic_train::figures::ch4::sweep_conv();
@@ -166,10 +172,11 @@ fn cmd_train(args: &Args) -> Result<()> {
             };
         }
         println!(
-            "train: {} p={} threads={} τ={} η={} horizon={}s ({} cost model, {} sharding, {} model, {} backend, {} topology)",
+            "train: {} p={} threads={} simd={} τ={} η={} horizon={}s ({} cost model, {} sharding, {} model, {} backend, {} topology)",
             m.name(),
             cfg.p,
             threads,
+            tier.name(),
             cfg.tau,
             cfg.eta,
             cfg.horizon,
@@ -201,6 +208,10 @@ fn cmd_train(args: &Args) -> Result<()> {
             };
             let mut opts = ProcessOpts::from_args(args)?;
             opts.threads = threads;
+            // Forward the *resolved* tier, not the raw request: every
+            // worker process then computes on exactly the tier this
+            // master resolved (auto on a mixed fleet could diverge).
+            opts.simd = tier.name().to_string();
             run_process(&spec, cfg.p, &dc, &opts)?
         } else {
             match model {
@@ -231,8 +242,9 @@ fn cmd_train(args: &Args) -> Result<()> {
             );
         }
         println!(
-            "train: {} (sequential) η={} horizon={}s ({} model)",
+            "train: {} (sequential) simd={} η={} horizon={}s ({} model)",
             m.name(),
+            tier.name(),
             cfg.eta,
             cfg.horizon,
             model.name()

@@ -141,4 +141,34 @@ fn grad_batch_steady_state_does_not_allocate() {
         after - before
     );
     elastic_train::linalg::pool::configure_threads(1);
+
+    // The SIMD dispatch path holds the same contract: tier selection is
+    // a relaxed atomic load per span and the intrinsic kernels stage
+    // everything in registers or fixed stack buffers. (Compiled only
+    // with `--features simd`; runs on whatever tier the host detects —
+    // on a scalar-only host this re-checks the scalar path, which is
+    // still the dispatch-table code shape being gated here.)
+    #[cfg(feature = "simd")]
+    {
+        let tier = elastic_train::linalg::simd::detect_best();
+        elastic_train::linalg::simd::configure(tier.name()).unwrap();
+        for _ in 0..3 {
+            mlp.batch_grad(&theta, &batch, &mut grad);
+            conv.batch_grad(&ctheta, &batch, &mut cgrad);
+        }
+        let before = ALLOC_CALLS.load(Ordering::SeqCst);
+        for _ in 0..10 {
+            sink += mlp.batch_grad(&theta, &batch, &mut grad);
+            sink += conv.batch_grad(&ctheta, &batch, &mut cgrad);
+        }
+        let after = ALLOC_CALLS.load(Ordering::SeqCst);
+        assert!(sink.is_finite());
+        assert_eq!(
+            after - before,
+            0,
+            "SIMD-tier ({}) grad_batch allocated {} times across 10 steady-state calls",
+            tier.name(),
+            after - before
+        );
+    }
 }

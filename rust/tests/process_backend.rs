@@ -129,6 +129,7 @@ fn process_backend_runs_over_unix_sockets() {
     let opts = ProcessOpts {
         addr: ProcessOpts::unix_addr().unwrap(),
         exe: Some(repro_exe()),
+        ..ProcessOpts::default()
     };
     let r = run_process(&quad_spec(n), p, &cfg(n, method, 0.1, steps), &opts).unwrap();
     assert!(!r.diverged);

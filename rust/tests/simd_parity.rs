@@ -1,0 +1,150 @@
+//! SIMD kernel-tier gates (compiled only with `--features simd`):
+//!
+//! 1. **Parity**: every kernel (all four `sgemm` flag combinations plus
+//!    the fused bias+act epilogue) agrees with the scalar tier to
+//!    ≤ 1e-5 relative over a shape grid covering the blocked body, the
+//!    MR/NR tails, single-tile and empty panels, and the wide-n
+//!    column-split shape. Bitwise equality is deliberately NOT required
+//!    across tiers — FMA contracts the multiply-add rounding step.
+//! 2. **Bitwise within the tier**: threaded SIMD ≡ serial SIMD, the
+//!    same invariant the scalar tier pins in `linalg::gemm`'s tests.
+//! 3. **Strict knobs**: unknown and unavailable tier requests are typed
+//!    errors, never silent fallbacks.
+//!
+//! Everything runs inside ONE `#[test]`: `simd::configure` flips a
+//! process-global tier, so concurrently running tests would race on the
+//! numeric results. Keep any future additions inside this function, in
+//! sequence.
+
+use elastic_train::linalg::gemm::{sgemm, sgemm_bias_act};
+use elastic_train::linalg::{pool, simd};
+
+/// Deterministic value spread over ±2 with varied low-order bits; no
+/// RNG so failures reproduce from the (shape, index) alone.
+fn fill(len: usize, salt: u32) -> Vec<f32> {
+    (0..len)
+        .map(|i| {
+            let x = (i as u32).wrapping_mul(2654435761).wrapping_add(salt);
+            (x % 4093) as f32 / 1023.0 - 2.0
+        })
+        .collect()
+}
+
+fn assert_close(got: &[f32], want: &[f32], what: &str) {
+    assert_eq!(got.len(), want.len(), "{what}: length");
+    for (i, (g, w)) in got.iter().zip(want).enumerate() {
+        let tol = 1e-5 * (1.0 + w.abs());
+        assert!(
+            (g - w).abs() <= tol,
+            "{what}: elem {i}: simd {g} vs scalar {w} (tol {tol})"
+        );
+    }
+}
+
+#[test]
+fn simd_tier_parity_and_bitwise_gates() {
+    let tier = simd::detect_best();
+    if tier == simd::Tier::Scalar {
+        // Feature is on but the host offers no SIMD tier (e.g. an
+        // x86_64 CI runner without AVX2). The gates below would only
+        // compare scalar with scalar; skip loudly instead.
+        eprintln!(
+            "simd_parity: skipping — no SIMD tier on this host (cpu: {})",
+            simd::cpu_features()
+        );
+        return;
+    }
+    eprintln!("simd_parity: testing tier {} (cpu: {})", tier.name(), simd::cpu_features());
+
+    // --- strict knobs -----------------------------------------------------
+    let e = simd::configure("sse42").unwrap_err();
+    assert!(format!("{e}").contains("sse42"), "unknown tier must be named: {e}");
+    // Exactly one of avx2/neon can be available on one architecture;
+    // the other must refuse with a reason, not degrade.
+    let other = if tier == simd::Tier::Avx2 { "neon" } else { "avx2" };
+    let e = simd::configure(other).unwrap_err();
+    assert!(format!("{e}").contains(other), "unavailable tier must be named: {e}");
+    assert_eq!(simd::configure("auto").unwrap(), tier, "auto must pick the detected tier");
+
+    // Shape grid: blocked body, NR tail (n % 16), MR tail (m % 4),
+    // both tails, single row/column, k = 0, empty output, and the
+    // 4×4096 wide-n column-split satellite shape.
+    let shapes: &[(usize, usize, usize)] = &[
+        (1, 1, 1),
+        (3, 5, 7),
+        (4, 16, 8),
+        (9, 33, 17),
+        (128, 10, 32),
+        (2, 64, 1),
+        (67, 129, 40),
+        (64, 64, 64),
+        (2, 3, 0),
+        (0, 16, 8),
+        (4, 4096, 32),
+    ];
+
+    for &(m, n, k) in shapes {
+        let a = fill(m * k, 1);
+        let b = fill(k * n, 2);
+        let at = fill(k * m, 3); // k×m storage for the ta=true legs
+        let bt = fill(n * k, 4); // n×k storage for the tb=true legs
+        let bias = fill(n, 5);
+        let seed = fill(m * n, 6);
+
+        pool::configure_threads(1);
+        for (ta, tb) in [(false, false), (true, false), (false, true), (true, true)] {
+            let (aa, bb) = (if ta { &at } else { &a }, if tb { &bt } else { &b });
+            simd::configure("scalar").unwrap();
+            let mut scalar = seed.clone();
+            sgemm(ta, tb, m, n, k, aa, bb, &mut scalar);
+            simd::configure(tier.name()).unwrap();
+            let mut vectored = seed.clone();
+            sgemm(ta, tb, m, n, k, aa, bb, &mut vectored);
+            assert_close(&vectored, &scalar, &format!("sgemm ta={ta} tb={tb} {m}x{n}x{k}"));
+        }
+        for relu in [false, true] {
+            simd::configure("scalar").unwrap();
+            let mut scalar = vec![-1.0f32; m * n];
+            sgemm_bias_act(m, n, k, &a, &b, &bias, relu, &mut scalar);
+            simd::configure(tier.name()).unwrap();
+            let mut vectored = vec![-1.0f32; m * n];
+            sgemm_bias_act(m, n, k, &a, &b, &bias, relu, &mut vectored);
+            assert_close(&vectored, &scalar, &format!("bias_act relu={relu} {m}x{n}x{k}"));
+        }
+    }
+
+    // --- threaded SIMD ≡ serial SIMD, bitwise -----------------------------
+    // Row-split (67 rows) and column-split (4×4096) shapes; panel
+    // starts sit on MR/NR boundaries, so every element runs the same
+    // SIMD code path it would serially.
+    simd::configure(tier.name()).unwrap();
+    for &(m, n, k) in &[(67usize, 129, 40), (4, 4096, 32), (128, 10, 32)] {
+        let a = fill(m * k, 7);
+        let b = fill(k * n, 8);
+        let bias = fill(n, 9);
+        let seed = fill(m * n, 10);
+
+        pool::configure_threads(1);
+        let mut serial = seed.clone();
+        sgemm(false, false, m, n, k, &a, &b, &mut serial);
+        let mut serial_fused = vec![0.0f32; m * n];
+        sgemm_bias_act(m, n, k, &a, &b, &bias, true, &mut serial_fused);
+
+        pool::configure_threads(4);
+        let mut threaded = seed.clone();
+        sgemm(false, false, m, n, k, &a, &b, &mut threaded);
+        let mut threaded_fused = vec![0.0f32; m * n];
+        sgemm_bias_act(m, n, k, &a, &b, &bias, true, &mut threaded_fused);
+
+        assert!(serial == threaded, "{m}x{n}x{k}: threaded SIMD != serial SIMD bitwise");
+        assert!(
+            serial_fused == threaded_fused,
+            "{m}x{n}x{k}: threaded fused SIMD != serial fused SIMD bitwise"
+        );
+    }
+
+    // Leave the process in the detected default state.
+    pool::configure_threads(1);
+    pool::shutdown_local_pool();
+    simd::configure("auto").unwrap();
+}
