@@ -1,0 +1,365 @@
+//! `fuzz_wire` — deterministic, dependency-free fuzzer for the wire
+//! decoder ([`elastic_train::coordinator::wire::recv_frame`]) and the
+//! protocol conformance checker
+//! ([`elastic_train::coordinator::protocol::ProtocolState`]).
+//!
+//! The contract under fuzz: hostile bytes and hostile frame orderings
+//! must ALWAYS produce typed `crate::error::Error`s — never a panic,
+//! and never an allocation sized by an attacker-controlled length
+//! prefix. A counting global allocator enforces the latter on every
+//! iteration; a panic hook names the failing iteration and seed so any
+//! crash is reproducible with `iters=1 seed=<s> skip=<i>`-style
+//! bisection (the whole run is a pure function of `seed=`).
+//!
+//! Mutation classes (picked per iteration from the split RNG):
+//! valid-roundtrip, header bit flips, payload bit flips, truncation,
+//! length-field lies, kind/version/magic swaps, max-`n` claims, and
+//! random protocol walks on both side's state machines.
+//!
+//! The max-`n` class is also CI's mutation-teeth probe: claims above
+//! `MAX_PAYLOAD` must be rejected BY THE CAP (an error naming the
+//! cap), not merely by running out of bytes. A build with the guard
+//! compiled out (`--cfg wire_mutate_no_payload_cap`) still returns
+//! typed errors — but the wrong class — so this fuzzer exits nonzero,
+//! which the CI `fuzz` lane REQUIRES for that build.
+//!
+//! Usage: `fuzz_wire [iters=100000] [seed=1] [--quick] [corpus=DIR]`
+//! (`--quick` caps iterations at 20k for pre-merge lanes; the corpus
+//! under `tests/corpus/wire/` is replayed before the random phase).
+
+use elastic_train::config::Args;
+use elastic_train::coordinator::protocol::{Dir, ProtoState, ProtocolState, TRANSITIONS};
+use elastic_train::coordinator::wire::{
+    recv_frame, send_frame, Frame, FrameKind, WireClock, HEADER_BYTES, MAGIC, MAX_PAYLOAD,
+    READ_CHUNK_BYTES, VERSION,
+};
+use elastic_train::rng::Rng;
+use elastic_train::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::alloc::{GlobalAlloc, Layout, System};
+
+/// Counting allocator: tracks current and peak live bytes so each
+/// iteration can assert its allocation stayed bounded regardless of
+/// what the length prefix claimed.
+struct CountingAlloc;
+
+static CUR: AtomicUsize = AtomicUsize::new(0);
+static PEAK: AtomicUsize = AtomicUsize::new(0);
+
+// SAFETY: defers entirely to `System`; the bookkeeping uses only
+// atomics and cannot affect the returned pointers.
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        let p = System.alloc(layout);
+        if !p.is_null() {
+            let cur = CUR.fetch_add(layout.size(), Ordering::Relaxed) + layout.size();
+            PEAK.fetch_max(cur, Ordering::Relaxed);
+        }
+        p
+    }
+
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        CUR.fetch_sub(layout.size(), Ordering::Relaxed);
+        System.dealloc(ptr, layout);
+    }
+}
+
+#[global_allocator]
+static ALLOC: CountingAlloc = CountingAlloc;
+
+/// Generous per-iteration allocation budget: base frames stay under
+/// 4096 f32s, so a decode may hold the mutated buffer + one read
+/// chunk + the payload with room to spare — while a length-prefix
+/// sized allocation (up to 1 GiB under the cap, 16 GiB at u32::MAX)
+/// blows straight through it.
+const ALLOC_BUDGET: usize = READ_CHUNK_BYTES + (1 << 20);
+
+static ITER: AtomicU64 = AtomicU64::new(0);
+
+fn main() {
+    let args = Args::from_env();
+    let seed = args.get_u64("seed", 1).unwrap_or(1);
+    let mut iters = args.get_u64("iters", 100_000).unwrap_or(100_000);
+    if args.get("quick").is_some() {
+        iters = iters.min(20_000);
+    }
+    let default_corpus =
+        format!("{}/tests/corpus/wire", env!("CARGO_MANIFEST_DIR"));
+    let corpus = args.get_str("corpus", &default_corpus).to_string();
+
+    // Any panic below is a fuzzing FAILURE; name the spot so the run
+    // is reproducible before the process dies with a nonzero status.
+    std::panic::set_hook(Box::new(|info| {
+        eprintln!(
+            "fuzz_wire: PANIC at iteration {} — reproduce with seed= of this run\n{info}",
+            ITER.load(Ordering::Relaxed)
+        );
+    }));
+
+    let mut failures: u64 = 0;
+    let mut report = |what: String, failures: &mut u64| {
+        *failures += 1;
+        if *failures <= 10 {
+            eprintln!("fuzz_wire: FAIL: {what}");
+        }
+    };
+
+    // Phase 1: committed regression corpus.
+    let mut corpus_files = 0usize;
+    match std::fs::read_dir(&corpus) {
+        Err(e) => report(format!("cannot read corpus dir {corpus}: {e}"), &mut failures),
+        Ok(dir) => {
+            let mut paths: Vec<_> = dir.filter_map(|e| e.ok().map(|e| e.path())).collect();
+            paths.sort();
+            for path in paths {
+                if path.extension() != Some(std::ffi::OsStr::new("bin")) {
+                    continue;
+                }
+                corpus_files += 1;
+                let name = path.file_name().unwrap_or_default().to_string_lossy().to_string();
+                let bytes = match std::fs::read(&path) {
+                    Ok(b) => b,
+                    Err(e) => {
+                        report(format!("cannot read corpus file {name}: {e}"), &mut failures);
+                        continue;
+                    }
+                };
+                match replay(&bytes) {
+                    Ok(frames) if name.starts_with("err_") => report(
+                        format!("{name}: expected a typed error, decoded {frames} frames cleanly"),
+                        &mut failures,
+                    ),
+                    Err(e) if name.starts_with("ok_") => {
+                        report(format!("{name}: expected a clean parse, got: {e}"), &mut failures)
+                    }
+                    _ => {}
+                }
+            }
+            if corpus_files < 10 {
+                report(
+                    format!("corpus dir {corpus} has only {corpus_files} .bin files — moved?"),
+                    &mut failures,
+                );
+            }
+        }
+    }
+
+    // Phase 2: deterministic random mutations.
+    let mut root = Rng::new(seed);
+    let mut rng = root.split(0xF0);
+    for i in 0..iters {
+        ITER.store(i, Ordering::Relaxed);
+        let base = base_frame(&mut rng);
+        let mut buf = Vec::new();
+        let mut ck = WireClock::default();
+        if let Err(e) = send_frame(&mut buf, &base, &mut ck) {
+            report(format!("iter {i}: send of a valid frame failed: {e}"), &mut failures);
+            continue;
+        }
+        let before = CUR.load(Ordering::Relaxed);
+        PEAK.store(before, Ordering::Relaxed);
+        if let Some(what) = mutate_and_check(&mut rng, &base, buf) {
+            report(format!("iter {i}: {what}"), &mut failures);
+        }
+        let peak_delta = PEAK.load(Ordering::Relaxed).saturating_sub(before);
+        if peak_delta > ALLOC_BUDGET {
+            report(
+                format!(
+                    "iter {i}: decode allocated {peak_delta} bytes (budget {ALLOC_BUDGET}) — \
+                     a length prefix is being trusted before bytes arrive"
+                ),
+                &mut failures,
+            );
+        }
+    }
+
+    println!(
+        "fuzz_wire: {iters} mutations + {corpus_files} corpus files, seed {seed}: {}",
+        if failures == 0 { "OK".to_string() } else { format!("{failures} FAILURES") }
+    );
+    if failures > 0 {
+        std::process::exit(1);
+    }
+}
+
+/// A plausible in-protocol frame with a random kind / wid / clock and
+/// a payload of up to 4096 f32s.
+fn base_frame(rng: &mut Rng) -> Frame {
+    let kind = FrameKind::ALL[rng.below(FrameKind::ALL.len())];
+    let n = match rng.below(4) {
+        0 => 0,
+        1 => rng.below(8),
+        2 => rng.below(256),
+        _ => rng.below(4096),
+    };
+    let mut payload = vec![0f32; n];
+    for x in payload.iter_mut() {
+        *x = f32::from_bits(rng.next_u64() as u32);
+    }
+    Frame::new(kind, rng.next_u64() as u32, rng.next_u64(), payload)
+}
+
+/// Decode a full byte stream frame-by-frame, driving the master-side
+/// checker (with its own Init/Center sends simulated) — the corpus
+/// replay contract. Returns the number of frames on a clean parse.
+fn replay(bytes: &[u8]) -> Result<usize, elastic_train::error::Error> {
+    let mut slice = bytes;
+    let mut ck = WireClock::default();
+    let mut proto = ProtocolState::master();
+    let mut frames = 0usize;
+    while !slice.is_empty() {
+        let f = recv_frame(&mut slice, &mut ck)?;
+        proto.advance(Dir::Recv, f.kind)?;
+        frames += 1;
+        // Simulate the master's own turn so worker-originated streams
+        // can drive the whole table.
+        match proto.state() {
+            ProtoState::SendInit => proto.advance(Dir::Send, FrameKind::Init)?,
+            ProtoState::Reply => proto.advance(Dir::Send, FrameKind::Center)?,
+            _ => {}
+        }
+    }
+    Ok(frames)
+}
+
+/// Run one mutation class; `Some(description)` on contract violation.
+fn mutate_and_check(rng: &mut Rng, base: &Frame, mut buf: Vec<u8>) -> Option<String> {
+    let mut ck = WireClock::default();
+    match rng.below(8) {
+        // Valid bytes decode to the identical frame.
+        0 => match recv_frame(&mut buf.as_slice(), &mut ck) {
+            Ok(f) if f == *base => None,
+            Ok(f) => Some(format!("valid {:?} frame decoded unequal ({:?})", base.kind, f.kind)),
+            Err(e) => Some(format!("valid {:?} frame rejected: {e}", base.kind)),
+        },
+        // Header bit flip: typed result either way, never a panic.
+        1 => {
+            let bit = rng.below(HEADER_BYTES * 8);
+            buf[bit / 8] ^= 1 << (bit % 8);
+            let _ = recv_frame(&mut buf.as_slice(), &mut ck);
+            None
+        }
+        // Payload bit flip: payload bytes are arbitrary f32s, so the
+        // frame must still decode.
+        2 => {
+            if buf.len() > HEADER_BYTES {
+                let bit = rng.below((buf.len() - HEADER_BYTES) * 8);
+                buf[HEADER_BYTES + bit / 8] ^= 1 << (bit % 8);
+                if let Err(e) = recv_frame(&mut buf.as_slice(), &mut ck) {
+                    return Some(format!("payload bit flip must stay decodable: {e}"));
+                }
+            }
+            None
+        }
+        // Truncation: always a typed mid-stream error.
+        3 => {
+            buf.truncate(rng.below(buf.len().max(1)));
+            match recv_frame(&mut buf.as_slice(), &mut ck) {
+                Err(_) => None,
+                Ok(_) => Some("truncated frame decoded cleanly".to_string()),
+            }
+        }
+        // Length-field lie under the cap: shrink ⇒ clean shorter
+        // decode; grow ⇒ typed payload-EOF error.
+        4 => {
+            let lie = rng.below(2 * base.payload.len() + 9) as u32;
+            buf[19..23].copy_from_slice(&lie.to_le_bytes());
+            match recv_frame(&mut buf.as_slice(), &mut ck) {
+                Ok(f) if (lie as usize) <= base.payload.len() => {
+                    (f.payload.len() != lie as usize)
+                        .then(|| format!("shrunk length {lie} decoded {} f32s", f.payload.len()))
+                }
+                Ok(_) => Some(format!("length lie {lie} > actual {} decoded", base.payload.len())),
+                Err(_) if (lie as usize) > base.payload.len() => None,
+                Err(e) => Some(format!("shrunk length {lie} must decode: {e}")),
+            }
+        }
+        // Unknown kind byte: a typed error naming the kind.
+        5 => {
+            buf[6] = 7 + (rng.below(249) as u8);
+            match recv_frame(&mut buf.as_slice(), &mut ck) {
+                Err(e) if format!("{e}").contains("kind") => None,
+                Err(e) => Some(format!("unknown kind error must name the kind: {e}")),
+                Ok(_) => Some("unknown kind decoded cleanly".to_string()),
+            }
+        }
+        // Magic/version stomp: named rejections.
+        6 => {
+            if rng.below(2) == 0 {
+                let bad = (rng.next_u64() as u32) ^ MAGIC ^ 1;
+                buf[0..4].copy_from_slice(&(if bad == MAGIC { !MAGIC } else { bad }).to_le_bytes());
+                match recv_frame(&mut buf.as_slice(), &mut ck) {
+                    Err(e) if format!("{e}").contains("magic") => None,
+                    other => Some(format!("magic stomp: {other:?}")),
+                }
+            } else {
+                let bad = (rng.next_u64() as u16) | 0x8000;
+                debug_assert_ne!(bad, VERSION);
+                buf[4..6].copy_from_slice(&bad.to_le_bytes());
+                match recv_frame(&mut buf.as_slice(), &mut ck) {
+                    Err(e) if format!("{e}").contains("version") => None,
+                    other => Some(format!("version stomp: {other:?}")),
+                }
+            }
+        }
+        // Max-n claims — the teeth. Above the cap the error must come
+        // FROM the cap (named), not from running out of bytes: a build
+        // with the guard compiled out fails exactly here.
+        _ => {
+            let claim = match rng.below(3) {
+                0 => MAX_PAYLOAD,
+                1 => MAX_PAYLOAD + 1,
+                _ => u32::MAX,
+            };
+            buf[19..23].copy_from_slice(&claim.to_le_bytes());
+            match recv_frame(&mut buf.as_slice(), &mut ck) {
+                Ok(_) => Some(format!("max-n claim {claim} decoded cleanly")),
+                Err(e) if claim > MAX_PAYLOAD && !format!("{e}").contains("cap") => Some(format!(
+                    "claim {claim} exceeds MAX_PAYLOAD {MAX_PAYLOAD} but was not rejected \
+                     by the cap guard (got: {e}) — is the guard compiled out?"
+                )),
+                Err(_) => None,
+            }
+            .or_else(|| protocol_walk(rng))
+        }
+    }
+}
+
+/// Random walk over one side's state machine: admissible steps follow
+/// the table; hostile steps must produce rejections naming the state
+/// and the frame, without advancing it.
+fn protocol_walk(rng: &mut Rng) -> Option<String> {
+    let mut p =
+        if rng.below(2) == 0 { ProtocolState::master() } else { ProtocolState::worker() };
+    for _ in 0..24 {
+        let follow = rng.below(2) == 0 && !p.is_terminal();
+        let (dir, kind) = if follow {
+            let options: Vec<_> =
+                TRANSITIONS.iter().filter(|&&(s, _, _, _)| s == p.state()).collect();
+            let &&(_, d, k, _) = &options[rng.below(options.len())];
+            (d, k)
+        } else {
+            let d = if rng.below(2) == 0 { Dir::Send } else { Dir::Recv };
+            (d, FrameKind::ALL[rng.below(FrameKind::ALL.len())])
+        };
+        let before = p.state();
+        if let Err(e) = p.advance(dir, kind) {
+            let msg = format!("{e}");
+            if !msg.contains("protocol violation") || !msg.contains(&format!("{before:?}")) {
+                return Some(format!("rejection must name the state: {msg}"));
+            }
+            if p.state() != before {
+                return Some(format!("{:?}: a rejection advanced the state", p.side()));
+            }
+        }
+        if p.is_terminal() {
+            // Terminal states reject everything, on both sides.
+            for &(d, k) in &[(Dir::Send, FrameKind::Hello), (Dir::Recv, FrameKind::Done)] {
+                if p.advance(d, k).is_ok() {
+                    return Some(format!("terminal {:?} accepted {k:?}", before));
+                }
+            }
+            break;
+        }
+    }
+    None
+}

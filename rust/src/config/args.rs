@@ -126,10 +126,14 @@ mod tests {
         let a = parse(&["p=abc", "eta=fast", "tau=0.5", "verbose=maybe"]);
         let e = a.get_usize("p", 7).unwrap_err();
         let msg = format!("{e}");
+        // R7 pin (tests/repo_lint.rs): both err sites' fragments verbatim.
+        assert!(msg.contains("invalid value for"), "{msg}");
         assert!(msg.contains("p") && msg.contains("abc"), "{msg}");
         assert!(format!("{}", a.get_f32("eta", 0.1).unwrap_err()).contains("fast"));
         assert!(format!("{}", a.get_u32("tau", 1).unwrap_err()).contains("0.5"));
-        assert!(format!("{}", a.get_bool("verbose", false).unwrap_err()).contains("maybe"));
+        let bool_msg = format!("{}", a.get_bool("verbose", false).unwrap_err());
+        assert!(bool_msg.contains("maybe"), "{bool_msg}");
+        assert!(bool_msg.contains("expected true|false|1|0|yes|no"), "{bool_msg}");
     }
 
     #[test]

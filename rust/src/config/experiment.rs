@@ -316,6 +316,35 @@ mod tests {
         assert!(cfg.validate().is_err());
     }
 
+    /// R7 pin (tests/repo_lint.rs): every error construction site in
+    /// this file has its message fragment asserted verbatim here (the
+    /// one exemption — the `{path}:{line}` wrapper — is documented in
+    /// the lint table).
+    #[test]
+    fn error_messages_are_pinned_verbatim() {
+        let mut cfg = ExperimentConfig::default();
+        let msg = |e: crate::error::Error| format!("{e}");
+        assert!(msg(cfg.set("p", "x").unwrap_err()).contains("invalid value for"));
+        assert!(msg(cfg.set("simd", "sse9").unwrap_err())
+            .contains("expected auto|avx2|neon|scalar"));
+        assert!(msg(ExperimentConfig::from_file("/definitely/not/here.cfg").unwrap_err())
+            .contains("cannot read config file"));
+
+        let check = |mutate: &dyn Fn(&mut ExperimentConfig), fragment: &str| {
+            let mut cfg = ExperimentConfig::default();
+            mutate(&mut cfg);
+            let m = msg(cfg.validate().unwrap_err());
+            assert!(m.contains(fragment), "expected '{fragment}' in: {m}");
+        };
+        check(&|c| c.p = 0, "p must be >= 1");
+        check(&|c| c.batch = 0, "batch must be >= 1");
+        check(&|c| c.threads = 0, "threads must be >= 1");
+        check(&|c| c.tau = 0, "tau must be >= 1");
+        check(&|c| c.horizon = -1.0, "horizon must be a positive number of seconds");
+        check(&|c| c.eval_every = 0.0, "eval_every must be a positive number of seconds");
+        check(&|c| c.eta = 0.0, "eta must be a positive number");
+    }
+
     #[test]
     fn method_resolution() {
         let mut cfg = ExperimentConfig { p: 8, ..Default::default() };

@@ -9,11 +9,17 @@
 //!   and the examples share (model preset, cluster costs, method
 //!   selection, schedule), loadable from a `key = value` file with CLI
 //!   overrides.
+//! - [`registry`] — the knob registry: every CLI/config knob with its
+//!   type, default, and the surfaces it is threaded through; the
+//!   `train` usage text is generated from it and lint R5 diffs it
+//!   against the actual structs and forwarding lists.
 
 pub mod args;
 pub mod experiment;
 pub mod json;
+pub mod registry;
 
 pub use args::Args;
 pub use experiment::ExperimentConfig;
 pub use json::Json;
+pub use registry::{usage_text, Knob, Surface, KNOBS};

@@ -1,0 +1,478 @@
+//! The knob registry: every configuration knob of the training CLI,
+//! as one committed table — name, landing field, type, default, and
+//! the *surfaces* it is threaded through.
+//!
+//! Why a registry: PRs 7 and 9 each threaded one new knob (`threads=`,
+//! `simd=`) through six surfaces by hand (`ExperimentConfig`, the
+//! `train` CLI, `FigOpts`, the ch4 `Sweep`, the process-worker CLI
+//! forwarding list, docs), and nothing machine-checked that all six
+//! stayed in sync — a silently dropped surface means a run quietly
+//! ignores a knob the user set. This table is the single source of
+//! truth; `tests/repo_lint.rs` (rule R5) scrapes the actual struct
+//! fields and the actual worker-CLI forwarding list out of the source
+//! and diffs them against it in BOTH directions, and the `train` usage
+//! text in `main.rs` is generated from it ([`usage_text`]), so help,
+//! structs, and forwarding cannot drift apart.
+//!
+//! Not every knob belongs on every surface — that's what the
+//! per-surface *exemption* entries are for: each names the reason a
+//! knob legitimately skips a surface (e.g. `p` never reaches a worker
+//! process because a worker only knows its own `wid`). An exemption
+//! without a reason, or a surface claim the scrape can't find, fails
+//! the lint.
+
+/// A place a knob must be threaded through to take effect.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Surface {
+    /// A typed field of `config::ExperimentConfig` (with a `set()` arm).
+    Experiment,
+    /// Accepted by the `repro train` command line / config file.
+    TrainCli,
+    /// A field of `figures::FigOpts` (the figure harness).
+    FigOpts,
+    /// A field of `figures::ch4::Sweep` (the ch4 sweep harness).
+    Ch4Sweep,
+    /// Forwarded on the hidden `--process-worker` command line.
+    WorkerCli,
+}
+
+/// One knob: where it lives and where it travels.
+pub struct Knob {
+    /// The key as typed on a CLI (`cost=imagenet`).
+    pub name: &'static str,
+    /// The struct field it lands in (differs from `name` when the CLI
+    /// key and the field are spelled differently, e.g. `cost` →
+    /// `cost_family`, `out-dir` → `out_dir`).
+    pub field: &'static str,
+    /// Human-readable type, for the generated usage text.
+    pub ty: &'static str,
+    /// Default value, for the generated usage text.
+    pub default: &'static str,
+    /// A valid NON-default value; the registry test drives it through
+    /// `ExperimentConfig::set` to prove the typed arm exists (a knob
+    /// whose sample lands in `extra` has silently lost its field).
+    pub sample: &'static str,
+    /// One-line description for the usage text.
+    pub doc: &'static str,
+    /// Surfaces this knob IS threaded through (scrape-verified by R5).
+    pub surfaces: &'static [Surface],
+    /// Surfaces this knob legitimately skips, each with the reason.
+    pub exemptions: &'static [(Surface, &'static str)],
+}
+
+use Surface::{Ch4Sweep, Experiment, FigOpts, TrainCli, WorkerCli};
+
+/// THE registry. Grouped: experiment knobs, train-only knobs, figure
+/// knobs, hidden process-worker knobs.
+pub const KNOBS: &[Knob] = &[
+    // ---- ExperimentConfig knobs (typed fields with set() arms) ----
+    Knob {
+        name: "method", field: "method", ty: "name", default: "easgd", sample: "downpour",
+        doc: "easgd|eamsgd|downpour|mdownpour|adownpour|mvadownpour|admm|sgd|msgd|asgd|mvasgd",
+        surfaces: &[Experiment, TrainCli, WorkerCli],
+        exemptions: &[
+            (FigOpts, "each figure fixes the method set the thesis compares"),
+            (Ch4Sweep, "the sweep's method is a run(...) argument, not a field"),
+        ],
+    },
+    Knob {
+        name: "p", field: "p", ty: "usize", default: "4", sample: "8",
+        doc: "parallel workers (tree: leaf count)",
+        surfaces: &[Experiment, TrainCli],
+        exemptions: &[
+            (FigOpts, "figures sweep p internally per thesis panel"),
+            (Ch4Sweep, "p is a run(...) argument of the sweep, not a field"),
+            (WorkerCli, "the master spawns p workers; a worker only knows its wid"),
+        ],
+    },
+    Knob {
+        name: "eta", field: "eta", ty: "f32", default: "0.05", sample: "0.1",
+        doc: "learning rate η",
+        surfaces: &[Experiment, TrainCli, WorkerCli],
+        exemptions: &[
+            (FigOpts, "figures use per-panel thesis learning rates"),
+            (Ch4Sweep, "η is a run(...) argument of the sweep, not a field"),
+        ],
+    },
+    Knob {
+        name: "tau", field: "tau", ty: "u32", default: "10", sample: "4",
+        doc: "communication period τ (local steps between exchanges)",
+        surfaces: &[Experiment, TrainCli, WorkerCli],
+        exemptions: &[
+            (FigOpts, "figures sweep τ internally per thesis panel"),
+            (Ch4Sweep, "τ is the swept variable, passed to run(...) per point"),
+        ],
+    },
+    Knob {
+        name: "beta", field: "beta", ty: "f32", default: "0.9", sample: "0.5",
+        doc: "elastic rate β (α = β/p on the star, β/(d+1) on trees)",
+        surfaces: &[Experiment, TrainCli],
+        exemptions: &[
+            (FigOpts, "figures use the thesis β = 0.9 throughout"),
+            (Ch4Sweep, "the sweep uses the thesis β = 0.9 throughout"),
+            (WorkerCli, "forwarded pre-resolved as alpha= (α = β/p), never as β"),
+        ],
+    },
+    Knob {
+        name: "delta", field: "delta", ty: "f32", default: "0.99", sample: "0.9",
+        doc: "momentum δ (EAMSGD / MSGD / MDOWNPOUR)",
+        surfaces: &[Experiment, TrainCli, WorkerCli],
+        exemptions: &[
+            (FigOpts, "figures use per-panel thesis momenta"),
+            (Ch4Sweep, "δ rides inside the sweep's Method argument"),
+        ],
+    },
+    Knob {
+        name: "cost", field: "cost_family", ty: "name", default: "cifar", sample: "imagenet",
+        doc: "cifar|imagenet virtual-time cost family (sim backend)",
+        surfaces: &[Experiment, TrainCli],
+        exemptions: &[
+            (FigOpts, "each figure prices the family its thesis chapter uses"),
+            (Ch4Sweep, "the cost family is a run(...) argument of the sweep"),
+            (WorkerCli, "process workers measure real time; no cost model to price"),
+        ],
+    },
+    Knob {
+        name: "sharding", field: "sharding", ty: "name", default: "replicated", sample: "partitioned",
+        doc: "replicated|partitioned §4.1 data sharding",
+        surfaces: &[Experiment, TrainCli, Ch4Sweep, WorkerCli],
+        exemptions: &[
+            (FigOpts, "the replicated-vs-partitioned figures compare both modes internally"),
+        ],
+    },
+    Knob {
+        name: "model", field: "model", ty: "name", default: "mlp", sample: "conv",
+        doc: "mlp|conv native oracle model",
+        surfaces: &[Experiment, TrainCli, FigOpts, Ch4Sweep, WorkerCli],
+        exemptions: &[],
+    },
+    Knob {
+        name: "horizon", field: "horizon", ty: "f64", default: "60", sample: "30",
+        doc: "wall-clock training horizon in seconds",
+        surfaces: &[Experiment, TrainCli, Ch4Sweep, WorkerCli],
+        exemptions: &[(FigOpts, "figures use thesis horizons, scaled by the full flag")],
+    },
+    Knob {
+        name: "eval_every", field: "eval_every", ty: "f64", default: "2", sample: "1.5",
+        doc: "evaluation cadence in seconds",
+        surfaces: &[Experiment, TrainCli, Ch4Sweep],
+        exemptions: &[
+            (FigOpts, "figures use thesis cadences, scaled by the full flag"),
+            (WorkerCli, "evaluation is master-side (center snapshots); workers never eval"),
+        ],
+    },
+    Knob {
+        name: "seed", field: "seed", ty: "u64", default: "0", sample: "7",
+        doc: "root RNG seed (worker streams split deterministically)",
+        surfaces: &[Experiment, TrainCli, FigOpts, Ch4Sweep, WorkerCli],
+        exemptions: &[],
+    },
+    Knob {
+        name: "batch", field: "batch", ty: "usize", default: "32", sample: "64",
+        doc: "minibatch size per local step",
+        surfaces: &[Experiment, TrainCli, WorkerCli],
+        exemptions: &[
+            (FigOpts, "figures run the thesis batch of 32"),
+            (Ch4Sweep, "the sweep's oracles are built at the thesis batch of 32"),
+        ],
+    },
+    Knob {
+        name: "threads", field: "threads", ty: "usize", default: "1", sample: "2",
+        doc: "GEMM helper threads per worker (hybrid parallelism)",
+        surfaces: &[Experiment, TrainCli, FigOpts, Ch4Sweep, WorkerCli],
+        exemptions: &[],
+    },
+    Knob {
+        name: "simd", field: "simd", ty: "name", default: "auto", sample: "scalar",
+        doc: "auto|avx2|neon|scalar kernel tier (strict availability)",
+        surfaces: &[Experiment, TrainCli, FigOpts, Ch4Sweep, WorkerCli],
+        exemptions: &[],
+    },
+    // ---- train-CLI-only knobs (read straight from Args) ----
+    Knob {
+        name: "backend", field: "backend", ty: "name", default: "sim", sample: "",
+        doc: "sim|thread|process execution backend",
+        surfaces: &[TrainCli, FigOpts, Ch4Sweep],
+        exemptions: &[],
+    },
+    Knob {
+        name: "topology", field: "", ty: "name", default: "star", sample: "",
+        doc: "star|tree node wiring (thesis ch. 6)",
+        surfaces: &[TrainCli], exemptions: &[],
+    },
+    Knob {
+        name: "degree", field: "", ty: "usize", default: "4", sample: "",
+        doc: "tree arity d (topology=tree)",
+        surfaces: &[TrainCli], exemptions: &[],
+    },
+    Knob {
+        name: "scheme", field: "", ty: "name", default: "multiscale", sample: "",
+        doc: "multiscale|updown tree communication scheme (§6.1)",
+        surfaces: &[TrainCli], exemptions: &[],
+    },
+    Knob {
+        name: "tau1", field: "", ty: "u32", default: "10", sample: "",
+        doc: "multiscale leaf period",
+        surfaces: &[TrainCli], exemptions: &[],
+    },
+    Knob {
+        name: "tau2", field: "", ty: "u32", default: "100", sample: "",
+        doc: "multiscale interior period",
+        surfaces: &[TrainCli], exemptions: &[],
+    },
+    Knob {
+        name: "tau_up", field: "", ty: "u32", default: "1", sample: "",
+        doc: "updown upward period",
+        surfaces: &[TrainCli], exemptions: &[],
+    },
+    Knob {
+        name: "tau_down", field: "", ty: "u32", default: "10", sample: "",
+        doc: "updown downward period",
+        surfaces: &[TrainCli], exemptions: &[],
+    },
+    Knob {
+        name: "transport", field: "", ty: "name", default: "tcp", sample: "",
+        doc: "tcp|unix socket transport (backend=process)",
+        surfaces: &[TrainCli], exemptions: &[],
+    },
+    Knob {
+        name: "host", field: "", ty: "str", default: "127.0.0.1", sample: "",
+        doc: "master bind host (transport=tcp)",
+        surfaces: &[TrainCli], exemptions: &[],
+    },
+    Knob {
+        name: "port", field: "", ty: "u16", default: "0", sample: "",
+        doc: "master bind port; 0 = ephemeral (transport=tcp)",
+        surfaces: &[TrainCli], exemptions: &[],
+    },
+    Knob {
+        name: "config", field: "", ty: "path", default: "-", sample: "",
+        doc: "key=value config file applied before CLI overrides",
+        surfaces: &[TrainCli], exemptions: &[],
+    },
+    Knob {
+        name: "gamma", field: "", ty: "f64", default: "0", sample: "",
+        doc: "learning-rate decay exponent (extra knob)",
+        surfaces: &[TrainCli, WorkerCli], exemptions: &[],
+    },
+    Knob {
+        name: "mva_alpha", field: "", ty: "f32", default: "0.001", sample: "",
+        doc: "moving-average rate (mvadownpour/mvasgd; extra knob)",
+        surfaces: &[TrainCli, WorkerCli], exemptions: &[],
+    },
+    Knob {
+        name: "rho", field: "", ty: "f32", default: "1.0", sample: "",
+        doc: "ADMM penalty ρ (extra knob)",
+        surfaces: &[TrainCli], exemptions: &[],
+    },
+    // ---- figure-harness-only knobs ----
+    Knob {
+        name: "out-dir", field: "out_dir", ty: "path", default: "out", sample: "",
+        doc: "figure output directory",
+        surfaces: &[FigOpts], exemptions: &[],
+    },
+    Knob {
+        name: "full", field: "full", ty: "flag", default: "-", sample: "",
+        doc: "full-length thesis horizons instead of smoke-length",
+        surfaces: &[FigOpts], exemptions: &[],
+    },
+    // ---- hidden --process-worker knobs (never user-facing) ----
+    Knob {
+        name: "addr", field: "", ty: "str", default: "-", sample: "",
+        doc: "master wire address (tcp:host:port | unix:/path)",
+        surfaces: &[WorkerCli], exemptions: &[],
+    },
+    Knob {
+        name: "wid", field: "", ty: "usize", default: "-", sample: "",
+        doc: "this worker's id",
+        surfaces: &[WorkerCli], exemptions: &[],
+    },
+    Knob {
+        name: "max_local", field: "", ty: "u64", default: "-", sample: "",
+        doc: "per-worker local-step budget",
+        surfaces: &[WorkerCli], exemptions: &[],
+    },
+    Knob {
+        name: "alpha", field: "", ty: "f32", default: "-", sample: "",
+        doc: "resolved elastic rate α = β/p",
+        surfaces: &[WorkerCli], exemptions: &[],
+    },
+    Knob {
+        name: "fault", field: "", ty: "name", default: "-", sample: "",
+        doc: "test-only rogue-peer mode (push-before-hello)",
+        surfaces: &[WorkerCli], exemptions: &[],
+    },
+    Knob {
+        name: "oracle", field: "", ty: "name", default: "-", sample: "",
+        doc: "quad|sweep oracle recipe discriminant",
+        surfaces: &[WorkerCli], exemptions: &[],
+    },
+    Knob {
+        name: "qn", field: "", ty: "usize", default: "-", sample: "",
+        doc: "quadratic oracle dimension",
+        surfaces: &[WorkerCli], exemptions: &[],
+    },
+    Knob {
+        name: "qh", field: "", ty: "f32", default: "-", sample: "",
+        doc: "quadratic curvature",
+        surfaces: &[WorkerCli], exemptions: &[],
+    },
+    Knob {
+        name: "qx0", field: "", ty: "f32", default: "-", sample: "",
+        doc: "quadratic init point",
+        surfaces: &[WorkerCli], exemptions: &[],
+    },
+    Knob {
+        name: "qtarget", field: "", ty: "f32", default: "-", sample: "",
+        doc: "quadratic optimum",
+        surfaces: &[WorkerCli], exemptions: &[],
+    },
+    Knob {
+        name: "qnoise", field: "", ty: "f32", default: "-", sample: "",
+        doc: "quadratic gradient noise",
+        surfaces: &[WorkerCli], exemptions: &[],
+    },
+    Knob {
+        name: "oseed", field: "", ty: "u64", default: "-", sample: "",
+        doc: "sweep-oracle data seed",
+        surfaces: &[WorkerCli], exemptions: &[],
+    },
+];
+
+/// Knobs carrying the given surface.
+pub fn on_surface(s: Surface) -> impl Iterator<Item = &'static Knob> {
+    KNOBS.iter().filter(move |k| k.surfaces.contains(&s))
+}
+
+/// Look a knob up by CLI name.
+pub fn find(name: &str) -> Option<&'static Knob> {
+    KNOBS.iter().find(|k| k.name == name)
+}
+
+/// The `repro` usage text, generated from the registry so the help and
+/// the actual knob set cannot drift (pinned by the registry tests and
+/// lint R5).
+pub fn usage_text() -> String {
+    let mut s = String::from(
+        "usage: repro <figure|train|train-pjrt|inspect> [key=value ...]\n\
+         \n\
+         repro figure <id|all|list> [out-dir=out] [--full] [seed=N]\n\
+         repro train [key=value ...]   one distributed run on the sweep workload\n\
+         repro train-pjrt [p=2] [steps=200] [eta=0.3] [tau=4]\n\
+         repro inspect                 print the artifacts manifest summary\n\
+         \n\
+         train knobs (from config/registry.rs):\n",
+    );
+    for k in on_surface(Surface::TrainCli) {
+        s.push_str(&format!(
+            "  {:<24} {}  [{}, default {}]\n",
+            format!("{}={}", k.name, k.default),
+            k.doc,
+            k.ty,
+            k.default,
+        ));
+    }
+    s.push_str(
+        "\ntree runs: topology=tree degree=4 scheme=multiscale tau1=10 tau2=100\n\
+         \x20          topology=tree degree=4 scheme=updown tau_up=1 tau_down=10\n",
+    );
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::ExperimentConfig;
+
+    #[test]
+    fn knob_names_are_unique() {
+        for (i, a) in KNOBS.iter().enumerate() {
+            assert!(!a.name.is_empty());
+            for b in &KNOBS[i + 1..] {
+                assert_ne!(a.name, b.name, "duplicate knob {}", a.name);
+            }
+        }
+    }
+
+    #[test]
+    fn surfaces_and_exemptions_are_disjoint_and_reasoned() {
+        for k in KNOBS {
+            for (s, reason) in k.exemptions {
+                assert!(
+                    !k.surfaces.contains(s),
+                    "{}: surface {s:?} both claimed and exempted",
+                    k.name
+                );
+                assert!(
+                    reason.len() > 10,
+                    "{}: exemption for {s:?} needs a real reason",
+                    k.name
+                );
+            }
+        }
+    }
+
+    /// The R5 coverage contract at the registry level: every
+    /// ExperimentConfig knob is either threaded through or explicitly
+    /// exempted from EACH downstream surface — no silent gaps.
+    #[test]
+    fn experiment_knobs_account_for_every_downstream_surface() {
+        for k in on_surface(Surface::Experiment) {
+            for s in [Surface::FigOpts, Surface::Ch4Sweep, Surface::WorkerCli] {
+                assert!(
+                    k.surfaces.contains(&s) || k.exemptions.iter().any(|(e, _)| *e == s),
+                    "{}: surface {s:?} neither threaded nor exempted — thread the knob \
+                     through or document why it skips that surface",
+                    k.name
+                );
+            }
+        }
+        assert!(
+            on_surface(Surface::Experiment).count() >= 15,
+            "the ExperimentConfig knob set shrank — update the registry deliberately"
+        );
+    }
+
+    /// Drift pin: every Experiment knob's sample value must flow
+    /// through `ExperimentConfig::set` into a TYPED field. A sample
+    /// landing in `extra` means the field was renamed/removed without
+    /// updating the registry (or vice versa).
+    #[test]
+    fn experiment_knobs_have_live_set_arms() {
+        for k in on_surface(Surface::Experiment) {
+            let mut cfg = ExperimentConfig::default();
+            cfg.set(k.name, k.sample)
+                .unwrap_or_else(|e| panic!("{}={} rejected: {e}", k.name, k.sample));
+            assert!(
+                cfg.extra.is_empty(),
+                "{}={} fell through to `extra` — the typed set() arm is gone",
+                k.name,
+                k.sample
+            );
+        }
+    }
+
+    /// Drift pin for the generated help: every train-facing knob
+    /// appears in the usage text exactly as `name=`.
+    #[test]
+    fn usage_text_covers_every_train_knob() {
+        let text = usage_text();
+        assert!(text.starts_with("usage: repro"));
+        for k in on_surface(Surface::TrainCli) {
+            assert!(
+                text.contains(&format!("{}=", k.name)),
+                "usage text lost the {} knob",
+                k.name
+            );
+        }
+        // Hidden worker knobs stay hidden.
+        assert!(!text.contains("max_local="), "worker-only knobs must not leak into help");
+    }
+
+    #[test]
+    fn find_resolves_names() {
+        assert_eq!(find("simd").map(|k| k.field), Some("simd"));
+        assert_eq!(find("cost").map(|k| k.field), Some("cost_family"));
+        assert!(find("bogus").is_none());
+    }
+}

@@ -28,6 +28,10 @@
 //! - [`wire`] — the process backend's wire format: length-prefixed
 //!   flat-θ frames over TCP/Unix sockets, with measured
 //!   serialize/transfer accounting. No serde, no new dependencies.
+//! - [`protocol`] — the master⇄worker frame protocol as data: typed
+//!   transition tables for both sides, a `ProtocolState` checker that
+//!   every `process` send/recv is driven through, exhaustive
+//!   (state × kind) enumeration tests, fuzzed by `fuzz_wire`.
 //! - [`process`] — the multi-process star backend: a parameter-server
 //!   master, workers as self-exec'd OS processes exchanging frames
 //!   over real sockets (`backend=process`).
@@ -46,6 +50,7 @@ pub mod master_actor;
 pub mod method;
 pub mod oracle;
 pub mod process;
+pub mod protocol;
 pub mod sequential;
 pub mod threaded;
 pub mod topology;
@@ -61,6 +66,7 @@ pub use executor::{
 pub use method::Method;
 pub use oracle::{ConvOracle, EvalStats, GradOracle, MlpOracle, NativeOracle, QuadraticOracle};
 pub use process::{process_worker_main, run_process, OracleSpec, ProcessOpts};
+pub use protocol::{Dir, ProtoState, ProtocolState, Side, TRANSITIONS};
 pub use sequential::{run_sequential, SeqMethod};
 pub use threaded::run_threaded;
 pub use topology::{node_taus, Topology, TreeLayout, TreeScheme, TreeSpec};

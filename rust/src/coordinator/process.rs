@@ -44,9 +44,10 @@
 use super::executor::{eval_point, DriverConfig, WorkerState};
 use super::method::Method;
 use super::oracle::GradOracle;
+use super::protocol::ProtocolState;
 use super::threaded::lock_recover;
 use super::wire::{
-    recv_frame, send_frame, Frame, FrameKind, WireAddr, WireClock, WireListener, WireStream,
+    send_frame, Frame, FrameKind, WireAddr, WireClock, WireListener, WireStream,
 };
 use crate::cluster::{RunResult, TimeBreakdown, WireStats};
 use crate::config::Args;
@@ -77,6 +78,11 @@ pub struct ProcessOpts {
     /// on the same tier; an unavailable tier fails the worker loudly
     /// at startup.
     pub simd: String,
+    /// Test-only fault injection: `(wid, mode)` forwards `fault=mode`
+    /// to that one worker so integration tests can drive a rogue peer
+    /// against the master's protocol checker over a real socket.
+    /// Modes: `push-before-hello`. Never set on production paths.
+    pub fault: Option<(usize, String)>,
 }
 
 impl Default for ProcessOpts {
@@ -86,6 +92,7 @@ impl Default for ProcessOpts {
             exe: None,
             threads: 1,
             simd: "auto".into(),
+            fault: None,
         }
     }
 }
@@ -108,7 +115,7 @@ impl ProcessOpts {
         if !crate::linalg::simd::is_known_request(simd) {
             crate::bail!("unknown simd tier '{simd}' (auto|avx2|neon|scalar)");
         }
-        Ok(ProcessOpts { addr, exe: None, threads: 1, simd: simd.to_string() })
+        Ok(ProcessOpts { addr, exe: None, threads: 1, simd: simd.to_string(), fault: None })
     }
 
     /// A fresh Unix-domain socket path in the temp dir (pid + counter,
@@ -371,10 +378,30 @@ struct WorkerReport {
 }
 
 /// Serve one worker connection: handshake (the `Hello` names the
-/// worker — accept order is racy), then rounds until `Done`. Any
-/// socket error before `Done` means the worker process died — a loud,
-/// descriptive failure that also stops the surviving workers.
+/// worker — accept order is racy), then rounds until `Done`. Every
+/// frame is driven through a [`ProtocolState`] checker, so a worker
+/// process dying (socket error) AND a peer sending out-of-order frames
+/// (protocol violation) both surface as loud, descriptive failures
+/// that stop the surviving workers promptly.
 fn serve_worker(
+    conn: WireStream,
+    method: Method,
+    init: &[f32],
+    state: &Mutex<CenterState>,
+    stop: &AtomicBool,
+    diverged: &AtomicBool,
+) -> Result<WorkerReport> {
+    let r = serve_worker_loop(conn, method, init, state, stop, diverged);
+    if r.is_err() {
+        // The loudest failure in the protocol: a worker died or broke
+        // the frame protocol. Stop the rest so the error surfaces now,
+        // not after the surviving workers burn the whole budget.
+        stop.store(true, Ordering::Relaxed);
+    }
+    r
+}
+
+fn serve_worker_loop(
     mut conn: WireStream,
     method: Method,
     init: &[f32],
@@ -383,20 +410,18 @@ fn serve_worker(
     diverged: &AtomicBool,
 ) -> Result<WorkerReport> {
     let mut ck = WireClock::default();
-    let hello = recv_frame(&mut conn, &mut ck)
-        .map_err(|e| crate::err!("a worker connected but sent no Hello frame: {e}"))?;
-    if hello.kind != FrameKind::Hello {
-        return Err(crate::err!("expected a Hello frame, got {:?}", hello.kind));
-    }
+    let mut proto = ProtocolState::master();
+    // The checker subsumes the old manual kind check: anything but a
+    // Hello in the AwaitHello state is a typed protocol violation
+    // naming the state and the offending frame.
+    let hello = proto
+        .recv(&mut conn, &mut ck)
+        .map_err(|e| crate::err!("a worker connected but sent no valid Hello frame: {e}"))?;
     let wid = hello.wid as usize;
-    send_frame(&mut conn, &Frame::new(FrameKind::Init, 0, 0, init.to_vec()), &mut ck)?;
+    proto.send(&mut conn, &Frame::new(FrameKind::Init, 0, 0, init.to_vec()), &mut ck)?;
     loop {
-        let frame = recv_frame(&mut conn, &mut ck).map_err(|e| {
-            // The loudest failure in the protocol: a worker process
-            // died mid-run. Stop the rest so the error surfaces now,
-            // not after the surviving workers burn the whole budget.
-            stop.store(true, Ordering::Relaxed);
-            crate::err!("worker {wid} died (socket closed before its Done frame): {e}")
+        let frame = proto.recv(&mut conn, &mut ck).map_err(|e| {
+            crate::err!("worker {wid} died or broke protocol before its Done frame: {e}")
         })?;
         match frame.kind {
             FrameKind::Push => {
@@ -406,7 +431,7 @@ fn serve_worker(
                 };
                 let kind =
                     if stop.load(Ordering::Relaxed) { FrameKind::Stop } else { FrameKind::Center };
-                send_frame(&mut conn, &Frame::new(kind, 0, frame.clock, reply), &mut ck)?;
+                proto.send(&mut conn, &Frame::new(kind, 0, frame.clock, reply), &mut ck)?;
             }
             FrameKind::Diverged => {
                 diverged.store(true, Ordering::Relaxed);
@@ -429,6 +454,9 @@ fn serve_worker(
                     wire: ck,
                 });
             }
+            // Unreachable once proto.recv succeeded (the Serve state
+            // admits only Push/Diverged/Done), kept as defense in
+            // depth against a table edit outrunning this match.
             other => return Err(crate::err!("worker {wid}: unexpected {other:?} frame mid-run")),
         }
     }
@@ -487,7 +515,13 @@ pub fn run_process(
             .arg(format!("threads={}", opts.threads))
             .arg(format!("simd={}", opts.simd))
             .args(method_to_args(cfg.method)?)
-            .args(spec.to_args())
+            .args(spec.to_args());
+        if let Some((fault_wid, mode)) = &opts.fault {
+            if *fault_wid == wid {
+                cmd.arg(format!("fault={mode}"));
+            }
+        }
+        cmd
             .stdin(std::process::Stdio::null())
             .stdout(std::process::Stdio::inherit())
             .stderr(std::process::Stdio::inherit());
@@ -664,12 +698,28 @@ pub fn process_worker_main(args: &Args) -> Result<()> {
 
     let mut conn = WireStream::connect(&addr)?;
     let mut ck = WireClock::default();
-    send_frame(&mut conn, &Frame::new(FrameKind::Hello, wid as u32, 0, vec![]), &mut ck)?;
-    let init_frame = recv_frame(&mut conn, &mut ck)
-        .map_err(|e| crate::err!("worker {wid}: master sent no Init: {e}"))?;
-    if init_frame.kind != FrameKind::Init {
-        crate::bail!("worker {wid}: expected Init, got {:?}", init_frame.kind);
+    // Test-only fault injection (forwarded by `ProcessOpts::fault`):
+    // play a rogue peer to exercise the master's conformance checker
+    // over a real socket. Raw `send_frame` on purpose — the checked
+    // path would refuse to put an out-of-order frame on the wire.
+    match args.get_str("fault", "") {
+        "" => {}
+        "push-before-hello" => {
+            send_frame(
+                &mut conn,
+                &Frame::new(FrameKind::Push, wid as u32, 0, vec![0.0]),
+                &mut ck,
+            )?;
+            return Ok(());
+        }
+        other => crate::bail!("unknown worker fault '{other}' (push-before-hello)"),
     }
+    let mut proto = ProtocolState::worker();
+    proto.send(&mut conn, &Frame::new(FrameKind::Hello, wid as u32, 0, vec![]), &mut ck)?;
+    // The checker subsumes the old manual Init kind check.
+    let init_frame = proto
+        .recv(&mut conn, &mut ck)
+        .map_err(|e| crate::err!("worker {wid}: master sent no valid Init: {e}"))?;
     if init_frame.payload.len() != oracle.n_params() {
         crate::bail!(
             "worker {wid}: Init carries {} params, local oracle has {} — mismatched specs",
@@ -704,12 +754,13 @@ pub fn process_worker_main(args: &Args) -> Result<()> {
                 Method::Easgd { .. } | Method::Eamsgd { .. } => w.theta.clone(),
                 _ => w.aux.clone(),
             };
-            send_frame(
+            proto.send(
                 &mut conn,
                 &Frame::new(FrameKind::Push, wid as u32, w.t_local, payload),
                 &mut ck,
             )?;
-            let reply = recv_frame(&mut conn, &mut ck)
+            let reply = proto
+                .recv(&mut conn, &mut ck)
                 .map_err(|e| crate::err!("worker {wid}: master vanished mid-round: {e}"))?;
             let stop = match reply.kind {
                 FrameKind::Center | FrameKind::Stop => {
@@ -719,6 +770,8 @@ pub fn process_worker_main(args: &Args) -> Result<()> {
                     }
                     reply.kind == FrameKind::Stop
                 }
+                // Unreachable once proto.recv succeeded (AwaitReply
+                // admits only Center/Stop); defense in depth.
                 other => crate::bail!("worker {wid}: unexpected {other:?} reply"),
             };
             comm_ns += tc.elapsed().as_nanos() as u64;
@@ -730,7 +783,7 @@ pub fn process_worker_main(args: &Args) -> Result<()> {
         let loss = super::executor::local_step_decoupled(&cfg, &mut w, &mut oracle);
         compute_ns += t0.elapsed().as_nanos() as u64;
         if !loss.is_finite() || flat::norm2(&w.theta) > 1e8 {
-            send_frame(
+            proto.send(
                 &mut conn,
                 &Frame::new(FrameKind::Diverged, wid as u32, w.t_local, vec![]),
                 &mut ck,
@@ -745,7 +798,7 @@ pub fn process_worker_main(args: &Args) -> Result<()> {
         ck.serialize_s() as f32,
         ck.transfer_s() as f32,
     ];
-    send_frame(&mut conn, &Frame::new(FrameKind::Done, wid as u32, w.t_local, stats), &mut ck)?;
+    proto.send(&mut conn, &Frame::new(FrameKind::Done, wid as u32, w.t_local, stats), &mut ck)?;
     Ok(())
 }
 

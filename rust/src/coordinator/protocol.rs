@@ -1,0 +1,409 @@
+//! The master⇄worker frame protocol as *data*: explicit typed
+//! transition tables for both sides of the `backend=process` exchange,
+//! checked at every `send_frame`/`recv_frame` call site.
+//!
+//! PR 6 implemented the `Hello→Init→Push/Center…→Stop→Done` sequencing
+//! implicitly, spread across the two handler loops in
+//! [`super::process`]. That made "which message orderings are
+//! admissible" — exactly the property Elastic Consistency
+//! (arXiv 2001.05918) says these methods' correctness hinges on — a
+//! reading-comprehension exercise over two long loops. Here the
+//! admissible set is one committed table, [`TRANSITIONS`]; everything
+//! not in the table is a *named* rejection ([`ProtocolState::advance`]
+//! errors carry the current state and the offending frame), and the
+//! exhaustive enumeration test at the bottom proves every
+//! (state × direction × [`FrameKind`]) pair is one or the other — no
+//! implicit behavior.
+//!
+//! The two state machines (master side is per worker connection):
+//!
+//! ```text
+//!  master handler                      worker
+//!  ==============                      ======
+//!  AwaitHello --recv Hello--> SendInit Start --send Hello--> AwaitInit
+//!  SendInit --send Init--> Serve       AwaitInit --recv Init--> Local
+//!  Serve --recv Push--> Reply          Local --send Push--> AwaitReply
+//!  Serve --recv Diverged--> Serve      Local --send Diverged--> Finish
+//!  Serve --recv Done--> Closed         Local --send Done--> Done
+//!  Reply --send Center--> Serve        AwaitReply --recv Center--> Local
+//!  Reply --send Stop--> Serve          AwaitReply --recv Stop--> Finish
+//!                                      Finish --send Done--> Done
+//!  Closed: terminal                    Done: terminal
+//! ```
+//!
+//! [`super::process`] drives every frame through
+//! [`ProtocolState::send`] / [`ProtocolState::recv`], so an
+//! out-of-order or unexpected frame — from a buggy refactor or a rogue
+//! peer on the socket — is a typed error at the exact exchange that
+//! violated the table, not a hang or a silent mis-application.
+
+use super::wire::{recv_frame, send_frame, Frame, FrameKind, WireClock};
+use crate::error::Result;
+use std::io::{Read, Write};
+
+/// Which endpoint of the exchange this checker guards.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Side {
+    /// The parameter-server master (one checker per worker connection).
+    Master,
+    /// A worker process.
+    Worker,
+}
+
+/// Whether a frame is being written to or read from the socket.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Dir {
+    Send,
+    Recv,
+}
+
+/// Every protocol state of both sides (the sides are disjoint subsets;
+/// a checker never crosses between them because every transition's
+/// target stays on its side — asserted by the enumeration test).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ProtoState {
+    // Master side, per worker connection.
+    /// Waiting for the worker to announce itself.
+    AwaitHello,
+    /// Hello absorbed; the init θ must go out before anything else.
+    SendInit,
+    /// Steady state: waiting for the worker's next frame.
+    Serve,
+    /// A Push was absorbed; exactly one reply (Center or Stop) is owed.
+    Reply,
+    /// Done absorbed — terminal; the connection is spent.
+    Closed,
+
+    // Worker side.
+    /// Nothing sent yet; the Hello announcement must go first.
+    Start,
+    /// Hello sent; only the master's Init may arrive.
+    AwaitInit,
+    /// Local-step loop: may Push (exchange), Diverged, or Done (budget
+    /// or horizon reached before the next exchange).
+    Local,
+    /// Push sent; exactly one reply (Center or Stop) may arrive.
+    AwaitReply,
+    /// Stop received or Diverged sent: the final stats frame is owed.
+    Finish,
+    /// Done sent — terminal; nothing further may cross the socket.
+    Done,
+}
+
+impl ProtoState {
+    /// Every state, for exhaustive enumeration (tests, fuzzing).
+    pub const ALL: [ProtoState; 11] = [
+        ProtoState::AwaitHello,
+        ProtoState::SendInit,
+        ProtoState::Serve,
+        ProtoState::Reply,
+        ProtoState::Closed,
+        ProtoState::Start,
+        ProtoState::AwaitInit,
+        ProtoState::Local,
+        ProtoState::AwaitReply,
+        ProtoState::Finish,
+        ProtoState::Done,
+    ];
+
+    /// Terminal states accept no transition in either direction.
+    pub fn is_terminal(self) -> bool {
+        matches!(self, ProtoState::Closed | ProtoState::Done)
+    }
+
+    fn side(self) -> Side {
+        match self {
+            ProtoState::AwaitHello
+            | ProtoState::SendInit
+            | ProtoState::Serve
+            | ProtoState::Reply
+            | ProtoState::Closed => Side::Master,
+            ProtoState::Start
+            | ProtoState::AwaitInit
+            | ProtoState::Local
+            | ProtoState::AwaitReply
+            | ProtoState::Finish
+            | ProtoState::Done => Side::Worker,
+        }
+    }
+}
+
+/// THE protocol: the complete set of admissible
+/// (state, direction, frame) → state transitions. Anything not listed
+/// here is a typed [`ProtocolState::advance`] error; the enumeration
+/// test pins that the table is exactly this set and that every absent
+/// combination is a named rejection.
+pub const TRANSITIONS: &[(ProtoState, Dir, FrameKind, ProtoState)] = &[
+    // Master side (per connection).
+    (ProtoState::AwaitHello, Dir::Recv, FrameKind::Hello, ProtoState::SendInit),
+    (ProtoState::SendInit, Dir::Send, FrameKind::Init, ProtoState::Serve),
+    (ProtoState::Serve, Dir::Recv, FrameKind::Push, ProtoState::Reply),
+    (ProtoState::Serve, Dir::Recv, FrameKind::Diverged, ProtoState::Serve),
+    (ProtoState::Serve, Dir::Recv, FrameKind::Done, ProtoState::Closed),
+    (ProtoState::Reply, Dir::Send, FrameKind::Center, ProtoState::Serve),
+    (ProtoState::Reply, Dir::Send, FrameKind::Stop, ProtoState::Serve),
+    // Worker side.
+    (ProtoState::Start, Dir::Send, FrameKind::Hello, ProtoState::AwaitInit),
+    (ProtoState::AwaitInit, Dir::Recv, FrameKind::Init, ProtoState::Local),
+    (ProtoState::Local, Dir::Send, FrameKind::Push, ProtoState::AwaitReply),
+    (ProtoState::Local, Dir::Send, FrameKind::Diverged, ProtoState::Finish),
+    (ProtoState::Local, Dir::Send, FrameKind::Done, ProtoState::Done),
+    (ProtoState::AwaitReply, Dir::Recv, FrameKind::Center, ProtoState::Local),
+    (ProtoState::AwaitReply, Dir::Recv, FrameKind::Stop, ProtoState::Finish),
+    (ProtoState::Finish, Dir::Send, FrameKind::Done, ProtoState::Done),
+];
+
+/// A live conformance checker: owns the current state of one endpoint
+/// and refuses — with an error naming the state and the frame — any
+/// exchange the table does not admit.
+#[derive(Clone, Debug)]
+pub struct ProtocolState {
+    side: Side,
+    state: ProtoState,
+}
+
+impl ProtocolState {
+    /// A master-side checker for one freshly accepted connection.
+    pub fn master() -> ProtocolState {
+        ProtocolState { side: Side::Master, state: ProtoState::AwaitHello }
+    }
+
+    /// A worker-side checker for one freshly dialed connection.
+    pub fn worker() -> ProtocolState {
+        ProtocolState { side: Side::Worker, state: ProtoState::Start }
+    }
+
+    pub fn state(&self) -> ProtoState {
+        self.state
+    }
+
+    pub fn side(&self) -> Side {
+        self.side
+    }
+
+    /// The exchange is complete (Done crossed the socket).
+    pub fn is_terminal(&self) -> bool {
+        self.state.is_terminal()
+    }
+
+    /// Render the admissible exchanges out of `state` ("recv Push,
+    /// recv Diverged, recv Done", or "nothing (terminal state)") for
+    /// rejection messages.
+    pub fn expected_from(state: ProtoState) -> String {
+        let mut parts = Vec::new();
+        for &(s, d, k, _) in TRANSITIONS {
+            if s == state {
+                parts.push(format!(
+                    "{} {k:?}",
+                    match d {
+                        Dir::Send => "send",
+                        Dir::Recv => "recv",
+                    }
+                ));
+            }
+        }
+        if parts.is_empty() {
+            "nothing (terminal state)".to_string()
+        } else {
+            parts.join(", ")
+        }
+    }
+
+    /// Drive one exchange through the table: `Ok` advances the state,
+    /// anything else is a typed rejection naming the current state,
+    /// the direction, the offending frame kind, and what the table
+    /// would have admitted. Rejections do NOT advance the state — the
+    /// checker stays honest for error-path reporting.
+    pub fn advance(&mut self, dir: Dir, kind: FrameKind) -> Result<()> {
+        for &(s, d, k, next) in TRANSITIONS {
+            if s == self.state && d == dir && k == kind {
+                self.state = next;
+                return Ok(());
+            }
+        }
+        Err(crate::err!(
+            "protocol violation ({:?} side): cannot {} {kind:?} in state {:?} — admissible: {}",
+            self.side,
+            match dir {
+                Dir::Send => "send",
+                Dir::Recv => "recv",
+            },
+            self.state,
+            Self::expected_from(self.state)
+        ))
+    }
+
+    /// Checked send: the frame is validated against the table BEFORE
+    /// any bytes go out, so this endpoint can never put an
+    /// out-of-order frame on the wire.
+    pub fn send<W: Write>(&mut self, w: &mut W, frame: &Frame, ck: &mut WireClock) -> Result<()> {
+        self.advance(Dir::Send, frame.kind)?;
+        send_frame(w, frame, ck)
+    }
+
+    /// Checked receive: the frame is decoded (all of `recv_frame`'s
+    /// wire-level validation applies), then validated against the
+    /// table — an unexpected kind from a conforming-wire but
+    /// nonconforming-protocol peer is a typed error here.
+    pub fn recv<R: Read>(&mut self, r: &mut R, ck: &mut WireClock) -> Result<Frame> {
+        let frame = recv_frame(r, ck)?;
+        self.advance(Dir::Recv, frame.kind)?;
+        Ok(frame)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const DIRS: [Dir; 2] = [Dir::Send, Dir::Recv];
+
+    /// THE conformance test the tentpole asks for: every
+    /// (state × direction × FrameKind) triple — 11 × 2 × 7 = 154 of
+    /// them — is either an admitted transition (advancing to the
+    /// table's target) or a rejection whose message names the state
+    /// and the frame. Nothing is implicit.
+    #[test]
+    fn every_state_frame_pair_is_admitted_or_named_rejected() {
+        let mut admitted = 0;
+        let mut rejected = 0;
+        for &state in &ProtoState::ALL {
+            for &dir in &DIRS {
+                for &kind in &FrameKind::ALL {
+                    let hit = TRANSITIONS
+                        .iter()
+                        .find(|&&(s, d, k, _)| s == state && d == dir && k == kind);
+                    let mut p = ProtocolState { side: state.side(), state };
+                    match hit {
+                        Some(&(_, _, _, next)) => {
+                            p.advance(dir, kind).unwrap_or_else(|e| {
+                                panic!("table admits {state:?}/{dir:?}/{kind:?} but advance refused: {e}")
+                            });
+                            assert_eq!(p.state(), next, "{state:?}/{dir:?}/{kind:?}");
+                            admitted += 1;
+                        }
+                        None => {
+                            let e = p.advance(dir, kind).expect_err(&format!(
+                                "{state:?}/{dir:?}/{kind:?} is not in the table but was admitted"
+                            ));
+                            let msg = format!("{e}");
+                            assert!(
+                                msg.contains(&format!("{state:?}")),
+                                "rejection must name the state: {msg}"
+                            );
+                            assert!(
+                                msg.contains(&format!("{kind:?}")),
+                                "rejection must name the frame: {msg}"
+                            );
+                            assert_eq!(p.state(), state, "a rejection must not advance the state");
+                            rejected += 1;
+                        }
+                    }
+                }
+            }
+        }
+        assert_eq!(admitted, TRANSITIONS.len(), "duplicate or dead table rows");
+        assert_eq!(admitted + rejected, ProtoState::ALL.len() * 2 * FrameKind::ALL.len());
+    }
+
+    /// The table is well-formed data: no duplicate (state, dir, kind)
+    /// keys (the first match wins in `advance`, so a duplicate would
+    /// be dead — or worse, a divergent — row), and every transition
+    /// stays on its own side of the socket.
+    #[test]
+    fn table_has_unique_keys_and_never_crosses_sides() {
+        for (i, &(s1, d1, k1, n1)) in TRANSITIONS.iter().enumerate() {
+            assert_eq!(s1.side(), n1.side(), "{s1:?} -> {n1:?} crosses sides");
+            for &(s2, d2, k2, _) in &TRANSITIONS[i + 1..] {
+                assert!(
+                    !(s1 == s2 && d1 == d2 && k1 == k2),
+                    "duplicate table key {s1:?}/{d1:?}/{k1:?}"
+                );
+            }
+        }
+    }
+
+    /// Terminal states admit nothing, and both sides can actually
+    /// reach their terminal state through the table.
+    #[test]
+    fn terminal_states_are_terminal_and_reachable() {
+        for &state in &ProtoState::ALL {
+            if state.is_terminal() {
+                assert!(
+                    !TRANSITIONS.iter().any(|&(s, _, _, _)| s == state),
+                    "{state:?} is terminal but has outgoing transitions"
+                );
+                assert!(
+                    TRANSITIONS.iter().any(|&(_, _, _, n)| n == state),
+                    "{state:?} is terminal but unreachable"
+                );
+            }
+        }
+    }
+
+    /// A conforming happy-path session on both sides, frame by frame.
+    #[test]
+    fn happy_path_sessions_conform() {
+        // Master: Hello, Init, (Push, Center) ×2, Push, Stop, Done.
+        let mut m = ProtocolState::master();
+        m.advance(Dir::Recv, FrameKind::Hello).unwrap();
+        m.advance(Dir::Send, FrameKind::Init).unwrap();
+        for _ in 0..2 {
+            m.advance(Dir::Recv, FrameKind::Push).unwrap();
+            m.advance(Dir::Send, FrameKind::Center).unwrap();
+        }
+        m.advance(Dir::Recv, FrameKind::Push).unwrap();
+        m.advance(Dir::Send, FrameKind::Stop).unwrap();
+        m.advance(Dir::Recv, FrameKind::Done).unwrap();
+        assert!(m.is_terminal());
+
+        // Worker mirror image, with a divergence instead of a Stop.
+        let mut w = ProtocolState::worker();
+        w.advance(Dir::Send, FrameKind::Hello).unwrap();
+        w.advance(Dir::Recv, FrameKind::Init).unwrap();
+        w.advance(Dir::Send, FrameKind::Push).unwrap();
+        w.advance(Dir::Recv, FrameKind::Center).unwrap();
+        w.advance(Dir::Send, FrameKind::Diverged).unwrap();
+        w.advance(Dir::Send, FrameKind::Done).unwrap();
+        assert!(w.is_terminal());
+    }
+
+    /// The rogue-peer case the integration test drives over a real
+    /// socket: Push before Hello is a rejection naming both.
+    #[test]
+    fn push_before_hello_is_rejected_by_name() {
+        let mut m = ProtocolState::master();
+        let e = m.advance(Dir::Recv, FrameKind::Push).unwrap_err();
+        let msg = format!("{e}");
+        assert!(msg.contains("AwaitHello") && msg.contains("Push"), "{msg}");
+        assert!(msg.contains("Hello"), "should say what was admissible: {msg}");
+    }
+
+    /// Checked send refuses BEFORE bytes hit the wire: the buffer
+    /// stays empty on a table violation.
+    #[test]
+    fn checked_send_refuses_before_writing() {
+        let mut buf = Vec::new();
+        let mut ck = WireClock::default();
+        let mut m = ProtocolState::master();
+        let f = Frame::new(FrameKind::Center, 0, 0, vec![1.0]);
+        let e = m.send(&mut buf, &f, &mut ck).unwrap_err();
+        assert!(format!("{e}").contains("AwaitHello"), "{e}");
+        assert!(buf.is_empty(), "no bytes may leave on a protocol violation");
+        assert_eq!(ck.frames, 0);
+    }
+
+    /// Checked recv decodes then validates: a wire-valid but
+    /// protocol-invalid frame is a protocol error, not a wire error.
+    #[test]
+    fn checked_recv_rejects_wire_valid_but_out_of_order_frames() {
+        let mut buf = Vec::new();
+        let mut ck = WireClock::default();
+        send_frame(&mut buf, &Frame::new(FrameKind::Push, 1, 5, vec![0.5]), &mut ck).unwrap();
+        let mut m = ProtocolState::master();
+        let e = m.recv(&mut buf.as_slice(), &mut ck).unwrap_err();
+        let msg = format!("{e}");
+        assert!(msg.contains("protocol violation"), "{msg}");
+        assert!(msg.contains("Push") && msg.contains("AwaitHello"), "{msg}");
+    }
+}

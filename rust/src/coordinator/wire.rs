@@ -37,8 +37,16 @@ pub const VERSION: u16 = 1;
 /// Frame header bytes: magic + version + kind + wid + clock + n.
 pub const HEADER_BYTES: usize = 4 + 2 + 1 + 4 + 8 + 4;
 /// Refuse length prefixes above this many f32s (1 GiB of payload) —
-/// a corrupt or misaligned stream fails here instead of allocating.
-const MAX_PAYLOAD: u32 = 1 << 28;
+/// a corrupt or misaligned stream fails at the header instead of
+/// streaming garbage. Public so `fuzz_wire` can aim max-`n` claims
+/// exactly at the edge. CI's fuzz lane compiles the guard OUT with
+/// `--cfg wire_mutate_no_payload_cap` and requires the fuzzer to
+/// notice (the cap-class mutations stop producing cap errors).
+pub const MAX_PAYLOAD: u32 = 1 << 28;
+/// Payload reads are chunked at this size so allocation tracks bytes
+/// actually received: a lying length prefix costs at most one chunk
+/// before the stream runs dry, never the claimed `n`.
+pub const READ_CHUNK_BYTES: usize = 64 * 1024;
 
 /// Frame discriminants of the master⇄worker protocol.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -66,6 +74,18 @@ pub enum FrameKind {
 }
 
 impl FrameKind {
+    /// Every kind, for exhaustive enumeration (the protocol table
+    /// test) and fuzz mutation picks.
+    pub const ALL: [FrameKind; 7] = [
+        FrameKind::Hello,
+        FrameKind::Init,
+        FrameKind::Push,
+        FrameKind::Center,
+        FrameKind::Stop,
+        FrameKind::Done,
+        FrameKind::Diverged,
+    ];
+
     fn from_u8(b: u8) -> Result<FrameKind> {
         Ok(match b {
             0 => FrameKind::Hello,
@@ -129,7 +149,10 @@ pub fn send_frame<W: Write>(w: &mut W, frame: &Frame, clock: &mut WireClock) -> 
     buf.push(frame.kind as u8);
     buf.extend_from_slice(&frame.wid.to_le_bytes());
     buf.extend_from_slice(&frame.clock.to_le_bytes());
-    buf.extend_from_slice(&(frame.payload.len() as u32).to_le_bytes());
+    let n = u32::try_from(frame.payload.len()).map_err(|_| {
+        crate::err!("frame payload of {} f32s overflows the u32 length field", frame.payload.len())
+    })?;
+    buf.extend_from_slice(&n.to_le_bytes());
     for &x in &frame.payload {
         buf.extend_from_slice(&x.to_le_bytes());
     }
@@ -172,18 +195,35 @@ pub fn recv_frame<R: Read>(r: &mut R, clock: &mut WireClock) -> Result<Frame> {
     let wid = u32::from_le_bytes(header[7..11].try_into().unwrap());
     let fclock = u64::from_le_bytes(header[11..19].try_into().unwrap());
     let n = u32::from_le_bytes(header[19..23].try_into().unwrap());
-    if n > MAX_PAYLOAD {
-        return Err(crate::err!(
-            "frame length prefix {n} f32s exceeds the {MAX_PAYLOAD} cap — corrupt stream?"
-        ));
+    // The mutation build (`--cfg wire_mutate_no_payload_cap`) deletes
+    // this guard; CI requires `fuzz_wire` to fail when it does.
+    #[cfg(not(wire_mutate_no_payload_cap))]
+    {
+        if n > MAX_PAYLOAD {
+            return Err(crate::err!(
+                "frame length prefix {n} f32s exceeds the {MAX_PAYLOAD} cap — corrupt stream?"
+            ));
+        }
     }
     clock.serialize_ns += t1.elapsed().as_nanos() as u64;
 
-    let mut bytes = vec![0u8; n as usize * 4];
+    // Chunked read: allocation is bounded by bytes actually received
+    // (plus at most one READ_CHUNK_BYTES chunk), so even a length
+    // prefix lying about `n` cannot make this endpoint reserve the
+    // claimed size up front.
+    let want = n as usize * 4;
+    let mut bytes: Vec<u8> = Vec::new();
     let t2 = Instant::now();
-    r.read_exact(&mut bytes).map_err(|e| {
-        crate::err!("socket closed mid-stream (reading {n}-f32 {kind:?} payload): {e}")
-    })?;
+    while bytes.len() < want {
+        let at = bytes.len();
+        let take = (want - at).min(READ_CHUNK_BYTES);
+        bytes.resize(at + take, 0);
+        r.read_exact(&mut bytes[at..]).map_err(|e| {
+            crate::err!(
+                "socket closed mid-stream (reading {n}-f32 {kind:?} payload at byte {at}): {e}"
+            )
+        })?;
+    }
     clock.transfer_ns += t2.elapsed().as_nanos() as u64;
 
     let t3 = Instant::now();
@@ -417,7 +457,7 @@ mod tests {
     fn bad_magic_is_a_descriptive_error() {
         let mut buf = vec![0xDEu8; HEADER_BYTES];
         let e = recv_frame(&mut buf.as_slice(), &mut WireClock::default()).unwrap_err();
-        assert!(format!("{e}").contains("magic"), "{e}");
+        assert!(format!("{e}").contains("bad frame magic"), "{e}");
     }
 
     #[test]
@@ -427,7 +467,7 @@ mod tests {
         send_frame(&mut buf, &f, &mut WireClock::default()).unwrap();
         buf[4] = 99; // stomp the version field
         let e = recv_frame(&mut buf.as_slice(), &mut WireClock::default()).unwrap_err();
-        assert!(format!("{e}").contains("version"), "{e}");
+        assert!(format!("{e}").contains("wire version mismatch"), "{e}");
     }
 
     #[test]
@@ -438,11 +478,11 @@ mod tests {
         let mut bad_kind = buf.clone();
         bad_kind[6] = 42;
         let e = recv_frame(&mut bad_kind.as_slice(), &mut WireClock::default()).unwrap_err();
-        assert!(format!("{e}").contains("kind"), "{e}");
+        assert!(format!("{e}").contains("unknown wire frame kind"), "{e}");
         let mut bad_len = buf;
         bad_len[19..23].copy_from_slice(&u32::MAX.to_le_bytes());
         let e = recv_frame(&mut bad_len.as_slice(), &mut WireClock::default()).unwrap_err();
-        assert!(format!("{e}").contains("cap"), "{e}");
+        assert!(format!("{e}").contains("cap — corrupt stream"), "{e}");
     }
 
     #[test]
@@ -452,11 +492,42 @@ mod tests {
         send_frame(&mut buf, &f, &mut WireClock::default()).unwrap();
         buf.truncate(HEADER_BYTES + 4); // header + 1 of 3 payload f32s
         let e = recv_frame(&mut buf.as_slice(), &mut WireClock::default()).unwrap_err();
-        assert!(format!("{e}").contains("payload"), "{e}");
+        assert!(format!("{e}").contains("payload at byte"), "{e}");
         let mut short = vec![0u8; 3];
         short.copy_from_slice(&MAGIC.to_le_bytes()[..3]);
         let e = recv_frame(&mut short.as_slice(), &mut WireClock::default()).unwrap_err();
-        assert!(format!("{e}").contains("header"), "{e}");
+        assert!(format!("{e}").contains("reading frame header"), "{e}");
+    }
+
+    /// A sink that fails on write or flush, to pin the send-side
+    /// error messages.
+    struct FailIo {
+        on_flush: bool,
+    }
+
+    impl Write for FailIo {
+        fn write(&mut self, buf: &[u8]) -> std::io::Result<usize> {
+            if self.on_flush {
+                Ok(buf.len())
+            } else {
+                Err(std::io::Error::other("wire down"))
+            }
+        }
+        fn flush(&mut self) -> std::io::Result<()> {
+            Err(std::io::Error::other("wire down"))
+        }
+    }
+
+    #[test]
+    fn send_failures_name_the_phase_and_frame() {
+        let f = Frame::new(FrameKind::Push, 2, 9, vec![1.0]);
+        let mut ck = WireClock::default();
+        let e = send_frame(&mut FailIo { on_flush: false }, &f, &mut ck).unwrap_err();
+        assert!(format!("{e}").contains("socket write failed"), "{e}");
+        assert!(format!("{e}").contains("Push"), "{e}");
+        let e = send_frame(&mut FailIo { on_flush: true }, &f, &mut ck).unwrap_err();
+        assert!(format!("{e}").contains("socket flush failed"), "{e}");
+        assert_eq!(ck.frames, 0, "failed sends must not count as frames");
     }
 
     #[test]
@@ -468,7 +539,27 @@ mod tests {
             let u = WireAddr::Unix(std::path::PathBuf::from("/tmp/et.sock"));
             assert_eq!(WireAddr::parse(&u.to_arg()).unwrap(), u);
         }
-        assert!(WireAddr::parse("carrier-pigeon:coop").is_err());
+        let e = WireAddr::parse("carrier-pigeon:coop").unwrap_err();
+        assert!(format!("{e}").contains("invalid wire address"), "{e}");
+    }
+
+    #[test]
+    #[cfg_attr(miri, ignore = "Miri's interpreter has no socket support")]
+    fn bind_and_accept_failures_are_descriptive() {
+        // An unresolvable host fails bind with the address in the message.
+        let e = WireListener::bind(&WireAddr::Tcp("definitely.invalid.host.example:0".into()))
+            .unwrap_err();
+        assert!(format!("{e}").contains("cannot bind tcp listener"), "{e}");
+        #[cfg(unix)]
+        {
+            let p = std::path::PathBuf::from("/nonexistent-dir-for-sure/et.sock");
+            let e = WireListener::bind(&WireAddr::Unix(p)).unwrap_err();
+            assert!(format!("{e}").contains("cannot bind unix listener"), "{e}");
+        }
+        // Nobody dials: the accept timeout names the suspicion.
+        let (l, _) = WireListener::bind(&WireAddr::Tcp("127.0.0.1:0".into())).unwrap();
+        let e = l.accept_timeout(std::time::Duration::from_millis(30)).unwrap_err();
+        assert!(format!("{e}").contains("no worker connected within"), "{e}");
     }
 
     #[test]

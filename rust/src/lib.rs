@@ -45,11 +45,18 @@
 //!   `coordinator::tree_threaded` as one actor thread per node over
 //!   `mpsc` channels), with a checked method/backend/topology
 //!   support matrix ([`coordinator::check_supported`]); sequential
-//!   baselines and round-robin ADMM ride along.
+//!   baselines and round-robin ADMM ride along. The process backend's
+//!   frame protocol is data: [`coordinator::protocol`] holds both
+//!   sides' typed transition tables and the `ProtocolState` checker
+//!   every process send/recv drives through (fuzzed by the `fuzz_wire`
+//!   binary against [`coordinator::wire`]).
 //! - [`runtime`] — PJRT artifact loading (always) and execution
 //!   (`pjrt` feature; the in-tree `vendor/xla` stub keeps it compiling
 //!   offline).
-//! - [`config`] — the key=value config system; [`figures`] — one
+//! - [`config`] — the key=value config system, including the knob
+//!   registry ([`config::registry`]: every CLI knob with its surfaces,
+//!   diffed against the real structs/forwarding by lint R5, and the
+//!   generator of the `train` usage text); [`figures`] — one
 //!   generator per thesis table/figure, backend-selectable via
 //!   `backend=sim|thread`.
 //! - [`sync`] — the synchronization shim every concurrent module

@@ -58,16 +58,10 @@ fn run() -> Result<()> {
         Some("train-pjrt") => cmd_train_pjrt(&args),
         Some("inspect") => cmd_inspect(&args),
         _ => {
-            eprintln!(
-                "usage: repro <figure|train|train-pjrt|inspect> [key=value ...]\n\
-                 figures:  repro figure list\n\
-                 backend:  train/figure accept backend=sim|thread|process\n\
-                 model:    train/figure accept model=mlp|conv (native oracle)\n\
-                 data:     train accepts sharding=replicated|partitioned (§4.1)\n\
-                 topology: train accepts topology=star|tree; with tree:\n\
-                 \x20          degree=4 scheme=multiscale tau1=10 tau2=100\n\
-                 \x20          degree=4 scheme=updown tau_up=1 tau_down=10"
-            );
+            // Generated from the knob registry: the help text, the
+            // ExperimentConfig fields, and the forwarding lists are
+            // all pinned to the same table (lint R5).
+            eprint!("{}", elastic_train::config::registry::usage_text());
             Ok(())
         }
     }

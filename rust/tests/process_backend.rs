@@ -148,6 +148,36 @@ fn process_backend_refuses_master_coupled_methods() {
     assert!(format!("{e}").contains("master-coupled"), "{e}");
 }
 
+/// A rogue peer that opens a socket and sends Push before Hello (wire-
+/// valid bytes, protocol-invalid order) must fail the run with an error
+/// naming the protocol state and the offending frame — and the failure
+/// must stop the surviving worker promptly, long before the horizon.
+#[test]
+fn rogue_push_before_hello_fails_naming_state_and_frame() {
+    let (n, p) = (64usize, 2usize);
+    let method = Method::easgd_default(p, 4);
+    let opts = ProcessOpts {
+        exe: Some(repro_exe()),
+        fault: Some((1, "push-before-hello".to_string())),
+        ..ProcessOpts::default()
+    };
+    // Unbounded steps: only the 60 s horizon or the rogue's violation
+    // can end this run. Finishing fast proves the stop flag worked.
+    let t0 = std::time::Instant::now();
+    let e = run_process(&quad_spec(n), p, &cfg(n, method, 0.1, u64::MAX), &opts).unwrap_err();
+    let msg = format!("{e}");
+    assert!(msg.contains("protocol violation"), "not a protocol error: {msg}");
+    assert!(
+        msg.contains("AwaitHello") && msg.contains("Push"),
+        "violation must name the state and the frame: {msg}"
+    );
+    assert!(
+        t0.elapsed() < std::time::Duration::from_secs(30),
+        "survivors did not stop promptly after the protocol violation ({:?})",
+        t0.elapsed()
+    );
+}
+
 /// Config validation fires before any process is spawned: a
 /// non-finite horizon is a named config error, not a hung run.
 #[test]

@@ -9,13 +9,18 @@
 //! | R2 | no `unsafe` outside the committed allowlist (`linalg/gemm.rs`, whose Job aliasing invariants are documented at the type, and `linalg/simd.rs`, the intrinsic kernel tier) |
 //! | R3 | any file using `catch_unwind` also uses `lock_recover` — catching a panic without recovering poisoned locks deadlocks the survivors |
 //! | R4 | `.unwrap()` / `.expect(` in `coordinator/*` non-test code stays at or below the committed per-file ceiling — the count can only shrink |
+//! | R5 | the knob registry (`config/registry.rs`) matches reality in BOTH directions: every claimed surface is found by scraping the actual structs / CLI forwarding, and every scraped field/key is a registered knob |
+//! | R6 | no bare `as` narrowing casts in the wire/protocol/config path outside the documented allowlist — a silent truncation on the wire is a protocol bug |
+//! | R7 | every `crate::error::Error` construction site in the wire/protocol/config path has a test asserting its message fragment, or a documented exemption |
 //!
 //! Scope: non-test code only. Each source file's `#[cfg(test)] mod`
 //! sits at the bottom (repo convention), so the lint truncates the
 //! stripped source at the first `#[cfg(test)]`. Comments and string
 //! literals are stripped first, so prose mentioning `std::thread` or
-//! an error message quoting `unsafe` never trips a rule. The vendored
-//! crates (`rust/vendor/*`) are outside `src/` and deliberately exempt
+//! an error message quoting `unsafe` never trips a rule. (R5 and R7
+//! additionally scrape a strings-KEPT variant, because CLI keys and
+//! error messages live inside string literals.) The vendored crates
+//! (`rust/vendor/*`) are outside `src/` and deliberately exempt
 //! (the loom stub IS an instrumented `std::sync`).
 
 use std::fs;
@@ -38,6 +43,10 @@ const UNSAFE_ALLOWLIST: &[(&str, usize)] = &[
     // why each is sound. All cfg-gated behind `--features simd`, but
     // the lint is textual so they count unconditionally.
     ("linalg/simd.rs", 23),
+    // The fuzzer's counting `GlobalAlloc` (1 `unsafe impl` + 2
+    // `unsafe fn`): pure bookkeeping over `System`, needed to prove
+    // decode allocation stays bounded under hostile length prefixes.
+    ("bin/fuzz_wire.rs", 3),
 ];
 
 /// Per-file ceilings on `.unwrap()` + `.expect(` in non-test
@@ -266,16 +275,431 @@ fn r4_coordinator_unwrap_count_only_shrinks() {
     assert!(violations.is_empty(), "R4 violations:\n{}", violations.join("\n"));
 }
 
+// ---------------------------------------------------------------------------
+// R5–R7: knob-registry conformance, narrowing casts, error-message pins
+// ---------------------------------------------------------------------------
+
+use elastic_train::config::registry::{Surface, KNOBS};
+
+/// Per-file allowlist of bare narrowing `as` casts on the
+/// wire/protocol/config path. Every entry documents why the cast is
+/// lossless; everything else must use `try_from` with a typed error
+/// (wire.rs's length-field overflow is the canonical example).
+const NARROWING_CAST_ALLOWLIST: &[(&str, usize)] = &[
+    // `frame.kind as u8`: `FrameKind` is `#[repr(u8)]` with unit
+    // variants 0..=6 — the cast is the identity on the discriminant.
+    ("coordinator/wire.rs", 1),
+    // `self.p as f32` (α = β/p): worker counts are tiny integers,
+    // exactly representable in f32.
+    ("config/experiment.rs", 1),
+];
+
+/// R7 table: for each file on the wire/protocol/config path, the
+/// message fragment of every `err!`/`bail!`/`Error::msg` site. A
+/// `tested` fragment must appear verbatim BOTH at a construction site
+/// (strings-kept source) and in the test corpus (an assertion). An
+/// `exempt` entry documents why the site cannot be reasonably driven
+/// by a tier-1 test; the fragment must still exist in the source so a
+/// reworded or deleted site invalidates its row loudly.
+type R7Row = (&'static str, &'static [&'static str], &'static [(&'static str, &'static str)]);
+const R7_MESSAGE_PINS: &[R7Row] = &[
+    (
+        "coordinator/wire.rs",
+        &[
+            "unknown wire frame kind",
+            "bad frame magic",
+            "wire version mismatch",
+            "cap — corrupt stream",
+            "reading frame header",
+            "payload at byte",
+            "socket write failed",
+            "socket flush failed",
+            "invalid wire address",
+            "cannot bind tcp listener",
+            "cannot bind unix listener",
+            "no worker connected within",
+        ],
+        &[
+            ("frame payload of ", "triggering it needs a payload over u32::MAX f32s (16 GiB)"),
+            ("cannot connect to master", "only fires after a 10 s retry deadline — too slow for tier-1"),
+            ("unix-domain sockets are not available", "compiled only on non-unix platforms"),
+            ("cannot resolve bound tcp address", "local_addr() on a live listener cannot be made to fail portably"),
+            ("accept failed", "needs OS-level fault injection on the listening socket"),
+            ("set_nonblocking(", "needs OS-level fault injection on the socket fd"),
+        ],
+    ),
+    ("coordinator/protocol.rs", &["protocol violation"], &[]),
+    ("config/args.rs", &["invalid value for", "expected true|false|1|0|yes|no"], &[]),
+    (
+        "config/experiment.rs",
+        &[
+            "invalid value for",
+            "cannot read config file",
+            "expected auto|avx2|neon|scalar",
+            "p must be >= 1",
+            "batch must be >= 1",
+            "threads must be >= 1",
+            "tau must be >= 1",
+            "horizon must be a positive number of seconds",
+            "eval_every must be a positive number of seconds",
+            "eta must be a positive number",
+        ],
+        &[(
+            "{path}:{}: {e}",
+            "pure interpolation wrapping an already-pinned set() error with the config line number",
+        )],
+    ),
+    // json.rs reports through its own `JsonError` (std::error::Error),
+    // args-free files carry no sites — zero rows keep the scope total.
+    ("config/json.rs", &[], &[]),
+    ("config/registry.rs", &[], &[]),
+    ("config/mod.rs", &[], &[]),
+];
+
+/// Like [`lintable_source`] but KEEPS string literals — needed when the
+/// thing being linted lives inside a string (forwarded CLI keys, error
+/// messages). Byte-accurate so non-ASCII message text (em-dashes)
+/// survives for verbatim fragment matching.
+fn lintable_source_keep_strings(raw: &str) -> String {
+    let bytes = raw.as_bytes();
+    let mut out: Vec<u8> = Vec::with_capacity(raw.len());
+    let mut i = 0;
+    while i < bytes.len() {
+        match bytes[i] {
+            b'/' if bytes.get(i + 1) == Some(&b'/') => {
+                while i < bytes.len() && bytes[i] != b'\n' {
+                    i += 1;
+                }
+            }
+            b'/' if bytes.get(i + 1) == Some(&b'*') => {
+                let mut depth = 1usize;
+                i += 2;
+                while i < bytes.len() && depth > 0 {
+                    if bytes[i] == b'/' && bytes.get(i + 1) == Some(&b'*') {
+                        depth += 1;
+                        i += 2;
+                    } else if bytes[i] == b'*' && bytes.get(i + 1) == Some(&b'/') {
+                        depth -= 1;
+                        i += 2;
+                    } else {
+                        if bytes[i] == b'\n' {
+                            out.push(b'\n');
+                        }
+                        i += 1;
+                    }
+                }
+            }
+            b'"' => {
+                out.push(b'"');
+                i += 1;
+                while i < bytes.len() {
+                    match bytes[i] {
+                        b'\\' => {
+                            let end = (i + 2).min(bytes.len());
+                            out.extend_from_slice(&bytes[i..end]);
+                            i = end;
+                        }
+                        b'"' => {
+                            out.push(b'"');
+                            i += 1;
+                            break;
+                        }
+                        b => {
+                            out.push(b);
+                            i += 1;
+                        }
+                    }
+                }
+            }
+            b => {
+                out.push(b);
+                i += 1;
+            }
+        }
+    }
+    let mut s = String::from_utf8(out).expect("stripping only ASCII delimiters preserves UTF-8");
+    if let Some(pos) = s.find("#[cfg(test)]") {
+        s.truncate(pos);
+    }
+    s
+}
+
+fn read_src(rel: &str) -> String {
+    let p = Path::new(env!("CARGO_MANIFEST_DIR")).join("src").join(rel);
+    fs::read_to_string(&p).unwrap_or_else(|e| panic!("read {p:?}: {e}"))
+}
+
+/// Field names of `pub struct <name>` in stripped source: every
+/// `pub ident:` inside the struct's brace block.
+fn struct_fields(text: &str, name: &str) -> Vec<String> {
+    let decl = format!("pub struct {name}");
+    let start = text.find(&decl).unwrap_or_else(|| panic!("no `{decl}` found"));
+    let open = start + text[start..].find('{').unwrap_or_else(|| panic!("{decl}: no body"));
+    let mut depth = 0usize;
+    let mut end = open;
+    for (i, b) in text[open..].bytes().enumerate() {
+        if b == b'{' {
+            depth += 1;
+        } else if b == b'}' {
+            depth -= 1;
+            if depth == 0 {
+                end = open + i;
+                break;
+            }
+        }
+    }
+    let body = &text[open..end];
+    let mut fields = Vec::new();
+    let mut from = 0;
+    while let Some(off) = body[from..].find("pub ") {
+        let at = from + off + 4;
+        let ident: String = body[at..]
+            .chars()
+            .take_while(|c| c.is_ascii_alphanumeric() || *c == '_')
+            .collect();
+        if !ident.is_empty() && body[at + ident.len()..].trim_start().starts_with(':') {
+            fields.push(ident);
+        }
+        from = at;
+    }
+    fields
+}
+
+/// CLI keys the master literally forwards: every `"key=` occurrence in
+/// strings-kept source (quote-anchored, so prose mentioning `a=b`
+/// mid-sentence never matches).
+fn forwarded_keys(text: &str) -> Vec<String> {
+    let bytes = text.as_bytes();
+    let mut keys: Vec<String> = Vec::new();
+    for (i, &b) in bytes.iter().enumerate() {
+        if b != b'"' {
+            continue;
+        }
+        let start = i + 1;
+        let mut j = start;
+        while j < bytes.len()
+            && (bytes[j] == b'_' || bytes[j].is_ascii_lowercase() || bytes[j].is_ascii_digit())
+        {
+            j += 1;
+        }
+        if j > start && bytes.get(j) == Some(&b'=') {
+            let k = String::from_utf8_lossy(&bytes[start..j]).to_string();
+            if !keys.contains(&k) {
+                keys.push(k);
+            }
+        }
+    }
+    keys
+}
+
+/// Everything tests can assert against: the integration tests raw,
+/// plus each src file's `#[cfg(test)]` tail.
+fn test_corpus() -> String {
+    let root = Path::new(env!("CARGO_MANIFEST_DIR"));
+    let mut out = String::new();
+    let mut test_files = Vec::new();
+    collect_rs(&root.join("tests"), &mut test_files);
+    for p in &test_files {
+        out.push_str(&fs::read_to_string(p).unwrap_or_else(|e| panic!("read {p:?}: {e}")));
+        out.push('\n');
+    }
+    let mut src_files = Vec::new();
+    collect_rs(&root.join("src"), &mut src_files);
+    for p in &src_files {
+        let raw = fs::read_to_string(p).unwrap_or_else(|e| panic!("read {p:?}: {e}"));
+        if let Some(pos) = raw.find("#[cfg(test)]") {
+            out.push_str(&raw[pos..]);
+            out.push('\n');
+        }
+    }
+    out
+}
+
+/// Registry knobs on a surface, as the identifiers the scrape will
+/// find: struct surfaces match on the landing `field`, CLI surfaces on
+/// the typed `name`.
+fn registry_idents(surface: Surface, by_field: bool) -> Vec<&'static str> {
+    KNOBS
+        .iter()
+        .filter(|k| k.surfaces.contains(&surface))
+        .map(|k| if by_field && !k.field.is_empty() { k.field } else { k.name })
+        .collect()
+}
+
+#[test]
+fn r5_knob_registry_matches_structs_and_forwarding_both_ways() {
+    let mut violations = Vec::new();
+
+    // Struct surfaces: registry ⊆ scraped fields and scraped ⊆ registry
+    // (minus the documented non-knob fields).
+    let struct_cases: [(Surface, &str, &str, &[&str]); 3] = [
+        // `extra`: free-form passthrough map, not a knob.
+        (Surface::Experiment, "config/experiment.rs", "ExperimentConfig", &["extra"]),
+        (Surface::FigOpts, "figures/mod.rs", "FigOpts", &[]),
+        // `data`/`mcfg`/`ccfg`: built artifacts of the sweep, not knobs.
+        (Surface::Ch4Sweep, "figures/ch4.rs", "Sweep", &["data", "mcfg", "ccfg"]),
+    ];
+    for (surface, file, sname, non_knob) in struct_cases {
+        let fields = struct_fields(&lintable_source(&read_src(file)), sname);
+        let claimed = registry_idents(surface, true);
+        for c in &claimed {
+            if !fields.iter().any(|f| f == c) {
+                violations.push(format!(
+                    "registry claims `{c}` is threaded through {sname} ({file}) but the \
+                     struct has no such field"
+                ));
+            }
+        }
+        for f in &fields {
+            if non_knob.contains(&f.as_str()) {
+                continue;
+            }
+            if !claimed.iter().any(|c| c == f) {
+                violations.push(format!(
+                    "{sname}.{f} ({file}) is not in the knob registry for {surface:?} — \
+                     register the knob (or list the field as a non-knob here)"
+                ));
+            }
+        }
+    }
+
+    // WorkerCli: registry names ⇄ the keys run_process literally
+    // forwards on the hidden --process-worker command line.
+    let fwd = forwarded_keys(&lintable_source_keep_strings(&read_src("coordinator/process.rs")));
+    let claimed = registry_idents(Surface::WorkerCli, false);
+    for c in &claimed {
+        if !fwd.iter().any(|k| k == c) {
+            violations.push(format!(
+                "registry claims `{c}=` is forwarded to process workers but no such key \
+                 appears in coordinator/process.rs — the knob is silently dropped"
+            ));
+        }
+    }
+    for k in &fwd {
+        if !claimed.iter().any(|c| c == k) {
+            violations.push(format!(
+                "coordinator/process.rs forwards `{k}=` but the registry does not list it \
+                 on WorkerCli — register it so usage/docs/lints see it"
+            ));
+        }
+    }
+
+    // TrainCli: every user-facing train knob must be READ somewhere on
+    // the train path (a set() arm or a typed Args getter) — a knob in
+    // the registry nothing reads is dead help text.
+    let train_path: String = ["main.rs", "config/experiment.rs", "coordinator/process.rs"]
+        .iter()
+        .map(|f| lintable_source_keep_strings(&read_src(f)))
+        .collect();
+    for name in registry_idents(Surface::TrainCli, false) {
+        if !train_path.contains(&format!("\"{name}\"")) {
+            violations.push(format!(
+                "train knob `{name}` is in the registry but never read on the train path \
+                 (main.rs / config/experiment.rs / coordinator/process.rs)"
+            ));
+        }
+    }
+
+    assert!(violations.is_empty(), "R5 violations:\n{}", violations.join("\n"));
+}
+
+#[test]
+fn r6_no_bare_narrowing_casts_on_the_wire_or_config_path() {
+    const NARROW: &[&str] = &["as u8", "as u16", "as u32", "as i8", "as i16", "as i32", "as f32"];
+    let mut violations = Vec::new();
+    for (rel, text) in sources() {
+        let scoped = rel == "coordinator/wire.rs"
+            || rel == "coordinator/protocol.rs"
+            || rel.starts_with("config/");
+        if !scoped {
+            continue;
+        }
+        let n: usize = NARROW.iter().map(|c| count_word(&text, c)).sum();
+        let cap = NARROWING_CAST_ALLOWLIST
+            .iter()
+            .find(|(f, _)| *f == rel)
+            .map_or(0, |(_, c)| *c);
+        if n > cap {
+            violations.push(format!(
+                "{rel}: {n} bare narrowing `as` cast(s), allowlist permits {cap} — use \
+                 `try_from` with a typed error (a silent truncation on the wire is a \
+                 protocol bug), or document losslessness and extend the allowlist"
+            ));
+        }
+    }
+    assert!(violations.is_empty(), "R6 violations:\n{}", violations.join("\n"));
+}
+
+#[test]
+fn r7_every_error_site_is_message_tested_or_exempt() {
+    let corpus = test_corpus();
+    let mut violations = Vec::new();
+    for (rel, tested, exempt) in R7_MESSAGE_PINS {
+        let raw = read_src(rel);
+        let stripped = lintable_source(&raw);
+        let with_strings = lintable_source_keep_strings(&raw);
+        let sites = count_substr(&stripped, "err!(")
+            + count_substr(&stripped, "bail!(")
+            + count_substr(&stripped, "Error::msg(");
+        if sites != tested.len() + exempt.len() {
+            violations.push(format!(
+                "{rel}: {sites} error construction site(s) but the R7 table pins {} — \
+                 every new site needs a tested message fragment (or a reasoned exemption)",
+                tested.len() + exempt.len()
+            ));
+        }
+        for frag in *tested {
+            if !with_strings.contains(frag) {
+                violations.push(format!(
+                    "{rel}: pinned fragment '{frag}' no longer appears at any construction \
+                     site — the message was reworded without updating the pin"
+                ));
+            }
+            if !corpus.contains(frag) {
+                violations.push(format!(
+                    "{rel}: fragment '{frag}' is pinned as tested but no test asserts it"
+                ));
+            }
+        }
+        for (frag, why) in *exempt {
+            if !with_strings.contains(frag) {
+                violations.push(format!(
+                    "{rel}: exempt fragment '{frag}' no longer appears — stale exemption"
+                ));
+            }
+            assert!(why.len() > 10, "{rel}: exemption '{frag}' needs a real reason");
+        }
+    }
+    // Scope completeness: a new file on the config path joins the table
+    // explicitly (possibly with empty rows), never silently.
+    for (rel, _) in sources() {
+        let scoped = rel == "coordinator/wire.rs"
+            || rel == "coordinator/protocol.rs"
+            || rel.starts_with("config/");
+        if scoped && !R7_MESSAGE_PINS.iter().any(|(f, _, _)| *f == rel) {
+            violations.push(format!("{rel}: in R7 scope but missing from R7_MESSAGE_PINS"));
+        }
+    }
+    assert!(violations.is_empty(), "R7 violations:\n{}", violations.join("\n"));
+}
+
 /// The ceilings themselves must stay honest: a stale entry (file
 /// removed or renamed) would silently allowlist a future file of the
 /// same name.
 #[test]
 fn lint_tables_reference_existing_files() {
     let files: Vec<String> = sources().into_iter().map(|(rel, _)| rel).collect();
-    for (f, _) in UNSAFE_ALLOWLIST.iter().chain(UNWRAP_CEILINGS) {
+    for (f, _) in UNSAFE_ALLOWLIST
+        .iter()
+        .chain(UNWRAP_CEILINGS)
+        .chain(NARROWING_CAST_ALLOWLIST)
+    {
         assert!(files.iter().any(|r| r == f), "lint table references missing file {f}");
     }
     for f in SYNC_IMPORT_ALLOWLIST {
         assert!(files.iter().any(|r| r == f), "lint table references missing file {f}");
+    }
+    for (f, _, _) in R7_MESSAGE_PINS {
+        assert!(files.iter().any(|r| r == f), "R7 table references missing file {f}");
     }
 }

@@ -1,0 +1,118 @@
+//! Tier-1 replay of the committed wire fuzz corpus
+//! (`tests/corpus/wire/*.bin`).
+//!
+//! Every file runs through `recv_frame` + the master-side
+//! `ProtocolState` checker — exactly the `fuzz_wire` binary's corpus
+//! phase, but in-process so plain `cargo test` keeps the regression
+//! corpus honest without the fuzz lane. Contract: `ok_*` streams
+//! replay cleanly, `err_*` streams produce a typed error (never a
+//! panic, never an attacker-sized allocation), and the classes we have
+//! been burned by before pin their exact error fragments.
+
+use elastic_train::coordinator::protocol::{Dir, ProtoState, ProtocolState};
+use elastic_train::coordinator::wire::{recv_frame, FrameKind, WireClock};
+use elastic_train::error::Result;
+
+fn corpus_dir() -> std::path::PathBuf {
+    std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("tests/corpus/wire")
+}
+
+/// Decode a whole stream frame-by-frame through the master-side
+/// checker, simulating the master's own Init/Center turns (same
+/// contract as `fuzz_wire`'s corpus phase).
+fn replay(bytes: &[u8]) -> Result<usize> {
+    let mut slice = bytes;
+    let mut ck = WireClock::default();
+    let mut proto = ProtocolState::master();
+    let mut frames = 0usize;
+    while !slice.is_empty() {
+        let f = recv_frame(&mut slice, &mut ck)?;
+        proto.advance(Dir::Recv, f.kind)?;
+        frames += 1;
+        match proto.state() {
+            ProtoState::SendInit => proto.advance(Dir::Send, FrameKind::Init)?,
+            ProtoState::Reply => proto.advance(Dir::Send, FrameKind::Center)?,
+            _ => {}
+        }
+    }
+    Ok(frames)
+}
+
+fn read(name: &str) -> Vec<u8> {
+    let path = corpus_dir().join(name);
+    std::fs::read(&path).unwrap_or_else(|e| panic!("cannot read {}: {e}", path.display()))
+}
+
+#[test]
+fn every_corpus_file_replays_per_its_name() {
+    let dir = corpus_dir();
+    let mut names: Vec<String> = std::fs::read_dir(&dir)
+        .unwrap_or_else(|e| panic!("corpus dir {} missing: {e}", dir.display()))
+        .filter_map(|e| e.ok())
+        .map(|e| e.file_name().to_string_lossy().to_string())
+        .filter(|n| n.ends_with(".bin"))
+        .collect();
+    names.sort();
+    assert!(
+        names.len() >= 10,
+        "regression corpus shrank to {} files — did a move lose tests/corpus/wire?",
+        names.len()
+    );
+    for name in &names {
+        let outcome = replay(&read(name));
+        match outcome {
+            Ok(frames) if name.starts_with("err_") => {
+                panic!("{name}: expected a typed error, decoded {frames} frames cleanly")
+            }
+            Err(e) if name.starts_with("ok_") => {
+                panic!("{name}: expected a clean replay, got: {e}")
+            }
+            _ => {}
+        }
+        assert!(
+            name.starts_with("ok_") || name.starts_with("err_"),
+            "{name}: corpus files must be ok_*.bin or err_*.bin so intent is explicit"
+        );
+    }
+}
+
+#[test]
+fn known_error_classes_pin_their_fragments() {
+    // Each pair: corpus file → fragment its error must carry. These are
+    // the classes that must never regress to a panic or a vague  error.
+    let pins = [
+        ("err_bad_magic.bin", "bad frame magic"),
+        ("err_bad_version.bin", "wire version mismatch"),
+        ("err_unknown_kind.bin", "unknown wire frame kind"),
+        ("err_cap_exceeded.bin", "cap"),
+        ("err_cap_edge.bin", "payload at byte"),
+        ("err_truncated_header.bin", "reading frame header"),
+        ("err_truncated_payload.bin", "payload at byte"),
+        ("err_len_lie.bin", "payload at byte"),
+        ("err_out_of_order.bin", "protocol violation"),
+        ("err_after_done.bin", "protocol violation"),
+    ];
+    for (name, fragment) in pins {
+        let e = replay(&read(name)).expect_err(name);
+        let msg = format!("{e}");
+        assert!(msg.contains(fragment), "{name}: expected '{fragment}' in: {msg}");
+    }
+}
+
+#[test]
+fn out_of_order_corpus_names_state_and_frame() {
+    let e = replay(&read("err_out_of_order.bin")).expect_err("push before hello");
+    let msg = format!("{e}");
+    assert!(
+        msg.contains("AwaitHello") && msg.contains("Push"),
+        "violation must name the state and the offending frame: {msg}"
+    );
+}
+
+#[test]
+fn clean_session_decodes_expected_frame_count() {
+    assert_eq!(replay(&read("ok_session.bin")).expect("ok_session"), 4);
+    assert_eq!(replay(&read("ok_diverged.bin")).expect("ok_diverged"), 4);
+    assert_eq!(replay(&read("ok_hello.bin")).expect("ok_hello"), 1);
+    assert_eq!(replay(&read("ok_empty.bin")).expect("ok_empty"), 0);
+}
